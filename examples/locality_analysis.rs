@@ -1,0 +1,81 @@
+//! Locality analysis (paper §II, Fig 3 + Fig 4) on either a synthetic
+//! trace or REAL gate loads captured from training.
+//!
+//!   cargo run --release --example locality_analysis            # synthetic
+//!   cargo run --release --example locality_analysis -- --real  # train tiny
+//!                                                              # model first
+//!
+//! Reports per-layer skew (top-3 share), adjacent-iteration similarity,
+//! and what those statistics mean for the planner's replan interval.
+
+use pro_prophet::config::TrainingConfig;
+use pro_prophet::planner::locality::similarity;
+use pro_prophet::runtime;
+use pro_prophet::trainer::Trainer;
+use pro_prophet::util::cli::Args;
+use pro_prophet::util::stats;
+use pro_prophet::workload::{top_share, Trace, WorkloadConfig, WorkloadGen};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["real"]).map_err(anyhow::Error::msg)?;
+
+    let (trace, source) = if args.flag("real") {
+        if !runtime::artifacts_available("tiny") {
+            anyhow::bail!("run `make artifacts` first for --real");
+        }
+        let steps = args.usize_or("steps", 40);
+        println!("training tiny model for {steps} steps to capture real gate loads...");
+        let mut trainer = Trainer::new(TrainingConfig {
+            preset: "tiny".into(),
+            seed: 3,
+            ..Default::default()
+        })?;
+        let report = trainer.run(steps, |_| {})?;
+        let e = trainer.manifest.n_experts;
+        (report.to_trace(e), "real (tiny model gate)")
+    } else {
+        let mut gen =
+            WorkloadGen::new(WorkloadConfig::paper_default(12, 16, 16, 16384));
+        (Trace::capture(&mut gen, 40), "synthetic (paper-calibrated)")
+    };
+
+    println!("\n== locality analysis over {} iterations [{source}] ==", trace.len());
+
+    // Fig 3: skew per layer at a fixed iteration.
+    println!("\nskew (top-3 expert share per layer, iteration 1):");
+    for (l, w) in trace.iterations[1].iter().enumerate() {
+        let share = top_share(&w.distribution(), 3);
+        let bar: String =
+            std::iter::repeat('#').take((share * 40.0) as usize).collect();
+        println!("  layer {l:>2} {bar} {:.1}%", share * 100.0);
+    }
+
+    // Fig 4: adjacent-iteration similarity per layer.
+    println!("\nadjacent-iteration similarity per layer (mean / min):");
+    let mut all_sims = Vec::new();
+    for l in 0..trace.n_layers {
+        let mut sims = Vec::new();
+        for it in 1..trace.len() {
+            sims.push(similarity(
+                &trace.iterations[it - 1][l].distribution(),
+                &trace.iterations[it][l].distribution(),
+            ));
+        }
+        println!(
+            "  layer {l:>2}: {:.4} / {:.4}",
+            stats::mean(&sims),
+            stats::min(&sims)
+        );
+        all_sims.extend(sims);
+    }
+    let mean_sim = stats::mean(&all_sims);
+    println!("\noverall mean similarity: {mean_sim:.4}");
+
+    // What this buys the planner: replan every 1/(1-sim) iterations keeps
+    // placements fresh relative to drift.
+    let suggested = (1.0 / (1.0 - mean_sim).max(0.01)).floor().clamp(1.0, 50.0);
+    println!(
+        "suggested planner replan interval (locality-based): every {suggested:.0} iterations"
+    );
+    Ok(())
+}

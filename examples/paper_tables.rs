@@ -1,0 +1,50 @@
+//! Regenerate the paper's headline numbers in one shot (condensed; the
+//! full per-table harnesses live in rust/benches/, one per table/figure).
+//!
+//!   cargo run --release --example paper_tables
+
+use pro_prophet::benchkit::scenario;
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::TableReport;
+use pro_prophet::sim::{simulate, Policy};
+
+fn main() {
+    println!("Pro-Prophet — condensed paper reproduction (see cargo bench for full set)\n");
+
+    // Headline: Fig 10a (16 GPUs HPWNV, k=1).
+    let cluster = ClusterSpec::hpwnv(4);
+    let d = cluster.n_devices();
+    let mut t = TableReport::new(
+        "Fig 10a — speedup vs Deepspeed-MoE (16 GPUs HPWNV, k=1)",
+        &["FasterMoE", "Pro-Prophet"],
+    );
+    for model in ModelSpec::table3(d, 1, 16384) {
+        let (s_fm, s_pp) = scenario::speedup_row(&model, &cluster, 8, 42);
+        t.row(&model.name, vec![s_fm, s_pp]);
+    }
+    println!("{}", t.render());
+
+    // Table I condensed: FasterMoE LB overhead.
+    let model = ModelSpec::moe_gpt_m(d, 1, 16384);
+    let trace = scenario::trace_for(&model, d, 8, 42);
+    let fm = simulate(&model, &cluster, &trace, &Policy::FasterMoe);
+    println!(
+        "Table I (MoE-GPT-M): FasterMoE-style LB overhead = {:.1}% of iteration (paper 29-37%)\n",
+        100.0 * fm.lb_fraction()
+    );
+
+    // Table IV/V condensed.
+    for (name, cluster, tokens) in [
+        ("Table IV (HPNV, 16 GPUs)", ClusterSpec::hpnv(4), 16384u64),
+        ("Table V (LPWNV, 8 GPUs)", ClusterSpec::lpwnv(2), 4096),
+    ] {
+        let d = cluster.n_devices();
+        let model = ModelSpec::moe_gpt_s(d, 1, tokens);
+        let (s_fm, s_pp) = scenario::speedup_row(&model, &cluster, 8, 7);
+        println!(
+            "{name}: MoE-GPT-S k=1 — FasterMoE {s_fm:.2}x, Pro-Prophet {s_pp:.2}x vs Deepspeed-MoE"
+        );
+    }
+    println!("\nDone. Full tables: cargo bench  (results under bench_results/)");
+}

@@ -1,0 +1,151 @@
+"""AOT entry point: lower the L2/L1 stack to HLO **text** artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per preset P (written under --out-dir):
+  P_train_step.hlo.txt   fused fwd+bwd+Adam step
+  P_init.hlo.txt         seed (i32) -> (params..., m..., v...) tuple
+  P_eval_step.hlo.txt    forward-only loss + loads
+  P_expert_ffn.hlo.txt   one expert FFN on a (C, D) slab  (EP coordinator)
+  P_gate.hlo.txt         gate of one MoE layer             (EP coordinator)
+  P_manifest.json        config, tensor specs, artifact inventory
+
+``make artifacts`` runs this once; nothing here executes at training time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(cfg: M.ModelConfig) -> str:
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+    pspecs = [spec(s) for _, s in cfg.param_specs()]
+    step = jax.ShapeDtypeStruct((), jnp.float32)
+    tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    fn = functools.partial(M.train_step, cfg)
+    lowered = jax.jit(fn).lower(pspecs, pspecs, pspecs, step, tokens)
+    return to_hlo_text(lowered)
+
+
+def lower_init(cfg: M.ModelConfig) -> str:
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jax.jit(functools.partial(M.init_state, cfg)).lower(seed)
+    return to_hlo_text(lowered)
+
+
+def lower_eval_step(cfg: M.ModelConfig) -> str:
+    pspecs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in cfg.param_specs()]
+    tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    lowered = jax.jit(functools.partial(M.eval_step, cfg)).lower(pspecs, tokens)
+    return to_hlo_text(lowered)
+
+
+def lower_expert_ffn(cfg: M.ModelConfig) -> str:
+    d, f, c = cfg.d_model, cfg.d_ff, cfg.capacity
+    s32 = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+    lowered = jax.jit(functools.partial(M.single_expert_ffn, cfg)).lower(
+        s32((c, d)), s32((d, f)), s32((f,)), s32((f, d)), s32((d,))
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_gate(cfg: M.ModelConfig) -> str:
+    t, d, e = cfg.tokens_per_step, cfg.d_model, cfg.n_experts
+    s32 = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+    lowered = jax.jit(functools.partial(M.gate_only, cfg)).lower(
+        s32((t, d)), s32((d, e))
+    )
+    return to_hlo_text(lowered)
+
+
+def manifest(cfg: M.ModelConfig, artifacts: dict) -> dict:
+    return {
+        "preset": cfg.name,
+        "config": {
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "d_model": cfg.d_model,
+            "d_ff": cfg.d_ff,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_experts": cfg.n_experts,
+            "k": cfg.k,
+            "capacity": cfg.capacity,
+            "capacity_factor": cfg.capacity_factor,
+            "batch": cfg.batch,
+            "lr": cfg.lr,
+            "tokens_per_step": cfg.tokens_per_step,
+            "num_tensors": cfg.num_tensors,
+            "num_params": int(cfg.num_params),
+        },
+        "tensors": [
+            {"name": n, "shape": list(s)} for n, s in cfg.param_specs()
+        ],
+        "artifacts": artifacts,
+        # Train-step HLO interface, flat argument order.
+        "train_step_interface": {
+            "inputs": "params*N, m*N, v*N, step(f32[]), tokens(i32[B,S])",
+            "outputs": "tuple(params*N, m*N, v*N, loss(f32[]), loads(f32[L,E]))",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument(
+        "--skip-train-step", action="store_true",
+        help="only emit the small artifacts (faster iteration)",
+    )
+    args = ap.parse_args()
+    cfg = M.PRESETS[args.preset]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    arts = {}
+
+    def emit(tag: str, text: str) -> None:
+        fname = f"{cfg.name}_{tag}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as fh:
+            fh.write(text)
+        arts[tag] = fname
+        print(f"[aot] {fname}: {len(text)/1e6:.2f} MB")
+
+    emit("expert_ffn", lower_expert_ffn(cfg))
+    emit("gate", lower_gate(cfg))
+    emit("init", lower_init(cfg))
+    emit("eval_step", lower_eval_step(cfg))
+    if not args.skip_train_step:
+        emit("train_step", lower_train_step(cfg))
+
+    mpath = os.path.join(args.out_dir, f"{cfg.name}_manifest.json")
+    with open(mpath, "w") as fh:
+        json.dump(manifest(cfg, arts), fh, indent=2)
+    print(f"[aot] {mpath}")
+
+
+if __name__ == "__main__":
+    main()

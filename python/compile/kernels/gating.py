@@ -1,0 +1,142 @@
+"""Layer-1 Pallas kernel: top-k gate of a MoE layer.
+
+The gate computes, per token, a softmax over experts and the top-k expert
+ids + normalized routing weights.  On the VPU this is a row-wise vector
+kernel (no MXU work): the token axis is tiled into blocks, the expert axis
+(E = #devices, small) stays resident per block.
+
+Data-dependent scatter (the A2A dispatch itself) deliberately lives OUTSIDE
+the kernel, at Layer 3 — exactly as in the paper, where the gate produces
+the routing decision and the system layer moves the bytes.
+
+interpret=True for CPU-PJRT execution; correctness vs ref.py in pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 128
+
+
+def _topk_gate_kernel(logits_ref, probs_ref, idx_ref, weight_ref, *, k: int):
+    """One token-block step: softmax + iterative masked argmax (k rounds)."""
+    logits = logits_ref[...]  # (bt, E) f32
+    e = logits.shape[1]
+
+    # Numerically stable softmax along the expert axis.
+    m = jnp.max(logits, axis=1, keepdims=True)
+    z = jnp.exp(logits - m)
+    probs = z / jnp.sum(z, axis=1, keepdims=True)
+    probs_ref[...] = probs
+
+    # Iterative top-k: k rounds of argmax with already-taken experts masked
+    # to -inf.  k is tiny (1 or 2 in the paper) so the loop is unrolled.
+    masked = probs
+    col = jax.lax.broadcasted_iota(jnp.int32, (logits.shape[0], e), 1)
+    for kk in range(k):
+        best = jnp.argmax(masked, axis=1).astype(jnp.int32)  # (bt,)
+        idx_ref[:, kk] = best
+        weight_ref[:, kk] = jnp.take_along_axis(
+            probs, best[:, None], axis=1
+        )[:, 0]
+        taken = col == best[:, None]
+        masked = jnp.where(taken, -jnp.inf, masked)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_t", "interpret", "renormalize")
+)
+def topk_gate(
+    logits: jnp.ndarray,
+    *,
+    k: int,
+    block_t: int = DEFAULT_BLOCK_T,
+    interpret: bool = True,
+    renormalize: bool = True,
+):
+    """Top-k gating over expert logits.
+
+    Args:
+      logits: (T, E) f32 gate scores.
+      k: experts per token (1 or 2 in the paper's evaluation).
+      renormalize: if True the k routing weights are renormalized to sum to
+        one (Gshard-style), otherwise raw softmax probabilities are used.
+
+    Returns:
+      probs:   (T, E) full softmax (used for aux stats / losses).
+      idx:     (T, k) int32 expert ids, descending by probability.
+      weight:  (T, k) f32 routing weights.
+    """
+    if logits.ndim != 2:
+        raise ValueError(f"logits must be (T, E), got {logits.shape}")
+    t, e = logits.shape
+    if not 1 <= k <= e:
+        raise ValueError(f"k={k} out of range for E={e}")
+
+    bt = min(block_t, t)
+    pad = (-t) % bt
+    lp = jnp.pad(logits.astype(jnp.float32), ((0, pad), (0, 0)))
+    tp = lp.shape[0]
+    grid = (tp // bt,)
+
+    probs, idx, weight = pl.pallas_call(
+        functools.partial(_topk_gate_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, e), lambda i: (i, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, e), jnp.float32),
+            jax.ShapeDtypeStruct((tp, k), jnp.int32),
+            jax.ShapeDtypeStruct((tp, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lp)
+
+    probs, idx, weight = probs[:t], idx[:t], weight[:t]
+    if renormalize:
+        weight = weight / jnp.maximum(
+            jnp.sum(weight, axis=1, keepdims=True), 1e-9
+        )
+    return probs, idx, weight
+
+
+# The routing decision is discrete: no gradient flows through idx, and the
+# pallas interpret-mode call has no reverse-mode rule anyway.  The model
+# re-derives the routing WEIGHTS differentiably in jnp from the logits
+# (Gshard-style), so gate_w still trains; the decision itself is wrapped in
+# a custom-vjp with zero cotangent.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def topk_gate_decision(logits, k, block_t=DEFAULT_BLOCK_T, interpret=True):
+    """Top-k expert ids only (T, k) — non-differentiable routing decision."""
+    _, idx, _ = topk_gate(logits, k=k, block_t=block_t, interpret=interpret)
+    return idx
+
+
+def _decision_fwd(logits, k, block_t, interpret):
+    return topk_gate_decision(logits, k, block_t, interpret), logits.shape
+
+
+def _decision_bwd(k, block_t, interpret, shape, _dout):
+    return (jnp.zeros(shape, jnp.float32),)
+
+
+topk_gate_decision.defvjp(_decision_fwd, _decision_bwd)
+
+
+def expert_load(idx: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """Input distribution: tokens routed to each expert (pre-capacity).
+
+    This is the statistic the Pro-Prophet profiler feeds to the planner
+    (paper section II "Locality"): counts[e] = |{(t, kk) : idx[t, kk] = e}|.
+    """
+    onehot = jax.nn.one_hot(idx.reshape(-1), num_experts, dtype=jnp.float32)
+    return jnp.sum(onehot, axis=0)

@@ -1,0 +1,254 @@
+"""Layer-1 Pallas kernels: the expert-FFN hot spot of a MoE layer.
+
+The paper's compute hot path is the per-expert FFN (x @ W1 -> GeLU -> @ W2)
+executed after the A2A dispatch.  On the authors' CUDA testbed this is a
+pair of cuBLAS GEMMs per expert; here we re-express it for the TPU-shaped
+Pallas model (see DESIGN.md section "Hardware adaptation"):
+
+* the GEMM is tiled into (block_m x block_n) output tiles with a reduction
+  grid over k-blocks — the MXU-systolic-array analogue of the paper's
+  threadblock tiling;
+* each grid step stages one (block_m, block_k) activation tile and one
+  (block_k, block_n) weight tile from HBM into VMEM via ``BlockSpec``;
+* partial products accumulate directly in the f32 output tile, which Pallas
+  keeps resident in VMEM across the k-grid ("revisiting" the same output
+  block), i.e. the classic k-inner matmul pipeline;
+* bias add + activation are fused into the final k-step so the activation
+  never round-trips to HBM.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the rust
+runtime executes.  Correctness is pinned to ``ref.py`` by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: 128 matches the MXU systolic array edge; f32 tiles of
+# (128, 128) are 64 KiB each, so one grid step touches ~192 KiB of VMEM —
+# far below the ~16 MiB/core budget, leaving room for double buffering.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GeLU (same form the paper's GPT models use)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+_ACTIVATIONS: dict[str, Callable[[jnp.ndarray], jnp.ndarray]] = {
+    "none": lambda x: x,
+    "gelu": gelu,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
+
+
+def _matmul_bias_act_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    """One (m, n, k) grid step of the tiled fused GEMM.
+
+    o[m, n] accumulates x[m, k] @ w[k, n]; on the last k step the bias is
+    added and the activation applied in-register (VMEM), fusing the epilogue.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...][None, :]
+        o_ref[...] = _ACTIVATIONS[act](acc)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+def _mba_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    act: str,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    """Raw fused pallas GEMM (no autodiff rule) — see matmul_bias_act."""
+    m, k = x.shape
+    _, n = w.shape
+
+    # Clamp blocks to the (padded) problem so tiny problems stay tiny.
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, bk), 1, bn)
+    bp = _pad_to(b.astype(jnp.float32), 0, bn)
+
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_bias_act_kernel, nk=grid[2], act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _act_grad(act: str, z: jnp.ndarray) -> jnp.ndarray:
+    """d act(z) / dz, elementwise."""
+    if act == "none":
+        return jnp.ones_like(z)
+    if act == "relu":
+        return (z > 0).astype(z.dtype)
+    if act == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        u = c * (z + 0.044715 * z**3)
+        th = jnp.tanh(u)
+        du = c * (1.0 + 3.0 * 0.044715 * z * z)
+        return 0.5 * (1.0 + th) + 0.5 * z * (1.0 - th * th) * du
+    raise ValueError(act)
+
+
+# Pallas interpret-mode calls do not support reverse-mode autodiff, so the
+# public GEMM carries a custom VJP whose backward pass is expressed with the
+# SAME Pallas kernel: dx = dz @ w^T, dw = x^T @ dz (three kernel launches
+# per GEMM in the backward graph — exactly the dataflow the paper's Eq. (3)
+# "backward ~ 2x forward" cost model assumes).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _mba_core(x, w, b, act, block_m, block_n, block_k, interpret):
+    return _mba_pallas(x, w, b, act, block_m, block_n, block_k, interpret)
+
+
+def _mba_fwd(x, w, b, act, block_m, block_n, block_k, interpret):
+    # Pre-activation z is the residual needed by the activation gradient.
+    z = _mba_pallas(x, w, b, "none", block_m, block_n, block_k, interpret)
+    return _ACTIVATIONS[act](z), (x, w, z)
+
+
+def _mba_bwd(act, block_m, block_n, block_k, interpret, res, dout):
+    x, w, z = res
+    dz = dout * _act_grad(act, z)
+    zk = jnp.zeros((w.shape[0],), jnp.float32)
+    zn = jnp.zeros((w.shape[1],), jnp.float32)
+    dx = _mba_pallas(dz, w.T, zk, "none", block_m, block_n, block_k, interpret)
+    dw = _mba_pallas(x.T, dz, zn, "none", block_m, block_n, block_k, interpret)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+_mba_core.defvjp(_mba_fwd, _mba_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("act", "block_m", "block_n", "block_k", "interpret"),
+)
+def matmul_bias_act(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    act: str = "none",
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused ``act(x @ w + b)`` as a tiled Pallas kernel (differentiable).
+
+    Shapes: x (M, K), w (K, N), b (N,) -> (M, N), f32.
+    Inputs whose dimensions are not multiples of the block sizes are
+    zero-padded (zeros contribute nothing to the accumulation; padded rows
+    and columns are sliced away afterwards).
+    """
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} w{w.shape} b{b.shape}")
+    if x.shape[1] != w.shape[0] or w.shape[1] != b.shape[0]:
+        raise ValueError(f"bad shapes: x{x.shape} w{w.shape} b{b.shape}")
+    if act not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+    return _mba_core(
+        x.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32),
+        act, block_m, block_n, block_k, interpret,
+    )
+
+
+def expert_ffn(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One expert's FFN: ``gelu(x @ w1 + b1) @ w2 + b2``.
+
+    Shapes: x (T, D), w1 (D, F), b1 (F,), w2 (F, D), b2 (D,) -> (T, D).
+    Two fused Pallas GEMMs; the GeLU is fused into the first epilogue so the
+    (T, F) intermediate is written to HBM exactly once.
+    """
+    h = matmul_bias_act(
+        x, w1, b1, act="gelu",
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+    return matmul_bias_act(
+        h, w2, b2, act="none",
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def vmem_bytes_per_step(block_m: int, block_n: int, block_k: int) -> int:
+    """Estimated VMEM residency of one grid step of the fused GEMM (f32).
+
+    x tile + w tile + bias tile + output tile; used by DESIGN.md/EXPERIMENTS.md
+    to justify the chosen block shapes (interpret-mode wallclock is not a TPU
+    proxy, so we reason about structure instead).
+    """
+    return 4 * (block_m * block_k + block_k * block_n + block_n + block_m * block_n)
+
+
+def mxu_utilization_estimate(block_m: int, block_n: int, block_k: int) -> float:
+    """Fraction of MXU issue slots a (bm, bn, bk) tile keeps busy.
+
+    The 128x128 MXU retires one 128x128x128 MAC block per pass; partial tiles
+    waste the remainder of the systolic wavefront.
+    """
+    eff_m = min(block_m, 128) / 128.0
+    eff_n = min(block_n, 128) / 128.0
+    eff_k = min(block_k, 128) / 128.0
+    return eff_m * eff_n * eff_k

@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package has an exact reference here, written with
+nothing but jax.numpy so it is trivially auditable.  pytest/hypothesis
+sweeps shapes and dtypes and asserts allclose(kernel, ref).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def matmul_bias_act_ref(x, w, b, act: str = "none"):
+    out = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if act == "gelu":
+        return gelu_ref(out)
+    if act == "relu":
+        return jnp.maximum(out, 0.0)
+    if act == "none":
+        return out
+    raise ValueError(act)
+
+
+def expert_ffn_ref(x, w1, b1, w2, b2):
+    """gelu(x @ w1 + b1) @ w2 + b2 — one expert's FFN."""
+    h = matmul_bias_act_ref(x, w1, b1, act="gelu")
+    return matmul_bias_act_ref(h, w2, b2, act="none")
+
+
+def topk_gate_ref(logits, k: int, renormalize: bool = True):
+    """softmax + top-k expert selection, matching kernels.gating.topk_gate."""
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weight, idx = jax.lax.top_k(probs, k)
+    idx = idx.astype(jnp.int32)
+    if renormalize:
+        weight = weight / jnp.maximum(
+            jnp.sum(weight, axis=-1, keepdims=True), 1e-9
+        )
+    return probs, idx, weight
+
+
+def expert_load_ref(idx, num_experts: int):
+    return jnp.bincount(idx.reshape(-1), length=num_experts).astype(jnp.float32)
+
+
+def dispatch_combine_ref(x, idx, weight, num_experts: int, capacity: int):
+    """Gshard-style capacity-bounded dispatch/combine (oracle for model.py).
+
+    Args:
+      x: (T, D) tokens.
+      idx: (T, k) expert assignment.
+      weight: (T, k) routing weights.
+    Returns:
+      expert_inputs: (E, C, D) per-expert token slabs (zero-padded).
+      combine: function (E, C, D) -> (T, D) that scatters expert outputs
+        back to token order, weighted by the gate.
+    """
+    t, d = x.shape
+    k = idx.shape[1]
+    # Position of each (token, choice) within its expert queue, in token
+    # order (tokens beyond capacity are dropped, as in Gshard/Tutel).
+    flat_idx = idx.T.reshape(-1)  # choice-major like the model: (k*T,)
+    onehot = jax.nn.one_hot(flat_idx, num_experts, dtype=jnp.int32)  # (kT, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot - 1  # (kT, E), -1 where absent
+    pos_in_expert = jnp.sum(pos * onehot, axis=1)  # (kT,)
+    keep = (pos_in_expert >= 0) & (pos_in_expert < capacity)
+
+    disp = (
+        jax.nn.one_hot(flat_idx, num_experts, dtype=jnp.float32)[:, :, None]
+        * jax.nn.one_hot(
+            jnp.clip(pos_in_expert, 0, capacity - 1), capacity,
+            dtype=jnp.float32,
+        )[:, None, :]
+        * keep[:, None, None].astype(jnp.float32)
+    )  # (kT, E, C)
+    xk = jnp.tile(x, (k, 1))  # (kT, D)
+    expert_inputs = jnp.einsum("tec,td->ecd", disp, xk)
+
+    wk = weight.T.reshape(-1)  # (kT,)
+
+    def combine(expert_outputs):
+        back = jnp.einsum("ecd,tec->td", expert_outputs, disp)  # (kT, D)
+        back = back * wk[:, None]
+        return back.reshape(k, t, d).sum(axis=0)
+
+    return expert_inputs, combine
+
+
+def layernorm_ref(x, scale, bias, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def attention_ref(x, wq, wk, wv, wo, n_heads: int):
+    """Causal multi-head self-attention (plain jnp; not a paper contribution)."""
+    t, d = x.shape
+    hd = d // n_heads
+    q = (x @ wq).reshape(t, n_heads, hd).transpose(1, 0, 2)
+    k = (x @ wk).reshape(t, n_heads, hd).transpose(1, 0, 2)
+    v = (x @ wv).reshape(t, n_heads, hd).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", att, v)
+    return out.transpose(1, 0, 2).reshape(t, d) @ wo

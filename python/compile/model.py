@@ -1,0 +1,328 @@
+"""Layer-2: MoE-GPT in JAX — forward/backward + Adam, calling the L1 kernels.
+
+This is the build-time model definition.  ``aot.py`` lowers ``train_step``
+(and friends) to HLO text once; the rust coordinator executes the artifacts
+on its PJRT client and NEVER imports python.
+
+Model family = the paper's Table III MoE-GPT variants: a GPT stack where
+every FFN is replaced by a MoE layer (top-k gate + E experts), experts
+per layer = #devices.
+
+Parameters are carried as a FLAT LIST of arrays with a fixed documented
+order (see ``param_specs``) so the AOT'd HLO has a flat, stable interface
+the rust side can drive without a pytree library:
+
+  [0] tok_emb (V, D)          token embedding, tied softmax head
+  [1] pos_emb (S, D)          learned positions
+  per layer l (13 tensors):
+      ln1_scale (D,)  ln1_bias (D,)
+      wq (D, D)  wk (D, D)  wv (D, D)  wo (D, D)
+      ln2_scale (D,)  ln2_bias (D,)
+      gate_w (D, E)
+      w1 (E, D, F)  b1 (E, F)  w2 (E, F, D)  b2 (E, D)
+  [-2] lnf_scale (D,)  [-1] lnf_bias (D,)
+
+``train_step`` additionally returns the per-layer expert load histogram
+(the "input distribution" of the paper) — this is how the L3 profiler
+observes real routing statistics without touching python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gating, moe_ffn, ref
+
+LAYER_STRIDE = 13
+NUM_HEADER = 2  # tok_emb, pos_emb
+NUM_FOOTER = 2  # lnf_scale, lnf_bias
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of one MoE-GPT variant."""
+
+    name: str = "tiny"
+    vocab: int = 64
+    seq_len: int = 16
+    d_model: int = 32
+    d_ff: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    n_experts: int = 4
+    k: int = 2
+    capacity_factor: float = 1.5
+    batch: int = 4
+    lr: float = 1e-3
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    use_pallas: bool = True
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 128
+
+    @property
+    def tokens_per_step(self) -> int:
+        return self.batch * self.seq_len
+
+    @property
+    def capacity(self) -> int:
+        """Per-expert token capacity (Gshard-style), over the whole batch."""
+        return max(
+            1,
+            int(
+                math.ceil(
+                    self.k * self.tokens_per_step * self.capacity_factor
+                    / self.n_experts
+                )
+            ),
+        )
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """(name, shape) for every tensor, in flat order."""
+        d, f, e, s, v = (
+            self.d_model, self.d_ff, self.n_experts, self.seq_len, self.vocab,
+        )
+        specs: List[Tuple[str, Tuple[int, ...]]] = [
+            ("tok_emb", (v, d)),
+            ("pos_emb", (s, d)),
+        ]
+        for l in range(self.n_layers):
+            specs += [
+                (f"l{l}.ln1_scale", (d,)),
+                (f"l{l}.ln1_bias", (d,)),
+                (f"l{l}.wq", (d, d)),
+                (f"l{l}.wk", (d, d)),
+                (f"l{l}.wv", (d, d)),
+                (f"l{l}.wo", (d, d)),
+                (f"l{l}.ln2_scale", (d,)),
+                (f"l{l}.ln2_bias", (d,)),
+                (f"l{l}.gate_w", (d, e)),
+                (f"l{l}.w1", (e, d, f)),
+                (f"l{l}.b1", (e, f)),
+                (f"l{l}.w2", (e, f, d)),
+                (f"l{l}.b2", (e, d)),
+            ]
+        specs += [("lnf_scale", (d,)), ("lnf_bias", (d,))]
+        return specs
+
+    @property
+    def num_tensors(self) -> int:
+        return NUM_HEADER + LAYER_STRIDE * self.n_layers + NUM_FOOTER
+
+    @property
+    def num_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_specs())
+
+
+# Presets used throughout the repo.  "tiny" keeps pytest fast; "e2e" is the
+# end-to-end training demo (~27M params — sized for a single CPU core, see
+# DESIGN.md section 3).
+PRESETS = {
+    "tiny": ModelConfig(),
+    "e2e": ModelConfig(
+        name="e2e",
+        vocab=1024,
+        seq_len=128,
+        d_model=256,
+        d_ff=1024,
+        n_layers=6,
+        n_heads=8,
+        n_experts=8,
+        k=1,
+        batch=4,
+        lr=1e-3,
+    ),
+}
+
+
+def init_params(cfg: ModelConfig, seed: jnp.ndarray) -> List[jnp.ndarray]:
+    """Deterministic init from an int32 seed (AOT-friendly: seed is a
+    runtime input, so one compiled init artifact serves any seed)."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    params: List[jnp.ndarray] = []
+    for i, (name, shape) in enumerate(cfg.param_specs()):
+        key, sub = jax.random.split(key)
+        base = name.split(".")[-1]
+        if base.startswith("ln") or base == "b1" or base == "b2":
+            if base.endswith("scale"):
+                params.append(jnp.ones(shape, jnp.float32))
+            else:
+                params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 0.02 if base in ("tok_emb", "pos_emb") else 1.0 / math.sqrt(fan_in)
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _layer_slice(params: Sequence[jnp.ndarray], l: int) -> Sequence[jnp.ndarray]:
+    off = NUM_HEADER + l * LAYER_STRIDE
+    return params[off : off + LAYER_STRIDE]
+
+
+def moe_layer(
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    gate_w: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k MoE FFN over flattened tokens x (T, D).
+
+    Returns (output (T, D), load (E,)) where load is the pre-capacity input
+    distribution the Pro-Prophet planner consumes.
+    """
+    t, d = x.shape
+    logits = x @ gate_w  # (T, E)
+    if cfg.use_pallas:
+        idx = gating.topk_gate_decision(logits, cfg.k)  # no grad through idx
+    else:
+        _, idx, _ = ref.topk_gate_ref(logits, cfg.k)
+        idx = jax.lax.stop_gradient(idx)
+    # Routing weights re-derived differentiably so gate_w trains (the
+    # discrete decision stays in the kernel; see kernels/gating.py).
+    probs = jax.nn.softmax(logits, axis=-1)
+    weight = jnp.take_along_axis(probs, idx, axis=1)
+    weight = weight / jnp.maximum(jnp.sum(weight, axis=1, keepdims=True), 1e-9)
+    load = jax.lax.stop_gradient(gating.expert_load(idx, cfg.n_experts))
+
+    expert_inputs, combine = ref.dispatch_combine_ref(
+        x, idx, weight, cfg.n_experts, cfg.capacity
+    )  # (E, C, D)
+
+    if cfg.use_pallas:
+        fn = lambda xe, a, b, c, dd: moe_ffn.expert_ffn(
+            xe, a, b, c, dd,
+            block_m=cfg.block_m, block_n=cfg.block_n, block_k=cfg.block_k,
+        )
+        expert_outputs = jax.vmap(fn)(expert_inputs, w1, b1, w2, b2)
+    else:
+        expert_outputs = jax.vmap(ref.expert_ffn_ref)(expert_inputs, w1, b1, w2, b2)
+
+    return combine(expert_outputs), load
+
+
+def forward(
+    cfg: ModelConfig, params: Sequence[jnp.ndarray], tokens: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Next-token LM loss + per-layer expert loads.
+
+    tokens: (B, S) int32.  Returns (scalar loss, loads (L, E)).
+    """
+    b, s = tokens.shape
+    d = cfg.d_model
+    tok_emb, pos_emb = params[0], params[1]
+
+    h = tok_emb[tokens] + pos_emb[None, :s, :]  # (B, S, D)
+    loads = []
+    for l in range(cfg.n_layers):
+        (
+            ln1_s, ln1_b, wq, wk, wv, wo, ln2_s, ln2_b,
+            gate_w, w1, b1, w2, b2,
+        ) = _layer_slice(params, l)
+        # Attention sublayer (batched over B; plain jnp — see ref.py).
+        a_in = ref.layernorm_ref(h, ln1_s, ln1_b)
+        att = jax.vmap(
+            lambda xb: ref.attention_ref(xb, wq, wk, wv, wo, cfg.n_heads)
+        )(a_in)
+        h = h + att
+        # MoE sublayer over flattened tokens (B*S, D) — EP's token pool.
+        m_in = ref.layernorm_ref(h, ln2_s, ln2_b).reshape(b * s, d)
+        moe_out, load = moe_layer(cfg, m_in, gate_w, w1, b1, w2, b2)
+        h = h + moe_out.reshape(b, s, d)
+        loads.append(load)
+
+    h = ref.layernorm_ref(h, params[-2], params[-1])
+    logits = h @ params[0].T  # tied head: (B, S, V)
+
+    # Shifted next-token cross-entropy.
+    logits = logits[:, :-1, :]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, jnp.stack(loads)  # (L, E)
+
+
+def loss_fn(cfg, params, tokens):
+    return forward(cfg, params, tokens)
+
+
+def train_step(
+    cfg: ModelConfig,
+    params: Sequence[jnp.ndarray],
+    m: Sequence[jnp.ndarray],
+    v: Sequence[jnp.ndarray],
+    step: jnp.ndarray,
+    tokens: jnp.ndarray,
+):
+    """One fused fwd+bwd+Adam step.
+
+    Args (all runtime inputs of the AOT artifact, in this order):
+      params, m, v: flat tensor lists (see param_specs).
+      step: f32 scalar, 1-based Adam timestep.
+      tokens: (B, S) int32.
+    Returns (tuple in the HLO):
+      new_params..., new_m..., new_v..., loss (f32), loads (L, E) f32.
+    """
+    (loss, loads), grads = jax.value_and_grad(
+        lambda p: forward(cfg, p, tokens), has_aux=True
+    )(list(params))
+
+    b1, b2, eps, lr = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.lr
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    new_p, new_m, new_v = [], [], []
+    for p, mm, vv, g in zip(params, m, v, grads):
+        mm = b1 * mm + (1.0 - b1) * g
+        vv = b2 * vv + (1.0 - b2) * g * g
+        mhat = mm / bc1
+        vhat = vv / bc2
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mm)
+        new_v.append(vv)
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss, loads)
+
+
+def init_state(cfg: ModelConfig, seed: jnp.ndarray):
+    """params + zeroed Adam moments, as one flat tuple (the init artifact)."""
+    params = init_params(cfg, seed)
+    zeros = [jnp.zeros_like(p) for p in params]
+    return tuple(params) + tuple(zeros) + tuple(jnp.zeros_like(p) for p in params)
+
+
+def eval_step(cfg: ModelConfig, params: Sequence[jnp.ndarray], tokens: jnp.ndarray):
+    """Forward-only loss + loads (for validation from rust)."""
+    loss, loads = forward(cfg, params, tokens)
+    return loss, loads
+
+
+def single_expert_ffn(cfg: ModelConfig, x: jnp.ndarray, w1, b1, w2, b2):
+    """One expert's FFN on a (C, D) token slab — the artifact the threaded
+    EP coordinator executes per virtual device (examples/ep_demo.rs)."""
+    if cfg.use_pallas:
+        return moe_ffn.expert_ffn(
+            x, w1, b1, w2, b2,
+            block_m=cfg.block_m, block_n=cfg.block_n, block_k=cfg.block_k,
+        )
+    return ref.expert_ffn_ref(x, w1, b1, w2, b2)
+
+
+def gate_only(cfg: ModelConfig, x: jnp.ndarray, gate_w: jnp.ndarray):
+    """Gate of one MoE layer on (T, D) tokens -> (idx (T,k), weight (T,k),
+    load (E,)).  Used by the EP coordinator to route real tokens."""
+    logits = x @ gate_w
+    if cfg.use_pallas:
+        _, idx, weight = gating.topk_gate(logits, k=cfg.k)
+    else:
+        _, idx, weight = ref.topk_gate_ref(logits, cfg.k)
+    return idx, weight, gating.expert_load(idx, cfg.n_experts)

@@ -1,0 +1,246 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes, seeds, block sizes and activation; every property
+asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gating, moe_ffn, ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    block=st.sampled_from([8, 16, 32]),
+    act=st.sampled_from(["none", "gelu", "relu"]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_bias_act_matches_ref(m, k, n, block, act, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    got = moe_ffn.matmul_bias_act(
+        x, w, b, act=act, block_m=block, block_n=block, block_k=block
+    )
+    want = ref.matmul_bias_act_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 7))  # inner mismatch
+    b = jnp.zeros((7,))
+    with pytest.raises(ValueError):
+        moe_ffn.matmul_bias_act(x, w, b)
+
+
+def test_matmul_rejects_bad_act():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((5, 7))
+    b = jnp.zeros((7,))
+    with pytest.raises(ValueError):
+        moe_ffn.matmul_bias_act(x, w, b, act="swish")
+
+
+def test_matmul_block_shape_invariance():
+    """Same numerics no matter how the GEMM is tiled."""
+    x, w, b = _rand(0, (65, 33)), _rand(1, (33, 47)), _rand(2, (47,))
+    outs = [
+        moe_ffn.matmul_bias_act(
+            x, w, b, act="gelu", block_m=bm, block_n=bn, block_k=bk
+        )
+        for bm, bn, bk in [(8, 8, 8), (16, 32, 8), (128, 128, 128), (64, 16, 32)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+@given(
+    m=st.integers(2, 40),
+    k=st.integers(2, 24),
+    n=st.integers(2, 24),
+    act=st.sampled_from(["none", "gelu", "relu"]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_gradients_match_ref(m, k, n, act, seed):
+    """The custom VJP (pallas backward) equals autodiff of the jnp oracle."""
+    x = _rand(seed, (m, k), 0.5)
+    w = _rand(seed + 1, (k, n), 0.5)
+    b = _rand(seed + 2, (n,), 0.5)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(
+            moe_ffn.matmul_bias_act(
+                x, w, b, act=act, block_m=16, block_n=16, block_k=16
+            )
+            ** 2
+        )
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.matmul_bias_act_ref(x, w, b, act) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, bb in zip(gk, gr):
+        np.testing.assert_allclose(a, bb, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# expert_ffn
+# ---------------------------------------------------------------------------
+@given(
+    t=st.integers(1, 50),
+    d=st.integers(2, 32),
+    f=st.integers(2, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_expert_ffn_matches_ref(t, d, f, seed):
+    x = _rand(seed, (t, d))
+    w1, b1 = _rand(seed + 1, (d, f), 0.3), _rand(seed + 2, (f,), 0.1)
+    w2, b2 = _rand(seed + 3, (f, d), 0.3), _rand(seed + 4, (d,), 0.1)
+    got = moe_ffn.expert_ffn(x, w1, b1, w2, b2, block_m=16, block_n=16, block_k=16)
+    want = ref.expert_ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_expert_ffn_vmap_over_experts():
+    e, c, d, f = 4, 24, 16, 32
+    xs = _rand(0, (e, c, d))
+    w1, b1 = _rand(1, (e, d, f), 0.3), _rand(2, (e, f), 0.1)
+    w2, b2 = _rand(3, (e, f, d), 0.3), _rand(4, (e, d), 0.1)
+    fn = jax.vmap(
+        lambda x, a, b, c_, dd: moe_ffn.expert_ffn(
+            x, a, b, c_, dd, block_m=8, block_n=8, block_k=8
+        )
+    )
+    got = fn(xs, w1, b1, w2, b2)
+    want = jax.vmap(ref.expert_ffn_ref)(xs, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# gating
+# ---------------------------------------------------------------------------
+@given(
+    t=st.integers(1, 80),
+    e=st.sampled_from([2, 4, 8, 16]),
+    k=st.integers(1, 3),
+    block_t=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_topk_gate_matches_ref(t, e, k, block_t, seed):
+    k = min(k, e)
+    logits = _rand(seed, (t, e), 2.0)
+    p, i, w = gating.topk_gate(logits, k=k, block_t=block_t)
+    pr, ir, wr = ref.topk_gate_ref(logits, k)
+    np.testing.assert_allclose(p, pr, rtol=1e-5, atol=1e-6)
+    # Ties can legitimately order differently; compare selected probs.
+    np.testing.assert_allclose(
+        np.take_along_axis(np.asarray(p), np.asarray(i), 1),
+        np.take_along_axis(np.asarray(pr), np.asarray(ir), 1),
+        rtol=1e-5, atol=1e-6,
+    )
+    np.testing.assert_allclose(w, wr, rtol=1e-5, atol=1e-6)
+
+
+def test_topk_gate_weights_sum_to_one():
+    logits = _rand(7, (33, 8), 3.0)
+    _, _, w = gating.topk_gate(logits, k=2)
+    np.testing.assert_allclose(np.asarray(w).sum(1), np.ones(33), rtol=1e-5)
+
+
+def test_topk_gate_k_equals_e():
+    logits = _rand(3, (17, 4))
+    p, i, w = gating.topk_gate(logits, k=4)
+    assert sorted(np.asarray(i)[0].tolist()) == [0, 1, 2, 3]
+    np.testing.assert_allclose(np.asarray(w).sum(1), np.ones(17), rtol=1e-5)
+
+
+def test_topk_gate_rejects_bad_k():
+    logits = jnp.zeros((4, 4))
+    with pytest.raises(ValueError):
+        gating.topk_gate(logits, k=0)
+    with pytest.raises(ValueError):
+        gating.topk_gate(logits, k=5)
+
+
+def test_gate_decision_zero_gradient():
+    logits = _rand(11, (12, 4), 2.0)
+
+    def f(lg):
+        idx = gating.topk_gate_decision(lg, 2)
+        return jnp.sum(idx.astype(jnp.float32))
+
+    g = jax.grad(f)(logits)
+    np.testing.assert_allclose(g, np.zeros_like(g))
+
+
+@given(t=st.integers(1, 60), e=st.sampled_from([4, 8]), seed=st.integers(0, 999))
+def test_expert_load_counts(t, e, seed):
+    logits = _rand(seed, (t, e))
+    _, idx, _ = gating.topk_gate(logits, k=2)
+    load = gating.expert_load(idx, e)
+    assert float(np.asarray(load).sum()) == 2 * t
+    np.testing.assert_allclose(load, ref.expert_load_ref(idx, e))
+
+
+# ---------------------------------------------------------------------------
+# dispatch/combine oracle self-consistency (used directly by the model)
+# ---------------------------------------------------------------------------
+@given(
+    t=st.integers(4, 40),
+    e=st.sampled_from([2, 4, 8]),
+    k=st.integers(1, 2),
+    seed=st.integers(0, 999),
+)
+def test_dispatch_combine_roundtrip_identity_expert(t, e, k, seed):
+    """With identity experts and capacity >= T, combine(dispatch(x)) == x
+    scaled by the (renormalized) gate weights summing to 1."""
+    d = 8
+    x = _rand(seed, (t, d))
+    logits = _rand(seed + 1, (t, e), 2.0)
+    _, idx, w = ref.topk_gate_ref(logits, k)
+    inputs, combine = ref.dispatch_combine_ref(x, idx, w, e, capacity=t * k)
+    out = combine(inputs)
+    np.testing.assert_allclose(out, x, rtol=1e-4, atol=1e-5)
+
+
+def test_dispatch_capacity_drops_tokens():
+    """Tokens beyond expert capacity are dropped (output rows go to 0)."""
+    t, d, e = 16, 4, 2
+    x = jnp.ones((t, d))
+    idx = jnp.zeros((t, 1), jnp.int32)  # everyone picks expert 0
+    w = jnp.ones((t, 1))
+    inputs, combine = ref.dispatch_combine_ref(x, idx, w, e, capacity=4)
+    out = np.asarray(combine(inputs))
+    kept = (np.abs(out).sum(1) > 0).sum()
+    assert kept == 4
+
+
+# ---------------------------------------------------------------------------
+# VMEM / MXU structural estimates (perf deliverable sanity)
+# ---------------------------------------------------------------------------
+def test_vmem_budget_of_default_blocks():
+    bytes_ = moe_ffn.vmem_bytes_per_step(128, 128, 128)
+    assert bytes_ < 8 * 1024 * 1024  # far under a 16 MiB VMEM core
+
+
+def test_mxu_estimate_full_tiles():
+    assert moe_ffn.mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert moe_ffn.mxu_utilization_estimate(64, 128, 128) == 0.5

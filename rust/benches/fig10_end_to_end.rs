@@ -1,0 +1,57 @@
+//! Fig 10 (a-d) — end-to-end speedups over Deepspeed-MoE and FasterMoE on
+//! HPWNV clusters: {16 GPUs/16384 tok, 32 GPUs/32768 tok} x {k=1, k=2} x
+//! five MoE-GPT models.
+//!
+//! Paper: Pro-Prophet 1.36-2.66x vs Deepspeed-MoE, 1.01-1.48x vs FasterMoE.
+
+use pro_prophet::benchkit::{self, scenario};
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::{write_result, TableReport};
+use pro_prophet::util::json::{self, Json};
+
+fn main() {
+    benchkit::header("Fig 10", "end-to-end speedup vs Deepspeed-MoE / FasterMoE (HPWNV)");
+    let mut all = Vec::new();
+    let mut pp_vs_ds: Vec<f64> = Vec::new();
+    let mut pp_vs_fm: Vec<f64> = Vec::new();
+    for (panel, nodes, tokens, k) in [
+        ("a", 4usize, 16384u64, 1usize),
+        ("b", 8, 32768, 1),
+        ("c", 4, 16384, 2),
+        ("d", 8, 32768, 2),
+    ] {
+        let cluster = ClusterSpec::hpwnv(nodes);
+        let d = cluster.n_devices();
+        let mut table = TableReport::new(
+            &format!("Fig 10{panel}: {d} GPUs, {tokens} tokens, k={k}"),
+            &["FasterMoE", "Pro-Prophet", "PP/FM"],
+        );
+        for model in ModelSpec::table3(d, k, tokens) {
+            let trace = scenario::trace_for(&model, d, 10, 42 + nodes as u64);
+            let (ds, fm, pp) = scenario::three_way(&model, &cluster, &trace);
+            let s_fm = ds.avg_iter_time() / fm.avg_iter_time();
+            let s_pp = ds.avg_iter_time() / pp.avg_iter_time();
+            pp_vs_ds.push(s_pp);
+            pp_vs_fm.push(fm.avg_iter_time() / pp.avg_iter_time());
+            table.row(&model.name, vec![s_fm, s_pp, s_pp / s_fm]);
+            all.push(json::obj(vec![
+                ("panel", json::s(panel)),
+                ("model", json::s(&model.name)),
+                ("k", json::num(k as f64)),
+                ("gpus", json::num(d as f64)),
+                ("speedup_fastermoe", json::num(s_fm)),
+                ("speedup_prophet", json::num(s_pp)),
+            ]));
+        }
+        println!("{}", table.render());
+    }
+    let min_ds = pp_vs_ds.iter().copied().fold(f64::INFINITY, f64::min);
+    let max_ds = pp_vs_ds.iter().copied().fold(0.0, f64::max);
+    let min_fm = pp_vs_fm.iter().copied().fold(f64::INFINITY, f64::min);
+    let max_fm = pp_vs_fm.iter().copied().fold(0.0, f64::max);
+    println!("Pro-Prophet vs Deepspeed-MoE: {min_ds:.2}-{max_ds:.2}x  (paper 1.36-2.66x)");
+    println!("Pro-Prophet vs FasterMoE:     {min_fm:.2}-{max_fm:.2}x  (paper 1.01-1.48x)");
+    let path = write_result("fig10_end_to_end", &Json::Arr(all)).unwrap();
+    println!("-> {}", path.display());
+}

@@ -1,0 +1,66 @@
+//! Fig 11 — single-layer speedups on MoE-GPT-M over Deepspeed-MoE and
+//! FasterMoE for randomly selected layer indices, k in {1, 2}.
+//!
+//! Paper: 1.60-2.25x vs Deepspeed-MoE, 1.09-1.49x vs FasterMoE per layer.
+
+use pro_prophet::benchkit::{self, scenario};
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::{write_result, TableReport};
+use pro_prophet::sim::{single_layer_times, Policy, ProphetOptions};
+use pro_prophet::util::json::{self, Json};
+use pro_prophet::util::rng::Rng;
+
+fn main() {
+    benchkit::header("Fig 11", "single-layer speedups (MoE-GPT-M)");
+    let cluster = ClusterSpec::hpwnv(4);
+    let d = cluster.n_devices();
+    let mut rng = Rng::new(123);
+    let mut all = Vec::new();
+    for k in [1usize, 2] {
+        let model = ModelSpec::moe_gpt_m(d, k, 16384);
+        let trace = scenario::trace_for(&model, d, 2, 5);
+        let layers = &trace.iterations[1];
+        // Random layer sample, as the paper does.
+        let mut idx: Vec<usize> = (0..model.n_layers).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(6);
+        idx.sort();
+        let mut table = TableReport::new(
+            &format!("k={k}: single-layer time (ms) and speedups"),
+            &["DS (ms)", "FM (ms)", "PP (ms)", "PP/DS", "PP/FM"],
+        );
+        for &l in &idx {
+            let w = &layers[l];
+            let (t_ds, _) = single_layer_times(&model, &cluster, w, &Policy::DeepspeedMoe);
+            let (_, t_fm) = single_layer_times(&model, &cluster, w, &Policy::FasterMoe);
+            let (_, t_pp) = single_layer_times(
+                &model,
+                &cluster,
+                w,
+                &Policy::ProProphet(ProphetOptions::full()),
+            );
+            table.row(
+                &format!("layer {l}"),
+                vec![
+                    t_ds * 1e3,
+                    t_fm * 1e3,
+                    t_pp * 1e3,
+                    t_ds / t_pp,
+                    t_fm / t_pp,
+                ],
+            );
+            all.push(json::obj(vec![
+                ("k", json::num(k as f64)),
+                ("layer", json::num(l as f64)),
+                ("t_deepspeed", json::num(t_ds)),
+                ("t_fastermoe", json::num(t_fm)),
+                ("t_prophet", json::num(t_pp)),
+            ]));
+        }
+        println!("{}", table.render());
+    }
+    println!("paper: 1.60-2.25x vs Deepspeed-MoE, 1.09-1.49x vs FasterMoE");
+    let path = write_result("fig11_single_layer", &Json::Arr(all)).unwrap();
+    println!("-> {}", path.display());
+}

@@ -1,0 +1,75 @@
+//! Fig 13 — accuracy of the performance model: estimated vs "real"
+//! (discrete-event engine) time for A2A, expert computation (EC), Trans
+//! and Agg, over many sampled workloads.
+//!
+//! Paper: mean estimation error < 5%.
+
+use pro_prophet::benchkit;
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::{write_result, TableReport};
+use pro_prophet::perfmodel::PerfModel;
+use pro_prophet::planner::{greedy_search, PlannerConfig};
+use pro_prophet::sim::Engine;
+use pro_prophet::util::json::{self, Json};
+use pro_prophet::util::stats;
+use pro_prophet::workload::{WorkloadConfig, WorkloadGen};
+
+fn main() {
+    benchkit::header("Fig 13", "performance model accuracy (estimate vs engine)");
+    let cluster = ClusterSpec::hpwnv(4);
+    let d = cluster.n_devices();
+    let model = ModelSpec::moe_gpt_m(d, 1, 16384);
+    let pm = PerfModel::new(&model, &cluster);
+    let eng = Engine::new(&cluster, &pm);
+    let mut gen = WorkloadGen::new(WorkloadConfig::paper_default(8, d, d, 16384));
+
+    let mut est = vec![Vec::new(); 4]; // a2a, ec, trans, agg
+    let mut real = vec![Vec::new(); 4];
+    for _ in 0..6 {
+        for w in gen.next_iteration() {
+            let p = greedy_search(&w, &pm, &PlannerConfig::default()).placement;
+            let routed = w.route(&p);
+            // A2A
+            est[0].push(pm.t_a2a(&routed.r));
+            real[0].push(eng.a2a_time(&w.traffic(&p)));
+            // EC (forward)
+            est[1].push(pm.t_fec(&routed.h));
+            real[1].push(eng.fec_time(&routed.h));
+            // Trans / Agg (skip identity placements: both sides are 0)
+            if !p.is_identity() {
+                est[2].push(pm.t_trans(&p));
+                real[2].push(eng.trans_time(&p));
+                est[3].push(pm.t_agg(&p));
+                real[3].push(eng.agg_time(&p));
+            }
+        }
+    }
+
+    let names = ["A2A", "EC", "Trans", "Agg"];
+    let mut table = TableReport::new(
+        "mean |estimate - real| / real (%)",
+        &["mean err %", "samples"],
+    );
+    let mut out = Vec::new();
+    let mut errs_all = Vec::new();
+    for i in 0..4 {
+        let err = stats::mape(&est[i], &real[i]);
+        errs_all.push(err);
+        table.row(names[i], vec![100.0 * err, est[i].len() as f64]);
+        out.push(json::obj(vec![
+            ("op", json::s(names[i])),
+            ("mape", json::num(err)),
+            ("estimates", json::num_arr(&est[i])),
+            ("measured", json::num_arr(&real[i])),
+        ]));
+    }
+    println!("{}", table.render());
+    let overall = stats::mean(&errs_all);
+    println!(
+        "overall mean estimation error: {:.2}% (paper: < 5%)",
+        100.0 * overall
+    );
+    let path = write_result("fig13_perf_model", &Json::Arr(out)).unwrap();
+    println!("-> {}", path.display());
+}

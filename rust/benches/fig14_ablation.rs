@@ -1,0 +1,64 @@
+//! Fig 14 — effectiveness of components: speedup over the
+//! no-optimization baseline when enabling the planner, then the
+//! scheduler, then the effective combination (Eq 8-aware planner).
+//!
+//! Paper (MoE-GPT-M): planner 1.26x/1.12x (k=1/2), scheduler adds
+//! 1.14x/1.01x, Full combination adds 1.03x/1.02x.
+
+use pro_prophet::benchkit::{self, scenario};
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::{write_result, TableReport};
+use pro_prophet::sim::{simulate, Policy, ProphetOptions};
+use pro_prophet::util::json::{self, Json};
+
+fn main() {
+    benchkit::header("Fig 14", "component ablation (MoE-GPT-M)");
+    let cluster = ClusterSpec::hpwnv(4);
+    let d = cluster.n_devices();
+    let mut all = Vec::new();
+    for k in [1usize, 2] {
+        let model = ModelSpec::moe_gpt_m(d, k, 16384);
+        let trace = scenario::trace_for(&model, d, 12, 55);
+        let base = simulate(&model, &cluster, &trace, &Policy::DeepspeedMoe);
+        let planner = simulate(
+            &model,
+            &cluster,
+            &trace,
+            &Policy::ProProphet(ProphetOptions::planner_only()),
+        );
+        let scheduler = simulate(
+            &model,
+            &cluster,
+            &trace,
+            &Policy::ProProphet(ProphetOptions::without_combination()),
+        );
+        let full = simulate(
+            &model,
+            &cluster,
+            &trace,
+            &Policy::ProProphet(ProphetOptions::full()),
+        );
+        let b = base.avg_iter_time();
+        let mut table = TableReport::new(
+            &format!("k={k}: speedup over no-optimization baseline"),
+            &["speedup", "incremental"],
+        );
+        let sp = b / planner.avg_iter_time();
+        let ss = b / scheduler.avg_iter_time();
+        let sf = b / full.avg_iter_time();
+        table.row("+planner", vec![sp, sp]);
+        table.row("+scheduler", vec![ss, ss / sp]);
+        table.row("Full (combination)", vec![sf, sf / ss]);
+        println!("{}", table.render());
+        all.push(json::obj(vec![
+            ("k", json::num(k as f64)),
+            ("planner", json::num(sp)),
+            ("scheduler", json::num(ss)),
+            ("full", json::num(sf)),
+        ]));
+    }
+    println!("paper: planner 1.26x/1.12x, +scheduler 1.14x/1.01x, +Full 1.03x/1.02x");
+    let path = write_result("fig14_ablation", &Json::Arr(all)).unwrap();
+    println!("-> {}", path.display());
+}

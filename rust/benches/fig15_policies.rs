@@ -1,0 +1,52 @@
+//! Fig 15 — iteration latency of the planner vs the simple dynamic
+//! policies top2/top3 (replicate the 2/3 heaviest experts to all GPUs),
+//! MoE-GPT-M, k in {1, 2}.
+//!
+//! Paper: planner 1.77-1.82x faster than top2 and 2.04-2.10x than top3 at
+//! k=1; 1.38-1.40x at k=2.
+
+use pro_prophet::benchkit::{self, scenario};
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::{write_result, TableReport};
+use pro_prophet::sim::{simulate, Policy, ProphetOptions};
+use pro_prophet::util::json::{self, Json};
+
+fn main() {
+    benchkit::header("Fig 15", "planner vs static top-k policies (MoE-GPT-M)");
+    let cluster = ClusterSpec::hpwnv(4);
+    let d = cluster.n_devices();
+    let mut all = Vec::new();
+    for k in [1usize, 2] {
+        let model = ModelSpec::moe_gpt_m(d, k, 16384);
+        let trace = scenario::trace_for(&model, d, 12, 66);
+        // Planner without the scheduler, matching the paper's policy-level
+        // comparison.
+        let planner = simulate(
+            &model,
+            &cluster,
+            &trace,
+            &Policy::ProProphet(ProphetOptions::planner_only()),
+        );
+        let top2 = simulate(&model, &cluster, &trace, &Policy::TopK(2));
+        let top3 = simulate(&model, &cluster, &trace, &Policy::TopK(3));
+        let mut table = TableReport::new(
+            &format!("k={k}: iteration latency (s)"),
+            &["latency_s", "planner_speedup"],
+        );
+        let p = planner.avg_iter_time();
+        table.row("planner", vec![p, 1.0]);
+        table.row("top2", vec![top2.avg_iter_time(), top2.avg_iter_time() / p]);
+        table.row("top3", vec![top3.avg_iter_time(), top3.avg_iter_time() / p]);
+        println!("{}", table.render());
+        all.push(json::obj(vec![
+            ("k", json::num(k as f64)),
+            ("planner_s", json::num(p)),
+            ("top2_s", json::num(top2.avg_iter_time())),
+            ("top3_s", json::num(top3.avg_iter_time())),
+        ]));
+    }
+    println!("paper: planner 1.77-1.82x vs top2, 2.04-2.10x vs top3 (k=1); 1.38-1.40x (k=2)");
+    let path = write_result("fig15_policies", &Json::Arr(all)).unwrap();
+    println!("-> {}", path.display());
+}

@@ -1,0 +1,59 @@
+//! Fig 16 — balance capability: ratio of the planner's RB (balance-degree
+//! improvement) to FasterMoE's, per layer, k in {1, 2}.
+//!
+//! Paper: ratios up to 11.01x, with a few layers below 1 (the planner
+//! deliberately places fewer replicas when the load does not warrant it).
+
+use pro_prophet::benchkit;
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::{balance_degree, write_result, TableReport};
+use pro_prophet::perfmodel::PerfModel;
+use pro_prophet::planner::{greedy_search, policies, PlannerConfig};
+use pro_prophet::util::json::{self, Json};
+use pro_prophet::workload::{WorkloadConfig, WorkloadGen};
+
+fn main() {
+    benchkit::header("Fig 16", "RB ratio: planner vs FasterMoE, per layer");
+    let cluster = ClusterSpec::hpwnv(4);
+    let d = cluster.n_devices();
+    let mut all = Vec::new();
+    for k in [1usize, 2] {
+        let model = ModelSpec::moe_gpt_m(d, k, 16384);
+        let pm = PerfModel::new(&model, &cluster);
+        let mut gen = WorkloadGen::new(WorkloadConfig::paper_default(
+            8,
+            d,
+            d,
+            16384 * k as u64,
+        ));
+        gen.next_iteration(); // warm one iteration
+        let layers = gen.next_iteration();
+        let mut table = TableReport::new(
+            &format!("k={k}: RB (before/after balance degree)"),
+            &["RB planner", "RB FasterMoE", "ratio"],
+        );
+        let mut max_ratio: f64 = 0.0;
+        for (l, w) in layers.iter().enumerate() {
+            let before = balance_degree(&w.route_identity().h);
+            let p_pp = greedy_search(w, &pm, &PlannerConfig::default()).placement;
+            let p_fm = policies::fastermoe_shadowing(w, &pm);
+            let rb_pp = before / balance_degree(&w.route(&p_pp).h).max(1e-9);
+            let rb_fm = before / balance_degree(&w.route(&p_fm).h).max(1e-9);
+            let ratio = rb_pp / rb_fm;
+            max_ratio = max_ratio.max(ratio);
+            table.row(&format!("layer {l}"), vec![rb_pp, rb_fm, ratio]);
+            all.push(json::obj(vec![
+                ("k", json::num(k as f64)),
+                ("layer", json::num(l as f64)),
+                ("rb_planner", json::num(rb_pp)),
+                ("rb_fastermoe", json::num(rb_fm)),
+                ("ratio", json::num(ratio)),
+            ]));
+        }
+        println!("{}", table.render());
+        println!("k={k}: max RB ratio {max_ratio:.2}x (paper: up to 11.01x)\n");
+    }
+    let path = write_result("fig16_balance", &Json::Arr(all)).unwrap();
+    println!("-> {}", path.display());
+}

@@ -1,0 +1,55 @@
+//! Fig 3 — the imbalanced load of experts in an iteration: a 12-layer x
+//! 16-expert heat map where the three heaviest experts hold >50% of the
+//! tokens and the three lightest <5%.
+
+use pro_prophet::benchkit;
+use pro_prophet::metrics::write_result;
+use pro_prophet::util::json::{self, Json};
+use pro_prophet::workload::{top_share, WorkloadConfig, WorkloadGen};
+
+fn main() {
+    benchkit::header("Fig 3", "per-layer expert load distribution (heat map)");
+    let mut gen = WorkloadGen::new(WorkloadConfig::paper_default(12, 16, 16, 16384));
+    let layers = gen.next_iteration();
+
+    println!("share of tokens per expert (one row per MoE layer):");
+    let mut rows = Vec::new();
+    for (l, w) in layers.iter().enumerate() {
+        let dist = w.distribution();
+        let total: u64 = dist.iter().sum();
+        let shares: Vec<f64> = dist.iter().map(|&c| c as f64 / total as f64).collect();
+        let cells: String = shares
+            .iter()
+            .map(|&s| {
+                // Poor man's heat map.
+                let ch = if s > 0.20 { '#' } else if s > 0.10 { '+' } else if s > 0.05 { '.' } else { ' ' };
+                ch
+            })
+            .collect();
+        let top3 = top_share(&dist, 3);
+        let mut sorted = dist.clone();
+        sorted.sort();
+        let bottom3: u64 = sorted.iter().take(3).sum();
+        println!(
+            "layer {l:>2} |{cells}| top-3 {:>5.1}%  bottom-3 {:>4.1}%",
+            100.0 * top3,
+            100.0 * bottom3 as f64 / total as f64
+        );
+        rows.push(json::obj(vec![
+            ("layer", json::num(l as f64)),
+            ("shares", json::num_arr(&shares)),
+            ("top3", json::num(top3)),
+        ]));
+    }
+    let heavy = layers
+        .iter()
+        .filter(|w| top_share(&w.distribution(), 3) > 0.5)
+        .count();
+    println!(
+        "\n{} of {} layers have top-3 share > 50% (paper: most layers)",
+        heavy,
+        layers.len()
+    );
+    let path = write_result("fig3_imbalance", &Json::Arr(rows)).unwrap();
+    println!("-> {}", path.display());
+}

@@ -1,0 +1,53 @@
+//! Fig 9 — scheduling strategies for a Trans primitive: whole-op onto the
+//! expert computation (a), whole-op onto the non-MoE computation (b), or
+//! Pro-Prophet's sub-operator split across both (c).
+//!
+//! The paper's point: a single computation window often cannot absorb a
+//! Trans, so (a)/(b) block the pipeline; the split (c) uses both windows.
+
+use pro_prophet::benchkit::{self, scenario};
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::{write_result, TableReport};
+use pro_prophet::perfmodel::PerfModel;
+use pro_prophet::planner::{greedy_search, PlannerConfig};
+use pro_prophet::scheduler::blockwise::{build_blockwise_mode, SplitMode};
+use pro_prophet::sim::Engine;
+use pro_prophet::util::json::{self, Json};
+
+fn main() {
+    benchkit::header("Fig 9", "Trans scheduling strategies (sub-operator split ablation)");
+    let cluster = ClusterSpec::hpwnv(4);
+    let d = cluster.n_devices();
+    let mut out = Vec::new();
+    let mut table = TableReport::new(
+        "iteration time (ms) per split strategy",
+        &["(a) expert-only", "(b) non-MoE-only", "(c) split"],
+    );
+    for model in ModelSpec::table3(d, 1, 16384) {
+        let pm = PerfModel::new(&model, &cluster);
+        let eng = Engine::new(&cluster, &pm);
+        let trace = scenario::trace_for(&model, d, 2, 9);
+        let costs: Vec<_> = trace.iterations[1]
+            .iter()
+            .map(|w| {
+                let p = greedy_search(w, &pm, &PlannerConfig::default()).placement;
+                eng.block_costs(w, &p, 0.0)
+            })
+            .collect();
+        let t_a = build_blockwise_mode(&costs, SplitMode::ExpertOnly).total_time();
+        let t_b = build_blockwise_mode(&costs, SplitMode::NonExpertOnly).total_time();
+        let t_c = build_blockwise_mode(&costs, SplitMode::Split).total_time();
+        table.row(&model.name, vec![t_a * 1e3, t_b * 1e3, t_c * 1e3]);
+        out.push(json::obj(vec![
+            ("model", json::s(&model.name)),
+            ("expert_only_s", json::num(t_a)),
+            ("non_moe_only_s", json::num(t_b)),
+            ("split_s", json::num(t_c)),
+        ]));
+    }
+    println!("{}", table.render());
+    println!("paper: the sub-operator split (c) hides Trans that neither single window can absorb");
+    let path = write_result("fig9_split", &Json::Arr(out)).unwrap();
+    println!("-> {}", path.display());
+}

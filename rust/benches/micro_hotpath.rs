@@ -1,0 +1,92 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf deliverable):
+//! greedy search latency, routing/traffic computation, engine pricing,
+//! schedule construction, and a whole simulated iteration.
+//!
+//! These numbers feed EXPERIMENTS.md §Perf; the planner search must stay
+//! well under the A2A it hides beneath (hundreds of µs at most).
+
+use pro_prophet::benchkit::{self, bench_fn};
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::write_result;
+use pro_prophet::perfmodel::PerfModel;
+use pro_prophet::planner::{greedy_search, PlannerConfig};
+use pro_prophet::scheduler::{build_blockwise, BlockCosts};
+use pro_prophet::sim::{simulate, Engine, Policy, ProphetOptions};
+use pro_prophet::util::json::{self, Json};
+use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
+
+fn main() {
+    benchkit::header("micro", "L3 hot-path microbenchmarks");
+    let mut results = Vec::new();
+    let mut record = |r: pro_prophet::benchkit::BenchResult| {
+        println!("{}", r.line());
+        results.push(json::obj(vec![
+            ("name", json::s(&r.name)),
+            ("mean_s", json::num(r.mean_s)),
+            ("std_s", json::num(r.std_s)),
+            ("iters", json::num(r.iters as f64)),
+        ]));
+    };
+
+    for d in [8usize, 16, 32] {
+        let model = ModelSpec::moe_gpt_m(d, 1, 16384);
+        let cluster = ClusterSpec::hpwnv(d / 4);
+        let pm = PerfModel::new(&model, &cluster);
+        let eng = Engine::new(&cluster, &pm);
+        let mut gen = WorkloadGen::new(WorkloadConfig::paper_default(1, d, d, 16384));
+        let w = gen.next_iteration().pop().unwrap();
+        let cfg = PlannerConfig::default();
+
+        record(bench_fn(&format!("greedy_search D={d}"), 60.0, || {
+            std::hint::black_box(greedy_search(&w, &pm, &cfg));
+        }));
+        let placement = greedy_search(&w, &pm, &cfg).placement;
+        record(bench_fn(&format!("route D={d}"), 30.0, || {
+            std::hint::black_box(w.route(&placement));
+        }));
+        record(bench_fn(&format!("traffic_matrix D={d}"), 30.0, || {
+            std::hint::black_box(w.traffic(&placement));
+        }));
+        record(bench_fn(&format!("engine_block_costs D={d}"), 30.0, || {
+            std::hint::black_box(eng.block_costs(&w, &placement, 0.0));
+        }));
+    }
+
+    // Schedule construction over 24 blocks.
+    let costs = vec![
+        BlockCosts {
+            a2a: 1e-3,
+            fec: 2e-3,
+            bec: 4e-3,
+            fnec: 1e-3,
+            bnec: 2e-3,
+            trans: 1.5e-3,
+            agg: 1.5e-3,
+            plan: 3e-4,
+        };
+        24
+    ];
+    record(bench_fn("build_blockwise 24 blocks", 30.0, || {
+        std::hint::black_box(build_blockwise(&costs));
+    }));
+
+    // Whole simulated iteration (12-layer model, 16 devices).
+    let model = ModelSpec::moe_gpt_m(16, 1, 16384);
+    let cluster = ClusterSpec::hpwnv(4);
+    let trace = Trace::capture(
+        &mut WorkloadGen::new(WorkloadConfig::paper_default(12, 16, 16, 16384)),
+        1,
+    );
+    record(bench_fn("simulate 1 iter x 12 layers (prophet)", 120.0, || {
+        std::hint::black_box(simulate(
+            &model,
+            &cluster,
+            &trace,
+            &Policy::ProProphet(ProphetOptions::full()),
+        ));
+    }));
+
+    let path = write_result("micro_hotpath", &Json::Arr(results)).unwrap();
+    println!("-> {}", path.display());
+}

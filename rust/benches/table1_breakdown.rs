@@ -1,0 +1,47 @@
+//! Table I — time breakdown of training under a prior systematic
+//! load-balancing method (FasterMoE-style): L.B. total plus Search /
+//! Place / Reduce shares, for the five Table III models on 16 GPUs.
+//!
+//! Paper: L.B. 29.2-37.1%, Search 2.6-6.8%, Place 11.6-16.1%,
+//! Reduce 11.5-17.7%.
+
+use pro_prophet::benchkit::{self, scenario};
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::{pct, write_result, TableReport};
+use pro_prophet::sim::{simulate, Policy};
+use pro_prophet::util::json::{self, Json};
+
+fn main() {
+    benchkit::header("Table I", "load-balancing overhead breakdown (FasterMoE baseline)");
+    let cluster = ClusterSpec::hpwnv(4);
+    let d = cluster.n_devices();
+    let mut table = TableReport::new(
+        "Time breakdown (% of iteration)",
+        &["L.B.", "Search", "Place", "Reduce", "Others"],
+    );
+    let mut results = Vec::new();
+    for model in ModelSpec::table3(d, 1, 16384) {
+        let trace = scenario::trace_for(&model, d, 12, 42);
+        let r = simulate(&model, &cluster, &trace, &Policy::FasterMoe);
+        let search = r.breakdown_fraction("search");
+        let place = r.breakdown_fraction("place");
+        let reduce = r.breakdown_fraction("reduce");
+        let lb = search + place + reduce;
+        table.row(
+            &model.name,
+            vec![pct(lb), pct(search), pct(place), pct(reduce), pct(1.0 - lb)],
+        );
+        results.push(json::obj(vec![
+            ("model", json::s(&model.name)),
+            ("lb", json::num(lb)),
+            ("search", json::num(search)),
+            ("place", json::num(place)),
+            ("reduce", json::num(reduce)),
+        ]));
+    }
+    println!("{}", table.render());
+    println!("paper band: L.B. 29.2-37.1%  Search 2.6-6.8%  Place 11.6-16.1%  Reduce 11.5-17.7%");
+    let path = write_result("table1_breakdown", &Json::Arr(results)).unwrap();
+    println!("-> {}", path.display());
+}

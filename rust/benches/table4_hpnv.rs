@@ -1,0 +1,37 @@
+//! Table IV — overall speedup on 4 HPNV nodes (NVLink pairs), 16 GPUs,
+//! 16384 tokens, k in {1, 2}, five MoE-GPT models.
+//!
+//! Paper: Pro-Prophet 1.71-2.63x vs Deepspeed-MoE, 1.10-1.35x vs FasterMoE.
+
+use pro_prophet::benchkit::{self, scenario};
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::{write_result, TableReport};
+use pro_prophet::util::json::{self, Json};
+
+fn main() {
+    benchkit::header("Table IV", "overall speedup on 4 HPNV nodes (NVLink)");
+    let cluster = ClusterSpec::hpnv(4);
+    let d = cluster.n_devices();
+    let mut all = Vec::new();
+    for k in [1usize, 2] {
+        let mut table = TableReport::new(
+            &format!("k={k}, {d} GPUs, 16384 tokens — speedup vs Deepspeed-MoE"),
+            &["FasterMoE", "Pro-Prophet"],
+        );
+        for model in ModelSpec::table3(d, k, 16384) {
+            let (s_fm, s_pp) = scenario::speedup_row(&model, &cluster, 10, 77);
+            table.row(&model.name, vec![s_fm, s_pp]);
+            all.push(json::obj(vec![
+                ("k", json::num(k as f64)),
+                ("model", json::s(&model.name)),
+                ("speedup_fastermoe", json::num(s_fm)),
+                ("speedup_prophet", json::num(s_pp)),
+            ]));
+        }
+        println!("{}", table.render());
+    }
+    println!("paper: Pro-Prophet 1.71-2.63x vs Deepspeed-MoE, 1.10-1.35x vs FasterMoE");
+    let path = write_result("table4_hpnv", &Json::Arr(all)).unwrap();
+    println!("-> {}", path.display());
+}

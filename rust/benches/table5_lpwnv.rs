@@ -1,0 +1,38 @@
+//! Table V — overall speedup on 2 LPWNV nodes (2080 Ti), 8 GPUs,
+//! 4096 tokens, k in {1, 2}, the four smaller MoE-GPT models.
+//!
+//! Paper: Pro-Prophet 1.18-1.94x vs Deepspeed-MoE, 1.08-1.50x vs FasterMoE
+//! (FasterMoE even loses to Deepspeed-MoE on MoE-GPT-DM k=1: 0.96).
+
+use pro_prophet::benchkit::{self, scenario};
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::{write_result, TableReport};
+use pro_prophet::util::json::{self, Json};
+
+fn main() {
+    benchkit::header("Table V", "overall speedup on 2 LPWNV nodes (2080 Ti)");
+    let cluster = ClusterSpec::lpwnv(2);
+    let d = cluster.n_devices();
+    let mut all = Vec::new();
+    for k in [1usize, 2] {
+        let mut table = TableReport::new(
+            &format!("k={k}, {d} GPUs, 4096 tokens — speedup vs Deepspeed-MoE"),
+            &["FasterMoE", "Pro-Prophet"],
+        );
+        for model in ModelSpec::table3_small(d, k, 4096) {
+            let (s_fm, s_pp) = scenario::speedup_row(&model, &cluster, 10, 99);
+            table.row(&model.name, vec![s_fm, s_pp]);
+            all.push(json::obj(vec![
+                ("k", json::num(k as f64)),
+                ("model", json::s(&model.name)),
+                ("speedup_fastermoe", json::num(s_fm)),
+                ("speedup_prophet", json::num(s_pp)),
+            ]));
+        }
+        println!("{}", table.render());
+    }
+    println!("paper: Pro-Prophet 1.18-1.94x vs Deepspeed-MoE, 1.08-1.50x vs FasterMoE");
+    let path = write_result("table5_lpwnv", &Json::Arr(all)).unwrap();
+    println!("-> {}", path.display());
+}

@@ -1,0 +1,172 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Benches are plain binaries (`harness = false`) that call [`bench_fn`]
+//! for wall-clock micro-measurements and print paper-style tables via
+//! [`crate::metrics::TableReport`].  Results are also written to
+//! `bench_results/*.json` for EXPERIMENTS.md.
+
+use crate::util::stats::Welford;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms  (±{:.3} ms, min {:.3}, max {:.3}, n={})",
+            self.name,
+            self.mean_ms(),
+            self.std_s * 1e3,
+            self.min_s * 1e3,
+            self.max_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with warmup; adaptive iteration count targeting ~`budget_ms`
+/// of total measurement.
+pub fn bench_fn<F: FnMut()>(name: &str, budget_ms: f64, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_ms / 1e3 / once).ceil() as u64).clamp(3, 10_000);
+
+    let mut w = Welford::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        w.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: w.mean(),
+        std_s: w.std(),
+        min_s: w.min(),
+        max_s: w.max(),
+    }
+}
+
+/// Time a single invocation.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Standard bench header so all bench binaries look alike.
+pub fn header(id: &str, what: &str) {
+    println!("\n###############################################################");
+    println!("# {id}: {what}");
+    println!("# pro-prophet {} — simulated testbed (see DESIGN.md §3)", crate::VERSION);
+    println!("###############################################################");
+}
+
+/// Shared experiment scaffolding for the paper-table benches.
+pub mod scenario {
+    use crate::cluster::ClusterSpec;
+    use crate::config::ModelSpec;
+    use crate::sim::{simulate, Policy, ProphetOptions, SimReport};
+    use crate::workload::{Trace, WorkloadConfig, WorkloadGen};
+
+    /// Synthetic trace matching a model on a cluster (top-k slots).
+    pub fn trace_for(model: &ModelSpec, d: usize, iters: usize, seed: u64) -> Trace {
+        let mut cfg = WorkloadConfig::paper_default(
+            model.n_layers,
+            model.n_experts,
+            d,
+            model.tokens_per_iter * model.k as u64,
+        );
+        cfg.seed = seed;
+        Trace::capture(&mut WorkloadGen::new(cfg), iters)
+    }
+
+    /// (Deepspeed-MoE, FasterMoE, Pro-Prophet) reports on one scenario.
+    pub fn three_way(
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        trace: &Trace,
+    ) -> (SimReport, SimReport, SimReport) {
+        let ds = simulate(model, cluster, trace, &Policy::DeepspeedMoe);
+        let fm = simulate(model, cluster, trace, &Policy::FasterMoe);
+        let pp = simulate(
+            model,
+            cluster,
+            trace,
+            &Policy::ProProphet(ProphetOptions::full()),
+        );
+        (ds, fm, pp)
+    }
+
+    /// Speedups (FasterMoE/DS, Pro-Prophet/DS) like Table IV/V rows.
+    pub fn speedup_row(
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        iters: usize,
+        seed: u64,
+    ) -> (f64, f64) {
+        let trace = trace_for(model, cluster.n_devices(), iters, seed);
+        let (ds, fm, pp) = three_way(model, cluster, &trace);
+        (
+            ds.avg_iter_time() / fm.avg_iter_time(),
+            ds.avg_iter_time() / pp.avg_iter_time(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_three_way_runs() {
+        use crate::cluster::ClusterSpec;
+        use crate::config::ModelSpec;
+        let model = ModelSpec::moe_gpt_s(8, 1, 8192);
+        let cluster = ClusterSpec::hpwnv(2);
+        let trace = scenario::trace_for(&model, 8, 3, 1);
+        let (ds, fm, pp) = scenario::three_way(&model, &cluster, &trace);
+        assert!(ds.avg_iter_time() > 0.0);
+        assert!(fm.avg_iter_time() > 0.0);
+        assert!(pp.avg_iter_time() > 0.0);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let r = bench_fn("spin", 5.0, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s + 1e-12);
+        assert!(std::hint::black_box(x) != 1);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

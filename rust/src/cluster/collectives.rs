@@ -1,0 +1,237 @@
+//! A2A collective algorithms over a cluster topology.
+//!
+//! The paper's EP layer exchanges tokens with an All-to-All whose
+//! implementation matters on hierarchical fabrics (it cites the
+//! hierarchical-factor and BlueGene A2A optimizations [27-29], and Tutel's
+//! P2P formulation backs Eq 1).  This module prices:
+//!
+//! * [`a2a_time_direct`] — D*(D-1) point-to-point transfers, each device
+//!   serializing its egress and ingress (Tutel-style; what Eq 1
+//!   approximates with B̄);
+//! * [`a2a_time_hierarchical`] — the 2-level algorithm: gather per node
+//!   over fast intra-node links, one aggregated inter-node exchange
+//!   between node leaders, then scatter — fewer, larger inter-node
+//!   messages (wins when inter-node bandwidth dominates cost and
+//!   per-message overhead is non-trivial).
+
+use super::ClusterSpec;
+
+/// Fixed per-message launch overhead (latency + kernel launch), seconds.
+/// 20 µs ~ NCCL P2P launch on PCIe-class fabrics.
+pub const MESSAGE_OVERHEAD_S: f64 = 20e-6;
+
+/// Direct P2P A2A: max over devices of serialized egress/ingress,
+/// each message priced at its link bandwidth plus launch overhead.
+pub fn a2a_time_direct(
+    cluster: &ClusterSpec,
+    traffic: &[Vec<u64>],
+    bytes_per_token: f64,
+) -> f64 {
+    let d = cluster.n_devices();
+    let mut worst: f64 = 0.0;
+    for i in 0..d {
+        let mut egress = 0.0;
+        let mut ingress = 0.0;
+        for j in 0..d {
+            if i == j {
+                continue;
+            }
+            if traffic[i][j] > 0 {
+                egress += MESSAGE_OVERHEAD_S
+                    + traffic[i][j] as f64 * bytes_per_token / cluster.bandwidth(i, j);
+            }
+            if traffic[j][i] > 0 {
+                ingress += MESSAGE_OVERHEAD_S
+                    + traffic[j][i] as f64 * bytes_per_token / cluster.bandwidth(j, i);
+            }
+        }
+        worst = worst.max(egress).max(ingress);
+    }
+    worst
+}
+
+/// Hierarchical (2-level) A2A: intra-node gather to a per-node leader,
+/// leader-to-leader exchange of aggregated node traffic, intra-node
+/// scatter.  Returns the modeled makespan of the three phases.
+pub fn a2a_time_hierarchical(
+    cluster: &ClusterSpec,
+    traffic: &[Vec<u64>],
+    bytes_per_token: f64,
+) -> f64 {
+    let d = cluster.n_devices();
+    let g = cluster.gpus_per_node;
+    let nodes = cluster.n_nodes;
+    if nodes <= 1 {
+        return a2a_time_direct(cluster, traffic, bytes_per_token);
+    }
+
+    // Phase 1: each non-leader sends its INTER-NODE traffic to its node
+    // leader (intra-node traffic goes direct, priced in phase1 too).
+    let mut phase1: f64 = 0.0;
+    for src in 0..d {
+        let leader = cluster.node_of(src) * g;
+        let mut t = 0.0;
+        let mut cross_bytes = 0.0;
+        for dst in 0..d {
+            if src == dst {
+                continue;
+            }
+            let bytes = traffic[src][dst] as f64 * bytes_per_token;
+            if bytes == 0.0 {
+                continue;
+            }
+            if cluster.node_of(dst) == cluster.node_of(src) {
+                // Local delivery at intra-node bandwidth.
+                t += MESSAGE_OVERHEAD_S + bytes / cluster.bandwidth(src, dst);
+            } else {
+                cross_bytes += bytes;
+            }
+        }
+        if src != leader && cross_bytes > 0.0 {
+            t += MESSAGE_OVERHEAD_S + cross_bytes / cluster.bandwidth(src, leader);
+        }
+        phase1 = phase1.max(t);
+    }
+
+    // Phase 2: node-aggregated exchange between leaders.
+    let mut node_traffic = vec![vec![0.0f64; nodes]; nodes];
+    for src in 0..d {
+        for dst in 0..d {
+            let (ns, nd) = (cluster.node_of(src), cluster.node_of(dst));
+            if ns != nd {
+                node_traffic[ns][nd] += traffic[src][dst] as f64 * bytes_per_token;
+            }
+        }
+    }
+    let mut phase2: f64 = 0.0;
+    for ns in 0..nodes {
+        let leader = ns * g;
+        let mut egress = 0.0;
+        let mut ingress = 0.0;
+        for nd in 0..nodes {
+            if ns == nd {
+                continue;
+            }
+            let other = nd * g;
+            if node_traffic[ns][nd] > 0.0 {
+                egress += MESSAGE_OVERHEAD_S
+                    + node_traffic[ns][nd] / cluster.bandwidth(leader, other);
+            }
+            if node_traffic[nd][ns] > 0.0 {
+                ingress += MESSAGE_OVERHEAD_S
+                    + node_traffic[nd][ns] / cluster.bandwidth(other, leader);
+            }
+        }
+        phase2 = phase2.max(egress).max(ingress);
+    }
+
+    // Phase 3: leaders scatter received cross-node traffic locally.
+    let mut phase3: f64 = 0.0;
+    for dst in 0..d {
+        let leader = cluster.node_of(dst) * g;
+        if dst == leader {
+            continue;
+        }
+        let mut bytes = 0.0;
+        for src in 0..d {
+            if cluster.node_of(src) != cluster.node_of(dst) {
+                bytes += traffic[src][dst] as f64 * bytes_per_token;
+            }
+        }
+        if bytes > 0.0 {
+            phase3 = phase3
+                .max(MESSAGE_OVERHEAD_S + bytes / cluster.bandwidth(leader, dst));
+        }
+    }
+
+    phase1 + phase2 + phase3
+}
+
+/// Pick the cheaper algorithm for this traffic (what an auto-tuned
+/// framework would do).
+pub fn a2a_time_best(
+    cluster: &ClusterSpec,
+    traffic: &[Vec<u64>],
+    bytes_per_token: f64,
+) -> f64 {
+    a2a_time_direct(cluster, traffic, bytes_per_token)
+        .min(a2a_time_hierarchical(cluster, traffic, bytes_per_token))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_traffic(d: usize, tokens: u64) -> Vec<Vec<u64>> {
+        (0..d)
+            .map(|i| (0..d).map(|j| if i == j { 0 } else { tokens }).collect())
+            .collect()
+    }
+
+    #[test]
+    fn zero_traffic_zero_time() {
+        let c = ClusterSpec::hpwnv(2);
+        let t = vec![vec![0u64; 8]; 8];
+        assert_eq!(a2a_time_direct(&c, &t, 2048.0), 0.0);
+        assert_eq!(a2a_time_hierarchical(&c, &t, 2048.0), 0.0);
+    }
+
+    #[test]
+    fn single_node_falls_back_to_direct() {
+        let c = ClusterSpec::hpwnv(1);
+        let t = uniform_traffic(4, 100);
+        assert_eq!(
+            a2a_time_hierarchical(&c, &t, 2048.0),
+            a2a_time_direct(&c, &t, 2048.0)
+        );
+    }
+
+    #[test]
+    fn hierarchical_wins_on_many_small_cross_node_messages() {
+        // 8 nodes, tiny messages: direct pays 28 inter-node launch
+        // overheads per device; hierarchical pays 3 phases of few.
+        let c = ClusterSpec::hpwnv(8);
+        let t = uniform_traffic(32, 8); // 8 tokens per pair: overhead-bound
+        let direct = a2a_time_direct(&c, &t, 2048.0);
+        let hier = a2a_time_hierarchical(&c, &t, 2048.0);
+        assert!(
+            hier < direct,
+            "hierarchical {hier} should beat direct {direct} on tiny messages"
+        );
+    }
+
+    #[test]
+    fn direct_wins_on_large_messages() {
+        // Large payloads: the extra store-and-forward hop costs more than
+        // the launch overhead saved.
+        let c = ClusterSpec::hpwnv(2);
+        let t = uniform_traffic(8, 200_000);
+        let direct = a2a_time_direct(&c, &t, 2048.0);
+        let hier = a2a_time_hierarchical(&c, &t, 2048.0);
+        assert!(direct < hier);
+    }
+
+    #[test]
+    fn best_picks_minimum() {
+        let c = ClusterSpec::hpwnv(8);
+        for tokens in [8u64, 200_000] {
+            let t = uniform_traffic(32, tokens);
+            let best = a2a_time_best(&c, &t, 2048.0);
+            let d = a2a_time_direct(&c, &t, 2048.0);
+            let h = a2a_time_hierarchical(&c, &t, 2048.0);
+            assert!((best - d.min(h)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn more_traffic_costs_more() {
+        let c = ClusterSpec::hpnv(4);
+        let t1 = uniform_traffic(16, 100);
+        let t2 = uniform_traffic(16, 200);
+        assert!(
+            a2a_time_hierarchical(&c, &t2, 2048.0)
+                > a2a_time_hierarchical(&c, &t1, 2048.0)
+        );
+        assert!(a2a_time_direct(&c, &t2, 2048.0) > a2a_time_direct(&c, &t1, 2048.0));
+    }
+}

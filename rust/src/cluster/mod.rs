@@ -1,0 +1,215 @@
+//! Cluster topology model: devices, nodes and link bandwidths.
+//!
+//! Mirrors the paper's three testbeds (§VI "Testbed"):
+//!
+//! * **HPWNV** — 4x RTX 3090 per node, PCIe 3.0 within the node,
+//!   100 Gb/s InfiniBand between nodes, no NVLink.
+//! * **HPNV**  — HPWNV plus NVLink-3.0 connecting the two GPUs of each
+//!   pair within a node.
+//! * **LPWNV** — HPWNV with RTX 2080 Ti GPUs (lower compute throughput).
+//!
+//! The numbers are effective (achievable) bandwidths / throughputs, not
+//! peaks; they parameterize the performance model and the simulator.
+
+pub mod collectives;
+
+/// A homogeneous multi-node GPU cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    /// Effective P2P bandwidth within a node over PCIe, GB/s.
+    pub intra_bw: f64,
+    /// Effective P2P bandwidth across nodes (InfiniBand), GB/s.
+    pub inter_bw: f64,
+    /// NVLink bandwidth for paired GPUs, GB/s (0 = no NVLink).
+    pub nvlink_bw: f64,
+    /// Whether GPUs are grouped in NVLink pairs (HPNV).
+    pub nvlink_pairs: bool,
+    /// Effective per-GPU compute throughput, TFLOP/s (peak fp32).
+    pub gpu_tflops: f64,
+    /// Model FLOPs utilization actually achieved on expert GEMMs.
+    pub mfu: f64,
+}
+
+impl ClusterSpec {
+    // --- presets matching the paper's testbeds ----------------------------
+
+    /// 3090 nodes, PCIe-only (the paper's default cluster).
+    pub fn hpwnv(n_nodes: usize) -> Self {
+        ClusterSpec {
+            name: format!("HPWNV-{n_nodes}"),
+            n_nodes,
+            gpus_per_node: 4,
+            intra_bw: 11.0,  // PCIe 3.0 x16 effective
+            inter_bw: 10.0,  // 100 Gb/s IB effective
+            nvlink_bw: 0.0,
+            nvlink_pairs: false,
+            gpu_tflops: 35.6, // RTX 3090 fp32 peak
+            mfu: 0.35,
+        }
+    }
+
+    /// 3090 nodes with NVLink-3.0 pairs.
+    pub fn hpnv(n_nodes: usize) -> Self {
+        ClusterSpec {
+            name: format!("HPNV-{n_nodes}"),
+            nvlink_bw: 56.0, // NVLink-3.0 pair, effective
+            nvlink_pairs: true,
+            ..Self::hpwnv(n_nodes)
+        }
+    }
+
+    /// 2080 Ti nodes (lower compute, same interconnect as HPWNV).
+    pub fn lpwnv(n_nodes: usize) -> Self {
+        ClusterSpec {
+            name: format!("LPWNV-{n_nodes}"),
+            gpu_tflops: 13.4, // RTX 2080 Ti fp32 peak
+            ..Self::hpwnv(n_nodes)
+        }
+    }
+
+    pub fn by_name(kind: &str, n_nodes: usize) -> Option<Self> {
+        match kind.to_ascii_lowercase().as_str() {
+            "hpwnv" => Some(Self::hpwnv(n_nodes)),
+            "hpnv" => Some(Self::hpnv(n_nodes)),
+            "lpwnv" => Some(Self::lpwnv(n_nodes)),
+            _ => None,
+        }
+    }
+
+    // --- topology queries ---------------------------------------------------
+
+    pub fn n_devices(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    pub fn node_of(&self, device: usize) -> usize {
+        device / self.gpus_per_node
+    }
+
+    /// NVLink partners sit on adjacent even/odd local ids (2i, 2i+1).
+    pub fn nvlink_partner(&self, device: usize) -> Option<usize> {
+        if !self.nvlink_pairs {
+            return None;
+        }
+        let local = device % self.gpus_per_node;
+        let partner_local = local ^ 1;
+        if partner_local >= self.gpus_per_node {
+            return None;
+        }
+        Some(self.node_of(device) * self.gpus_per_node + partner_local)
+    }
+
+    /// Effective point-to-point bandwidth between two devices, bytes/s.
+    pub fn bandwidth(&self, a: usize, b: usize) -> f64 {
+        assert!(a < self.n_devices() && b < self.n_devices());
+        if a == b {
+            // Device-local "transfer" ~ HBM copy; effectively free relative
+            // to links, modeled as very fast rather than infinite.
+            return 700.0e9;
+        }
+        if self.node_of(a) != self.node_of(b) {
+            return self.inter_bw * 1e9;
+        }
+        if self.nvlink_partner(a) == Some(b) {
+            return self.nvlink_bw * 1e9;
+        }
+        self.intra_bw * 1e9
+    }
+
+    /// Average pairwise bandwidth B̄ over distinct device pairs, bytes/s —
+    /// the B̄ of the paper's performance model (Table II).
+    pub fn avg_bandwidth(&self) -> f64 {
+        let d = self.n_devices();
+        if d < 2 {
+            return self.intra_bw * 1e9;
+        }
+        let mut acc = 0.0;
+        let mut n = 0u64;
+        for a in 0..d {
+            for b in 0..d {
+                if a != b {
+                    acc += self.bandwidth(a, b);
+                    n += 1;
+                }
+            }
+        }
+        acc / n as f64
+    }
+
+    /// Effective expert-compute throughput `t`: tokens/second one device
+    /// pushes through ONE expert FFN of the given model (paper Table II).
+    pub fn tokens_per_sec(&self, ffn_flops_per_token: f64) -> f64 {
+        self.gpu_tflops * 1e12 * self.mfu / ffn_flops_per_token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_shape() {
+        let c = ClusterSpec::hpwnv(4);
+        assert_eq!(c.n_devices(), 16);
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(15), 3);
+        assert!(ClusterSpec::by_name("HPNV", 2).is_some());
+        assert!(ClusterSpec::by_name("xxx", 2).is_none());
+    }
+
+    #[test]
+    fn bandwidth_hierarchy() {
+        let c = ClusterSpec::hpnv(2);
+        // NVLink pair > PCIe intra > IB inter.
+        let nv = c.bandwidth(0, 1);
+        let pcie = c.bandwidth(0, 2);
+        let ib = c.bandwidth(0, 4);
+        assert!(nv > pcie && pcie > ib, "{nv} {pcie} {ib}");
+        // Self-transfer fastest of all.
+        assert!(c.bandwidth(3, 3) > nv);
+    }
+
+    #[test]
+    fn hpwnv_has_no_nvlink() {
+        let c = ClusterSpec::hpwnv(2);
+        assert_eq!(c.nvlink_partner(0), None);
+        assert_eq!(c.bandwidth(0, 1), c.bandwidth(0, 2));
+    }
+
+    #[test]
+    fn nvlink_pairing_is_symmetric() {
+        let c = ClusterSpec::hpnv(1);
+        assert_eq!(c.nvlink_partner(0), Some(1));
+        assert_eq!(c.nvlink_partner(1), Some(0));
+        assert_eq!(c.nvlink_partner(2), Some(3));
+        assert_eq!(c.bandwidth(2, 3), 56.0e9);
+    }
+
+    #[test]
+    fn avg_bandwidth_between_min_max() {
+        let c = ClusterSpec::hpnv(2);
+        let avg = c.avg_bandwidth();
+        assert!(avg > c.inter_bw * 1e9);
+        assert!(avg < c.nvlink_bw * 1e9);
+    }
+
+    #[test]
+    fn lpwnv_slower_compute() {
+        let hp = ClusterSpec::hpwnv(2);
+        let lp = ClusterSpec::lpwnv(2);
+        let f = 4.0 * 512.0 * 1024.0;
+        assert!(lp.tokens_per_sec(f) < hp.tokens_per_sec(f));
+        assert_eq!(lp.inter_bw, hp.inter_bw);
+    }
+
+    #[test]
+    fn tokens_per_sec_scales_with_model() {
+        let c = ClusterSpec::hpwnv(1);
+        let small = c.tokens_per_sec(4.0 * 512.0 * 1024.0);
+        let large = c.tokens_per_sec(4.0 * 2048.0 * 4096.0);
+        assert!(small > large * 10.0);
+    }
+}

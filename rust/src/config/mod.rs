@@ -1,0 +1,302 @@
+//! Configuration system: model specs (the paper's Table III family),
+//! training/runtime settings, and TOML file loading.
+//!
+//! Everything the launcher (`pro-prophet` CLI), the benches and the
+//! simulator consume is described here, so experiments are reproducible
+//! from a single file (see `examples/configs/`).
+
+pub mod toml;
+
+use crate::cluster::ClusterSpec;
+use crate::planner::PlannerConfig;
+
+/// One MoE-GPT variant (paper Table III).  Every FFN layer is a MoE layer;
+/// the number of experts per layer equals the number of devices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Number of transformer (MoE) blocks: "Layers" in Table III.
+    pub n_layers: usize,
+    /// Model width: "Embedding" in Table III.
+    pub d_model: usize,
+    /// Expert FFN hidden width: "Hidden" in Table III.
+    pub d_ff: usize,
+    /// Experts per MoE layer (== #GPUs in the paper's runs).
+    pub n_experts: usize,
+    /// Experts per token (top-k gate), 1 or 2 in the evaluation.
+    pub k: usize,
+    /// Tokens trained in one iteration across the whole cluster.
+    pub tokens_per_iter: u64,
+}
+
+impl ModelSpec {
+    pub fn new(
+        name: &str,
+        n_layers: usize,
+        d_model: usize,
+        d_ff: usize,
+        n_experts: usize,
+        k: usize,
+        tokens_per_iter: u64,
+    ) -> Self {
+        assert!(k >= 1 && k <= n_experts, "k={k} out of range");
+        ModelSpec {
+            name: name.to_string(),
+            n_layers,
+            d_model,
+            d_ff,
+            n_experts,
+            k,
+            tokens_per_iter,
+        }
+    }
+
+    // --- Table III presets -------------------------------------------------
+    pub fn moe_gpt_s(e: usize, k: usize, tokens: u64) -> Self {
+        Self::new("MoE-GPT-S", 12, 512, 1024, e, k, tokens)
+    }
+    pub fn moe_gpt_m(e: usize, k: usize, tokens: u64) -> Self {
+        Self::new("MoE-GPT-M", 12, 1024, 2048, e, k, tokens)
+    }
+    pub fn moe_gpt_l(e: usize, k: usize, tokens: u64) -> Self {
+        Self::new("MoE-GPT-L", 12, 2048, 4096, e, k, tokens)
+    }
+    pub fn moe_gpt_ds(e: usize, k: usize, tokens: u64) -> Self {
+        Self::new("MoE-GPT-DS", 24, 512, 1024, e, k, tokens)
+    }
+    pub fn moe_gpt_dm(e: usize, k: usize, tokens: u64) -> Self {
+        Self::new("MoE-GPT-DM", 24, 1024, 2048, e, k, tokens)
+    }
+
+    /// All five Table III variants.
+    pub fn table3(e: usize, k: usize, tokens: u64) -> Vec<Self> {
+        vec![
+            Self::moe_gpt_s(e, k, tokens),
+            Self::moe_gpt_m(e, k, tokens),
+            Self::moe_gpt_l(e, k, tokens),
+            Self::moe_gpt_ds(e, k, tokens),
+            Self::moe_gpt_dm(e, k, tokens),
+        ]
+    }
+
+    /// The four variants that fit the 2080Ti cluster (Table V drops L).
+    pub fn table3_small(e: usize, k: usize, tokens: u64) -> Vec<Self> {
+        vec![
+            Self::moe_gpt_s(e, k, tokens),
+            Self::moe_gpt_m(e, k, tokens),
+            Self::moe_gpt_ds(e, k, tokens),
+            Self::moe_gpt_dm(e, k, tokens),
+        ]
+    }
+
+    pub fn by_name(name: &str, e: usize, k: usize, tokens: u64) -> Option<Self> {
+        match name {
+            "MoE-GPT-S" | "s" => Some(Self::moe_gpt_s(e, k, tokens)),
+            "MoE-GPT-M" | "m" => Some(Self::moe_gpt_m(e, k, tokens)),
+            "MoE-GPT-L" | "l" => Some(Self::moe_gpt_l(e, k, tokens)),
+            "MoE-GPT-DS" | "ds" => Some(Self::moe_gpt_ds(e, k, tokens)),
+            "MoE-GPT-DM" | "dm" => Some(Self::moe_gpt_dm(e, k, tokens)),
+            _ => None,
+        }
+    }
+
+    // --- Derived byte/flop quantities used by the performance model --------
+
+    /// Bytes of one routed token's activation (f32 row of width d_model).
+    pub fn token_bytes(&self) -> f64 {
+        (self.d_model * 4) as f64
+    }
+
+    /// Bytes of ONE expert's parameters (w1 + b1 + w2 + b2, f32) — the unit
+    /// moved by the Trans primitive (and matched by Agg for gradients).
+    pub fn expert_param_bytes(&self) -> f64 {
+        ((2 * self.d_model * self.d_ff + self.d_ff + self.d_model) * 4) as f64
+    }
+
+    /// Forward FLOPs to push one token through one expert FFN.
+    pub fn ffn_flops_per_token(&self) -> f64 {
+        // Two GEMMs: (1,D)x(D,F) and (1,F)x(F,D).
+        (4 * self.d_model * self.d_ff) as f64
+    }
+
+    /// Forward FLOPs of the non-MoE part of a block per token (attention
+    /// projections; the seq-len dependent score term is folded into MFU).
+    pub fn non_moe_flops_per_token(&self) -> f64 {
+        (8 * self.d_model * self.d_model) as f64
+    }
+
+    /// Tokens each device contributes per iteration (DP-style split).
+    pub fn tokens_per_device(&self, n_devices: usize) -> u64 {
+        self.tokens_per_iter / n_devices as u64
+    }
+}
+
+/// Settings for the end-to-end trainer (`pro-prophet train`).
+#[derive(Clone, Debug)]
+pub struct TrainingConfig {
+    /// Artifact preset name (matches `{preset}_manifest.json`).
+    pub preset: String,
+    pub artifacts_dir: String,
+    pub steps: usize,
+    pub seed: u64,
+    /// Log every n steps.
+    pub log_every: usize,
+    /// Feed observed gate loads into the planner+simulator as we train.
+    pub analyze_balance: bool,
+    pub report_path: Option<String>,
+}
+
+impl Default for TrainingConfig {
+    fn default() -> Self {
+        TrainingConfig {
+            preset: "tiny".into(),
+            artifacts_dir: "artifacts".into(),
+            steps: 50,
+            seed: 42,
+            log_every: 10,
+            analyze_balance: true,
+            report_path: None,
+        }
+    }
+}
+
+/// A full experiment: model x cluster x planner settings.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub model: ModelSpec,
+    pub cluster: ClusterSpec,
+    pub planner: PlannerConfig,
+    pub iterations: usize,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file; unspecified keys fall back to the
+    /// paper's defaults (MoE-GPT-M on 4 HPWNV nodes).
+    pub fn from_table(t: &toml::Table) -> Result<Self, String> {
+        let cluster = ClusterSpec::by_name(
+            &t.str_or("cluster.kind", "hpwnv"),
+            t.usize_or("cluster.nodes", 4),
+        )
+        .ok_or_else(|| format!("unknown cluster kind {:?}", t.str_or("cluster.kind", "")))?;
+        let e = t.usize_or("model.experts", cluster.n_devices());
+        let k = t.usize_or("model.k", 1);
+        let tokens = t.usize_or("model.tokens_per_iter", 16384) as u64;
+        let model = match t.get("model.name").and_then(toml::Value::as_str) {
+            Some(name) => ModelSpec::by_name(name, e, k, tokens)
+                .ok_or_else(|| format!("unknown model {name:?}"))?,
+            None => ModelSpec::new(
+                &t.str_or("model.custom_name", "custom"),
+                t.usize_or("model.layers", 12),
+                t.usize_or("model.d_model", 1024),
+                t.usize_or("model.d_ff", 2048),
+                e,
+                k,
+                tokens,
+            ),
+        };
+        let planner = PlannerConfig {
+            n_exclude: t.usize_or("planner.n_exclude", cluster.n_devices() / 2),
+            alpha: t.f64_or("planner.alpha", 0.25),
+            replan_interval: t.usize_or("planner.replan_interval", 1),
+            use_overlap_model: t.bool_or("planner.use_overlap_model", true),
+            ..Default::default()
+        };
+        Ok(ExperimentConfig {
+            model,
+            cluster,
+            planner,
+            iterations: t.usize_or("iterations", 100),
+            seed: t.usize_or("seed", 42) as u64,
+        })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
+        Self::from_table(&toml::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_presets_match_paper() {
+        let m = ModelSpec::moe_gpt_m(16, 1, 16384);
+        assert_eq!((m.n_layers, m.d_model, m.d_ff), (12, 1024, 2048));
+        let l = ModelSpec::moe_gpt_l(16, 2, 16384);
+        assert_eq!((l.n_layers, l.d_model, l.d_ff), (12, 2048, 4096));
+        let ds = ModelSpec::moe_gpt_ds(16, 1, 16384);
+        assert_eq!(ds.n_layers, 24);
+        assert_eq!(ModelSpec::table3(16, 1, 16384).len(), 5);
+        assert_eq!(ModelSpec::table3_small(8, 2, 4096).len(), 4);
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let m = ModelSpec::moe_gpt_s(16, 1, 16384);
+        assert_eq!(m.token_bytes(), 2048.0); // 512 * 4
+        // 2*512*1024 weights *2 matmuls + biases, all f32.
+        assert_eq!(
+            m.expert_param_bytes(),
+            ((2 * 512 * 1024 + 1024 + 512) * 4) as f64
+        );
+        assert_eq!(m.ffn_flops_per_token(), (4 * 512 * 1024) as f64);
+        assert_eq!(m.tokens_per_device(16), 1024);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_k_rejected() {
+        ModelSpec::new("x", 1, 8, 8, 4, 5, 128);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(ModelSpec::by_name("MoE-GPT-DM", 8, 2, 4096).is_some());
+        assert!(ModelSpec::by_name("nope", 8, 2, 4096).is_none());
+    }
+
+    #[test]
+    fn experiment_from_toml() {
+        let t = toml::parse(
+            r#"
+            iterations = 50
+            seed = 7
+            [model]
+            name = "MoE-GPT-M"
+            k = 2
+            tokens_per_iter = 32768
+            [cluster]
+            kind = "hpnv"
+            nodes = 4
+            [planner]
+            alpha = 0.5
+            "#,
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(e.model.name, "MoE-GPT-M");
+        assert_eq!(e.model.k, 2);
+        assert_eq!(e.model.n_experts, 16); // defaults to device count
+        assert_eq!(e.cluster.n_devices(), 16);
+        assert!((e.planner.alpha - 0.5).abs() < 1e-12);
+        assert_eq!(e.iterations, 50);
+    }
+
+    #[test]
+    fn experiment_defaults() {
+        let e = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(e.cluster.n_devices(), 16);
+        assert_eq!(e.model.n_experts, 16);
+        assert_eq!(e.iterations, 100);
+    }
+
+    #[test]
+    fn experiment_rejects_unknowns() {
+        let t = toml::parse("[cluster]\nkind = \"petaflop\"").unwrap();
+        assert!(ExperimentConfig::from_table(&t).is_err());
+        let t2 = toml::parse("[model]\nname = \"GPT-9\"").unwrap();
+        assert!(ExperimentConfig::from_table(&t2).is_err());
+    }
+}

@@ -1,0 +1,246 @@
+//! TOML-subset parser for config files (the `toml` crate is unavailable
+//! offline).  Supported: `[section]` / `[a.b]` headers, `key = value` with
+//! string / integer / float / boolean / flat-array values, `#` comments.
+//!
+//! Values are exposed as a flat `dotted.path -> Value` map, which is all the
+//! config system needs.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Table {
+    pub fn get(&self, dotted: &str) -> Option<&Value> {
+        self.entries.get(dotted)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Parse TOML-subset text into a flat dotted-key table.
+pub fn parse(text: &str) -> Result<Table, String> {
+    let mut entries = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(body) = line.strip_prefix('[') {
+            let name = body
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unclosed section", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let value = parse_value(val.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        entries.insert(full, value);
+    }
+    Ok(Table { entries })
+}
+
+pub fn parse_file(path: &std::path::Path) -> Result<Table, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    parse(&text)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string is respected.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let inner = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let inner = body.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_sections_and_types() {
+        let t = parse(
+            r#"
+            # experiment
+            name = "fig10"
+            [model]
+            layers = 12
+            lr = 1.5e-3
+            moe = true
+            [cluster.link]
+            bw = [12.5, 56.0]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.str_or("name", ""), "fig10");
+        assert_eq!(t.usize_or("model.layers", 0), 12);
+        assert!((t.f64_or("model.lr", 0.0) - 1.5e-3).abs() < 1e-12);
+        assert!(t.bool_or("model.moe", false));
+        match t.get("cluster.link.bw").unwrap() {
+            Value::Arr(v) => {
+                assert_eq!(v.len(), 2);
+                assert_eq!(v[1].as_f64(), Some(56.0));
+            }
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let t = parse("x = \"a#b\" # trailing\ny = 1").unwrap();
+        assert_eq!(t.str_or("x", ""), "a#b");
+        assert_eq!(t.usize_or("y", 0), 1);
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let t = parse("a = 3\nb = 3.0").unwrap();
+        assert_eq!(t.get("a").unwrap().as_i64(), Some(3));
+        assert_eq!(t.get("a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(t.get("b").unwrap().as_i64(), None);
+        assert_eq!(t.get("b").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(parse("[unclosed").unwrap_err().contains("line 1"));
+        assert!(parse("x 3").unwrap_err().contains("key = value"));
+        assert!(parse("x = @").is_err());
+        assert!(parse("[]").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let t = parse("").unwrap();
+        assert!(t.is_empty());
+        assert_eq!(t.usize_or("nope", 7), 7);
+        assert_eq!(t.str_or("nope", "d"), "d");
+    }
+}

@@ -1,0 +1,309 @@
+//! Threaded expert-parallel coordinator: a leader routes real tokens to
+//! "virtual devices" (one OS thread + one PJRT executable each) according
+//! to an expert placement; channels play the role of the interconnect.
+//!
+//! This exercises the same code path as the paper's system — gate →
+//! dispatch (A2A) → per-device expert FFN → combine — with REAL tensors
+//! flowing through the AOT'd Pallas kernels, and reports per-device load
+//! and busy time so the effect of a placement is observable end to end
+//! (examples/ep_demo.rs).
+//!
+//! tokio is unavailable offline; std::thread + mpsc channels implement the
+//! same leader/worker topology.
+
+use crate::moe::Placement;
+use crate::runtime::{self, Manifest, Runtime};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// A chunk of tokens for one expert on one device.
+struct Task {
+    seq: usize,
+    expert: usize,
+    rows: usize,
+    /// Row-major (rows, d_model), padded by the worker to capacity.
+    data: Vec<f32>,
+}
+
+struct TaskResult {
+    seq: usize,
+    device: usize,
+    rows: usize,
+    data: Vec<f32>,
+    busy_seconds: f64,
+}
+
+enum ToWorker {
+    Run(Task),
+    Stop,
+}
+
+struct Worker {
+    tx: Sender<ToWorker>,
+    handle: JoinHandle<Result<()>>,
+}
+
+/// Per-expert FFN weights in host form (extracted from the init artifact).
+#[derive(Clone)]
+pub struct ExpertWeights {
+    pub w1: Vec<f32>, // (d, f)
+    pub b1: Vec<f32>, // (f)
+    pub w2: Vec<f32>, // (f, d)
+    pub b2: Vec<f32>, // (d)
+}
+
+/// The EP cluster: one worker thread per virtual device.
+pub struct EpCluster {
+    pub manifest: Manifest,
+    workers: Vec<Worker>,
+    results_rx: Receiver<TaskResult>,
+    n_devices: usize,
+}
+
+/// Outcome of one EP iteration.
+#[derive(Clone, Debug)]
+pub struct EpIterationReport {
+    pub wall_seconds: f64,
+    pub per_device_busy: Vec<f64>,
+    pub per_device_tokens: Vec<u64>,
+    /// max/mean busy ratio — 1.0 is perfectly balanced.
+    pub imbalance: f64,
+    /// Output rows in token order (T x d_model).
+    pub output: Vec<f32>,
+}
+
+impl EpCluster {
+    /// Spawn `n_devices` workers, each with its own PJRT client, the
+    /// expert-FFN executable, and the weights of ALL experts (replicas are
+    /// routing decisions; which device computes which expert is up to the
+    /// placement the leader applies).
+    pub fn new(manifest: Manifest, weights: Vec<ExpertWeights>) -> Result<EpCluster> {
+        let n_devices = manifest.n_experts; // paper: one expert per device
+        if weights.len() != manifest.n_experts {
+            return Err(anyhow!("need one weight set per expert"));
+        }
+        let (results_tx, results_rx) = channel::<TaskResult>();
+        let mut workers = Vec::with_capacity(n_devices);
+        for device in 0..n_devices {
+            let (tx, rx) = channel::<ToWorker>();
+            let res_tx = results_tx.clone();
+            let man = manifest.clone();
+            let wts = weights.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ep-worker-{device}"))
+                .spawn(move || worker_main(device, man, wts, rx, res_tx))
+                .map_err(|e| anyhow!("spawn worker {device}: {e}"))?;
+            workers.push(Worker { tx, handle });
+        }
+        Ok(EpCluster { manifest, workers, results_rx, n_devices })
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    /// Run one MoE-layer iteration: tokens (T, d_model) with per-token
+    /// expert assignment `assignment` (top-1 for the demo), routed under
+    /// `placement`.  Tokens whose expert is replicated are spread evenly
+    /// over the replica devices; otherwise they go to the expert's home.
+    pub fn run_iteration(
+        &self,
+        x: &[f32],
+        assignment: &[usize],
+        placement: &Placement,
+    ) -> Result<EpIterationReport> {
+        let d_model = self.manifest.d_model;
+        let t = assignment.len();
+        if x.len() != t * d_model {
+            return Err(anyhow!("x has {} values, want {}", x.len(), t * d_model));
+        }
+        let capacity = self.manifest.capacity.max(1);
+        let start = std::time::Instant::now();
+
+        // Group token indices by expert.
+        let n_experts = self.manifest.n_experts;
+        let mut by_expert: Vec<Vec<usize>> = vec![vec![]; n_experts];
+        for (i, &e) in assignment.iter().enumerate() {
+            if e >= n_experts {
+                return Err(anyhow!("token {i} routed to bogus expert {e}"));
+            }
+            by_expert[e].push(i);
+        }
+
+        // Dispatch: split each expert's queue over its replica devices in
+        // capacity-sized chunks (the A2A of the real system).
+        let mut seq = 0usize;
+        let mut sent: Vec<(usize, Vec<usize>)> = Vec::new(); // seq -> token ids
+        let mut per_device_tokens = vec![0u64; self.n_devices];
+        for (e, tokens) in by_expert.iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            let replicas: Vec<usize> = placement.replicas(e).iter().collect();
+            let targets = if replicas.is_empty() {
+                vec![placement.home(e)]
+            } else {
+                replicas
+            };
+            // Even split across targets.
+            let per = tokens.len().div_ceil(targets.len());
+            for (ti, chunk_tokens) in tokens.chunks(per).enumerate() {
+                let dev = targets[ti % targets.len()];
+                // Capacity-sized sub-chunks per device.
+                for sub in chunk_tokens.chunks(capacity) {
+                    let mut data = Vec::with_capacity(sub.len() * d_model);
+                    for &tok in sub {
+                        data.extend_from_slice(&x[tok * d_model..(tok + 1) * d_model]);
+                    }
+                    per_device_tokens[dev] += sub.len() as u64;
+                    self.workers[dev]
+                        .tx
+                        .send(ToWorker::Run(Task {
+                            seq,
+                            expert: e,
+                            rows: sub.len(),
+                            data,
+                        }))
+                        .map_err(|_| anyhow!("worker {dev} died"))?;
+                    sent.push((seq, sub.to_vec()));
+                    seq += 1;
+                }
+            }
+        }
+
+        // Combine: gather results back into token order.
+        let mut output = vec![0.0f32; t * d_model];
+        let mut per_device_busy = vec![0.0f64; self.n_devices];
+        for _ in 0..sent.len() {
+            let r = self
+                .results_rx
+                .recv()
+                .map_err(|_| anyhow!("result channel closed"))?;
+            per_device_busy[r.device] += r.busy_seconds;
+            let (_, token_ids) = sent
+                .iter()
+                .find(|(s, _)| *s == r.seq)
+                .ok_or_else(|| anyhow!("unknown seq {}", r.seq))?;
+            for (row, &tok) in token_ids.iter().enumerate().take(r.rows) {
+                output[tok * d_model..(tok + 1) * d_model]
+                    .copy_from_slice(&r.data[row * d_model..(row + 1) * d_model]);
+            }
+        }
+
+        let max_busy = per_device_busy.iter().copied().fold(0.0, f64::max);
+        let mean_busy = per_device_busy.iter().sum::<f64>()
+            / per_device_busy.len().max(1) as f64;
+        Ok(EpIterationReport {
+            wall_seconds: start.elapsed().as_secs_f64(),
+            per_device_busy,
+            per_device_tokens,
+            imbalance: if mean_busy > 0.0 { max_busy / mean_busy } else { 1.0 },
+            output,
+        })
+    }
+
+    /// Stop all workers and join.
+    pub fn shutdown(self) {
+        for w in &self.workers {
+            let _ = w.tx.send(ToWorker::Stop);
+        }
+        for w in self.workers {
+            let _ = w.handle.join();
+        }
+    }
+}
+
+fn worker_main(
+    device: usize,
+    man: Manifest,
+    weights: Vec<ExpertWeights>,
+    rx: Receiver<ToWorker>,
+    tx: Sender<TaskResult>,
+) -> Result<()> {
+    // Each worker owns a full PJRT client: process-isolation stand-in.
+    let rt = Runtime::cpu()?;
+    let ffn = rt.load_tagged(&man, "expert_ffn")?;
+    let (d, f, c) = (man.d_model, man.d_ff, man.capacity.max(1));
+
+    // Pre-build weight literals per expert.
+    let mut wlits = Vec::with_capacity(weights.len());
+    for w in &weights {
+        wlits.push((
+            runtime::f32_literal(&w.w1, &[d, f])?,
+            runtime::f32_literal(&w.b1, &[f])?,
+            runtime::f32_literal(&w.w2, &[f, d])?,
+            runtime::f32_literal(&w.b2, &[d])?,
+        ));
+    }
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToWorker::Stop => break,
+            ToWorker::Run(task) => {
+                let begin = std::time::Instant::now();
+                // Pad to the artifact's fixed (capacity, d) shape.
+                let mut padded = vec![0.0f32; c * d];
+                padded[..task.data.len()].copy_from_slice(&task.data);
+                let x = runtime::f32_literal(&padded, &[c, d])?;
+                let (w1, b1, w2, b2) = &wlits[task.expert];
+                let out = ffn.run(&[&x, w1, b1, w2, b2])?;
+                let full = runtime::to_f32_vec(&out[0])?;
+                let result = TaskResult {
+                    seq: task.seq,
+                    device,
+                    rows: task.rows,
+                    data: full[..task.rows * d].to_vec(),
+                    busy_seconds: begin.elapsed().as_secs_f64(),
+                };
+                if tx.send(result).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Extract layer-`layer` expert weights from a flat init state.
+pub fn extract_expert_weights(
+    man: &Manifest,
+    state: &[xla::Literal],
+    layer: usize,
+) -> Result<Vec<ExpertWeights>> {
+    let (d, f, e) = (man.d_model, man.d_ff, man.n_experts);
+    let idx = |suffix: &str| -> Result<usize> {
+        man.layer_tensor_index(layer, suffix)
+            .ok_or_else(|| anyhow!("layer {layer} tensor {suffix} missing"))
+    };
+    let w1 = runtime::to_f32_vec(&state[idx("w1")?])?;
+    let b1 = runtime::to_f32_vec(&state[idx("b1")?])?;
+    let w2 = runtime::to_f32_vec(&state[idx("w2")?])?;
+    let b2 = runtime::to_f32_vec(&state[idx("b2")?])?;
+    let mut out = Vec::with_capacity(e);
+    for i in 0..e {
+        out.push(ExpertWeights {
+            w1: w1[i * d * f..(i + 1) * d * f].to_vec(),
+            b1: b1[i * f..(i + 1) * f].to_vec(),
+            w2: w2[i * f * d..(i + 1) * f * d].to_vec(),
+            b2: b2[i * d..(i + 1) * d].to_vec(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    // EpCluster needs built artifacts + a PJRT client; covered by
+    // rust/tests/integration_runtime.rs.  Here we test the pure routing
+    // bookkeeping helpers indirectly through Placement semantics.
+    use crate::moe::Placement;
+
+    #[test]
+    fn replica_targets_nonempty() {
+        let p = Placement::identity(4, 4);
+        for e in 0..4 {
+            assert!(p.replicas(e).len() >= 1);
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Pro-Prophet: a systematic load-balancing method for efficient parallel
+//! training of large-scale MoE models.
+//!
+//! Reproduction of Wang et al., *Pro-Prophet* (CS.DC 2024) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * [`planner`] — the paper's §IV contribution: lightweight expert
+//!   placements, the analytic performance model (Eq 1–6/8) and the
+//!   locality-based greedy search (Algorithm 1).
+//! * [`scheduler`] — the paper's §V contribution: the MoE-block scheduling
+//!   space and the block-wise overlap strategy (Algorithm 2).
+//! * [`sim`] — a discrete-event cluster simulator standing in for the
+//!   authors' GPU testbeds (see DESIGN.md §3), plus the Deepspeed-MoE /
+//!   FasterMoE / static-top-k baseline policies.
+//! * [`runtime`] + [`trainer`] + [`coordinator`] — the execution stack:
+//!   PJRT loading of the AOT'd JAX/Pallas artifacts, the end-to-end
+//!   training loop, and a threaded expert-parallel coordinator with
+//!   virtual devices.
+//! * [`cluster`], [`moe`], [`workload`], [`perfmodel`], [`metrics`],
+//!   [`config`], [`util`], [`benchkit`] — substrates.
+//!
+//! Python (JAX + Pallas) exists only at build time: `make artifacts` lowers
+//! the model to HLO text under `artifacts/`, and everything at run time is
+//! this crate.
+
+pub mod benchkit;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod moe;
+pub mod perfmodel;
+pub mod planner;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod trainer;
+pub mod util;
+pub mod workload;
+
+/// Crate version, stamped into reports.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,203 @@
+//! Metrics and report emission: balance degree / RB (Fig 16), speedup
+//! tables, Table I breakdowns, and JSON result files under bench_results/.
+
+use crate::util::json::{self, Json};
+use crate::util::stats;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Balance degree (paper §VI-C): the standard deviation of the input
+/// distribution tensor (we apply it to per-device computed load H as the
+/// paper does when comparing placements).
+pub fn balance_degree(h: &[u64]) -> f64 {
+    let xs: Vec<f64> = h.iter().map(|&x| x as f64).collect();
+    stats::std_dev(&xs)
+}
+
+/// RB: ratio of balance degree before vs after employing a load-balancing
+/// solution (>1 = the solution improved balance).
+pub fn rb(before: &[u64], after: &[u64]) -> f64 {
+    let b = balance_degree(before);
+    let a = balance_degree(after);
+    if a <= 1e-12 {
+        if b <= 1e-12 {
+            1.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        b / a
+    }
+}
+
+/// Speedup of `baseline_time` over `t` (how many x faster we are).
+pub fn speedup(baseline_time: f64, t: f64) -> f64 {
+    if t <= 0.0 {
+        return f64::INFINITY;
+    }
+    baseline_time / t
+}
+
+/// A rectangular results table printed like the paper's tables.
+#[derive(Clone, Debug, Default)]
+pub struct TableReport {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl TableReport {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        TableReport {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, label: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((label.to_string(), values));
+    }
+
+    /// Render with fixed-width columns (paper-style).
+    pub fn render(&self) -> String {
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain([5])
+            .max()
+            .unwrap()
+            .max(self.title.len().min(24));
+        let col_w = self.columns.iter().map(|c| c.len().max(9)).collect::<Vec<_>>();
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&format!("{:label_w$}", ""));
+        for (c, w) in self.columns.iter().zip(&col_w) {
+            out.push_str(&format!(" | {c:>w$}", w = w));
+        }
+        out.push('\n');
+        out.push_str(&"-".repeat(label_w + col_w.iter().map(|w| w + 3).sum::<usize>()));
+        out.push('\n');
+        for (label, vals) in &self.rows {
+            out.push_str(&format!("{label:label_w$}"));
+            for (v, w) in vals.iter().zip(&col_w) {
+                out.push_str(&format!(" | {v:>w$.3}", w = w));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("title", json::s(&self.title)),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| json::s(c)).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|(l, v)| {
+                            json::obj(vec![
+                                ("label", json::s(l)),
+                                ("values", json::num_arr(v)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Write a result JSON under bench_results/ (creating the directory).
+pub fn write_result(name: &str, value: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = Path::new("bench_results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, value.to_string())?;
+    Ok(path)
+}
+
+/// Pretty fraction formatting for breakdown tables.
+pub fn pct(x: f64) -> f64 {
+    (x * 1000.0).round() / 10.0
+}
+
+/// Mean of a breakdown key across per-iteration maps.
+pub fn mean_breakdown(
+    iters: &[BTreeMap<&'static str, f64>],
+    key: &str,
+) -> f64 {
+    if iters.is_empty() {
+        return 0.0;
+    }
+    iters.iter().map(|m| m.get(key).copied().unwrap_or(0.0)).sum::<f64>()
+        / iters.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balance_degree_zero_when_even() {
+        assert_eq!(balance_degree(&[5, 5, 5, 5]), 0.0);
+        assert!(balance_degree(&[10, 0, 0, 0]) > 0.0);
+    }
+
+    #[test]
+    fn rb_direction() {
+        // Balancing [12,0,0] -> [4,4,4] gives RB = inf; -> [6,4,2] gives >1.
+        assert!(rb(&[12, 0, 0], &[6, 4, 2]) > 1.0);
+        assert_eq!(rb(&[4, 4, 4], &[4, 4, 4]), 1.0);
+        assert!(rb(&[12, 0, 0], &[4, 4, 4]).is_infinite());
+    }
+
+    #[test]
+    fn speedup_math() {
+        assert!((speedup(2.0, 1.0) - 2.0).abs() < 1e-12);
+        assert!((speedup(1.0, 2.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = TableReport::new("Test", &["FasterMoE", "Pro-Prophet"]);
+        t.row("MoE-GPT-S", vec![1.63, 1.98]);
+        t.row("MoE-GPT-M", vec![1.99, 2.22]);
+        let s = t.render();
+        assert!(s.contains("MoE-GPT-S"));
+        assert!(s.contains("1.980"));
+        assert!(s.contains("Pro-Prophet"));
+        assert_eq!(s.lines().count(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = TableReport::new("Test", &["a", "b"]);
+        t.row("x", vec![1.0]);
+    }
+
+    #[test]
+    fn table_json_roundtrip() {
+        let mut t = TableReport::new("T", &["c1"]);
+        t.row("r1", vec![3.5]);
+        let j = t.to_json();
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("rows").unwrap().idx(0).unwrap().get("label").unwrap().as_str(),
+            Some("r1")
+        );
+    }
+
+    #[test]
+    fn pct_rounds() {
+        assert_eq!(pct(0.3456), 34.6);
+    }
+}

@@ -1,0 +1,162 @@
+//! Device memory accounting for expert placements.
+//!
+//! The paper's §VI notes that device memory constrains the trainable
+//! token budget (LPWNV's 11 GB 2080 Ti only fits the four smaller models)
+//! and that lightweight placements move *parameters and gradients* while
+//! optimizer states stay at the expert's home (the ZeRO-style split).
+//! This module prices a placement's per-device memory so the planner can
+//! refuse replicas that would not fit.
+
+use super::Placement;
+
+/// Bytes-per-device accounting for one MoE layer group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemoryModel {
+    /// Parameters of ONE expert (f32), bytes.
+    pub expert_param_bytes: f64,
+    /// Optimizer state per parameter byte (Adam: m + v = 2.0).
+    pub optimizer_multiplier: f64,
+    /// Gradient buffer per replica (mirror of params) — 1.0 for f32 grads.
+    pub gradient_multiplier: f64,
+    /// Non-MoE residency per device (dense layers, activations, buffers).
+    pub base_bytes: f64,
+    /// Device HBM capacity, bytes.
+    pub capacity_bytes: f64,
+    /// Number of MoE layers sharing the device (placements are per layer;
+    /// replicas of all layers coexist).
+    pub n_layers: usize,
+}
+
+impl MemoryModel {
+    pub fn new(
+        expert_param_bytes: f64,
+        capacity_gb: f64,
+        n_layers: usize,
+        base_bytes: f64,
+    ) -> Self {
+        MemoryModel {
+            expert_param_bytes,
+            optimizer_multiplier: 2.0, // Adam m + v
+            gradient_multiplier: 1.0,
+            base_bytes,
+            capacity_bytes: capacity_gb * 1e9,
+            n_layers: n_layers.max(1),
+        }
+    }
+
+    /// Bytes one device holds for ONE layer under `placement`:
+    /// home experts keep params + grads + optimizer states; replicas keep
+    /// params + grads only (the lightweight-placement property).
+    pub fn device_layer_bytes(&self, p: &Placement, device: usize) -> f64 {
+        let mut bytes = 0.0;
+        for e in 0..p.n_experts() {
+            let is_home = p.home(e) == device;
+            let has_replica = p.replicas(e).contains(device);
+            if is_home {
+                bytes += self.expert_param_bytes
+                    * (1.0 + self.gradient_multiplier + self.optimizer_multiplier);
+            } else if has_replica {
+                bytes += self.expert_param_bytes * (1.0 + self.gradient_multiplier);
+            }
+        }
+        bytes
+    }
+
+    /// Total device residency assuming every layer uses `placement`'s
+    /// replica multiplicity (conservative planning estimate).
+    pub fn device_bytes(&self, p: &Placement, device: usize) -> f64 {
+        self.base_bytes + self.n_layers as f64 * self.device_layer_bytes(p, device)
+    }
+
+    /// Remaining headroom (can be negative).
+    pub fn headroom(&self, p: &Placement, device: usize) -> f64 {
+        self.capacity_bytes - self.device_bytes(p, device)
+    }
+
+    /// Does the whole placement fit on every device?
+    pub fn fits(&self, p: &Placement) -> bool {
+        (0..p.n_devices()).all(|d| self.headroom(p, d) >= 0.0)
+    }
+
+    /// How many EXTRA expert replicas one device can still host.
+    pub fn replica_budget(&self, p: &Placement, device: usize) -> usize {
+        let per_replica =
+            self.expert_param_bytes * (1.0 + self.gradient_multiplier);
+        let head = self.headroom(p, device);
+        if head <= 0.0 || per_replica <= 0.0 {
+            0
+        } else {
+            (head / (self.n_layers as f64 * per_replica)).floor() as usize
+        }
+    }
+
+    /// Devices that can NOT accept another replica under `placement` —
+    /// fed into the greedy search's exclusion list.
+    pub fn full_devices(&self, p: &Placement) -> Vec<usize> {
+        (0..p.n_devices())
+            .filter(|&d| self.replica_budget(p, d) == 0)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> MemoryModel {
+        // 4 MB experts, 1 GB devices, 12 layers, 100 MB base.
+        MemoryModel::new(4e6, 1.0, 12, 100e6)
+    }
+
+    #[test]
+    fn identity_accounting() {
+        let m = model();
+        let p = Placement::identity(4, 4);
+        // Home expert: params + grads + 2x optimizer = 4 * 4MB per layer.
+        assert_eq!(m.device_layer_bytes(&p, 0), 4.0 * 4e6);
+        let total = 100e6 + 12.0 * 16e6;
+        assert!((m.device_bytes(&p, 0) - total).abs() < 1.0);
+        assert!(m.fits(&p));
+    }
+
+    #[test]
+    fn replicas_cost_less_than_homes() {
+        let m = model();
+        let mut p = Placement::identity(4, 4);
+        p.add_replica(0, 1);
+        // Device 1: its own home (4x) + a replica (2x: params + grads).
+        assert_eq!(m.device_layer_bytes(&p, 1), 4.0 * 4e6 + 2.0 * 4e6);
+        // Optimizer states never move — device 0 unchanged.
+        assert_eq!(m.device_layer_bytes(&p, 0), 4.0 * 4e6);
+    }
+
+    #[test]
+    fn capacity_rejects_over_replication() {
+        // Tiny device: only the home expert fits.
+        let m = MemoryModel::new(4e6, 0.3, 12, 100e6);
+        let mut p = Placement::identity(4, 4);
+        assert!(m.fits(&p));
+        for e in 0..4 {
+            p.replicate_to_all(e);
+        }
+        assert!(!m.fits(&p), "full replication cannot fit in 0.3 GB");
+    }
+
+    #[test]
+    fn replica_budget_counts() {
+        let m = model();
+        let p = Placement::identity(4, 4);
+        // headroom = 1e9 - (100e6 + 12*16e6) = 708e6;
+        // per replica across 12 layers = 12 * 8e6 = 96e6 -> 7 replicas.
+        assert_eq!(m.replica_budget(&p, 0), 7);
+        assert!(m.full_devices(&p).is_empty());
+    }
+
+    #[test]
+    fn full_devices_flagged() {
+        let m = MemoryModel::new(4e6, 0.35, 12, 100e6);
+        let p = Placement::identity(4, 4);
+        // 0.35 GB - 0.1 base - 0.192 homes = 58 MB < one 96 MB replica set.
+        assert_eq!(m.full_devices(&p), vec![0, 1, 2, 3]);
+    }
+}

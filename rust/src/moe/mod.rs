@@ -1,0 +1,306 @@
+//! MoE routing statistics and expert placements.
+//!
+//! * [`LoadMatrix`] — the per-layer "gating result": how many tokens each
+//!   device routes to each expert (the W[d][e] matrix the planner's
+//!   Algorithm 1 consumes as `gating`).
+//! * [`Placement`] — a *lightweight expert placement* (paper §IV-A): every
+//!   expert is independently replicated onto a subset of devices; only its
+//!   parameters (fwd) and gradients (bwd) move, never optimizer states.
+//! * [`RoutedLoad`] — H (tokens computed per device) and R (tokens received
+//!   per device) after applying a placement, the inputs of Eq 1–3.
+
+pub mod memory;
+pub mod placement;
+
+pub use memory::MemoryModel;
+pub use placement::Placement;
+
+/// Tokens routed from each source device to each expert in one MoE layer:
+/// `w[d][e]` = tokens resident on device `d` whose gate picked expert `e`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadMatrix {
+    n_devices: usize,
+    n_experts: usize,
+    w: Vec<u64>, // row-major [d][e]
+}
+
+impl LoadMatrix {
+    pub fn zeros(n_devices: usize, n_experts: usize) -> Self {
+        LoadMatrix { n_devices, n_experts, w: vec![0; n_devices * n_experts] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<u64>>) -> Self {
+        let n_devices = rows.len();
+        let n_experts = rows.first().map_or(0, Vec::len);
+        let mut w = Vec::with_capacity(n_devices * n_experts);
+        for r in &rows {
+            assert_eq!(r.len(), n_experts, "ragged load matrix");
+            w.extend_from_slice(r);
+        }
+        LoadMatrix { n_devices, n_experts, w }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    #[inline]
+    pub fn get(&self, device: usize, expert: usize) -> u64 {
+        self.w[device * self.n_experts + expert]
+    }
+
+    #[inline]
+    pub fn set(&mut self, device: usize, expert: usize, v: u64) {
+        self.w[device * self.n_experts + expert] = v;
+    }
+
+    #[inline]
+    pub fn add(&mut self, device: usize, expert: usize, v: u64) {
+        self.w[device * self.n_experts + expert] += v;
+    }
+
+    /// Total tokens routed to `expert` from all devices — the "input
+    /// distribution" entry the paper profiles (Fig 3/4).
+    pub fn expert_load(&self, expert: usize) -> u64 {
+        (0..self.n_devices).map(|d| self.get(d, expert)).sum()
+    }
+
+    /// The full input distribution (length E).
+    pub fn distribution(&self) -> Vec<u64> {
+        (0..self.n_experts).map(|e| self.expert_load(e)).collect()
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.w.iter().sum()
+    }
+
+    /// Tokens resident on a device (its DP shard contribution).
+    pub fn device_tokens(&self, device: usize) -> u64 {
+        (0..self.n_experts).map(|e| self.get(device, e)).sum()
+    }
+
+    /// Home device of an expert under the traditional EP layout
+    /// (one expert per device when E == D, else round-robin).
+    pub fn home(&self, expert: usize) -> usize {
+        expert % self.n_devices
+    }
+
+    /// Route tokens under `placement` (the paper's `Replace_Inputs`).
+    ///
+    /// Rule (paper Fig 6): a token batch on device `d` destined for expert
+    /// `e` is computed **locally** if `d` holds a replica of `e`;
+    /// otherwise it is sent to the currently least-loaded replica of `e`
+    /// (its home when `e` is not replicated).  Returns the per-device
+    /// computed (H) and received (R) token counts of the performance
+    /// model.
+    pub fn route(&self, placement: &Placement) -> RoutedLoad {
+        // Skips the traffic-matrix allocation (the greedy search calls
+        // this once per candidate; see EXPERIMENTS.md §Perf).
+        self.route_impl(placement, false).0
+    }
+
+    /// Per-pair A2A traffic under `placement`: `traffic[src][dst]` = tokens
+    /// moving from device `src` to device `dst` (src != dst).  Used by the
+    /// discrete-event simulator, which prices each pair at its actual link
+    /// bandwidth instead of the performance model's B̄ aggregate.
+    pub fn traffic(&self, placement: &Placement) -> Vec<Vec<u64>> {
+        self.route_impl(placement, true).1.unwrap()
+    }
+
+    /// Routing + traffic matrix in one deterministic pass.
+    pub fn route_full(&self, placement: &Placement) -> (RoutedLoad, Vec<Vec<u64>>) {
+        let (routed, traffic) = self.route_impl(placement, true);
+        (routed, traffic.unwrap())
+    }
+
+    fn route_impl(
+        &self,
+        placement: &Placement,
+        want_traffic: bool,
+    ) -> (RoutedLoad, Option<Vec<Vec<u64>>>) {
+        assert_eq!(placement.n_experts(), self.n_experts);
+        assert_eq!(placement.n_devices(), self.n_devices);
+        let mut h = vec![0u64; self.n_devices];
+        let mut r = vec![0u64; self.n_devices];
+        let mut sent = vec![0u64; self.n_devices];
+        let mut traffic = if want_traffic {
+            Some(vec![vec![0u64; self.n_devices]; self.n_devices])
+        } else {
+            None
+        };
+        // Pass 1: local tokens stay put.
+        let mut remote: Vec<(usize, usize, u64)> = Vec::new(); // (src, expert, n)
+        for d in 0..self.n_devices {
+            for e in 0..self.n_experts {
+                let tokens = self.get(d, e);
+                if tokens == 0 {
+                    continue;
+                }
+                if placement.replicas(e).contains(d) {
+                    h[d] += tokens;
+                } else {
+                    remote.push((d, e, tokens));
+                }
+            }
+        }
+        // Pass 2: remote batches go to the least-loaded replica (ties ->
+        // lowest device id; the home is the only replica when e is not
+        // replicated).  Heaviest batches placed first for better packing.
+        // Replica sets are materialized once (BitSet iteration inside the
+        // loop dominated the planner's Plan cost; see EXPERIMENTS.md §Perf).
+        let replica_lists: Vec<Vec<u32>> = (0..self.n_experts)
+            .map(|e| placement.replicas(e).iter().map(|d| d as u32).collect())
+            .collect();
+        remote.sort_unstable_by_key(|&(d, e, n)| (std::cmp::Reverse(n), d, e));
+        for (d, e, tokens) in remote {
+            let list = &replica_lists[e];
+            let target = if list.is_empty() {
+                self.home(e)
+            } else {
+                let mut best = list[0] as usize;
+                for &cand in &list[1..] {
+                    if h[cand as usize] < h[best] {
+                        best = cand as usize;
+                    }
+                }
+                best
+            };
+            h[target] += tokens;
+            if target != d {
+                r[target] += tokens;
+                sent[d] += tokens;
+                if let Some(t) = traffic.as_mut() {
+                    t[d][target] += tokens;
+                }
+            }
+        }
+        (RoutedLoad { h, r, sent }, traffic)
+    }
+
+    /// Routed load of the traditional (identity) placement.
+    pub fn route_identity(&self) -> RoutedLoad {
+        self.route(&Placement::identity(self.n_experts, self.n_devices))
+    }
+
+}
+
+/// Per-device load after routing: the H and R vectors of Table II.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoutedLoad {
+    /// H_i: tokens computed on device i.
+    pub h: Vec<u64>,
+    /// R_i: tokens received by device i from other devices (A2A ingress).
+    pub r: Vec<u64>,
+    /// Tokens sent away by device i (A2A egress; max(in, out) bounds the
+    /// per-device A2A time under the P2P implementation of Tutel).
+    pub sent: Vec<u64>,
+}
+
+impl RoutedLoad {
+    pub fn h_f64(&self) -> Vec<f64> {
+        self.h.iter().map(|&x| x as f64).collect()
+    }
+
+    pub fn max_h(&self) -> u64 {
+        self.h.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn min_h(&self) -> u64 {
+        self.h.iter().copied().min().unwrap_or(0)
+    }
+
+    /// The paper's balance condition (Eq 7):
+    /// max(H) - min(H) < alpha * I / E.
+    pub fn is_balanced(&self, alpha: f64, total_tokens: u64, n_experts: usize) -> bool {
+        let spread = (self.max_h() - self.min_h()) as f64;
+        spread < alpha * total_tokens as f64 / n_experts as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 3 devices / 3 experts; the Fig 6 example: device loads 5/2/2.
+    fn fig6() -> LoadMatrix {
+        // Rows = source device, cols = expert.
+        // Dev0: 2 tokens -> E0, 1 -> E1; Dev1: 2 -> E0, 1 -> E2;
+        // Dev2: 1 -> E0 ... chosen so expert loads are E0=5, E1=2, E2=2.
+        LoadMatrix::from_rows(vec![
+            vec![2, 1, 0],
+            vec![2, 0, 1],
+            vec![1, 1, 1],
+        ])
+    }
+
+    #[test]
+    fn distribution_and_totals() {
+        let w = fig6();
+        assert_eq!(w.distribution(), vec![5, 2, 2]);
+        assert_eq!(w.total_tokens(), 9);
+        assert_eq!(w.device_tokens(0), 3);
+        assert_eq!(w.expert_load(0), 5);
+    }
+
+    #[test]
+    fn identity_routing_matches_expert_loads() {
+        let w = fig6();
+        let routed = w.route_identity();
+        // Every expert computed at its home: H = expert loads.
+        assert_eq!(routed.h, vec![5, 2, 2]);
+        // R0: E0 tokens from dev1 (2) + dev2 (1) = 3; R1: E1 tokens from
+        // dev0 + dev2; R2: E2 token from dev1 (dev2's own E2 token stays).
+        assert_eq!(routed.r, vec![3, 2, 1]);
+        assert_eq!(routed.sent.iter().sum::<u64>(), routed.r.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn replication_keeps_tokens_local() {
+        let w = fig6();
+        // Replicate E0 everywhere: all E0 traffic vanishes.
+        let mut p = Placement::identity(3, 3);
+        p.replicate_to_all(0);
+        let routed = w.route(&p);
+        // dev0: local E0 (2). dev1: local E0 (2) + E1 home traffic from
+        // dev0 and dev2 (1+1). dev2: local E0 (1) + local E2 (1) + E2 from
+        // dev1 (1).
+        assert_eq!(routed.h, vec![2, 4, 3]);
+        // Remaining comm: dev0's E1 token stays home (E1@dev1): r[1] = 1;
+        // dev1's E2 token -> dev2; dev2's E1 token -> dev1.
+        assert_eq!(routed.r, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn balance_condition_eq7() {
+        let routed = RoutedLoad { h: vec![5, 2, 2], r: vec![], sent: vec![] };
+        // spread 3 < alpha * 9/3 = 3 alpha -> needs alpha > 1.
+        assert!(!routed.is_balanced(0.5, 9, 3));
+        assert!(routed.is_balanced(1.5, 9, 3));
+    }
+
+    #[test]
+    fn route_conserves_tokens() {
+        let w = fig6();
+        for p in [
+            Placement::identity(3, 3),
+            {
+                let mut p = Placement::identity(3, 3);
+                p.add_replica(0, 1);
+                p
+            },
+        ] {
+            let routed = w.route(&p);
+            assert_eq!(routed.h.iter().sum::<u64>(), w.total_tokens());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_panic() {
+        LoadMatrix::from_rows(vec![vec![1, 2], vec![3]]);
+    }
+}

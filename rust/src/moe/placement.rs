@@ -1,0 +1,150 @@
+//! Lightweight expert placement (paper §IV-A).
+//!
+//! Each expert `e` is independently mapped to a replica set of devices that
+//! always includes its home device.  Under a placement, only the expert's
+//! parameters (forward, `Trans`) and gradients (backward, `Agg`) are
+//! communicated, and only among the replica devices — never the optimizer
+//! states, which stay at home (the ZeRO-style split the paper exploits).
+
+use crate::util::bitset::BitSet;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    replicas: Vec<BitSet>, // indexed by expert
+    n_devices: usize,
+}
+
+impl Placement {
+    /// Traditional EP placement: expert e only on its home device e % D.
+    pub fn identity(n_experts: usize, n_devices: usize) -> Self {
+        let replicas = (0..n_experts)
+            .map(|e| BitSet::singleton(n_devices, e % n_devices))
+            .collect();
+        Placement { replicas, n_devices }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    pub fn home(&self, expert: usize) -> usize {
+        expert % self.n_devices
+    }
+
+    pub fn replicas(&self, expert: usize) -> &BitSet {
+        &self.replicas[expert]
+    }
+
+    /// Add one replica of `expert` on `device`.
+    pub fn add_replica(&mut self, expert: usize, device: usize) {
+        self.replicas[expert].insert(device);
+    }
+
+    /// Replicate `expert` onto every device (FasterMoE-style shadowing).
+    pub fn replicate_to_all(&mut self, expert: usize) {
+        self.replicas[expert] = BitSet::full(self.n_devices);
+    }
+
+    /// Replicate `expert` onto all devices EXCEPT `excluded` (the paper's
+    /// greedy step: skip the n devices with the fewest inputs for it).
+    /// The home device is always retained.
+    pub fn replicate_except(&mut self, expert: usize, excluded: &[usize]) {
+        let mut set = BitSet::full(self.n_devices);
+        for &d in excluded {
+            set.remove(d);
+        }
+        set.insert(self.home(expert));
+        self.replicas[expert] = set;
+    }
+
+    /// Experts with more than one replica (the paper's `s` = |selected|).
+    pub fn transferred_experts(&self) -> Vec<usize> {
+        (0..self.n_experts())
+            .filter(|&e| self.replicas[e].len() > 1)
+            .collect()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.transferred_experts().is_empty()
+    }
+
+    /// Total parameter-transfer volume in expert-copies: for each selected
+    /// expert, the number of devices that RECEIVE a copy (replicas minus
+    /// the home, which already holds it).
+    pub fn transfer_copies(&self) -> u64 {
+        self.transferred_experts()
+            .iter()
+            .map(|&e| (self.replicas[e].len() - 1) as u64)
+            .sum()
+    }
+
+    /// Per-expert replica counts (for reports).
+    pub fn replica_counts(&self) -> Vec<usize> {
+        self.replicas.iter().map(BitSet::len).collect()
+    }
+
+    /// Validity: every expert has at least its home replica, and replica
+    /// sets only contain existing devices (checked by BitSet capacity).
+    pub fn validate(&self) -> Result<(), String> {
+        for e in 0..self.n_experts() {
+            if !self.replicas[e].contains(self.home(e)) {
+                return Err(format!("expert {e} lost its home replica"));
+            }
+            if self.replicas[e].is_empty() {
+                return Err(format!("expert {e} has no replicas"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_properties() {
+        let p = Placement::identity(8, 8);
+        assert!(p.is_identity());
+        assert_eq!(p.transfer_copies(), 0);
+        assert!(p.validate().is_ok());
+        for e in 0..8 {
+            assert_eq!(p.replicas(e).iter().collect::<Vec<_>>(), vec![e]);
+        }
+    }
+
+    #[test]
+    fn more_experts_than_devices_round_robin() {
+        let p = Placement::identity(8, 4);
+        assert_eq!(p.home(5), 1);
+        assert!(p.replicas(5).contains(1));
+    }
+
+    #[test]
+    fn replicate_except_keeps_home() {
+        let mut p = Placement::identity(4, 4);
+        // Exclude everything including the home: home must survive.
+        p.replicate_except(2, &[0, 1, 2, 3]);
+        assert_eq!(p.replicas(2).iter().collect::<Vec<_>>(), vec![2]);
+        assert!(p.validate().is_ok());
+
+        p.replicate_except(1, &[3]);
+        assert_eq!(p.replicas(1).iter().collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(p.transferred_experts(), vec![1]);
+        assert_eq!(p.transfer_copies(), 2);
+    }
+
+    #[test]
+    fn replicate_to_all_counts() {
+        let mut p = Placement::identity(4, 4);
+        p.replicate_to_all(0);
+        p.replicate_to_all(3);
+        assert_eq!(p.transferred_experts(), vec![0, 3]);
+        assert_eq!(p.transfer_copies(), 6); // 3 receivers each
+        assert_eq!(p.replica_counts(), vec![4, 1, 1, 4]);
+    }
+}

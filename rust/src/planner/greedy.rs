@@ -1,0 +1,253 @@
+//! Algorithm 1: the locality-based greedy search for a
+//! communication-efficient lightweight expert placement.
+//!
+//! The search space has 2^(D·E) placements; the greedy strategy instead
+//! (paper §IV-C):
+//!
+//! 1. estimates the layer time without any placement (`T_output`);
+//! 2. repeatedly picks the heaviest not-yet-selected expert and replicates
+//!    it to every device except the `n` holding the fewest of its inputs
+//!    (BottomK);
+//! 3. re-routes, re-estimates with the performance model, and remembers
+//!    the best prefix (`cnt`);
+//! 4. stops when the load satisfies the Eq 7 balance condition, or when
+//!    the heaviest device repeats (`Used` check), or when every expert has
+//!    been selected;
+//! 5. returns the placement built from the best prefix `L[0..cnt]`.
+
+use super::PlannerConfig;
+use crate::moe::{LoadMatrix, Placement};
+use crate::perfmodel::PerfModel;
+
+/// Outcome of one greedy search.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub placement: Placement,
+    /// Estimated layer time of the returned placement.
+    pub t_est: f64,
+    /// Estimated layer time of the identity placement (the baseline the
+    /// search improved on).
+    pub t_identity: f64,
+    /// Number of candidate placements evaluated.
+    pub evaluated: usize,
+    /// Selected experts, in greedy order (the paper's L[0..cnt]).
+    pub selected: Vec<usize>,
+}
+
+/// Devices holding the fewest inputs for `expert` (the BottomK of Alg 1).
+fn bottom_k(w: &LoadMatrix, expert: usize, n: usize) -> Vec<usize> {
+    let mut devs: Vec<usize> = (0..w.n_devices()).collect();
+    devs.sort_by_key(|&d| (w.get(d, expert), d));
+    devs.truncate(n.min(w.n_devices()));
+    devs
+}
+
+pub fn greedy_search(w: &LoadMatrix, pm: &PerfModel, cfg: &PlannerConfig) -> SearchResult {
+    let n_experts = w.n_experts();
+    let n_devices = w.n_devices();
+    let total = w.total_tokens();
+    let overlap = cfg.use_overlap_model;
+    let n_exclude = if cfg.n_exclude == super::AUTO_EXCLUDE {
+        n_devices / 2
+    } else {
+        cfg.n_exclude.min(n_devices.saturating_sub(1))
+    };
+
+    let identity = Placement::identity(n_experts, n_devices);
+    let mut routed = w.route(&identity);
+    let t_identity = pm.layer_time_sn(&routed, 0, 0, overlap);
+    let mut t_output = t_identity;
+
+    let mut placement = identity.clone();
+    let mut selected: Vec<usize> = Vec::new();
+    let mut bottoms: Vec<Vec<usize>> = Vec::new();
+    let mut used_devices = vec![false; n_devices];
+    let mut in_l = vec![false; n_experts];
+    let mut cnt = 0usize;
+    let mut evaluated = 0usize;
+
+    loop {
+        // Balanced already? (Eq 7)
+        if routed.is_balanced(cfg.alpha, total, n_experts) {
+            break;
+        }
+        // Heaviest device; bail if we have seen it before (Alg 1 line 7).
+        let heaviest_dev = routed
+            .h
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &h)| h)
+            .map(|(d, _)| d)
+            .unwrap_or(0);
+        if used_devices[heaviest_dev] {
+            break;
+        }
+        used_devices[heaviest_dev] = true;
+
+        // Heaviest unselected expert (prefer one homed on the heaviest
+        // device, since shedding its load is what relieves that device).
+        let candidate_expert = (0..n_experts)
+            .filter(|&e| !in_l[e])
+            .max_by_key(|&e| {
+                let home_bonus = u64::from(w.home(e) == heaviest_dev);
+                (home_bonus, w.expert_load(e), std::cmp::Reverse(e))
+            });
+        let Some(expert) = candidate_expert else { break };
+        in_l[expert] = true;
+
+        let mut nb = bottom_k(w, expert, n_exclude);
+        // Memory constraint: devices without replica headroom are excluded
+        // too (the optimizer states stay home, but params+grads must fit).
+        if let Some(mem) = &cfg.memory {
+            for d in mem.full_devices(&placement) {
+                if !nb.contains(&d) {
+                    nb.push(d);
+                }
+            }
+        }
+        placement.replicate_except(expert, &nb);
+        selected.push(expert);
+        bottoms.push(nb);
+
+        // Re-route and evaluate (Alg 1 lines 15-20).
+        routed = w.route(&placement);
+        let s = selected.len();
+        let t_changed = pm.layer_time_sn(&routed, s, n_exclude, overlap);
+        evaluated += 1;
+        if t_changed < t_output {
+            t_output = t_changed;
+            cnt = s;
+        }
+        if s == n_experts {
+            break;
+        }
+    }
+
+    // Rebuild the best prefix L[0..cnt] (Alg 1 line 22).
+    let mut best = Placement::identity(n_experts, n_devices);
+    for i in 0..cnt {
+        best.replicate_except(selected[i], &bottoms[i]);
+    }
+    debug_assert!(best.validate().is_ok());
+    SearchResult {
+        placement: best,
+        t_est: t_output,
+        t_identity,
+        evaluated,
+        selected: selected[..cnt].to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::ModelSpec;
+
+    fn pm(e: usize) -> PerfModel {
+        PerfModel::new(
+            &ModelSpec::moe_gpt_s(e, 1, 4096),
+            &ClusterSpec::hpwnv(e.div_ceil(4)),
+        )
+    }
+
+    #[test]
+    fn never_worse_than_identity() {
+        let w = LoadMatrix::from_rows(vec![
+            vec![900, 50, 30, 44],
+            vec![800, 100, 60, 64],
+            vec![850, 70, 40, 64],
+            vec![900, 60, 20, 44],
+        ]);
+        let r = greedy_search(&w, &pm(4), &PlannerConfig::default());
+        assert!(r.t_est <= r.t_identity + 1e-15);
+        assert!(r.placement.validate().is_ok());
+    }
+
+    #[test]
+    fn balanced_load_returns_identity() {
+        let w = LoadMatrix::from_rows(vec![vec![256; 4]; 4]);
+        let r = greedy_search(&w, &pm(4), &PlannerConfig::default());
+        assert!(r.placement.is_identity());
+        assert_eq!(r.evaluated, 0);
+    }
+
+    #[test]
+    fn heavy_expert_gets_replicated() {
+        // Expert 0 holds ~70% of tokens; the search must select it.
+        let w = LoadMatrix::from_rows(vec![
+            vec![700, 100, 100, 124],
+            vec![720, 90, 100, 114],
+            vec![710, 110, 90, 114],
+            vec![690, 100, 110, 124],
+        ]);
+        let r = greedy_search(&w, &pm(4), &PlannerConfig::default());
+        assert!(
+            r.selected.contains(&0),
+            "expert 0 should be selected, got {:?}",
+            r.selected
+        );
+        assert!(r.placement.replicas(0).len() > 1);
+        assert!(r.t_est < r.t_identity);
+    }
+
+    #[test]
+    fn bottom_k_excludes_lightest_devices() {
+        let w = LoadMatrix::from_rows(vec![
+            vec![100, 0],
+            vec![5, 0],
+            vec![50, 0],
+            vec![1, 0],
+        ]);
+        assert_eq!(bottom_k(&w, 0, 2), vec![3, 1]);
+        assert_eq!(bottom_k(&w, 0, 0), Vec::<usize>::new());
+        // n larger than D saturates.
+        assert_eq!(bottom_k(&w, 0, 99).len(), 4);
+    }
+
+    #[test]
+    fn n_exclude_limits_replicas() {
+        let w = LoadMatrix::from_rows(vec![
+            vec![900, 50, 30, 44],
+            vec![800, 100, 60, 64],
+            vec![850, 70, 40, 64],
+            vec![900, 60, 20, 44],
+        ]);
+        let cfg = PlannerConfig { n_exclude: 2, ..Default::default() };
+        let r = greedy_search(&w, &pm(4), &cfg);
+        for &e in &r.selected {
+            assert!(r.placement.replicas(e).len() <= 4 - 2 + 1); // +home slack
+        }
+    }
+
+    #[test]
+    fn terminates_on_pathological_inputs() {
+        // All tokens to one expert from one device.
+        let mut w = LoadMatrix::zeros(8, 8);
+        w.set(0, 0, 100_000);
+        let r = greedy_search(&w, &pm(8), &PlannerConfig::default());
+        assert!(r.evaluated <= 8);
+        assert!(r.placement.validate().is_ok());
+
+        // Zero tokens entirely.
+        let w0 = LoadMatrix::zeros(4, 4);
+        let r0 = greedy_search(&w0, &pm(4), &PlannerConfig::default());
+        assert!(r0.placement.is_identity());
+    }
+
+    #[test]
+    fn overlap_model_changes_accounting_not_validity() {
+        let w = LoadMatrix::from_rows(vec![
+            vec![500, 200, 150, 174],
+            vec![520, 180, 170, 154],
+            vec![480, 220, 140, 184],
+            vec![500, 200, 160, 164],
+        ]);
+        for overlap in [false, true] {
+            let cfg = PlannerConfig { use_overlap_model: overlap, ..Default::default() };
+            let r = greedy_search(&w, &pm(4), &cfg);
+            assert!(r.placement.validate().is_ok());
+            assert!(r.t_est <= r.t_identity + 1e-15);
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Pro-Prophet planner (paper §IV): searches for a communication-efficient
+//! lightweight expert placement with a locality-based greedy algorithm.
+
+pub mod greedy;
+pub mod locality;
+pub mod policies;
+
+pub use greedy::{greedy_search, SearchResult};
+pub use locality::LocalityPredictor;
+
+use crate::moe::{LoadMatrix, Placement};
+use crate::perfmodel::PerfModel;
+
+/// Sentinel for [`PlannerConfig::n_exclude`]: resolve `n` to D/2 at search
+/// time (replicate a selected expert to the top half of devices by its
+/// token count — the "necessary devices" of the paper's Fig 6).
+pub const AUTO_EXCLUDE: usize = usize::MAX;
+
+/// Planner knobs (paper Algorithm 1 inputs + locality settings).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannerConfig {
+    /// `n`: number of devices a selected expert is NOT transferred to
+    /// (the BottomK exclusion of Algorithm 1).  [`AUTO_EXCLUDE`] = D/2.
+    pub n_exclude: usize,
+    /// `alpha`: balance tolerance of Eq 7.
+    pub alpha: f64,
+    /// Re-run the greedy search every this many iterations, reusing the
+    /// cached placement in between (the locality-based frequency
+    /// reduction of §IV-C).
+    pub replan_interval: usize,
+    /// Evaluate candidates with the scheduler-aware Eq 8 instead of the
+    /// blocking Eq 6 (the planner/scheduler combination of §V-C).
+    pub use_overlap_model: bool,
+    /// Optional device-memory model: devices without replica headroom are
+    /// excluded from placements (see moe::memory).
+    pub memory: Option<crate::moe::MemoryModel>,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            n_exclude: AUTO_EXCLUDE,
+            alpha: 0.25,
+            replan_interval: 1,
+            use_overlap_model: true,
+            memory: None,
+        }
+    }
+}
+
+/// Stateful planner: wraps the greedy search with the locality-driven
+/// replanning schedule and bookkeeping for reports.
+#[derive(Clone, Debug)]
+pub struct Planner {
+    pub cfg: PlannerConfig,
+    cached: Option<Placement>,
+    iters_since_plan: usize,
+    pub plans_run: usize,
+    pub plans_reused: usize,
+    /// Replans forced by drift detection (plan_with_drift_check).
+    pub drift_replans: usize,
+    /// Distribution the cached placement was planned for.
+    planned_dist: Option<Vec<u64>>,
+    /// Wall-clock seconds spent inside greedy_search (the real Plan cost).
+    pub search_seconds: f64,
+}
+
+impl Planner {
+    pub fn new(cfg: PlannerConfig) -> Self {
+        Planner {
+            cfg,
+            cached: None,
+            iters_since_plan: 0,
+            plans_run: 0,
+            plans_reused: 0,
+            drift_replans: 0,
+            planned_dist: None,
+            search_seconds: 0.0,
+        }
+    }
+
+    /// Produce a placement for the upcoming iteration given the observed
+    /// (or locality-predicted) load matrix.
+    pub fn plan(&mut self, w: &LoadMatrix, pm: &PerfModel) -> Placement {
+        if let Some(cached) = &self.cached {
+            if self.iters_since_plan < self.cfg.replan_interval
+                && cached.n_experts() == w.n_experts()
+            {
+                self.iters_since_plan += 1;
+                self.plans_reused += 1;
+                return cached.clone();
+            }
+        }
+        let start = std::time::Instant::now();
+        let result = greedy_search(w, pm, &self.cfg);
+        self.search_seconds += start.elapsed().as_secs_f64();
+        self.plans_run += 1;
+        self.iters_since_plan = 1;
+        self.cached = Some(result.placement.clone());
+        result.placement
+    }
+
+    /// Drop the cache (e.g. when the predictor detects a distribution
+    /// shift larger than the locality assumption tolerates).
+    pub fn invalidate(&mut self) {
+        self.cached = None;
+        self.iters_since_plan = 0;
+    }
+
+    /// Locality-aware planning with drift detection: reuse the cached
+    /// placement only while the observed distribution stays within
+    /// `min_similarity` of the one it was planned for (Fig 4 locality can
+    /// break at workload boundaries; a similarity drop forces a replan
+    /// regardless of the replan interval).
+    pub fn plan_with_drift_check(
+        &mut self,
+        w: &LoadMatrix,
+        pm: &PerfModel,
+        min_similarity: f64,
+    ) -> Placement {
+        let dist = w.distribution();
+        if let Some(prev) = &self.planned_dist {
+            if locality::similarity(prev, &dist) < min_similarity {
+                self.invalidate();
+                self.drift_replans += 1;
+            }
+        }
+        let had_cache = self.cached.is_some();
+        let p = self.plan(w, pm);
+        if !had_cache || self.iters_since_plan == 1 {
+            self.planned_dist = Some(dist);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::ModelSpec;
+
+    fn skewed_w() -> LoadMatrix {
+        LoadMatrix::from_rows(vec![
+            vec![600, 100, 100, 224],
+            vec![600, 100, 100, 224],
+            vec![600, 100, 100, 224],
+            vec![600, 100, 100, 224],
+        ])
+    }
+
+    fn pm() -> PerfModel {
+        PerfModel::new(&ModelSpec::moe_gpt_s(4, 1, 4096), &ClusterSpec::hpwnv(1))
+    }
+
+    #[test]
+    fn caching_respects_replan_interval() {
+        let cfg = PlannerConfig { replan_interval: 4, ..Default::default() };
+        let mut planner = Planner::new(cfg);
+        let w = skewed_w();
+        let pm = pm();
+        for _ in 0..8 {
+            planner.plan(&w, &pm);
+        }
+        assert_eq!(planner.plans_run, 2);
+        assert_eq!(planner.plans_reused, 6);
+    }
+
+    #[test]
+    fn invalidate_forces_replan() {
+        let cfg = PlannerConfig { replan_interval: 100, ..Default::default() };
+        let mut planner = Planner::new(cfg);
+        let w = skewed_w();
+        let pm = pm();
+        planner.plan(&w, &pm);
+        planner.invalidate();
+        planner.plan(&w, &pm);
+        assert_eq!(planner.plans_run, 2);
+    }
+
+    #[test]
+    fn drift_check_forces_replan() {
+        let cfg = PlannerConfig { replan_interval: 100, ..Default::default() };
+        let mut planner = Planner::new(cfg);
+        let pm = pm();
+        let w1 = skewed_w();
+        planner.plan_with_drift_check(&w1, &pm, 0.9);
+        // Same distribution: reuse.
+        planner.plan_with_drift_check(&w1, &pm, 0.9);
+        assert_eq!(planner.plans_run, 1);
+        // Violent shift: expert 3 suddenly dominates.
+        let w2 = LoadMatrix::from_rows(vec![
+            vec![50, 100, 100, 774],
+            vec![50, 100, 100, 774],
+            vec![50, 100, 100, 774],
+            vec![50, 100, 100, 774],
+        ]);
+        planner.plan_with_drift_check(&w2, &pm, 0.9);
+        assert_eq!(planner.drift_replans, 1);
+        assert_eq!(planner.plans_run, 2);
+    }
+
+    #[test]
+    fn memory_constraint_blocks_full_devices() {
+        use crate::moe::MemoryModel;
+        // Devices with zero replica headroom: placement must stay identity
+        // no matter how skewed the load is.
+        let mem = MemoryModel::new(4e6, 0.35, 12, 100e6);
+        let cfg = PlannerConfig { memory: Some(mem), ..Default::default() };
+        let mut planner = Planner::new(cfg);
+        let p = planner.plan(&skewed_w(), &pm());
+        assert!(p.is_identity(), "no device has headroom: {:?}", p.replica_counts());
+    }
+
+    #[test]
+    fn planned_placement_is_valid() {
+        let mut planner = Planner::new(PlannerConfig::default());
+        let p = planner.plan(&skewed_w(), &pm());
+        assert!(p.validate().is_ok());
+    }
+}

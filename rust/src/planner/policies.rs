@@ -1,0 +1,132 @@
+//! Baseline placement policies the paper compares the planner against.
+//!
+//! * [`top_k_to_all`] — the "top2"/"top3" simple dynamic policies of the
+//!   ablation (Fig 15): replicate the k heaviest experts to every device.
+//! * [`fastermoe_shadowing`] — FasterMoE's dynamic shadowing: replicate an
+//!   expert globally while its load exceeds the break-even point of the
+//!   shadowing cost model (He et al., PPoPP'22), coarse-grained and
+//!   evaluated on the whole-cluster average load.
+
+use crate::moe::{LoadMatrix, Placement};
+use crate::perfmodel::PerfModel;
+
+/// Replicate the `k` heaviest experts onto all devices (Fig 15 policies).
+pub fn top_k_to_all(w: &LoadMatrix, k: usize) -> Placement {
+    let mut order: Vec<usize> = (0..w.n_experts()).collect();
+    order.sort_by_key(|&e| std::cmp::Reverse(w.expert_load(e)));
+    let mut p = Placement::identity(w.n_experts(), w.n_devices());
+    for &e in order.iter().take(k) {
+        p.replicate_to_all(e);
+    }
+    p
+}
+
+/// FasterMoE-style dynamic shadowing.
+///
+/// Experts are considered in descending load order; expert `e` is
+/// "shadowed" (replicated to all devices) while doing so still reduces the
+/// modeled makespan: shadowing trades `load_e`'s A2A + centralized compute
+/// for a broadcast of its parameters and an even spread of its compute.
+/// Unlike Pro-Prophet, the transfer always targets ALL devices and the
+/// decision ignores per-device token origins — the coarseness the paper's
+/// §VI-A attributes FasterMoE's extra runtime overhead to.
+pub fn fastermoe_shadowing(w: &LoadMatrix, pm: &PerfModel) -> Placement {
+    let mut order: Vec<usize> = (0..w.n_experts()).collect();
+    order.sort_by_key(|&e| std::cmp::Reverse(w.expert_load(e)));
+
+    let mut p = Placement::identity(w.n_experts(), w.n_devices());
+    let mut t_best = fastermoe_cost(w, pm, &p, 0);
+    let mut shadowed = 0usize;
+    for &e in &order {
+        if w.expert_load(e) == 0 {
+            break;
+        }
+        let mut cand = p.clone();
+        cand.replicate_to_all(e);
+        let t_cand = fastermoe_cost(w, pm, &cand, shadowed + 1);
+        if t_cand < t_best {
+            p = cand;
+            t_best = t_cand;
+            shadowed += 1;
+        } else {
+            break; // loads are sorted: no lighter expert will help either
+        }
+    }
+    p
+}
+
+/// FasterMoE's own cost view: balanced compute after shadowing, but the
+/// parameter/gradient movement is a coarse blocking broadcast to ALL
+/// devices (params forward + grads backward).
+fn fastermoe_cost(w: &LoadMatrix, pm: &PerfModel, p: &Placement, shadowed: usize) -> f64 {
+    let routed = w.route(p);
+    4.0 * pm.t_a2a(&routed.r) + 3.0 * pm.t_fec(&routed.h)
+        + 2.0 * pm.t_trans_coarse(shadowed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::ModelSpec;
+
+    fn skew4() -> LoadMatrix {
+        LoadMatrix::from_rows(vec![
+            vec![700, 150, 100, 74],
+            vec![720, 140, 90, 74],
+            vec![710, 160, 80, 74],
+            vec![690, 150, 110, 74],
+        ])
+    }
+
+    fn pm() -> PerfModel {
+        PerfModel::new(&ModelSpec::moe_gpt_s(4, 1, 4096), &ClusterSpec::hpwnv(1))
+    }
+
+    #[test]
+    fn top_k_selects_heaviest() {
+        let p = top_k_to_all(&skew4(), 2);
+        // Experts 0 and 1 are the heaviest.
+        assert_eq!(p.replicas(0).len(), 4);
+        assert_eq!(p.replicas(1).len(), 4);
+        assert_eq!(p.replicas(2).len(), 1);
+        assert_eq!(p.transferred_experts(), vec![0, 1]);
+    }
+
+    #[test]
+    fn top_zero_is_identity() {
+        assert!(top_k_to_all(&skew4(), 0).is_identity());
+    }
+
+    #[test]
+    fn shadowing_improves_skewed_load() {
+        let w = skew4();
+        let pm = pm();
+        let p = fastermoe_shadowing(&w, &pm);
+        let ident = Placement::identity(4, 4);
+        let t_shadow = pm.layer_time_blocking(&w.route(&p), &p);
+        let t_ident = pm.layer_time_blocking(&w.route(&ident), &ident);
+        assert!(t_shadow <= t_ident);
+        // The dominant expert must be shadowed.
+        assert_eq!(p.replicas(0).len(), 4);
+    }
+
+    #[test]
+    fn shadowing_leaves_balanced_load_alone() {
+        let w = LoadMatrix::from_rows(vec![vec![256; 4]; 4]);
+        let p = fastermoe_shadowing(&w, &pm());
+        assert!(p.is_identity());
+    }
+
+    #[test]
+    fn shadowing_is_all_or_nothing_per_expert() {
+        let p = fastermoe_shadowing(&skew4(), &pm());
+        for e in p.transferred_experts() {
+            assert_eq!(
+                p.replicas(e).len(),
+                4,
+                "FasterMoE shadowing always broadcasts to every device"
+            );
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Artifact manifest: the JSON inventory aot.py writes next to the HLO
+//! files, describing the model config, the flat tensor layout of the
+//! train-step interface, and which artifacts exist.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `{preset}_manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub dir: PathBuf,
+    // Model config (mirrors python ModelConfig).
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_experts: usize,
+    pub k: usize,
+    pub capacity: usize,
+    pub batch: usize,
+    pub tokens_per_step: usize,
+    pub num_tensors: usize,
+    pub num_params: usize,
+    pub tensors: Vec<TensorSpec>,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path, preset: &str) -> Result<Manifest> {
+        let path = dir.join(format!("{preset}_manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        Self::from_json(&v, dir)
+    }
+
+    pub fn from_json(v: &Json, dir: &Path) -> Result<Manifest> {
+        let cfg = v.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
+        let get = |key: &str| -> Result<usize> {
+            cfg.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest config missing {key}"))
+        };
+        let tensors = v
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing tensors"))?
+            .iter()
+            .map(|t| -> Result<TensorSpec> {
+                Ok(TensorSpec {
+                    name: t
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("tensor missing name"))?
+                        .to_string(),
+                    shape: t
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("tensor missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(|(k, val)| {
+                Ok((
+                    k.clone(),
+                    val.as_str()
+                        .ok_or_else(|| anyhow!("artifact path not a string"))?
+                        .to_string(),
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        let m = Manifest {
+            preset: v
+                .get("preset")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            dir: dir.to_path_buf(),
+            vocab: get("vocab")?,
+            seq_len: get("seq_len")?,
+            d_model: get("d_model")?,
+            d_ff: get("d_ff")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            n_experts: get("n_experts")?,
+            k: get("k")?,
+            capacity: get("capacity")?,
+            batch: get("batch")?,
+            tokens_per_step: get("tokens_per_step")?,
+            num_tensors: get("num_tensors")?,
+            num_params: get("num_params")?,
+            tensors,
+            artifacts,
+        };
+        if m.tensors.len() != m.num_tensors {
+            return Err(anyhow!(
+                "manifest inconsistent: {} tensor specs, num_tensors={}",
+                m.tensors.len(),
+                m.num_tensors
+            ));
+        }
+        Ok(m)
+    }
+
+    pub fn artifact_path(&self, tag: &str) -> Result<PathBuf> {
+        let fname = self
+            .artifacts
+            .get(tag)
+            .ok_or_else(|| anyhow!("manifest has no artifact {tag:?}"))?;
+        Ok(self.dir.join(fname))
+    }
+
+    /// Train-step input arity: 3 * num_tensors (params, m, v) + step + tokens.
+    pub fn train_step_inputs(&self) -> usize {
+        3 * self.num_tensors + 2
+    }
+
+    /// Train-step output arity: 3 * num_tensors + loss + loads.
+    pub fn train_step_outputs(&self) -> usize {
+        3 * self.num_tensors + 2
+    }
+
+    /// Flat index of a layer tensor by suffix name, e.g. (0, "gate_w").
+    pub fn layer_tensor_index(&self, layer: usize, suffix: &str) -> Option<usize> {
+        let want = format!("l{layer}.{suffix}");
+        self.tensors.iter().position(|t| t.name == want)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        r#"{
+          "preset": "tiny",
+          "config": {"vocab": 64, "seq_len": 16, "d_model": 32, "d_ff": 64,
+                     "n_layers": 2, "n_heads": 2, "n_experts": 4, "k": 2,
+                     "capacity": 48, "capacity_factor": 1.5, "batch": 4,
+                     "lr": 0.001, "tokens_per_step": 64, "num_tensors": 30,
+                     "num_params": 12345},
+          "tensors": [REPLACED],
+          "artifacts": {"train_step": "tiny_train_step.hlo.txt"}
+        }"#
+        .replace(
+            "REPLACED",
+            &(0..30)
+                .map(|i| {
+                    if i == 11 {
+                        r#"{"name": "l0.w1", "shape": [4, 32, 64]}"#.to_string()
+                    } else {
+                        format!(r#"{{"name": "t{i}", "shape": [2, 3]}}"#)
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join(","),
+        )
+    }
+
+    #[test]
+    fn parses_sample() {
+        let v = json::parse(&sample_json()).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp/arts")).unwrap();
+        assert_eq!(m.n_experts, 4);
+        assert_eq!(m.tensors.len(), 30);
+        assert_eq!(m.tensors[11].numel(), 4 * 32 * 64);
+        assert_eq!(m.train_step_inputs(), 92);
+        assert_eq!(
+            m.artifact_path("train_step").unwrap(),
+            PathBuf::from("/tmp/arts/tiny_train_step.hlo.txt")
+        );
+        assert!(m.artifact_path("nope").is_err());
+        assert_eq!(m.layer_tensor_index(0, "w1"), Some(11));
+        assert_eq!(m.layer_tensor_index(9, "w1"), None);
+    }
+
+    #[test]
+    fn rejects_inconsistent_tensor_count() {
+        let bad = sample_json().replace("\"num_tensors\": 30", "\"num_tensors\": 31");
+        let v = json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&v, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_config() {
+        let v = json::parse(r#"{"tensors": [], "artifacts": {}}"#).unwrap();
+        assert!(Manifest::from_json(&v, Path::new("/tmp")).is_err());
+    }
+}

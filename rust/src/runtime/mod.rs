@@ -1,0 +1,185 @@
+//! PJRT runtime: loads the AOT'd HLO-text artifacts produced by
+//! `make artifacts` (python/compile/aot.py) and executes them on the CPU
+//! PJRT client.  This is the ONLY bridge between the rust coordinator and
+//! the JAX/Pallas layers — python never runs here.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax
+//! >= 0.5 emits 64-bit instruction ids in serialized protos which
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, TensorSpec};
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT client plus artifact loading.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_artifact(&self, path: &Path) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+        Ok(Artifact {
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+
+    /// Load an artifact by manifest tag (e.g. "train_step").
+    pub fn load_tagged(&self, man: &Manifest, tag: &str) -> Result<Artifact> {
+        let path = man.artifact_path(tag)?;
+        self.load_artifact(&path)
+    }
+}
+
+/// One compiled executable.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with host literals; the artifact's tuple result is
+    /// decomposed into its elements (aot.py lowers with
+    /// `return_tuple=True`, so outputs are always a single tuple).
+    /// Accepts owned or borrowed literals, so large model state can be
+    /// passed by reference without deep-copying.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let outputs = self
+            .exe
+            .execute(inputs)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        let buffer = outputs
+            .first()
+            .and_then(|replica| replica.first())
+            .ok_or_else(|| anyhow!("{}: no output buffer", self.name))?;
+        let lit = buffer
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e}", self.name))
+    }
+}
+
+// --- literal construction helpers -----------------------------------------
+
+/// f32 literal of the given shape from a flat row-major slice.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("shape {:?} wants {n} values, got {}", dims, data.len()));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// i32 literal of the given shape.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("shape {:?} wants {n} values, got {}", dims, data.len()));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
+pub fn f32_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn i32_scalar(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract a literal's data as f32 vec.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))
+}
+
+/// Scalar f32 from a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar: {e}"))
+}
+
+/// Locate the artifacts directory: $PRO_PROPHET_ARTIFACTS, ./artifacts, or
+/// parent dirs relative to the cwd (so tests work from any location).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("PRO_PROPHET_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// True if the given preset's artifacts have been built.
+pub fn artifacts_available(preset: &str) -> bool {
+    artifacts_dir().join(format!("{preset}_manifest.json")).is_file()
+}
+
+/// Load a manifest from the default artifacts dir.
+pub fn load_manifest(preset: &str) -> Result<Manifest> {
+    Manifest::load(&artifacts_dir(), preset)
+        .with_context(|| format!("run `make artifacts` first (preset {preset})"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_helpers_validate_shape() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let back = to_f32_vec(&l).unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn i32_literal_roundtrip() {
+        let l = i32_literal(&[5, -3, 7, 0, 1, 2], &[2, 3]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![5, -3, 7, 0, 1, 2]);
+        assert!(i32_literal(&[1], &[2]).is_err());
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(scalar_f32(&f32_scalar(2.5)).unwrap(), 2.5);
+    }
+}

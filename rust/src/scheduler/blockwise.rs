@@ -1,0 +1,371 @@
+//! Schedule builders: the blocking baseline timeline and the paper's
+//! block-wise overlap strategy (Algorithm 2).
+//!
+//! Inputs are per-block operator costs ([`BlockCosts`]); builders assemble
+//! a [`Schedule`] whose stages encode exactly which communication hides
+//! under which computation:
+//!
+//! * `Plan` of iteration *j+1* hides under the A2A of iteration *j*;
+//! * `Trans` of block *i+1* splits into two sub-operators hidden under
+//!   `FEC_i` and `FNEC_i` (Fig 9c), sized so the FNEC window is filled
+//!   first (its duration is static and known before training, §V-B);
+//! * `Agg` of block *i+1* splits under `BNEC_i` and `BEC_i`;
+//! * block 0's `Trans` (start of FP) and `Agg` (end of BP) have no earlier
+//!   computation to hide under and stay exposed — the scheduling-space
+//!   constraint that confines Trans/Agg within one iteration (§V-A).
+
+use super::{A2aPhase, Op, OpInstance, Schedule, Stage};
+
+/// Modeled durations of every operator of one MoE block.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BlockCosts {
+    pub a2a: f64,   // one A2A exchange (all four priced equally, Eq 1)
+    pub fec: f64,   // forward expert computation
+    pub bec: f64,   // backward expert computation (~2x fec)
+    pub fnec: f64,  // forward non-MoE computation
+    pub bnec: f64,  // backward non-MoE computation
+    pub trans: f64, // parameter transfer of this block's placement
+    pub agg: f64,   // gradient aggregation (mirrors trans)
+    pub plan: f64,  // greedy-search cost for this block's next iteration
+}
+
+/// Which load-balancing ops a policy performs at all.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadBalanceOps {
+    /// Pure EP (Deepspeed-MoE): no Plan/Trans/Agg.
+    None,
+    /// Search + place + reduce on the critical path (FasterMoE, or the
+    /// Pro-Prophet planner with the scheduler ablated off).
+    Blocking,
+}
+
+/// How a Trans/Agg primitive is mapped onto the two per-block overlap
+/// windows — the three strategies of the paper's Fig 9.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SplitMode {
+    /// Fig 9a: schedule the whole primitive onto the expert-computation
+    /// window only (FEC for Trans, BEC for Agg).
+    ExpertOnly,
+    /// Fig 9b: schedule the whole primitive onto the non-MoE window only.
+    NonExpertOnly,
+    /// Fig 9c (Pro-Prophet): split into two sub-operators, filling the
+    /// statically-known non-MoE window first and overflowing the rest
+    /// into the expert window.
+    #[default]
+    Split,
+}
+
+/// Sub-operator split of a communication op across two overlap windows:
+/// fill the second (static, known-ahead) window first, overflow into the
+/// first (paper §V-B "exhaustively fill in the communication idle").
+fn split2(total: f64, window2: f64, mode: SplitMode) -> (f64, f64) {
+    match mode {
+        SplitMode::ExpertOnly => (total, 0.0),
+        SplitMode::NonExpertOnly => (0.0, total),
+        SplitMode::Split => {
+            let part2 = total.min(window2.max(0.0));
+            (total - part2, part2)
+        }
+    }
+}
+
+/// Sequential baseline timeline (paper Fig 7 order, every op blocking).
+pub fn build_blocking(blocks: &[BlockCosts], lb: LoadBalanceOps) -> Schedule {
+    let mut stages = Vec::new();
+    // Forward pass.
+    for (i, c) in blocks.iter().enumerate() {
+        if lb == LoadBalanceOps::Blocking {
+            if c.plan > 0.0 {
+                stages.push(Stage::comp_only(vec![OpInstance::new(
+                    Op::Plan { block: i },
+                    c.plan,
+                )]));
+            }
+            if c.trans > 0.0 {
+                stages.push(Stage::comm_only(vec![OpInstance::new(
+                    Op::Trans { block: i, part: 0 },
+                    c.trans,
+                )]));
+            }
+        }
+        stages.push(Stage::comm_only(vec![OpInstance::new(
+            Op::A2a { block: i, phase: A2aPhase::FwdDispatch },
+            c.a2a,
+        )]));
+        stages.push(Stage::comp_only(vec![OpInstance::new(Op::Fec { block: i }, c.fec)]));
+        stages.push(Stage::comm_only(vec![OpInstance::new(
+            Op::A2a { block: i, phase: A2aPhase::FwdCombine },
+            c.a2a,
+        )]));
+        stages.push(Stage::comp_only(vec![OpInstance::new(
+            Op::Fnec { block: i },
+            c.fnec,
+        )]));
+    }
+    // Backward pass (reverse block order).
+    for (i, c) in blocks.iter().enumerate().rev() {
+        stages.push(Stage::comp_only(vec![OpInstance::new(
+            Op::Bnec { block: i },
+            c.bnec,
+        )]));
+        stages.push(Stage::comm_only(vec![OpInstance::new(
+            Op::A2a { block: i, phase: A2aPhase::BwdDispatch },
+            c.a2a,
+        )]));
+        stages.push(Stage::comp_only(vec![OpInstance::new(Op::Bec { block: i }, c.bec)]));
+        stages.push(Stage::comm_only(vec![OpInstance::new(
+            Op::A2a { block: i, phase: A2aPhase::BwdCombine },
+            c.a2a,
+        )]));
+        if lb == LoadBalanceOps::Blocking && c.agg > 0.0 {
+            stages.push(Stage::comm_only(vec![OpInstance::new(
+                Op::Agg { block: i, part: 0 },
+                c.agg,
+            )]));
+        }
+    }
+    Schedule { stages }
+}
+
+/// Algorithm 2: the block-wise overlap schedule (Fig 9c splitting).
+pub fn build_blockwise(blocks: &[BlockCosts]) -> Schedule {
+    build_blockwise_mode(blocks, SplitMode::Split)
+}
+
+/// Algorithm 2 with an explicit Fig 9 splitting strategy (the Fig 9
+/// ablation bench compares the three).
+pub fn build_blockwise_mode(blocks: &[BlockCosts], mode: SplitMode) -> Schedule {
+    let l = blocks.len();
+    let mut stages = Vec::new();
+    if l == 0 {
+        return Schedule { stages };
+    }
+
+    // Block 0's Trans cannot hide under an earlier block — exposed at the
+    // start of FP (but its Plan ran during the previous iteration's A2A,
+    // so no Plan is charged here).
+    if blocks[0].trans > 0.0 {
+        stages.push(Stage::comm_only(vec![OpInstance::new(
+            Op::Trans { block: 0, part: 0 },
+            blocks[0].trans,
+        )]));
+    }
+
+    // ---- forward pass ----
+    for i in 0..l {
+        let c = &blocks[i];
+        // Next block's Trans split across this block's two comp windows.
+        let (t_fec_part, t_fnec_part) = match blocks.get(i + 1) {
+            Some(nxt) => split2(nxt.trans, c.fnec, mode),
+            None => (0.0, 0.0),
+        };
+        // Plan of the NEXT iteration for this block overlaps the dispatch
+        // A2A (§V-A: earliest legal position is iteration j for iter j+1).
+        let mut a2a1 = Stage::comm_only(vec![OpInstance::new(
+            Op::A2a { block: i, phase: A2aPhase::FwdDispatch },
+            c.a2a,
+        )]);
+        if c.plan > 0.0 {
+            a2a1.comp.push(OpInstance::new(Op::Plan { block: i }, c.plan));
+        }
+        stages.push(a2a1);
+
+        let mut fec = Stage::comp_only(vec![OpInstance::new(Op::Fec { block: i }, c.fec)]);
+        if t_fec_part > 0.0 {
+            fec.comm.push(OpInstance::new(Op::Trans { block: i + 1, part: 0 }, t_fec_part));
+        }
+        stages.push(fec);
+
+        stages.push(Stage::comm_only(vec![OpInstance::new(
+            Op::A2a { block: i, phase: A2aPhase::FwdCombine },
+            c.a2a,
+        )]));
+
+        let mut fnec =
+            Stage::comp_only(vec![OpInstance::new(Op::Fnec { block: i }, c.fnec)]);
+        if t_fnec_part > 0.0 {
+            fnec.comm.push(OpInstance::new(
+                Op::Trans { block: i + 1, part: 1 },
+                t_fnec_part,
+            ));
+        }
+        stages.push(fnec);
+    }
+
+    // ---- backward pass (blocks in reverse; Agg of block i+1 hides under
+    // the backward computations of block i) ----
+    for i in (0..l).rev() {
+        let c = &blocks[i];
+        let (agg_bec_part, agg_bnec_part) = match blocks.get(i + 1) {
+            Some(nxt) => split2(nxt.agg, c.bnec, mode),
+            None => (0.0, 0.0),
+        };
+
+        let mut bnec =
+            Stage::comp_only(vec![OpInstance::new(Op::Bnec { block: i }, c.bnec)]);
+        if agg_bnec_part > 0.0 {
+            bnec.comm.push(OpInstance::new(
+                Op::Agg { block: i + 1, part: 0 },
+                agg_bnec_part,
+            ));
+        }
+        stages.push(bnec);
+
+        stages.push(Stage::comm_only(vec![OpInstance::new(
+            Op::A2a { block: i, phase: A2aPhase::BwdDispatch },
+            c.a2a,
+        )]));
+
+        let mut bec = Stage::comp_only(vec![OpInstance::new(Op::Bec { block: i }, c.bec)]);
+        if agg_bec_part > 0.0 {
+            bec.comm.push(OpInstance::new(
+                Op::Agg { block: i + 1, part: 1 },
+                agg_bec_part,
+            ));
+        }
+        stages.push(bec);
+
+        stages.push(Stage::comm_only(vec![OpInstance::new(
+            Op::A2a { block: i, phase: A2aPhase::BwdCombine },
+            c.a2a,
+        )]));
+    }
+
+    // Block 0's Agg has no later computation to hide under.
+    if blocks[0].agg > 0.0 {
+        stages.push(Stage::comm_only(vec![OpInstance::new(
+            Op::Agg { block: 0, part: 0 },
+            blocks[0].agg,
+        )]));
+    }
+
+    Schedule { stages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs(trans: f64, agg: f64) -> BlockCosts {
+        BlockCosts {
+            a2a: 1.0,
+            fec: 2.0,
+            bec: 4.0,
+            fnec: 1.5,
+            bnec: 3.0,
+            trans,
+            agg,
+            plan: 0.5,
+        }
+    }
+
+    #[test]
+    fn split_fills_static_window_first() {
+        let m = SplitMode::Split;
+        assert_eq!(split2(1.0, 1.5, m), (0.0, 1.0)); // fits entirely in FNEC
+        assert_eq!(split2(2.0, 1.5, m), (0.5, 1.5)); // overflow into FEC window
+        assert_eq!(split2(0.0, 1.5, m), (0.0, 0.0));
+    }
+
+    #[test]
+    fn split_modes_fig9() {
+        assert_eq!(split2(2.0, 1.5, SplitMode::ExpertOnly), (2.0, 0.0));
+        assert_eq!(split2(2.0, 1.5, SplitMode::NonExpertOnly), (0.0, 2.0));
+    }
+
+    #[test]
+    fn fig9c_never_slower_than_single_target_modes() {
+        let blocks = [costs(3.0, 3.0); 4];
+        let split = build_blockwise_mode(&blocks, SplitMode::Split).total_time();
+        let fec = build_blockwise_mode(&blocks, SplitMode::ExpertOnly).total_time();
+        let fnec = build_blockwise_mode(&blocks, SplitMode::NonExpertOnly).total_time();
+        assert!(split <= fec + 1e-12, "{split} vs {fec}");
+        assert!(split <= fnec + 1e-12, "{split} vs {fnec}");
+    }
+
+    #[test]
+    fn blocking_deepspeed_has_no_lb_ops() {
+        let sched = build_blocking(&[costs(1.0, 1.0); 3], LoadBalanceOps::None);
+        assert!(sched
+            .stages
+            .iter()
+            .flat_map(|s| s.comp.iter().chain(&s.comm))
+            .all(|o| !o.op.is_load_balancing()));
+        sched.validate_dependencies().unwrap();
+    }
+
+    #[test]
+    fn blocking_lb_pays_everything() {
+        let blocks = [costs(2.0, 2.0); 2];
+        let sched = build_blocking(&blocks, LoadBalanceOps::Blocking);
+        // Sequential: every op contributes its full duration.
+        let expect: f64 = blocks
+            .iter()
+            .map(|c| 4.0 * c.a2a + c.fec + c.bec + c.fnec + c.bnec + c.trans + c.agg + c.plan)
+            .sum();
+        assert!((sched.total_time() - expect).abs() < 1e-12);
+        sched.validate_dependencies().unwrap();
+    }
+
+    #[test]
+    fn blockwise_faster_than_blocking() {
+        let blocks = [costs(2.0, 2.0); 4];
+        let blocking = build_blocking(&blocks, LoadBalanceOps::Blocking);
+        let overlapped = build_blockwise(&blocks);
+        assert!(overlapped.total_time() < blocking.total_time());
+        overlapped.validate_dependencies().unwrap();
+    }
+
+    #[test]
+    fn small_trans_fully_hidden() {
+        // trans (1.0) < fnec (1.5): hides entirely; plan (0.5) < a2a (1.0).
+        let blocks = [costs(1.0, 1.0); 3];
+        let sched = build_blockwise(&blocks);
+        let bd = sched.exposed_breakdown();
+        // Only block 0's trans (exposed at start) and block 0's agg (end)
+        // are charged.
+        assert!((bd.get("place").copied().unwrap_or(0.0) - 1.0).abs() < 1e-12);
+        assert!((bd.get("reduce").copied().unwrap_or(0.0) - 1.0).abs() < 1e-12);
+        assert_eq!(bd.get("search"), None, "plan hides under A2A");
+    }
+
+    #[test]
+    fn huge_trans_partially_exposed() {
+        let mut blocks = vec![costs(0.0, 0.0); 2];
+        blocks[1].trans = 100.0; // cannot hide under fec+fnec of block 0
+        let sched = build_blockwise(&blocks);
+        let bd = sched.exposed_breakdown();
+        assert!(bd.get("place").copied().unwrap_or(0.0) > 90.0);
+    }
+
+    #[test]
+    fn blockwise_never_loses_to_eq8_bound() {
+        // The schedule realizes at least the Eq-8 overlap: total time must
+        // not exceed the blocking schedule and must not be below the pure
+        // comp+a2a lower bound.
+        let blocks = [costs(3.0, 3.0); 4];
+        let sched = build_blockwise(&blocks);
+        let lower: f64 = blocks
+            .iter()
+            .map(|c| 4.0 * c.a2a + c.fec + c.bec + c.fnec + c.bnec)
+            .sum();
+        assert!(sched.total_time() >= lower - 1e-9);
+        sched.validate_dependencies().unwrap();
+    }
+
+    #[test]
+    fn empty_schedule() {
+        assert_eq!(build_blockwise(&[]).total_time(), 0.0);
+    }
+
+    #[test]
+    fn single_block_trans_agg_exposed() {
+        // With one block there is no previous block to hide under: both
+        // trans and agg are exposed, matching the scheduling-space rule.
+        let blocks = [costs(2.0, 2.0)];
+        let sched = build_blockwise(&blocks);
+        let bd = sched.exposed_breakdown();
+        assert!((bd.get("place").copied().unwrap_or(0.0) - 2.0).abs() < 1e-12);
+        assert!((bd.get("reduce").copied().unwrap_or(0.0) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,333 @@
+//! Pro-Prophet scheduler (paper §V): the operator timeline of a MoE block,
+//! the scheduling space, and the block-wise overlap strategy (Algorithm 2).
+//!
+//! A *MoE block* = one MoE layer + its adjacent non-MoE layer.  Per block
+//! the forward pass runs `Plan → Trans → A2A → FEC → A2A → FNEC` and the
+//! backward pass `A2A → BEC → A2A → BNEC → Agg` (paper Fig 7).  Each op is
+//! either pure-communication (*comm*) or pure-computation (*comp*); ops in
+//! the same [`Stage`] run on the two independent streams and overlap.
+
+pub mod blockwise;
+
+pub use blockwise::{build_blocking, build_blockwise, BlockCosts, LoadBalanceOps};
+
+/// The phase of one of the four A2A exchanges in a block (paper Fig 7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum A2aPhase {
+    /// Forward dispatch (tokens to experts).
+    FwdDispatch,
+    /// Forward combine (expert outputs back).
+    FwdCombine,
+    /// Backward dispatch (output grads to experts).
+    BwdDispatch,
+    /// Backward combine (input grads back).
+    BwdCombine,
+}
+
+/// One operator instance on the timeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    /// Run the planner's greedy search (for the NEXT iteration — the
+    /// locality pre-launch of §V-A).
+    Plan { block: usize },
+    /// Transfer expert parameters (part 0/1 when split into sub-operators).
+    Trans { block: usize, part: u8 },
+    /// Aggregate expert gradients to their home devices.
+    Agg { block: usize, part: u8 },
+    A2a { block: usize, phase: A2aPhase },
+    /// Forward expert computation of the MoE layer.
+    Fec { block: usize },
+    /// Backward expert computation.
+    Bec { block: usize },
+    /// Forward computation of the non-MoE layer.
+    Fnec { block: usize },
+    /// Backward computation of the non-MoE layer.
+    Bnec { block: usize },
+}
+
+/// Which stream an operator occupies (paper Fig 7 comm/comp tagging).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stream {
+    Comp,
+    Comm,
+}
+
+impl Op {
+    /// comm/comp tagging per §V-A: Plan computes locally (all information
+    /// is device-resident), Trans/Agg/A2A move bytes, the rest compute.
+    pub fn stream(&self) -> Stream {
+        match self {
+            Op::Plan { .. } | Op::Fec { .. } | Op::Bec { .. } | Op::Fnec { .. }
+            | Op::Bnec { .. } => Stream::Comp,
+            Op::Trans { .. } | Op::Agg { .. } | Op::A2a { .. } => Stream::Comm,
+        }
+    }
+
+    pub fn block(&self) -> usize {
+        match *self {
+            Op::Plan { block }
+            | Op::Trans { block, .. }
+            | Op::Agg { block, .. }
+            | Op::A2a { block, .. }
+            | Op::Fec { block }
+            | Op::Bec { block }
+            | Op::Fnec { block }
+            | Op::Bnec { block } => block,
+        }
+    }
+
+    /// Category used by the Table I breakdown.
+    pub fn breakdown_key(&self) -> &'static str {
+        match self {
+            Op::Plan { .. } => "search",
+            Op::Trans { .. } => "place",
+            Op::Agg { .. } => "reduce",
+            Op::A2a { .. } => "a2a",
+            Op::Fec { .. } | Op::Bec { .. } => "expert_comp",
+            Op::Fnec { .. } | Op::Bnec { .. } => "non_moe_comp",
+        }
+    }
+
+    pub fn is_load_balancing(&self) -> bool {
+        matches!(self, Op::Plan { .. } | Op::Trans { .. } | Op::Agg { .. })
+    }
+}
+
+/// An op with its modeled duration (seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpInstance {
+    pub op: Op,
+    pub dur: f64,
+}
+
+impl OpInstance {
+    pub fn new(op: Op, dur: f64) -> Self {
+        debug_assert!(dur >= 0.0, "negative duration for {op:?}");
+        OpInstance { op, dur }
+    }
+}
+
+/// Ops launched together; the comp and comm streams run in parallel, ops
+/// within one stream serialize (paper Alg 2 "Launch for parallel {..}").
+#[derive(Clone, Debug, Default)]
+pub struct Stage {
+    pub comp: Vec<OpInstance>,
+    pub comm: Vec<OpInstance>,
+}
+
+impl Stage {
+    pub fn comp_time(&self) -> f64 {
+        self.comp.iter().map(|o| o.dur).sum()
+    }
+
+    pub fn comm_time(&self) -> f64 {
+        self.comm.iter().map(|o| o.dur).sum()
+    }
+
+    /// Stage makespan: both streams must finish before the next stage (the
+    /// data-dependency barrier between launch groups).
+    pub fn time(&self) -> f64 {
+        self.comp_time().max(self.comm_time())
+    }
+
+    pub fn comm_only(ops: Vec<OpInstance>) -> Stage {
+        Stage { comp: vec![], comm: ops }
+    }
+
+    pub fn comp_only(ops: Vec<OpInstance>) -> Stage {
+        Stage { comp: ops, comm: vec![] }
+    }
+
+    pub fn pair(comp: Vec<OpInstance>, comm: Vec<OpInstance>) -> Stage {
+        Stage { comp, comm }
+    }
+}
+
+/// A whole iteration's timeline.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub stages: Vec<Stage>,
+}
+
+impl Schedule {
+    pub fn total_time(&self) -> f64 {
+        self.stages.iter().map(Stage::time).sum()
+    }
+
+    /// Exposed (critical-path) seconds per breakdown category.  Within a
+    /// stage the slower stream is on the critical path; its ops are charged
+    /// proportionally, the faster stream's ops are fully hidden.
+    pub fn exposed_breakdown(&self) -> std::collections::BTreeMap<&'static str, f64> {
+        let mut out = std::collections::BTreeMap::new();
+        for stage in &self.stages {
+            let (ct, mt) = (stage.comp_time(), stage.comm_time());
+            let (winners, total) = if ct >= mt {
+                (&stage.comp, ct)
+            } else {
+                (&stage.comm, mt)
+            };
+            if total <= 0.0 {
+                continue;
+            }
+            for op in winners {
+                *out.entry(op.op.breakdown_key()).or_insert(0.0) += op.dur;
+            }
+        }
+        out
+    }
+
+    /// Fraction of the iteration spent on exposed load-balancing ops
+    /// (Search + Place + Reduce of Table I).
+    pub fn lb_fraction(&self) -> f64 {
+        let bd = self.exposed_breakdown();
+        let lb = bd.get("search").unwrap_or(&0.0)
+            + bd.get("place").unwrap_or(&0.0)
+            + bd.get("reduce").unwrap_or(&0.0);
+        let total = self.total_time();
+        if total <= 0.0 {
+            0.0
+        } else {
+            lb / total
+        }
+    }
+
+    /// All data-dependency orderings hold: within a block, fwd ops appear
+    /// in Fig-7 order and Trans precedes that block's FEC.
+    pub fn validate_dependencies(&self) -> Result<(), String> {
+        let pos = |pred: &dyn Fn(&Op) -> bool| -> Option<usize> {
+            self.stages.iter().enumerate().find_map(|(i, s)| {
+                s.comp
+                    .iter()
+                    .chain(&s.comm)
+                    .any(|o| pred(&o.op))
+                    .then_some(i)
+            })
+        };
+        let blocks: std::collections::BTreeSet<usize> = self
+            .stages
+            .iter()
+            .flat_map(|s| s.comp.iter().chain(&s.comm))
+            .map(|o| o.op.block())
+            .collect();
+        for &b in &blocks {
+            let fec = pos(&|o: &Op| matches!(o, Op::Fec { block } if *block == b));
+            let trans_last = self
+                .stages
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| {
+                    s.comm
+                        .iter()
+                        .any(|o| matches!(o.op, Op::Trans { block, .. } if block == b))
+                })
+                .map(|(i, _)| i)
+                .max();
+            if let (Some(f), Some(t)) = (fec, trans_last) {
+                if t > f {
+                    return Err(format!(
+                        "block {b}: Trans finishes at stage {t} after its FEC at {f}"
+                    ));
+                }
+            }
+            // Bec must come after Fec.
+            let bec = pos(&|o: &Op| matches!(o, Op::Bec { block } if *block == b));
+            if let (Some(f), Some(bk)) = (fec, bec) {
+                if bk < f {
+                    return Err(format!("block {b}: BEC at {bk} before FEC at {f}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst(op: Op, dur: f64) -> OpInstance {
+        OpInstance::new(op, dur)
+    }
+
+    #[test]
+    fn stream_tagging_matches_paper() {
+        assert_eq!(Op::Plan { block: 0 }.stream(), Stream::Comp);
+        assert_eq!(Op::Trans { block: 0, part: 0 }.stream(), Stream::Comm);
+        assert_eq!(Op::Agg { block: 0, part: 1 }.stream(), Stream::Comm);
+        assert_eq!(
+            Op::A2a { block: 0, phase: A2aPhase::FwdDispatch }.stream(),
+            Stream::Comm
+        );
+        assert_eq!(Op::Fec { block: 0 }.stream(), Stream::Comp);
+    }
+
+    #[test]
+    fn stage_time_is_max_of_streams() {
+        let s = Stage::pair(
+            vec![inst(Op::Fec { block: 0 }, 3.0)],
+            vec![inst(Op::Trans { block: 1, part: 0 }, 2.0)],
+        );
+        assert_eq!(s.time(), 3.0);
+        assert_eq!(s.comp_time(), 3.0);
+        assert_eq!(s.comm_time(), 2.0);
+    }
+
+    #[test]
+    fn schedule_total_sums_stages() {
+        let sched = Schedule {
+            stages: vec![
+                Stage::comm_only(vec![inst(
+                    Op::A2a { block: 0, phase: A2aPhase::FwdDispatch },
+                    1.0,
+                )]),
+                Stage::comp_only(vec![inst(Op::Fec { block: 0 }, 2.0)]),
+            ],
+        };
+        assert_eq!(sched.total_time(), 3.0);
+    }
+
+    #[test]
+    fn hidden_comm_not_in_breakdown() {
+        let sched = Schedule {
+            stages: vec![Stage::pair(
+                vec![inst(Op::Fec { block: 0 }, 5.0)],
+                vec![inst(Op::Trans { block: 1, part: 0 }, 2.0)],
+            )],
+        };
+        let bd = sched.exposed_breakdown();
+        assert_eq!(bd.get("place"), None, "hidden Trans must not be charged");
+        assert_eq!(bd.get("expert_comp"), Some(&5.0));
+        assert_eq!(sched.lb_fraction(), 0.0);
+    }
+
+    #[test]
+    fn exposed_comm_charged_when_dominant() {
+        let sched = Schedule {
+            stages: vec![Stage::pair(
+                vec![inst(Op::Fec { block: 0 }, 1.0)],
+                vec![inst(Op::Trans { block: 1, part: 0 }, 4.0)],
+            )],
+        };
+        let bd = sched.exposed_breakdown();
+        assert_eq!(bd.get("place"), Some(&4.0));
+        assert!((sched.lb_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dependency_validation_catches_late_trans() {
+        let bad = Schedule {
+            stages: vec![
+                Stage::comp_only(vec![inst(Op::Fec { block: 0 }, 1.0)]),
+                Stage::comm_only(vec![inst(Op::Trans { block: 0, part: 0 }, 1.0)]),
+            ],
+        };
+        assert!(bad.validate_dependencies().is_err());
+        let good = Schedule {
+            stages: vec![
+                Stage::comm_only(vec![inst(Op::Trans { block: 0, part: 0 }, 1.0)]),
+                Stage::comp_only(vec![inst(Op::Fec { block: 0 }, 1.0)]),
+            ],
+        };
+        assert!(good.validate_dependencies().is_ok());
+    }
+}

@@ -1,0 +1,464 @@
+//! Training simulation: policies (Pro-Prophet and the baselines) executed
+//! over workload traces on the discrete-event engine.
+//!
+//! This is the harness behind every paper table and figure: it prices one
+//! training iteration of a (model, cluster, policy) triple and aggregates
+//! per-iteration, per-layer, and breakdown statistics.
+
+pub mod engine;
+pub mod timeline;
+
+pub use engine::Engine;
+
+use crate::cluster::ClusterSpec;
+use crate::config::ModelSpec;
+use crate::metrics::balance_degree;
+use crate::moe::{LoadMatrix, Placement};
+use crate::perfmodel::PerfModel;
+use crate::planner::{greedy_search, policies, Planner, PlannerConfig};
+use crate::scheduler::{build_blocking, build_blockwise, BlockCosts, LoadBalanceOps};
+use crate::workload::Trace;
+use std::collections::BTreeMap;
+
+/// Pro-Prophet feature switches (the Fig 14 ablation axes).
+#[derive(Clone, Debug)]
+pub struct ProphetOptions {
+    pub planner: PlannerConfig,
+    /// Block-wise overlap scheduling (§V) on/off.
+    pub scheduler_on: bool,
+}
+
+impl Default for ProphetOptions {
+    fn default() -> Self {
+        ProphetOptions { planner: PlannerConfig::default(), scheduler_on: true }
+    }
+}
+
+impl ProphetOptions {
+    /// Planner only (scheduler ablated): Eq 6 evaluation, blocking timeline.
+    pub fn planner_only() -> Self {
+        ProphetOptions {
+            planner: PlannerConfig { use_overlap_model: false, ..Default::default() },
+            scheduler_on: false,
+        }
+    }
+
+    /// Scheduler on, but the planner evaluates with the blocking Eq 6
+    /// (i.e. without the §V-C combination).
+    pub fn without_combination() -> Self {
+        ProphetOptions {
+            planner: PlannerConfig { use_overlap_model: false, ..Default::default() },
+            scheduler_on: true,
+        }
+    }
+
+    /// Full system: block-wise scheduler + Eq 8-aware planner.
+    pub fn full() -> Self {
+        ProphetOptions::default()
+    }
+}
+
+/// A load-balancing policy under simulation.
+#[derive(Clone, Debug)]
+pub enum Policy {
+    /// Deepspeed-MoE: pure EP, no load balancing.
+    DeepspeedMoe,
+    /// FasterMoE: dynamic shadowing to ALL devices, blocking timeline.
+    FasterMoe,
+    /// Replicate the k heaviest experts to all devices (Fig 15 top2/top3).
+    TopK(usize),
+    /// Pro-Prophet (planner + optional scheduler).
+    ProProphet(ProphetOptions),
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::DeepspeedMoe => "Deepspeed-MoE".into(),
+            Policy::FasterMoe => "FasterMoE".into(),
+            Policy::TopK(k) => format!("top{k}"),
+            Policy::ProProphet(o) => {
+                if o.scheduler_on && o.planner.use_overlap_model {
+                    "Pro-Prophet".into()
+                } else if o.scheduler_on {
+                    "Pro-Prophet(no-comb)".into()
+                } else {
+                    "Pro-Prophet(planner)".into()
+                }
+            }
+        }
+    }
+}
+
+/// Aggregates of one simulated iteration.
+#[derive(Clone, Debug)]
+pub struct IterationResult {
+    pub time: f64,
+    /// Exposed seconds per breakdown category (search/place/reduce/...).
+    pub breakdown: BTreeMap<&'static str, f64>,
+    /// Per-MoE-block exposed time (sums to `time`).
+    pub per_block_time: Vec<f64>,
+    /// Balance degree (std of per-device computed load) before and after
+    /// placement, averaged over layers.
+    pub balance_before: f64,
+    pub balance_after: f64,
+    /// Parameter copies moved by Trans this iteration (comm volume proxy).
+    pub trans_copies: u64,
+}
+
+/// Whole-run aggregates.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    pub policy: String,
+    pub iters: Vec<IterationResult>,
+}
+
+impl SimReport {
+    pub fn total_time(&self) -> f64 {
+        self.iters.iter().map(|i| i.time).sum()
+    }
+
+    pub fn avg_iter_time(&self) -> f64 {
+        if self.iters.is_empty() {
+            0.0
+        } else {
+            self.total_time() / self.iters.len() as f64
+        }
+    }
+
+    pub fn iter_times(&self) -> Vec<f64> {
+        self.iters.iter().map(|i| i.time).collect()
+    }
+
+    /// Mean exposed load-balancing fraction (Table I's "L.B." column).
+    pub fn lb_fraction(&self) -> f64 {
+        let total = self.total_time();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let lb: f64 = self
+            .iters
+            .iter()
+            .map(|i| {
+                i.breakdown.get("search").unwrap_or(&0.0)
+                    + i.breakdown.get("place").unwrap_or(&0.0)
+                    + i.breakdown.get("reduce").unwrap_or(&0.0)
+            })
+            .sum();
+        lb / total
+    }
+
+    pub fn breakdown_fraction(&self, key: &str) -> f64 {
+        let total = self.total_time();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let v: f64 = self
+            .iters
+            .iter()
+            .map(|i| i.breakdown.get(key).copied().unwrap_or(0.0))
+            .sum();
+        v / total
+    }
+
+    /// Mean RB: balance-degree ratio before/after placement (Fig 16).
+    pub fn mean_rb(&self) -> f64 {
+        let ratios: Vec<f64> = self
+            .iters
+            .iter()
+            .filter(|i| i.balance_after > 1e-9)
+            .map(|i| i.balance_before / i.balance_after)
+            .collect();
+        if ratios.is_empty() {
+            1.0
+        } else {
+            ratios.iter().sum::<f64>() / ratios.len() as f64
+        }
+    }
+
+    pub fn mean_per_block_time(&self) -> Vec<f64> {
+        if self.iters.is_empty() {
+            return vec![];
+        }
+        let blocks = self.iters[0].per_block_time.len();
+        let mut acc = vec![0.0; blocks];
+        for it in &self.iters {
+            for (a, t) in acc.iter_mut().zip(&it.per_block_time) {
+                *a += t;
+            }
+        }
+        for a in &mut acc {
+            *a /= self.iters.len() as f64;
+        }
+        acc
+    }
+}
+
+/// Simulate `trace` under `policy`.  Placement decisions for iteration i
+/// use iteration i-1's distributions (the paper's locality-based
+/// prediction); iteration 0 plans on its own distribution.
+pub fn simulate(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    trace: &Trace,
+    policy: &Policy,
+) -> SimReport {
+    let pm = PerfModel::new(model, cluster);
+    let eng = Engine::new(cluster, &pm);
+    let n_layers = trace.n_layers;
+
+    // Per-layer planner state for Pro-Prophet.
+    let mut planners: Vec<Planner> = match policy {
+        Policy::ProProphet(o) => (0..n_layers).map(|_| Planner::new(o.planner.clone())).collect(),
+        _ => vec![],
+    };
+
+    let mut report = SimReport { policy: policy.name(), iters: vec![] };
+
+    for (it, layers) in trace.iterations.iter().enumerate() {
+        let mut costs: Vec<BlockCosts> = Vec::with_capacity(n_layers);
+        let mut bal_before = 0.0;
+        let mut bal_after = 0.0;
+        let mut trans_copies = 0u64;
+
+        for (l, w) in layers.iter().enumerate() {
+            // Locality: plan from the previous iteration's observation.
+            let w_plan: &LoadMatrix = if it > 0 { &trace.iterations[it - 1][l] } else { w };
+
+            let (placement, plan_cost) = match policy {
+                Policy::DeepspeedMoe => {
+                    (Placement::identity(w.n_experts(), w.n_devices()), 0.0)
+                }
+                Policy::FasterMoe => {
+                    // FasterMoE decides on the CURRENT iteration's gating
+                    // (it has no locality prediction) and pays its search
+                    // every iteration.
+                    (policies::fastermoe_shadowing(w, &pm), pm.t_plan)
+                }
+                Policy::TopK(k) => {
+                    // topk() on the load vector: negligible decision cost.
+                    (policies::top_k_to_all(w, *k), 0.0)
+                }
+                Policy::ProProphet(_) => {
+                    let planner = &mut planners[l];
+                    let before = planner.plans_run;
+                    let p = planner.plan(w_plan, &pm);
+                    let cost = if planner.plans_run > before { pm.t_plan } else { 0.0 };
+                    (p, cost)
+                }
+            };
+
+            let routed_before = w.route_identity();
+            let routed_after = w.route(&placement);
+            bal_before += balance_degree(&routed_before.h);
+            bal_after += balance_degree(&routed_after.h);
+            trans_copies += placement.transfer_copies();
+
+            let unicast = matches!(policy, Policy::FasterMoe | Policy::TopK(_));
+            costs.push(eng.block_costs_styled(w, &placement, plan_cost, unicast));
+        }
+        bal_before /= n_layers as f64;
+        bal_after /= n_layers as f64;
+
+        let schedule = match policy {
+            Policy::DeepspeedMoe => build_blocking(&costs, LoadBalanceOps::None),
+            Policy::FasterMoe | Policy::TopK(_) => {
+                build_blocking(&costs, LoadBalanceOps::Blocking)
+            }
+            Policy::ProProphet(o) => {
+                if o.scheduler_on {
+                    build_blockwise(&costs)
+                } else {
+                    build_blocking(&costs, LoadBalanceOps::Blocking)
+                }
+            }
+        };
+        debug_assert!(schedule.validate_dependencies().is_ok());
+
+        // Per-block exposed time: assign each stage to the block of its
+        // first op.
+        let mut per_block = vec![0.0; n_layers];
+        for stage in &schedule.stages {
+            if let Some(op) = stage.comp.first().or(stage.comm.first()) {
+                let b = op.op.block().min(n_layers - 1);
+                per_block[b] += stage.time();
+            }
+        }
+
+        report.iters.push(IterationResult {
+            time: schedule.total_time(),
+            breakdown: schedule.exposed_breakdown(),
+            per_block_time: per_block,
+            balance_before: bal_before,
+            balance_after: bal_after,
+            trans_copies,
+        });
+    }
+    report
+}
+
+/// Convenience: simulate a single layer's load matrix once under a given
+/// placement strategy, returning (identity placement time, policy time).
+pub fn single_layer_times(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    w: &LoadMatrix,
+    policy: &Policy,
+) -> (f64, f64) {
+    let pm = PerfModel::new(model, cluster);
+    let eng = Engine::new(cluster, &pm);
+    let ident = Placement::identity(w.n_experts(), w.n_devices());
+    let t_ident = {
+        let costs = [eng.block_costs(w, &ident, 0.0)];
+        build_blocking(&costs, LoadBalanceOps::None).total_time()
+    };
+    let (placement, overlap) = match policy {
+        Policy::DeepspeedMoe => (ident.clone(), false),
+        Policy::FasterMoe => (policies::fastermoe_shadowing(w, &pm), false),
+        Policy::TopK(k) => (policies::top_k_to_all(w, *k), false),
+        Policy::ProProphet(o) => (
+            greedy_search(w, &pm, &o.planner).placement,
+            o.scheduler_on,
+        ),
+    };
+    let unicast = matches!(policy, Policy::FasterMoe | Policy::TopK(_));
+    let costs = [eng.block_costs_styled(w, &placement, 0.0, unicast)];
+    let t_policy = if overlap {
+        build_blockwise(&costs).total_time()
+    } else {
+        build_blocking(&costs, LoadBalanceOps::Blocking).total_time()
+    };
+    (t_ident, t_policy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Trace, WorkloadConfig, WorkloadGen};
+
+    fn setup() -> (ModelSpec, ClusterSpec, Trace) {
+        let model = ModelSpec::moe_gpt_s(8, 1, 8192);
+        let cluster = ClusterSpec::hpwnv(2);
+        let mut gen = WorkloadGen::new(WorkloadConfig::paper_default(4, 8, 8, 8192));
+        let trace = Trace::capture(&mut gen, 6);
+        (model, cluster, trace)
+    }
+
+    #[test]
+    fn deepspeed_has_zero_lb_overhead() {
+        let (m, c, t) = setup();
+        let r = simulate(&m, &c, &t, &Policy::DeepspeedMoe);
+        assert_eq!(r.lb_fraction(), 0.0);
+        assert!(r.avg_iter_time() > 0.0);
+        assert_eq!(r.iters.len(), 6);
+    }
+
+    #[test]
+    fn fastermoe_beats_deepspeed_on_skewed_load() {
+        let (m, c, t) = setup();
+        let ds = simulate(&m, &c, &t, &Policy::DeepspeedMoe);
+        let fm = simulate(&m, &c, &t, &Policy::FasterMoe);
+        assert!(
+            fm.avg_iter_time() < ds.avg_iter_time(),
+            "FasterMoE {:.4} !< Deepspeed {:.4}",
+            fm.avg_iter_time(),
+            ds.avg_iter_time()
+        );
+        assert!(fm.lb_fraction() > 0.0, "FasterMoE pays LB overhead");
+    }
+
+    #[test]
+    fn pro_prophet_beats_fastermoe() {
+        let (m, c, t) = setup();
+        let fm = simulate(&m, &c, &t, &Policy::FasterMoe);
+        let pp = simulate(&m, &c, &t, &Policy::ProProphet(ProphetOptions::full()));
+        assert!(
+            pp.avg_iter_time() < fm.avg_iter_time(),
+            "Pro-Prophet {:.4} !< FasterMoE {:.4}",
+            pp.avg_iter_time(),
+            fm.avg_iter_time()
+        );
+    }
+
+    #[test]
+    fn scheduler_ablation_ordering() {
+        // full <= planner-only <= deepspeed (on skewed workloads).
+        let (m, c, t) = setup();
+        let full = simulate(&m, &c, &t, &Policy::ProProphet(ProphetOptions::full()));
+        let planner_only =
+            simulate(&m, &c, &t, &Policy::ProProphet(ProphetOptions::planner_only()));
+        let ds = simulate(&m, &c, &t, &Policy::DeepspeedMoe);
+        assert!(full.avg_iter_time() <= planner_only.avg_iter_time() + 1e-12);
+        assert!(planner_only.avg_iter_time() < ds.avg_iter_time());
+    }
+
+    #[test]
+    fn balance_improves_under_planner() {
+        let (m, c, t) = setup();
+        let pp = simulate(&m, &c, &t, &Policy::ProProphet(ProphetOptions::full()));
+        assert!(pp.mean_rb() > 1.5, "RB {}", pp.mean_rb());
+        for it in &pp.iters {
+            assert!(it.balance_after <= it.balance_before + 1e-9);
+        }
+    }
+
+    #[test]
+    fn prophet_placements_are_lightweight_per_expert() {
+        // §IV-A: a lightweight placement ships each selected expert to a
+        // SUBSET of devices, vs FasterMoE's full broadcast (D-1 receivers per
+        // shadowed expert).  Compare receivers per selected expert.
+        let (m, c, t) = setup();
+        let pm = crate::perfmodel::PerfModel::new(&m, &c);
+        let w = &t.iterations[2][0];
+        let pp = crate::planner::greedy_search(
+            w,
+            &pm,
+            &crate::planner::PlannerConfig::default(),
+        )
+        .placement;
+        let d = w.n_devices();
+        for &e in &pp.transferred_experts() {
+            assert!(
+                pp.replicas(e).len() < d,
+                "prophet replicated expert {e} to every device"
+            );
+        }
+        let fm = crate::planner::policies::fastermoe_shadowing(w, &pm);
+        for &e in &fm.transferred_experts() {
+            assert_eq!(fm.replicas(e).len(), d, "FasterMoE always broadcasts");
+        }
+        // And despite moving each expert to fewer devices, the prophet's
+        // balance is at least as good.
+        let bal = |p: &Placement| balance_degree(&w.route(p).h);
+        assert!(bal(&pp) <= bal(&fm) * 1.5 + 1.0);
+    }
+
+    #[test]
+    fn per_block_times_sum_to_iteration() {
+        let (m, c, t) = setup();
+        let r = simulate(&m, &c, &t, &Policy::ProProphet(ProphetOptions::full()));
+        for it in &r.iters {
+            let sum: f64 = it.per_block_time.iter().sum();
+            assert!((sum - it.time).abs() < 1e-9 * it.time.max(1.0));
+        }
+    }
+
+    #[test]
+    fn topk_policies_run() {
+        let (m, c, t) = setup();
+        for k in [2, 3] {
+            let r = simulate(&m, &c, &t, &Policy::TopK(k));
+            assert!(r.avg_iter_time() > 0.0);
+            assert_eq!(r.policy, format!("top{k}"));
+        }
+    }
+
+    #[test]
+    fn single_layer_policy_times() {
+        let (m, c, t) = setup();
+        let w = &t.iterations[0][0];
+        let (ident, pp) =
+            single_layer_times(&m, &c, w, &Policy::ProProphet(ProphetOptions::full()));
+        assert!(pp < ident, "single layer: prophet {pp} !< identity {ident}");
+    }
+}

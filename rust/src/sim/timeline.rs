@@ -1,0 +1,134 @@
+//! Timeline export: convert a [`Schedule`] into Chrome-trace JSON
+//! (chrome://tracing / Perfetto) so an iteration's comm/comp overlap can
+//! be inspected visually — the repo's equivalent of the paper's Fig 7/8
+//! timelines.
+
+use crate::scheduler::{Schedule, Stream};
+use crate::util::json::{self, Json};
+
+/// One placed event on the two-stream timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimelineEvent {
+    pub name: String,
+    pub stream: Stream,
+    pub start: f64,
+    pub dur: f64,
+}
+
+/// Lay the schedule out on absolute time: stages run back to back, ops
+/// within one stage serialize per stream starting at the stage boundary.
+pub fn layout(schedule: &Schedule) -> Vec<TimelineEvent> {
+    let mut events = Vec::new();
+    let mut t = 0.0;
+    for stage in &schedule.stages {
+        let mut tc = t;
+        for op in &stage.comp {
+            events.push(TimelineEvent {
+                name: format!("{:?}", op.op),
+                stream: Stream::Comp,
+                start: tc,
+                dur: op.dur,
+            });
+            tc += op.dur;
+        }
+        let mut tm = t;
+        for op in &stage.comm {
+            events.push(TimelineEvent {
+                name: format!("{:?}", op.op),
+                stream: Stream::Comm,
+                start: tm,
+                dur: op.dur,
+            });
+            tm += op.dur;
+        }
+        t += stage.time();
+    }
+    events
+}
+
+/// Chrome-trace JSON ("traceEvents" array of X events, µs timebase).
+pub fn to_chrome_trace(schedule: &Schedule) -> Json {
+    let events: Vec<Json> = layout(schedule)
+        .into_iter()
+        .map(|e| {
+            json::obj(vec![
+                ("name", json::s(&e.name)),
+                ("ph", json::s("X")),
+                ("ts", json::num(e.start * 1e6)),
+                ("dur", json::num((e.dur * 1e6).max(0.01))),
+                ("pid", json::num(1.0)),
+                (
+                    "tid",
+                    json::num(match e.stream {
+                        Stream::Comp => 1.0,
+                        Stream::Comm => 2.0,
+                    }),
+                ),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+}
+
+/// Write the trace next to other results.
+pub fn save_chrome_trace(schedule: &Schedule, name: &str) -> std::io::Result<std::path::PathBuf> {
+    crate::metrics::write_result(name, &to_chrome_trace(schedule))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{Op, OpInstance, Stage};
+
+    fn sched() -> Schedule {
+        Schedule {
+            stages: vec![
+                Stage::pair(
+                    vec![OpInstance::new(Op::Fec { block: 0 }, 2.0)],
+                    vec![OpInstance::new(Op::Trans { block: 1, part: 0 }, 1.0)],
+                ),
+                Stage::comm_only(vec![OpInstance::new(
+                    Op::A2a { block: 0, phase: crate::scheduler::A2aPhase::FwdCombine },
+                    0.5,
+                )]),
+            ],
+        }
+    }
+
+    #[test]
+    fn layout_places_streams_in_parallel() {
+        let evs = layout(&sched());
+        assert_eq!(evs.len(), 3);
+        // FEC and Trans start together.
+        assert_eq!(evs[0].start, 0.0);
+        assert_eq!(evs[1].start, 0.0);
+        assert_eq!(evs[0].stream, Stream::Comp);
+        assert_eq!(evs[1].stream, Stream::Comm);
+        // A2A starts after the stage barrier at max(2.0, 1.0).
+        assert_eq!(evs[2].start, 2.0);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let j = to_chrome_trace(&sched());
+        let text = j.to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+    }
+
+    #[test]
+    fn layout_total_matches_schedule() {
+        let s = sched();
+        let evs = layout(&s);
+        let end = evs
+            .iter()
+            .map(|e| e.start + e.dur)
+            .fold(0.0f64, f64::max);
+        assert!((end - s.total_time()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,276 @@
+//! End-to-end trainer: drives the AOT'd `train_step` artifact from rust.
+//!
+//! One step = build a token batch from the synthetic corpus, execute the
+//! fused fwd+bwd+Adam HLO, carry the (params, m, v) literals to the next
+//! step, and harvest the loss plus the per-layer expert-load histograms —
+//! the real "input distributions" that feed the Pro-Prophet planner and
+//! the cluster simulator (see examples/train_moe.rs).
+
+use crate::config::TrainingConfig;
+use crate::moe::LoadMatrix;
+use crate::runtime::{self, Artifact, Manifest, Runtime};
+use crate::util::json::{self, Json};
+use crate::workload::corpus::Corpus;
+use crate::workload::Trace;
+use anyhow::{anyhow, Result};
+
+/// Result of one training step.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    pub step: usize,
+    pub loss: f32,
+    /// Per-layer expert load histograms (n_layers x n_experts).
+    pub loads: Vec<Vec<u64>>,
+    pub seconds: f64,
+}
+
+/// Whole-run record.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub preset: String,
+    pub losses: Vec<f32>,
+    pub step_seconds: Vec<f64>,
+    /// loads[step][layer][expert].
+    pub loads: Vec<Vec<Vec<u64>>>,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(f32::NAN)
+    }
+
+    pub fn initial_loss(&self) -> f32 {
+        self.losses.first().copied().unwrap_or(f32::NAN)
+    }
+
+    /// Mean over a trailing window (loss curves are noisy per-batch).
+    pub fn mean_loss_tail(&self, window: usize) -> f32 {
+        let n = self.losses.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let w = window.min(n);
+        self.losses[n - w..].iter().sum::<f32>() / w as f32
+    }
+
+    pub fn mean_step_seconds(&self) -> f64 {
+        if self.step_seconds.is_empty() {
+            return 0.0;
+        }
+        self.step_seconds.iter().sum::<f64>() / self.step_seconds.len() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("preset", json::s(&self.preset)),
+            ("steps", json::num(self.losses.len() as f64)),
+            (
+                "losses",
+                json::num_arr(&self.losses.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+            ),
+            ("step_seconds", json::num_arr(&self.step_seconds)),
+            ("mean_step_seconds", json::num(self.mean_step_seconds())),
+        ])
+    }
+
+    /// Convert observed per-layer loads into a simulator trace, spreading
+    /// each layer's histogram over `n_devices` virtual DP shards (shards
+    /// see near-identical data — exactly the DP assumption of EP).
+    pub fn to_trace(&self, n_devices: usize) -> Trace {
+        let n_layers = self.loads.first().map_or(0, Vec::len);
+        let n_experts = self
+            .loads
+            .first()
+            .and_then(|l| l.first())
+            .map_or(0, Vec::len);
+        let mut trace = Trace::new(n_layers, n_devices, n_experts);
+        for step_loads in &self.loads {
+            let layers: Vec<LoadMatrix> = step_loads
+                .iter()
+                .map(|hist| spread_histogram(hist, n_devices))
+                .collect();
+            trace.push(layers);
+        }
+        trace
+    }
+}
+
+/// Spread an aggregate expert histogram over n devices (even split with
+/// the remainder round-robined, preserving the total).
+pub fn spread_histogram(hist: &[u64], n_devices: usize) -> LoadMatrix {
+    let mut w = LoadMatrix::zeros(n_devices, hist.len());
+    for (e, &count) in hist.iter().enumerate() {
+        let base = count / n_devices as u64;
+        let rem = (count % n_devices as u64) as usize;
+        for d in 0..n_devices {
+            w.set(d, e, base + u64::from(d < rem));
+        }
+    }
+    w
+}
+
+/// The trainer itself.
+pub struct Trainer {
+    pub manifest: Manifest,
+    pub cfg: TrainingConfig,
+    train_step: Artifact,
+    /// Flat (params, m, v) literals carried across steps.
+    state: Vec<xla::Literal>,
+    corpus: Corpus,
+    step: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainingConfig) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let dir = if cfg.artifacts_dir == "artifacts" {
+            runtime::artifacts_dir()
+        } else {
+            std::path::PathBuf::from(&cfg.artifacts_dir)
+        };
+        let manifest = Manifest::load(&dir, &cfg.preset)?;
+        let init = rt.load_tagged(&manifest, "init")?;
+        let state = init.run(&[runtime::i32_scalar(cfg.seed as i32)])?;
+        if state.len() != 3 * manifest.num_tensors {
+            return Err(anyhow!(
+                "init returned {} tensors, expected {}",
+                state.len(),
+                3 * manifest.num_tensors
+            ));
+        }
+        let train_step = rt.load_tagged(&manifest, "train_step")?;
+        let corpus = Corpus::new(manifest.vocab, 4, cfg.seed);
+        Ok(Trainer { manifest, cfg, train_step, state, corpus, step: 0 })
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    /// Execute one fused train step.
+    pub fn step(&mut self) -> Result<StepResult> {
+        let man = &self.manifest;
+        let start = std::time::Instant::now();
+        self.step += 1;
+
+        let tokens = self.corpus.batch(man.batch, man.seq_len);
+        let tokens_lit = runtime::i32_literal(&tokens, &[man.batch, man.seq_len])?;
+        let step_lit = runtime::f32_scalar(self.step as f32);
+
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.push(&step_lit);
+        inputs.push(&tokens_lit);
+
+        let mut outputs = self.train_step.run(&inputs)?;
+        let n = man.num_tensors;
+        if outputs.len() != 3 * n + 2 {
+            return Err(anyhow!(
+                "train_step returned {} outputs, expected {}",
+                outputs.len(),
+                3 * n + 2
+            ));
+        }
+        let loads_lit = outputs.pop().unwrap();
+        let loss_lit = outputs.pop().unwrap();
+        self.state = outputs;
+
+        let loss = runtime::scalar_f32(&loss_lit)?;
+        let flat = runtime::to_f32_vec(&loads_lit)?;
+        if flat.len() != man.n_layers * man.n_experts {
+            return Err(anyhow!("bad loads shape: {}", flat.len()));
+        }
+        let loads: Vec<Vec<u64>> = (0..man.n_layers)
+            .map(|l| {
+                flat[l * man.n_experts..(l + 1) * man.n_experts]
+                    .iter()
+                    .map(|&x| x.round().max(0.0) as u64)
+                    .collect()
+            })
+            .collect();
+
+        Ok(StepResult {
+            step: self.step,
+            loss,
+            loads,
+            seconds: start.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run `steps` steps, invoking `on_step` after each (for logging).
+    pub fn run<F: FnMut(&StepResult)>(
+        &mut self,
+        steps: usize,
+        mut on_step: F,
+    ) -> Result<TrainReport> {
+        let mut report = TrainReport {
+            preset: self.cfg.preset.clone(),
+            ..Default::default()
+        };
+        for _ in 0..steps {
+            let r = self.step()?;
+            on_step(&r);
+            report.losses.push(r.loss);
+            report.step_seconds.push(r.seconds);
+            report.loads.push(r.loads);
+        }
+        Ok(report)
+    }
+
+    /// Evaluate (forward-only) on a fresh batch, without touching state.
+    pub fn eval(&mut self) -> Result<f32> {
+        let rt = Runtime::cpu()?;
+        let eval = rt.load_tagged(&self.manifest, "eval_step")?;
+        let man = &self.manifest;
+        let tokens = self.corpus.batch(man.batch, man.seq_len);
+        let tokens_lit = runtime::i32_literal(&tokens, &[man.batch, man.seq_len])?;
+        let mut inputs: Vec<&xla::Literal> =
+            self.state[..man.num_tensors].iter().collect();
+        inputs.push(&tokens_lit);
+        let out = eval.run(&inputs)?;
+        runtime::scalar_f32(&out[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spread_preserves_totals() {
+        let w = spread_histogram(&[10, 3, 0, 7], 4);
+        assert_eq!(w.distribution(), vec![10, 3, 0, 7]);
+        assert_eq!(w.total_tokens(), 20);
+        // Even-ish split.
+        assert_eq!(w.get(0, 0), 3);
+        assert_eq!(w.get(3, 0), 2);
+    }
+
+    #[test]
+    fn report_stats() {
+        let r = TrainReport {
+            preset: "t".into(),
+            losses: vec![4.0, 3.0, 2.0, 1.0],
+            step_seconds: vec![0.1, 0.2, 0.3, 0.4],
+            loads: vec![vec![vec![4, 0]]; 4],
+        };
+        assert_eq!(r.initial_loss(), 4.0);
+        assert_eq!(r.final_loss(), 1.0);
+        assert!((r.mean_loss_tail(2) - 1.5).abs() < 1e-6);
+        assert!((r.mean_step_seconds() - 0.25).abs() < 1e-12);
+        let trace = r.to_trace(2);
+        assert_eq!(trace.len(), 4);
+        assert_eq!(trace.iterations[0][0].distribution(), vec![4, 0]);
+    }
+
+    #[test]
+    fn report_json_parses() {
+        let r = TrainReport {
+            preset: "t".into(),
+            losses: vec![1.5],
+            step_seconds: vec![0.01],
+            loads: vec![],
+        };
+        let j = r.to_json().to_string();
+        assert!(crate::util::json::parse(&j).is_ok());
+    }
+}

@@ -1,0 +1,141 @@
+//! Fixed-capacity bitset used for device sets in expert placements.
+//!
+//! Device counts in the paper top out at 32; we support arbitrary sizes via
+//! a small Vec<u64> but keep the API minimal and allocation-light.
+
+/// A set of small unsigned integers (device ids).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitSet {
+    words: Vec<u64>,
+    capacity: usize,
+}
+
+impl BitSet {
+    pub fn new(capacity: usize) -> Self {
+        BitSet { words: vec![0; capacity.div_ceil(64)], capacity }
+    }
+
+    pub fn full(capacity: usize) -> Self {
+        let mut s = Self::new(capacity);
+        for i in 0..capacity {
+            s.insert(i);
+        }
+        s
+    }
+
+    pub fn singleton(capacity: usize, bit: usize) -> Self {
+        let mut s = Self::new(capacity);
+        s.insert(bit);
+        s
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    #[inline]
+    pub fn insert(&mut self, bit: usize) {
+        assert!(bit < self.capacity, "bit {bit} >= capacity {}", self.capacity);
+        self.words[bit / 64] |= 1u64 << (bit % 64);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, bit: usize) {
+        assert!(bit < self.capacity);
+        self.words[bit / 64] &= !(1u64 << (bit % 64));
+    }
+
+    #[inline]
+    pub fn contains(&self, bit: usize) -> bool {
+        bit < self.capacity && self.words[bit / 64] & (1u64 << (bit % 64)) != 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.capacity).filter(move |&i| self.contains(i))
+    }
+
+    pub fn union_with(&mut self, other: &BitSet) {
+        assert_eq!(self.capacity, other.capacity);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    pub fn intersect_with(&mut self, other: &BitSet) {
+        assert_eq!(self.capacity, other.capacity);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+}
+
+impl std::fmt::Debug for BitSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{{")?;
+        for (n, i) in self.iter().enumerate() {
+            if n > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{i}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut s = BitSet::new(100);
+        assert!(!s.contains(70));
+        s.insert(70);
+        assert!(s.contains(70));
+        assert_eq!(s.len(), 1);
+        s.remove(70);
+        assert!(!s.contains(70));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn full_and_singleton() {
+        assert_eq!(BitSet::full(33).len(), 33);
+        let s = BitSet::singleton(8, 3);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![3]);
+    }
+
+    #[test]
+    fn union_intersect() {
+        let mut a = BitSet::singleton(10, 1);
+        let b = BitSet::singleton(10, 2);
+        a.union_with(&b);
+        assert_eq!(a.len(), 2);
+        let mut c = a.clone();
+        c.intersect_with(&b);
+        assert_eq!(c.iter().collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_panics() {
+        BitSet::new(8).insert(8);
+    }
+
+    #[test]
+    fn iter_order_ascending() {
+        let mut s = BitSet::new(70);
+        for &b in &[65, 2, 40] {
+            s.insert(b);
+        }
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![2, 40, 65]);
+    }
+}

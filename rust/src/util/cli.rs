@@ -1,0 +1,149 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list. `known_flags` lists options that
+    /// take no value (anything else starting with `--` consumes one).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        iter: I,
+        known_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` = end of options.
+                    positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        return Err(format!("option --{body} is missing a value"));
+                    }
+                    opts.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    return Err(format!("option --{body} is missing a value"));
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Ok(Args { opts, flags, positional })
+    }
+
+    /// Parse std::env::args() (skipping argv[0]).
+    pub fn from_env(known_flags: &[&str]) -> Result<Args, String> {
+        Self::parse_from(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str], flags: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["--steps", "100", "--preset=e2e"], &[]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.str_or("preset", "tiny"), "e2e");
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["train", "--verbose", "--k", "2", "extra"], &["verbose"]);
+        assert_eq!(a.subcommand(), Some("train"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("k", 1), 2);
+        assert_eq!(a.positional(), &["train".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.f64_or("alpha", 0.1), 0.1);
+        assert!(!a.flag("missing"));
+        assert_eq!(a.subcommand(), None);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse_from(
+            ["--steps".to_string(), "--other".to_string()],
+            &[]
+        )
+        .is_err());
+        assert!(Args::parse_from(["--steps".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn double_dash_ends_options() {
+        let a = parse(&["--", "--not-an-option"], &[]);
+        assert_eq!(a.positional(), &["--not-an-option".to_string()]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn type_error_panics() {
+        parse(&["--steps", "abc"], &[]).usize_or("steps", 0);
+    }
+}

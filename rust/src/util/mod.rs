@@ -1,0 +1,10 @@
+//! Small self-contained substrates (no external crates are available
+//! offline, so PRNG, JSON, CLI parsing, bitsets, statistics and the
+//! property-testing harness are all built here).
+
+pub mod bitset;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,103 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! A `Cases` driver runs a property over many seeded-random inputs and, on
+//! failure, reports the seed so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! prop::Cases::new(200).run(|rng| {
+//!     let d = rng.below(30) + 2;
+//!     // ... build a random input, assert the invariant ...
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Number of cases is configurable via PROP_CASES (useful for soak runs).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+pub struct Cases {
+    n: usize,
+    base_seed: u64,
+}
+
+impl Cases {
+    pub fn new(n: usize) -> Self {
+        let base_seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Cases { n, base_seed }
+    }
+
+    pub fn default() -> Self {
+        Self::new(default_cases())
+    }
+
+    /// Run `property` across `n` deterministic random cases.  Panics (with
+    /// the case seed in the message) on the first failing case.
+    pub fn run<F: FnMut(&mut Rng)>(&self, mut property: F) {
+        for case in 0..self.n {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let mut rng = Rng::new(seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                property(&mut rng)
+            }));
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                panic!(
+                    "property failed on case {case} (replay with PROP_SEED={seed} PROP_CASES=1): {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// Helper: random vector of counts with a given total (token histogram).
+pub fn random_histogram(rng: &mut Rng, buckets: usize, total: u64, skew: f64) -> Vec<u64> {
+    let alpha: Vec<f64> = (0..buckets).map(|_| skew.max(1e-3)).collect();
+    let p = rng.dirichlet(&alpha);
+    rng.multinomial(total, &p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Cases::new(32).run(|rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    fn reports_failure_with_seed() {
+        let err = std::panic::catch_unwind(|| {
+            Cases::new(16).run(|rng| {
+                assert!(rng.below(10) != 3, "hit the forbidden value");
+            });
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("PROP_SEED="), "{msg}");
+    }
+
+    #[test]
+    fn histogram_total_conserved() {
+        Cases::new(32).run(|rng| {
+            let h = random_histogram(rng, 8, 1000, 0.3);
+            assert_eq!(h.iter().sum::<u64>(), 1000);
+            assert_eq!(h.len(), 8);
+        });
+    }
+}

@@ -1,0 +1,305 @@
+//! Deterministic PRNG: SplitMix64 seeding + xoshiro256** core.
+//!
+//! The `rand` crate is unavailable offline; this is the standard public
+//! domain generator pair (Blackman & Vigna), plus the distribution helpers
+//! the workload generator needs (uniform, normal, Dirichlet-ish gamma,
+//! multinomial, Zipf).
+
+/// xoshiro256** seeded via SplitMix64. Deterministic and portable.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 to fill the state (never all-zero).
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Derive an independent stream (for per-layer / per-device rngs).
+    pub fn split(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Rejection-free 128-bit multiply method (Lemire).
+        let m = (self.next_u64() as u128).wrapping_mul(n as u128);
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Marsaglia–Tsang gamma sampler, shape `a` > 0, scale 1.
+    pub fn gamma(&mut self, a: f64) -> f64 {
+        if a < 1.0 {
+            // Boost via Gamma(a) = Gamma(a+1) * U^(1/a).
+            let g = self.gamma(a + 1.0);
+            return g * self.f64().max(1e-300).powf(1.0 / a);
+        }
+        let d = a - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.max(1e-300).ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet sample with per-component concentrations.
+    pub fn dirichlet(&mut self, alpha: &[f64]) -> Vec<f64> {
+        let mut out: Vec<f64> = alpha.iter().map(|&a| self.gamma(a).max(1e-12)).collect();
+        let sum: f64 = out.iter().sum();
+        for v in &mut out {
+            *v /= sum;
+        }
+        out
+    }
+
+    /// Multinomial: distribute `n` trials over `probs` (must sum to ~1).
+    pub fn multinomial(&mut self, n: u64, probs: &[f64]) -> Vec<u64> {
+        let mut out = vec![0u64; probs.len()];
+        let mut remaining = n;
+        let mut rest: f64 = 1.0;
+        for (i, &p) in probs.iter().enumerate() {
+            if remaining == 0 {
+                break;
+            }
+            if i + 1 == probs.len() {
+                out[i] = remaining;
+                break;
+            }
+            let q = (p / rest).clamp(0.0, 1.0);
+            let draw = self.binomial(remaining, q);
+            out[i] = draw;
+            remaining -= draw;
+            rest = (rest - p).max(1e-12);
+        }
+        out
+    }
+
+    /// Binomial(n, p) — inversion for small n·p, normal approx for large.
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        if p <= 0.0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        let np = n as f64 * p;
+        if n < 64 || np < 16.0 || (n as f64 * (1.0 - p)) < 16.0 {
+            // Direct Bernoulli sum (n small enough).
+            let mut c = 0;
+            for _ in 0..n {
+                if self.f64() < p {
+                    c += 1;
+                }
+            }
+            c
+        } else {
+            // Normal approximation with continuity correction, clamped.
+            let sd = (np * (1.0 - p)).sqrt();
+            let x = (np + sd * self.normal() + 0.5).floor();
+            x.clamp(0.0, n as f64) as u64
+        }
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `s`.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // CDF inversion over precomputed-free harmonic approximation:
+        // fall back to linear scan (n is small everywhere we use this).
+        let h: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+        let mut u = self.f64() * h;
+        for k in 1..=n {
+            u -= (k as f64).powf(-s);
+            if u <= 0.0 {
+                return k - 1;
+            }
+        }
+        n - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(13);
+        for &a in &[0.3, 1.0, 4.5] {
+            let n = 20_000;
+            let m = (0..n).map(|_| r.gamma(a)).sum::<f64>() / n as f64;
+            assert!((m - a).abs() < 0.15 * a.max(0.3), "shape {a} mean {m}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(15);
+        let p = r.dirichlet(&[0.5, 1.0, 2.0, 4.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(p.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn multinomial_conserves_total() {
+        let mut r = Rng::new(17);
+        let probs = [0.1, 0.2, 0.3, 0.4];
+        for _ in 0..100 {
+            let c = r.multinomial(1000, &probs);
+            assert_eq!(c.iter().sum::<u64>(), 1000);
+        }
+    }
+
+    #[test]
+    fn multinomial_proportions() {
+        let mut r = Rng::new(19);
+        let probs = [0.7, 0.2, 0.1];
+        let c = r.multinomial(200_000, &probs);
+        for (ci, pi) in c.iter().zip(probs.iter()) {
+            let frac = *ci as f64 / 200_000.0;
+            assert!((frac - pi).abs() < 0.02, "{frac} vs {pi}");
+        }
+    }
+
+    #[test]
+    fn binomial_edge_cases() {
+        let mut r = Rng::new(21);
+        assert_eq!(r.binomial(10, 0.0), 0);
+        assert_eq!(r.binomial(10, 1.0), 10);
+        let x = r.binomial(1_000_000, 0.5);
+        assert!((x as f64 - 500_000.0).abs() < 5_000.0);
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_bounded() {
+        let mut r = Rng::new(23);
+        let mut counts = [0usize; 8];
+        for _ in 0..10_000 {
+            counts[r.zipf(8, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[7] * 3);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(25);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut root = Rng::new(31);
+        let mut a = root.split(1);
+        let mut b = root.split(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,140 @@
+//! Synthetic training corpus for the end-to-end trainer: a seeded Markov
+//! chain over the vocabulary with Zipf-distributed transitions.
+//!
+//! The chain gives the LM real structure to learn (unlike i.i.d. uniform
+//! tokens, whose loss floor is log V), so the e2e loss curve in
+//! EXPERIMENTS.md demonstrably decreases; and because next-token statistics
+//! are position-independent, different batches stress the same experts,
+//! producing the routing locality the paper relies on.
+
+use crate::util::rng::Rng;
+
+pub struct Corpus {
+    vocab: usize,
+    /// transitions[v] = list of (next_token, cum_prob) pairs.
+    transitions: Vec<Vec<(u32, f64)>>,
+    state: u32,
+    rng: Rng,
+}
+
+impl Corpus {
+    /// `branching`: candidate successors per token (smaller = more
+    /// predictable = faster-dropping loss).
+    pub fn new(vocab: usize, branching: usize, seed: u64) -> Self {
+        assert!(vocab >= 2);
+        let branching = branching.clamp(1, vocab);
+        let mut rng = Rng::new(seed);
+        let mut transitions = Vec::with_capacity(vocab);
+        for v in 0..vocab {
+            let mut tr = rng.split(v as u64 + 0x5EED);
+            // Zipf-weighted choice among `branching` random successors.
+            let mut succ: Vec<u32> = (0..branching)
+                .map(|_| tr.below(vocab) as u32)
+                .collect();
+            succ.dedup();
+            let h: f64 = (1..=succ.len()).map(|k| 1.0 / k as f64).sum();
+            let mut cum = 0.0;
+            let pairs: Vec<(u32, f64)> = succ
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| {
+                    cum += (1.0 / (i + 1) as f64) / h;
+                    (s, cum)
+                })
+                .collect();
+            transitions.push(pairs);
+        }
+        Corpus { vocab, transitions, state: 0, rng }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn next_token(&mut self) -> u32 {
+        let u = self.rng.f64();
+        let row = &self.transitions[self.state as usize];
+        let next = row
+            .iter()
+            .find(|&&(_, c)| u <= c)
+            .map(|&(t, _)| t)
+            .unwrap_or(row.last().map(|&(t, _)| t).unwrap_or(0));
+        self.state = next;
+        next
+    }
+
+    /// Sample a (batch, seq_len) token matrix, flattened row-major i32
+    /// (the dtype the train_step artifact expects).
+    pub fn batch(&mut self, batch: usize, seq_len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * seq_len);
+        for _ in 0..batch {
+            // Random restart per sequence to decorrelate rows.
+            self.state = self.rng.below(self.vocab) as u32;
+            for _ in 0..seq_len {
+                out.push(self.next_token() as i32);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let mut c = Corpus::new(64, 4, 1);
+        let b = c.batch(8, 32);
+        assert_eq!(b.len(), 256);
+        assert!(b.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Corpus::new(128, 4, 7).batch(2, 16);
+        let b = Corpus::new(128, 4, 7).batch(2, 16);
+        assert_eq!(a, b);
+        let c = Corpus::new(128, 4, 8).batch(2, 16);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn chain_is_predictable() {
+        // With branching 2 the bigram entropy is far below log2(V):
+        // successors must repeat.
+        let mut c = Corpus::new(256, 2, 3);
+        let toks = c.batch(1, 4096);
+        let mut bigrams = std::collections::HashSet::new();
+        for w in toks.windows(2) {
+            bigrams.insert((w[0], w[1]));
+        }
+        // Random tokens would give ~4095 distinct bigrams; a 2-branching
+        // chain over <=256 states gives at most ~512.
+        assert!(bigrams.len() < 600, "bigrams: {}", bigrams.len());
+    }
+
+    #[test]
+    fn zipf_biases_first_successor() {
+        let mut c = Corpus::new(32, 4, 5);
+        let toks = c.batch(1, 8192);
+        // The most common successor of each token should dominate.
+        let mut follow: std::collections::HashMap<i32, std::collections::HashMap<i32, usize>> =
+            Default::default();
+        for w in toks.windows(2) {
+            *follow.entry(w[0]).or_default().entry(w[1]).or_default() += 1;
+        }
+        let mut dominant = 0;
+        let mut total = 0;
+        for (_, succ) in follow {
+            let sum: usize = succ.values().sum();
+            if sum < 20 {
+                continue;
+            }
+            let max = succ.values().max().copied().unwrap_or(0);
+            dominant += max;
+            total += sum;
+        }
+        assert!(dominant as f64 / total as f64 > 0.4);
+    }
+}

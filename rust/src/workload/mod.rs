@@ -1,0 +1,270 @@
+//! Workload generation: synthetic gate-routing traces with the skew and
+//! iteration-to-iteration locality the paper profiles (Fig 3, Fig 4), plus
+//! trace record/replay and the synthetic token corpus for the end-to-end
+//! trainer.
+
+pub mod corpus;
+pub mod trace;
+
+pub use trace::Trace;
+
+use crate::moe::LoadMatrix;
+use crate::util::rng::Rng;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub n_devices: usize,
+    /// Tokens per iteration across the cluster (k-weighted routing slots:
+    /// pass tokens * k to model a top-k gate).
+    pub tokens_per_iter: u64,
+    /// Zipf exponent of the base expert popularity (1.2 reproduces the
+    /// paper's Fig 3: top-3 of 16 experts hold >50% of tokens).
+    pub zipf_s: f64,
+    /// Per-iteration drift of the popularity vector in [0, 1]:
+    /// 0 = frozen distribution, 1 = fully resampled each iteration.
+    /// 0.05 reproduces Fig 4's near-constant adjacent iterations.
+    pub drift: f64,
+    /// Device-level sampling noise (Dirichlet concentration multiplier;
+    /// larger = device shards look more alike).
+    pub device_concentration: f64,
+    pub seed: u64,
+}
+
+impl WorkloadConfig {
+    pub fn paper_default(n_layers: usize, n_experts: usize, n_devices: usize, tokens: u64) -> Self {
+        WorkloadConfig {
+            n_layers,
+            n_experts,
+            n_devices,
+            tokens_per_iter: tokens,
+            zipf_s: 1.2,
+            drift: 0.05,
+            device_concentration: 60.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Stateful generator: evolves a latent per-layer expert popularity vector
+/// and samples per-device load matrices from it.
+pub struct WorkloadGen {
+    cfg: WorkloadConfig,
+    rng: Rng,
+    /// Latent popularity per layer (simplex vectors).
+    popularity: Vec<Vec<f64>>,
+    iteration: usize,
+}
+
+impl WorkloadGen {
+    pub fn new(cfg: WorkloadConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let popularity = (0..cfg.n_layers)
+            .map(|l| {
+                let mut layer_rng = rng.split(l as u64 + 1);
+                base_popularity(&mut layer_rng, cfg.n_experts, cfg.zipf_s)
+            })
+            .collect();
+        WorkloadGen { cfg, rng, popularity, iteration: 0 }
+    }
+
+    pub fn cfg(&self) -> &WorkloadConfig {
+        &self.cfg
+    }
+
+    pub fn iteration(&self) -> usize {
+        self.iteration
+    }
+
+    /// Generate the next iteration: one LoadMatrix per MoE layer.
+    pub fn next_iteration(&mut self) -> Vec<LoadMatrix> {
+        let out = (0..self.cfg.n_layers)
+            .map(|l| self.sample_layer(l))
+            .collect();
+        self.evolve();
+        self.iteration += 1;
+        out
+    }
+
+    fn sample_layer(&mut self, layer: usize) -> LoadMatrix {
+        let cfg = &self.cfg;
+        let p = self.popularity[layer].clone();
+        let per_device = cfg.tokens_per_iter / cfg.n_devices as u64;
+        let conc = cfg.device_concentration;
+        let n_devices = cfg.n_devices;
+        let n_experts = cfg.n_experts;
+        let mut w = LoadMatrix::zeros(n_devices, n_experts);
+        for d in 0..n_devices {
+            // Device shard draws a jittered copy of the layer popularity
+            // (data parallel shards see similar but not identical data).
+            let alpha: Vec<f64> = p.iter().map(|&x| (x * conc).max(1e-3)).collect();
+            let device_p = self.rng.dirichlet(&alpha);
+            let counts = self.rng.multinomial(per_device, &device_p);
+            for (e, &c) in counts.iter().enumerate() {
+                w.set(d, e, c);
+            }
+        }
+        w
+    }
+
+    /// Random-walk the latent popularity (the paper's slowly varying
+    /// imbalance: heavy experts change identity over tens of iterations).
+    fn evolve(&mut self) {
+        let drift = self.cfg.drift;
+        if drift <= 0.0 {
+            return;
+        }
+        for l in 0..self.popularity.len() {
+            let fresh = {
+                let mut r = self.rng.split(0xD1F7 + l as u64);
+                base_popularity(&mut r, self.cfg.n_experts, self.cfg.zipf_s)
+            };
+            let p = &mut self.popularity[l];
+            let mut sum = 0.0;
+            for (pi, fi) in p.iter_mut().zip(&fresh) {
+                *pi = (1.0 - drift) * *pi + drift * fi;
+                sum += *pi;
+            }
+            for pi in p.iter_mut() {
+                *pi /= sum;
+            }
+        }
+    }
+}
+
+/// Zipf-shaped popularity with a random expert permutation (so the heavy
+/// experts differ per layer, as in the paper's Fig 3 heat map).
+fn base_popularity(rng: &mut Rng, n_experts: usize, zipf_s: f64) -> Vec<f64> {
+    let mut ranks: Vec<usize> = (0..n_experts).collect();
+    rng.shuffle(&mut ranks);
+    let h: f64 = (1..=n_experts).map(|k| (k as f64).powf(-zipf_s)).sum();
+    let mut p = vec![0.0; n_experts];
+    for (rank_pos, &e) in ranks.iter().enumerate() {
+        p[e] = ((rank_pos + 1) as f64).powf(-zipf_s) / h;
+    }
+    p
+}
+
+/// Share of tokens held by the `k` heaviest experts of a distribution.
+pub fn top_share(dist: &[u64], k: usize) -> f64 {
+    let total: u64 = dist.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut v: Vec<u64> = dist.to_vec();
+    v.sort_by_key(|&x| std::cmp::Reverse(x));
+    v.iter().take(k).sum::<u64>() as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::locality::similarity;
+
+    fn gen16() -> WorkloadGen {
+        WorkloadGen::new(WorkloadConfig::paper_default(12, 16, 16, 16384))
+    }
+
+    #[test]
+    fn token_conservation() {
+        let mut g = gen16();
+        let layers = g.next_iteration();
+        assert_eq!(layers.len(), 12);
+        for w in &layers {
+            assert_eq!(w.total_tokens(), 16384);
+            assert_eq!(w.n_devices(), 16);
+            assert_eq!(w.n_experts(), 16);
+        }
+    }
+
+    #[test]
+    fn fig3_skew_top3_over_half() {
+        // Paper Fig 3: in most layers the 3 heaviest experts hold >50%.
+        let mut g = gen16();
+        let layers = g.next_iteration();
+        let heavy_layers = layers
+            .iter()
+            .filter(|w| top_share(&w.distribution(), 3) > 0.5)
+            .count();
+        assert!(
+            heavy_layers >= 9,
+            "only {heavy_layers}/12 layers show the paper's skew"
+        );
+    }
+
+    #[test]
+    fn fig3_bottom3_under_5_percent() {
+        let mut g = gen16();
+        let layers = g.next_iteration();
+        for w in &layers {
+            let mut d = w.distribution();
+            d.sort();
+            let total: u64 = d.iter().sum();
+            let bottom3: u64 = d.iter().take(3).sum();
+            assert!(
+                (bottom3 as f64 / total as f64) < 0.08,
+                "bottom-3 share too large: {bottom3}/{total}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_locality_between_adjacent_iterations() {
+        let mut g = gen16();
+        let mut prev = g.next_iteration();
+        for _ in 0..5 {
+            let cur = g.next_iteration();
+            for (a, b) in prev.iter().zip(&cur) {
+                let sim = similarity(&a.distribution(), &b.distribution());
+                assert!(sim > 0.85, "adjacent-iteration similarity {sim} too low");
+            }
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn distribution_drifts_over_many_iterations() {
+        let mut cfg = WorkloadConfig::paper_default(1, 16, 16, 16384);
+        cfg.drift = 0.15;
+        let mut g = WorkloadGen::new(cfg);
+        let first = g.next_iteration()[0].distribution();
+        for _ in 0..60 {
+            g.next_iteration();
+        }
+        let late = g.next_iteration()[0].distribution();
+        let sim = similarity(&first, &late);
+        assert!(sim < 0.9, "distribution should drift over 60 iters: {sim}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = WorkloadGen::new(WorkloadConfig::paper_default(2, 8, 8, 4096))
+            .next_iteration();
+        let b = WorkloadGen::new(WorkloadConfig::paper_default(2, 8, 8, 4096))
+            .next_iteration();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_drift_freezes_popularity() {
+        let mut cfg = WorkloadConfig::paper_default(1, 8, 8, 100_000);
+        cfg.drift = 0.0;
+        let mut g = WorkloadGen::new(cfg);
+        let d1 = g.next_iteration()[0].distribution();
+        for _ in 0..20 {
+            g.next_iteration();
+        }
+        let d2 = g.next_iteration()[0].distribution();
+        // Frozen popularity: only multinomial + device-jitter noise remains.
+        assert!(similarity(&d1, &d2) > 0.93, "{}", similarity(&d1, &d2));
+    }
+
+    #[test]
+    fn top_share_edges() {
+        assert_eq!(top_share(&[0, 0], 1), 0.0);
+        assert!((top_share(&[10, 10], 2) - 1.0).abs() < 1e-12);
+        assert!((top_share(&[30, 10], 1) - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,197 @@
+//! Trace record / replay: a training run's per-iteration, per-layer load
+//! matrices, serializable to a compact text format so real traces captured
+//! by the trainer can drive the simulator and benches.
+//!
+//! Format (line-oriented, `#` comments):
+//! ```text
+//! trace v1 layers=12 devices=16 experts=16
+//! iter 0 layer 0
+//! 12 3 0 7 ...            # one row per device: tokens per expert
+//! ```
+
+use crate::moe::LoadMatrix;
+use std::path::Path;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub n_layers: usize,
+    pub n_devices: usize,
+    pub n_experts: usize,
+    /// iterations[i][l] = load matrix of layer l at iteration i.
+    pub iterations: Vec<Vec<LoadMatrix>>,
+}
+
+impl Trace {
+    pub fn new(n_layers: usize, n_devices: usize, n_experts: usize) -> Self {
+        Trace { n_layers, n_devices, n_experts, iterations: vec![] }
+    }
+
+    /// Record one iteration (must contain n_layers matrices).
+    pub fn push(&mut self, layers: Vec<LoadMatrix>) {
+        assert_eq!(layers.len(), self.n_layers);
+        for w in &layers {
+            assert_eq!(w.n_devices(), self.n_devices);
+            assert_eq!(w.n_experts(), self.n_experts);
+        }
+        self.iterations.push(layers);
+    }
+
+    pub fn len(&self) -> usize {
+        self.iterations.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.iterations.is_empty()
+    }
+
+    /// Capture `iters` iterations from a generator.
+    pub fn capture(gen: &mut super::WorkloadGen, iters: usize) -> Trace {
+        let cfg = gen.cfg().clone();
+        let mut t = Trace::new(cfg.n_layers, cfg.n_devices, cfg.n_experts);
+        for _ in 0..iters {
+            t.push(gen.next_iteration());
+        }
+        t
+    }
+
+    pub fn serialize(&self) -> String {
+        let mut out = format!(
+            "trace v1 layers={} devices={} experts={}\n",
+            self.n_layers, self.n_devices, self.n_experts
+        );
+        for (i, layers) in self.iterations.iter().enumerate() {
+            for (l, w) in layers.iter().enumerate() {
+                out.push_str(&format!("iter {i} layer {l}\n"));
+                for d in 0..self.n_devices {
+                    let row: Vec<String> = (0..self.n_experts)
+                        .map(|e| w.get(d, e).to_string())
+                        .collect();
+                    out.push_str(&row.join(" "));
+                    out.push('\n');
+                }
+            }
+        }
+        out
+    }
+
+    pub fn deserialize(text: &str) -> Result<Trace, String> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let header = lines.next().ok_or("empty trace")?;
+        let mut n_layers = 0;
+        let mut n_devices = 0;
+        let mut n_experts = 0;
+        if !header.starts_with("trace v1") {
+            return Err("bad trace header".into());
+        }
+        for part in header.split_whitespace() {
+            if let Some(v) = part.strip_prefix("layers=") {
+                n_layers = v.parse().map_err(|_| "bad layers")?;
+            } else if let Some(v) = part.strip_prefix("devices=") {
+                n_devices = v.parse().map_err(|_| "bad devices")?;
+            } else if let Some(v) = part.strip_prefix("experts=") {
+                n_experts = v.parse().map_err(|_| "bad experts")?;
+            }
+        }
+        if n_layers == 0 || n_devices == 0 || n_experts == 0 {
+            return Err("incomplete trace header".into());
+        }
+        let mut trace = Trace::new(n_layers, n_devices, n_experts);
+        let mut current: Vec<LoadMatrix> = Vec::new();
+        let mut lines = lines.peekable();
+        while let Some(line) = lines.next() {
+            if !line.starts_with("iter ") {
+                return Err(format!("expected iter header, got {line:?}"));
+            }
+            let mut w = LoadMatrix::zeros(n_devices, n_experts);
+            for d in 0..n_devices {
+                let row = lines.next().ok_or("truncated matrix")?;
+                let vals: Result<Vec<u64>, _> =
+                    row.split_whitespace().map(str::parse).collect();
+                let vals = vals.map_err(|_| format!("bad row {row:?}"))?;
+                if vals.len() != n_experts {
+                    return Err(format!("row has {} values, want {n_experts}", vals.len()));
+                }
+                for (e, v) in vals.into_iter().enumerate() {
+                    w.set(d, e, v);
+                }
+            }
+            current.push(w);
+            if current.len() == n_layers {
+                trace.push(std::mem::take(&mut current));
+            }
+        }
+        if !current.is_empty() {
+            return Err("trailing partial iteration".into());
+        }
+        Ok(trace)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.serialize())
+    }
+
+    pub fn load(path: &Path) -> Result<Trace, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read trace: {e}"))?;
+        Self::deserialize(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{WorkloadConfig, WorkloadGen};
+
+    fn small_trace() -> Trace {
+        let mut gen =
+            WorkloadGen::new(WorkloadConfig::paper_default(2, 4, 4, 1024));
+        Trace::capture(&mut gen, 3)
+    }
+
+    #[test]
+    fn capture_shape() {
+        let t = small_trace();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.iterations[0].len(), 2);
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let t = small_trace();
+        let text = t.serialize();
+        let back = Trace::deserialize(&text).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = small_trace();
+        let path = std::env::temp_dir().join("pro_prophet_trace_test.txt");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(t, back);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn deserialize_rejects_garbage() {
+        assert!(Trace::deserialize("").is_err());
+        assert!(Trace::deserialize("trace v2 layers=1 devices=1 experts=1").is_err());
+        assert!(Trace::deserialize("not a trace").is_err());
+        // Truncated body.
+        let t = small_trace();
+        let text = t.serialize();
+        let cut = &text[..text.len() / 2];
+        assert!(Trace::deserialize(cut).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_validates_shape() {
+        let mut t = Trace::new(2, 4, 4);
+        t.push(vec![LoadMatrix::zeros(4, 4)]); // one layer missing
+    }
+}

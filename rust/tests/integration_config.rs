@@ -1,0 +1,81 @@
+//! Integration: config files -> experiment objects -> simulation, plus the
+//! example config shipped in examples/configs/.
+
+use pro_prophet::config::{toml, ExperimentConfig};
+use pro_prophet::sim::{simulate, Policy, ProphetOptions};
+use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
+
+#[test]
+fn full_experiment_from_toml_runs() {
+    let t = toml::parse(
+        r#"
+        iterations = 5
+        seed = 3
+        [model]
+        name = "MoE-GPT-S"
+        k = 2
+        tokens_per_iter = 8192
+        [cluster]
+        kind = "hpnv"
+        nodes = 2
+        [planner]
+        replan_interval = 2
+        alpha = 0.3
+        "#,
+    )
+    .unwrap();
+    let exp = ExperimentConfig::from_table(&t).unwrap();
+    assert_eq!(exp.cluster.n_devices(), 8);
+
+    let mut wcfg = WorkloadConfig::paper_default(
+        exp.model.n_layers,
+        exp.model.n_experts,
+        exp.cluster.n_devices(),
+        exp.model.tokens_per_iter * exp.model.k as u64,
+    );
+    wcfg.seed = exp.seed;
+    let trace = Trace::capture(&mut WorkloadGen::new(wcfg), exp.iterations);
+    let opts = ProphetOptions {
+        planner: exp.planner.clone(),
+        scheduler_on: true,
+    };
+    let r = simulate(&exp.model, &exp.cluster, &trace, &Policy::ProProphet(opts));
+    assert_eq!(r.iters.len(), 5);
+    assert!(r.avg_iter_time() > 0.0);
+}
+
+#[test]
+fn shipped_example_config_parses() {
+    let path = std::path::Path::new("examples/configs/fig10_hpwnv16.toml");
+    if !path.exists() {
+        eprintln!("SKIP: example config missing");
+        return;
+    }
+    let exp = ExperimentConfig::from_file(path).unwrap();
+    assert!(exp.cluster.n_devices() >= 8);
+    assert!(exp.iterations > 0);
+}
+
+#[test]
+fn custom_model_from_toml() {
+    let t = toml::parse(
+        r#"
+        [model]
+        layers = 4
+        d_model = 256
+        d_ff = 512
+        experts = 8
+        k = 1
+        tokens_per_iter = 2048
+        [cluster]
+        kind = "lpwnv"
+        nodes = 2
+        "#,
+    )
+    .unwrap();
+    let exp = ExperimentConfig::from_table(&t).unwrap();
+    assert_eq!(exp.model.n_layers, 4);
+    assert_eq!(exp.model.d_model, 256);
+    assert_eq!(exp.model.n_experts, 8);
+    assert_eq!(exp.cluster.name, "LPWNV-2");
+}

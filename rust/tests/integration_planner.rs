@@ -1,0 +1,143 @@
+//! Integration: planner over realistic workloads and cluster presets —
+//! the paper's §IV claims at module-composition level.
+
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::balance_degree;
+use pro_prophet::moe::Placement;
+use pro_prophet::perfmodel::PerfModel;
+use pro_prophet::planner::{greedy_search, policies, Planner, PlannerConfig};
+use pro_prophet::workload::{WorkloadConfig, WorkloadGen};
+
+fn setup(e: usize, nodes: usize) -> (ModelSpec, ClusterSpec, PerfModel, WorkloadGen) {
+    let model = ModelSpec::moe_gpt_m(e, 1, 16384);
+    let cluster = ClusterSpec::hpwnv(nodes);
+    let pm = PerfModel::new(&model, &cluster);
+    let gen = WorkloadGen::new(WorkloadConfig::paper_default(4, e, cluster.n_devices(), 16384));
+    (model, cluster, pm, gen)
+}
+
+#[test]
+fn planner_improves_every_layer_of_a_real_trace() {
+    let (_, _, pm, mut gen) = setup(16, 4);
+    let layers = gen.next_iteration();
+    for (l, w) in layers.iter().enumerate() {
+        let r = greedy_search(w, &pm, &PlannerConfig::default());
+        assert!(
+            r.t_est <= r.t_identity + 1e-12,
+            "layer {l}: {} > {}",
+            r.t_est,
+            r.t_identity
+        );
+        // On these skewed workloads the planner should find real wins.
+        assert!(
+            r.t_est < 0.95 * r.t_identity,
+            "layer {l}: no meaningful improvement ({} vs {})",
+            r.t_est,
+            r.t_identity
+        );
+        r.placement.validate().unwrap();
+    }
+}
+
+#[test]
+fn planner_beats_fastermoe_balance_on_average() {
+    // Fig 16: the planner achieves higher RB than FasterMoE in most layers.
+    let (_, _, pm, mut gen) = setup(16, 4);
+    let mut wins = 0;
+    let mut total = 0;
+    for _ in 0..3 {
+        for w in gen.next_iteration() {
+            let prophet = greedy_search(&w, &pm, &PlannerConfig::default()).placement;
+            let faster = policies::fastermoe_shadowing(&w, &pm);
+            let b_ident = balance_degree(&w.route_identity().h);
+            let b_prophet = balance_degree(&w.route(&prophet).h);
+            let b_faster = balance_degree(&w.route(&faster).h);
+            let rb_prophet = b_ident / b_prophet.max(1e-9);
+            let rb_faster = b_ident / b_faster.max(1e-9);
+            if rb_prophet >= rb_faster {
+                wins += 1;
+            }
+            total += 1;
+        }
+    }
+    assert!(
+        wins * 2 > total,
+        "planner RB should beat FasterMoE in most layers: {wins}/{total}"
+    );
+}
+
+#[test]
+fn locality_reduces_search_frequency_without_hurting_quality() {
+    let (_, _, pm, mut gen) = setup(16, 4);
+    let trace: Vec<_> = (0..12).map(|_| gen.next_iteration()).collect();
+
+    let mut every = Planner::new(PlannerConfig { replan_interval: 1, ..Default::default() });
+    let mut lazy = Planner::new(PlannerConfig { replan_interval: 4, ..Default::default() });
+
+    let mut t_every = 0.0;
+    let mut t_lazy = 0.0;
+    for iter in &trace {
+        let w = &iter[0];
+        let p1 = every.plan(w, &pm);
+        let p2 = lazy.plan(w, &pm);
+        t_every += pm.layer_time_overlapped(&w.route(&p1), &p1);
+        t_lazy += pm.layer_time_overlapped(&w.route(&p2), &p2);
+    }
+    assert_eq!(every.plans_run, 12);
+    assert_eq!(lazy.plans_run, 3);
+    // Thanks to locality, stale placements stay close to fresh ones.
+    assert!(
+        t_lazy < 1.15 * t_every,
+        "locality reuse degraded quality too much: {t_lazy} vs {t_every}"
+    );
+}
+
+#[test]
+fn planner_tracks_drifting_distributions() {
+    // After a large drift, a replan must recover the win.
+    let (_, _, pm, _) = setup(16, 4);
+    let mut cfg = WorkloadConfig::paper_default(1, 16, 16, 16384);
+    cfg.drift = 0.5; // violent drift
+    let mut gen = WorkloadGen::new(cfg);
+    let mut planner = Planner::new(PlannerConfig { replan_interval: 1, ..Default::default() });
+    for _ in 0..10 {
+        let w = &gen.next_iteration()[0];
+        let p = planner.plan(w, &pm);
+        let t_planned = pm.layer_time_overlapped(&w.route(&p), &p);
+        let ident = Placement::identity(16, 16);
+        let t_ident = pm.layer_time_overlapped(&w.route(&ident), &ident);
+        assert!(t_planned <= t_ident + 1e-12);
+    }
+    assert_eq!(planner.plans_run, 10);
+}
+
+#[test]
+fn bigger_clusters_still_converge() {
+    for nodes in [1, 2, 4, 8] {
+        let d = nodes * 4;
+        let (_, _, pm, mut gen) = setup(d, nodes);
+        let w = &gen.next_iteration()[0];
+        let r = greedy_search(w, &pm, &PlannerConfig::default());
+        assert!(r.evaluated <= d, "evaluated {} on {d} devices", r.evaluated);
+        r.placement.validate().unwrap();
+    }
+}
+
+#[test]
+fn alpha_controls_aggressiveness() {
+    let (_, _, pm, mut gen) = setup(16, 4);
+    let w = &gen.next_iteration()[0];
+    let strict = greedy_search(
+        w,
+        &pm,
+        &PlannerConfig { alpha: 0.05, ..Default::default() },
+    );
+    let loose = greedy_search(
+        w,
+        &pm,
+        &PlannerConfig { alpha: 5.0, ..Default::default() },
+    );
+    // A loose balance requirement stops the search earlier (or instantly).
+    assert!(loose.evaluated <= strict.evaluated);
+}

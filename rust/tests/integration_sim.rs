@@ -1,0 +1,193 @@
+//! Integration: whole-system simulation — the paper's headline claims in
+//! qualitative form (who wins, roughly by how much) across clusters,
+//! models and gate widths.
+
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::speedup;
+use pro_prophet::sim::{simulate, Policy, ProphetOptions};
+use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
+
+fn trace_for(model: &ModelSpec, d: usize, iters: usize, seed: u64) -> Trace {
+    let mut cfg = WorkloadConfig::paper_default(
+        model.n_layers,
+        model.n_experts,
+        d,
+        model.tokens_per_iter * model.k as u64,
+    );
+    cfg.seed = seed;
+    Trace::capture(&mut WorkloadGen::new(cfg), iters)
+}
+
+#[test]
+fn headline_speedups_on_hpwnv16() {
+    // Fig 10a band: Pro-Prophet 1.3-2.7x over Deepspeed-MoE, >=1x over
+    // FasterMoE, on 16 GPUs with k=1.
+    let cluster = ClusterSpec::hpwnv(4);
+    let model = ModelSpec::moe_gpt_m(16, 1, 16384);
+    let trace = trace_for(&model, 16, 20, 7);
+    let ds = simulate(&model, &cluster, &trace, &Policy::DeepspeedMoe);
+    let fm = simulate(&model, &cluster, &trace, &Policy::FasterMoe);
+    let pp = simulate(
+        &model,
+        &cluster,
+        &trace,
+        &Policy::ProProphet(ProphetOptions::full()),
+    );
+    let s_ds = speedup(ds.avg_iter_time(), pp.avg_iter_time());
+    let s_fm = speedup(fm.avg_iter_time(), pp.avg_iter_time());
+    assert!(
+        (1.2..4.0).contains(&s_ds),
+        "speedup vs Deepspeed-MoE out of band: {s_ds:.2}"
+    );
+    assert!(
+        s_fm >= 1.0,
+        "Pro-Prophet must not lose to FasterMoE: {s_fm:.2}"
+    );
+}
+
+#[test]
+fn wins_hold_across_all_five_models() {
+    let cluster = ClusterSpec::hpwnv(4);
+    for model in ModelSpec::table3(16, 1, 16384) {
+        let trace = trace_for(&model, 16, 8, 11);
+        let ds = simulate(&model, &cluster, &trace, &Policy::DeepspeedMoe);
+        let pp = simulate(
+            &model,
+            &cluster,
+            &trace,
+            &Policy::ProProphet(ProphetOptions::full()),
+        );
+        assert!(
+            pp.avg_iter_time() < ds.avg_iter_time(),
+            "{}: prophet {} !< deepspeed {}",
+            model.name,
+            pp.avg_iter_time(),
+            ds.avg_iter_time()
+        );
+    }
+}
+
+#[test]
+fn wins_hold_for_topk_gates() {
+    let cluster = ClusterSpec::hpwnv(4);
+    for k in [1, 2] {
+        let model = ModelSpec::moe_gpt_m(16, k, 16384);
+        let trace = trace_for(&model, 16, 8, 13);
+        let fm = simulate(&model, &cluster, &trace, &Policy::FasterMoe);
+        let pp = simulate(
+            &model,
+            &cluster,
+            &trace,
+            &Policy::ProProphet(ProphetOptions::full()),
+        );
+        assert!(
+            pp.avg_iter_time() <= fm.avg_iter_time() * 1.001,
+            "k={k}: prophet loses to FasterMoE"
+        );
+    }
+}
+
+#[test]
+fn wins_hold_on_all_three_cluster_types() {
+    for cluster in [
+        ClusterSpec::hpwnv(4),
+        ClusterSpec::hpnv(4),
+        ClusterSpec::lpwnv(2),
+    ] {
+        let d = cluster.n_devices();
+        let model = ModelSpec::moe_gpt_s(d, 1, 4096);
+        let trace = trace_for(&model, d, 8, 17);
+        let ds = simulate(&model, &cluster, &trace, &Policy::DeepspeedMoe);
+        let pp = simulate(
+            &model,
+            &cluster,
+            &trace,
+            &Policy::ProProphet(ProphetOptions::full()),
+        );
+        assert!(
+            pp.avg_iter_time() < ds.avg_iter_time(),
+            "{}: no win",
+            cluster.name
+        );
+    }
+}
+
+#[test]
+fn fig14_component_ordering() {
+    // baseline (no opts) >= planner-only >= full; scheduler contributes.
+    let cluster = ClusterSpec::hpwnv(4);
+    let model = ModelSpec::moe_gpt_m(16, 1, 16384);
+    let trace = trace_for(&model, 16, 10, 19);
+    let base = simulate(&model, &cluster, &trace, &Policy::DeepspeedMoe);
+    let planner = simulate(
+        &model,
+        &cluster,
+        &trace,
+        &Policy::ProProphet(ProphetOptions::planner_only()),
+    );
+    let full = simulate(
+        &model,
+        &cluster,
+        &trace,
+        &Policy::ProProphet(ProphetOptions::full()),
+    );
+    assert!(planner.avg_iter_time() < base.avg_iter_time());
+    assert!(full.avg_iter_time() <= planner.avg_iter_time() + 1e-12);
+}
+
+#[test]
+fn fig15_planner_beats_static_topk() {
+    let cluster = ClusterSpec::hpwnv(4);
+    let model = ModelSpec::moe_gpt_m(16, 1, 16384);
+    let trace = trace_for(&model, 16, 10, 23);
+    let pp = simulate(
+        &model,
+        &cluster,
+        &trace,
+        &Policy::ProProphet(ProphetOptions::full()),
+    );
+    for k in [2, 3] {
+        let topk = simulate(&model, &cluster, &trace, &Policy::TopK(k));
+        assert!(
+            pp.avg_iter_time() < topk.avg_iter_time(),
+            "planner must beat top{k}: {} vs {}",
+            pp.avg_iter_time(),
+            topk.avg_iter_time()
+        );
+    }
+}
+
+#[test]
+fn prophet_iteration_times_are_stable() {
+    // Fig 12: Pro-Prophet's per-iteration time is consistent (low jitter
+    // relative to FasterMoE's).
+    let cluster = ClusterSpec::hpwnv(4);
+    let model = ModelSpec::moe_gpt_m(16, 1, 16384);
+    let trace = trace_for(&model, 16, 30, 29);
+    let pp = simulate(
+        &model,
+        &cluster,
+        &trace,
+        &Policy::ProProphet(ProphetOptions::full()),
+    );
+    let times = pp.iter_times();
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let max = times.iter().copied().fold(0.0, f64::max);
+    assert!(max < 1.5 * mean, "iteration spikes: max {max} mean {mean}");
+}
+
+#[test]
+fn table1_breakdown_reproduces_magnitudes() {
+    // FasterMoE-style blocking LB: L.B. total 25-40%, with Search a few
+    // percent and Place/Reduce roughly 10-18% each (paper Table I).
+    let cluster = ClusterSpec::hpwnv(4);
+    let model = ModelSpec::moe_gpt_m(16, 1, 16384);
+    let trace = trace_for(&model, 16, 10, 31);
+    let fm = simulate(&model, &cluster, &trace, &Policy::FasterMoe);
+    let lb = fm.lb_fraction();
+    assert!((0.08..0.55).contains(&lb), "L.B. fraction {lb}");
+    let place = fm.breakdown_fraction("place");
+    let reduce = fm.breakdown_fraction("reduce");
+    assert!(place > 0.0 && reduce > 0.0);
+}
