@@ -1,0 +1,103 @@
+//! fig_forecast — the prophet subsystem's headline trade-off: one-step
+//! forecast error vs replan count vs simulated iteration time, per
+//! predictor, across workload regimes.
+//!
+//! Planning runs with a lazy replan interval (8) so forecast quality and
+//! drift detection are what decide whether stale placements hurt: a good
+//! forecaster keeps iteration time low with FEW plans; a bad one either
+//! eats drift-forced replans (search time) or mis-balanced iterations.
+
+use pro_prophet::benchkit;
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::{write_result, TableReport};
+use pro_prophet::planner::PlannerConfig;
+use pro_prophet::prophet::{PredictorKind, ProphetConfig};
+use pro_prophet::sim::{simulate, Policy, ProphetOptions};
+use pro_prophet::util::json::{self, Json};
+use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
+
+fn main() {
+    benchkit::header(
+        "Fig F",
+        "prophet forecasting: error vs replan count vs iteration time",
+    );
+    let model = ModelSpec::moe_gpt_s(16, 1, 16384);
+    let cluster = ClusterSpec::hpwnv(4);
+    let iters = 40;
+    // Three workload regimes: near-frozen popularity, the paper's Fig 4
+    // locality, and a fast-drifting distribution that punishes staleness.
+    let scenarios: [(&str, f64); 3] = [("stable", 0.01), ("paper", 0.05), ("shifting", 0.25)];
+    let replan_interval = 8;
+
+    let kinds = [
+        PredictorKind::Auto,
+        PredictorKind::LastValue,
+        PredictorKind::Ema,
+        PredictorKind::WindowMean,
+        PredictorKind::LinearTrend,
+    ];
+
+    let mut out = Vec::new();
+    for (name, drift) in scenarios {
+        let mut wcfg = WorkloadConfig::paper_default(
+            model.n_layers,
+            model.n_experts,
+            cluster.n_devices(),
+            model.tokens_per_iter,
+        );
+        wcfg.drift = drift;
+        wcfg.seed = 7;
+        let trace = Trace::capture(&mut WorkloadGen::new(wcfg), iters);
+
+        let mut table = TableReport::new(
+            &format!(
+                "{name} (drift {drift}): {iters} iters, replan interval {replan_interval}"
+            ),
+            &["fcast_l1", "plans", "drift", "iter_s"],
+        );
+        let mut rows = Vec::new();
+        for kind in kinds {
+            let opts = ProphetOptions {
+                planner: PlannerConfig {
+                    replan_interval,
+                    ..Default::default()
+                },
+                scheduler_on: true,
+                prophet: ProphetConfig { predictor: kind, ..Default::default() },
+            };
+            let r = simulate(&model, &cluster, &trace, &Policy::ProProphet(opts));
+            let fcast = r.mean_forecast_error();
+            table.row(
+                kind.name(),
+                vec![
+                    fcast,
+                    r.plans_run as f64,
+                    r.drift_replans as f64,
+                    r.avg_iter_time(),
+                ],
+            );
+            rows.push(json::obj(vec![
+                ("predictor", json::s(kind.name())),
+                ("forecast_l1", json::num(fcast)),
+                ("plans_run", json::num(r.plans_run as f64)),
+                ("drift_replans", json::num(r.drift_replans as f64)),
+                ("avg_iter_s", json::num(r.avg_iter_time())),
+            ]));
+        }
+        println!("{}", table.render());
+        out.push(json::obj(vec![
+            ("scenario", json::s(name)),
+            ("drift", json::num(drift)),
+            ("iters", json::num(iters as f64)),
+            ("replan_interval", json::num(replan_interval as f64)),
+            ("rows", Json::Arr(rows)),
+        ]));
+    }
+
+    let path = write_result("fig_forecast", &Json::Arr(out)).unwrap();
+    println!("takeaway: on local workloads every predictor keeps error low and");
+    println!("plans rare; as drift grows, the adaptive ensemble tracks the best");
+    println!("member and drift detection converts forecast misses into replans.");
+    println!("-> {}", path.display());
+}

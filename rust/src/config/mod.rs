@@ -9,6 +9,7 @@ pub mod toml;
 
 use crate::cluster::ClusterSpec;
 use crate::planner::PlannerConfig;
+use crate::prophet::{PredictorKind, ProphetConfig};
 
 /// One MoE-GPT variant (paper Table III).  Every FFN layer is a MoE layer;
 /// the number of experts per layer equals the number of devices.
@@ -39,7 +40,7 @@ impl ModelSpec {
         k: usize,
         tokens_per_iter: u64,
     ) -> Self {
-        assert!(k >= 1 && k <= n_experts, "k={k} out of range");
+        assert!((1..=n_experts).contains(&k), "k={k} out of range");
         ModelSpec {
             name: name.to_string(),
             n_layers,
@@ -160,12 +161,14 @@ impl Default for TrainingConfig {
     }
 }
 
-/// A full experiment: model x cluster x planner settings.
+/// A full experiment: model x cluster x planner x prophet settings.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     pub model: ModelSpec,
     pub cluster: ClusterSpec,
     pub planner: PlannerConfig,
+    /// Forecasting subsystem knobs (`[prophet]` table).
+    pub prophet: ProphetConfig,
     pub iterations: usize,
     pub seed: u64,
 }
@@ -202,10 +205,24 @@ impl ExperimentConfig {
             use_overlap_model: t.bool_or("planner.use_overlap_model", true),
             ..Default::default()
         };
+        let pd = ProphetConfig::default();
+        let predictor_name = t.str_or("prophet.predictor", pd.predictor.name());
+        let prophet = ProphetConfig {
+            history: t.usize_or("prophet.history", pd.history),
+            ema_beta: t.f64_or("prophet.ema_beta", pd.ema_beta),
+            window: t.usize_or("prophet.window", pd.window),
+            error_decay: t.f64_or("prophet.error_decay", pd.error_decay),
+            drift_threshold: t.f64_or("prophet.drift_threshold", pd.drift_threshold),
+            drift_cooldown: t.usize_or("prophet.drift_cooldown", pd.drift_cooldown),
+            predictor: PredictorKind::from_name(&predictor_name)
+                .ok_or_else(|| format!("unknown prophet.predictor {predictor_name:?}"))?,
+        };
+        prophet.validate()?;
         Ok(ExperimentConfig {
             model,
             cluster,
             planner,
+            prophet,
             iterations: t.usize_or("iterations", 100),
             seed: t.usize_or("seed", 42) as u64,
         })
@@ -298,5 +315,39 @@ mod tests {
         assert!(ExperimentConfig::from_table(&t).is_err());
         let t2 = toml::parse("[model]\nname = \"GPT-9\"").unwrap();
         assert!(ExperimentConfig::from_table(&t2).is_err());
+        let t3 = toml::parse("[prophet]\npredictor = \"oracle\"").unwrap();
+        assert!(ExperimentConfig::from_table(&t3).is_err());
+        // Out-of-range knobs are rejected at parse time, not by a panic
+        // deep inside Prophet construction.
+        let t4 = toml::parse("[prophet]\nema_beta = 1.5").unwrap();
+        assert!(ExperimentConfig::from_table(&t4).is_err());
+        let t5 = toml::parse("[prophet]\nwindow = 0").unwrap();
+        assert!(ExperimentConfig::from_table(&t5).is_err());
+    }
+
+    #[test]
+    fn prophet_table_parses() {
+        let t = toml::parse(
+            r#"
+            [prophet]
+            predictor = "trend"
+            history = 32
+            window = 5
+            ema_beta = 0.5
+            drift_threshold = 0.9
+            drift_cooldown = 2
+            "#,
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(e.prophet.predictor, crate::prophet::PredictorKind::LinearTrend);
+        assert_eq!(e.prophet.history, 32);
+        assert_eq!(e.prophet.window, 5);
+        assert!((e.prophet.ema_beta - 0.5).abs() < 1e-12);
+        assert!((e.prophet.drift_threshold - 0.9).abs() < 1e-12);
+        assert_eq!(e.prophet.drift_cooldown, 2);
+        // Defaults apply when the table is absent.
+        let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(d.prophet, crate::prophet::ProphetConfig::default());
     }
 }

@@ -303,7 +303,7 @@ mod tests {
     fn replica_targets_nonempty() {
         let p = Placement::identity(4, 4);
         for e in 0..4 {
-            assert!(p.replicas(e).len() >= 1);
+            assert!(!p.replicas(e).is_empty());
         }
     }
 }

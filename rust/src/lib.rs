@@ -4,9 +4,18 @@
 //! Reproduction of Wang et al., *Pro-Prophet* (CS.DC 2024) as a three-layer
 //! rust + JAX + Pallas stack:
 //!
+//! * [`prophet`] — the profiling & forecasting subsystem the paper's
+//!   "profile training statistics and use them" rests on (§III–§V): a
+//!   bounded trace store of per-layer load history, a one-step-ahead
+//!   predictor family (last-value / EMA / window-mean / linear-trend)
+//!   behind one trait, an online ensemble that picks the best predictor
+//!   per layer from rolling forecast error, and drift detection that
+//!   forces replans.  Data flow: trainer/sim → `prophet::store` →
+//!   `prophet::ensemble` → [`planner`].
 //! * [`planner`] — the paper's §IV contribution: lightweight expert
 //!   placements, the analytic performance model (Eq 1–6/8) and the
-//!   locality-based greedy search (Algorithm 1).
+//!   locality-based greedy search (Algorithm 1), planning one iteration
+//!   early on [`prophet`] forecasts.
 //! * [`scheduler`] — the paper's §V contribution: the MoE-block scheduling
 //!   space and the block-wise overlap strategy (Algorithm 2).
 //! * [`sim`] — a discrete-event cluster simulator standing in for the
@@ -31,6 +40,7 @@ pub mod metrics;
 pub mod moe;
 pub mod perfmodel;
 pub mod planner;
+pub mod prophet;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;

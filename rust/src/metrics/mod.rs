@@ -30,6 +30,55 @@ pub fn rb(before: &[u64], after: &[u64]) -> f64 {
     }
 }
 
+/// Similarity of two non-negative load vectors in [0, 1]:
+/// 1 − normalized-L1/2 (both vectors normalized to the simplex; negative
+/// entries are clamped to zero).  This is THE distribution-similarity
+/// core of the repo: `planner::locality::similarity` (Fig 4),
+/// `prophet::drift` and [`normalized_l1`] are all thin wrappers.
+pub fn similarity_f64(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let ta: f64 = a.iter().map(|&x| x.max(0.0)).sum();
+    let tb: f64 = b.iter().map(|&x| x.max(0.0)).sum();
+    if ta <= 0.0 || tb <= 0.0 {
+        return if ta == tb { 1.0 } else { 0.0 };
+    }
+    let l1: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| (x.max(0.0) / ta - y.max(0.0) / tb).abs())
+        .sum();
+    1.0 - 0.5 * l1
+}
+
+/// Normalized L1 forecast error between a predicted distribution and the
+/// observed one, in [0, 1]: 1 − [`similarity_f64`] (0 = perfect forecast,
+/// 1 = disjoint mass).  This is the per-step loss the prophet ensemble
+/// minimizes online.
+pub fn normalized_l1(pred: &[f64], observed: &[u64]) -> f64 {
+    let o: Vec<f64> = observed.iter().map(|&x| x as f64).collect();
+    1.0 - similarity_f64(pred, &o)
+}
+
+/// Cosine similarity between a forecast and an observed distribution, in
+/// [0, 1] for non-negative load vectors (1 = same direction).
+pub fn cosine_similarity(pred: &[f64], observed: &[u64]) -> f64 {
+    assert_eq!(pred.len(), observed.len());
+    let mut dot = 0.0;
+    let mut np = 0.0;
+    let mut no = 0.0;
+    for (&p, &o) in pred.iter().zip(observed) {
+        let p = p.max(0.0);
+        let o = o as f64;
+        dot += p * o;
+        np += p * p;
+        no += o * o;
+    }
+    if np <= 0.0 || no <= 0.0 {
+        return if np == no { 1.0 } else { 0.0 };
+    }
+    dot / (np.sqrt() * no.sqrt())
+}
+
 /// Speedup of `baseline_time` over `t` (how many x faster we are).
 pub fn speedup(baseline_time: f64, t: f64) -> f64 {
     if t <= 0.0 {
@@ -157,6 +206,34 @@ mod tests {
         assert!(rb(&[12, 0, 0], &[6, 4, 2]) > 1.0);
         assert_eq!(rb(&[4, 4, 4], &[4, 4, 4]), 1.0);
         assert!(rb(&[12, 0, 0], &[4, 4, 4]).is_infinite());
+    }
+
+    #[test]
+    fn similarity_f64_core() {
+        assert!((similarity_f64(&[5.0, 3.0, 2.0], &[10.0, 6.0, 4.0]) - 1.0).abs() < 1e-12);
+        assert!(similarity_f64(&[10.0, 0.0], &[0.0, 10.0]) < 1e-12);
+        assert_eq!(similarity_f64(&[0.0], &[0.0]), 1.0);
+        assert_eq!(similarity_f64(&[1.0], &[0.0]), 0.0);
+        // Negative entries are clamped, not trusted.
+        assert!((similarity_f64(&[5.0, -2.0], &[5.0, 0.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalized_l1_bounds() {
+        // Perfect forecast (any scale): zero error.
+        assert!(normalized_l1(&[2.0, 4.0, 6.0], &[1, 2, 3]) < 1e-12);
+        // Disjoint mass: maximal error.
+        assert!((normalized_l1(&[1.0, 0.0], &[0, 10]) - 1.0).abs() < 1e-12);
+        // Empty edge cases.
+        assert_eq!(normalized_l1(&[0.0, 0.0], &[0, 0]), 0.0);
+        assert_eq!(normalized_l1(&[1.0, 0.0], &[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn cosine_similarity_direction() {
+        assert!((cosine_similarity(&[1.0, 2.0], &[2, 4]) - 1.0).abs() < 1e-12);
+        assert!(cosine_similarity(&[1.0, 0.0], &[0, 5]) < 1e-12);
+        assert_eq!(cosine_similarity(&[0.0], &[0]), 1.0);
     }
 
     #[test]

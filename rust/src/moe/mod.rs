@@ -15,6 +15,15 @@ pub mod placement;
 pub use memory::MemoryModel;
 pub use placement::Placement;
 
+/// Even integer split: the share of `total` that part `idx` of `parts`
+/// receives (remainder round-robined to the lowest indices, so the parts
+/// always sum back to `total`).  Shared by the trainer's histogram
+/// spreading and the prophet's forecast-matrix fallback.
+pub fn even_split(total: u64, parts: usize, idx: usize) -> u64 {
+    debug_assert!(idx < parts);
+    total / parts as u64 + u64::from(idx < (total % parts as u64) as usize)
+}
+
 /// Tokens routed from each source device to each expert in one MoE layer:
 /// `w[d][e]` = tokens resident on device `d` whose gate picked expert `e`.
 #[derive(Clone, Debug, PartialEq)]

@@ -58,7 +58,7 @@ pub fn greedy_search(w: &LoadMatrix, pm: &PerfModel, cfg: &PlannerConfig) -> Sea
     let t_identity = pm.layer_time_sn(&routed, 0, 0, overlap);
     let mut t_output = t_identity;
 
-    let mut placement = identity.clone();
+    let mut placement = identity;
     let mut selected: Vec<usize> = Vec::new();
     let mut bottoms: Vec<Vec<usize>> = Vec::new();
     let mut used_devices = vec![false; n_devices];

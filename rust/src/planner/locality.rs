@@ -1,77 +1,22 @@
-//! Locality of input distributions (paper §II "Locality", Fig 4).
+//! Locality of input distributions (paper §II "Locality", Fig 4):
+//! adjacent iterations route tokens almost identically.
 //!
-//! Adjacent iterations route tokens almost identically; the predictor
-//! exploits that to (a) forecast the next iteration's distribution so the
-//! Plan primitive can run one iteration early (§V-A), and (b) quantify
-//! locality for Fig 4 and the replan-frequency policy.
+//! This module holds the locality *metrics* (similarity / correlation)
+//! that Fig 4 and the drift detector quantify.  Forecasting itself lives
+//! in [`crate::prophet`]: the old `LocalityPredictor` EMA was absorbed
+//! into `prophet::predictors::Ema`, one member of the predictor family
+//! the online ensemble selects from.
 
 use crate::util::stats;
 
-/// Exponential-moving-average distribution predictor.
-#[derive(Clone, Debug)]
-pub struct LocalityPredictor {
-    ema: Option<Vec<f64>>,
-    last: Option<Vec<f64>>,
-    /// EMA smoothing: 1.0 = "predict last observed" (pure locality).
-    pub beta: f64,
-    pub observations: usize,
-}
-
-impl LocalityPredictor {
-    pub fn new(beta: f64) -> Self {
-        assert!((0.0..=1.0).contains(&beta));
-        LocalityPredictor { ema: None, last: None, beta, observations: 0 }
-    }
-
-    /// Feed the observed distribution of the current iteration.
-    pub fn observe(&mut self, dist: &[u64]) {
-        let xs: Vec<f64> = dist.iter().map(|&x| x as f64).collect();
-        self.ema = Some(match self.ema.take() {
-            None => xs.clone(),
-            Some(prev) => prev
-                .iter()
-                .zip(&xs)
-                .map(|(p, x)| (1.0 - self.beta) * p + self.beta * x)
-                .collect(),
-        });
-        self.last = Some(xs);
-        self.observations += 1;
-    }
-
-    /// Predicted distribution for the NEXT iteration (None until the first
-    /// observation).
-    pub fn predict(&self) -> Option<&[f64]> {
-        self.ema.as_deref()
-    }
-
-    /// Prediction error of the latest observation vs what we would have
-    /// predicted before it (mean absolute percentage, 0 = perfect).
-    pub fn last_error(&self) -> Option<f64> {
-        match (&self.ema, &self.last) {
-            (Some(_), Some(_last)) if self.observations >= 2 => {
-                // ema already ingested `last`; reconstruct prior prediction.
-                None // reconstructing is ambiguous; use `similarity` instead
-            }
-            _ => None,
-        }
-    }
-}
-
 /// Similarity of two distributions in [0, 1]: 1 − normalized L1 distance.
-/// This is the quantity Fig 4 visualizes across adjacent iterations.
+/// This is the quantity Fig 4 visualizes across adjacent iterations
+/// (integer-count façade over [`crate::metrics::similarity_f64`], the
+/// repo's single similarity core).
 pub fn similarity(a: &[u64], b: &[u64]) -> f64 {
-    assert_eq!(a.len(), b.len());
-    let ta: f64 = a.iter().map(|&x| x as f64).sum();
-    let tb: f64 = b.iter().map(|&x| x as f64).sum();
-    if ta == 0.0 || tb == 0.0 {
-        return if ta == tb { 1.0 } else { 0.0 };
-    }
-    let l1: f64 = a
-        .iter()
-        .zip(b)
-        .map(|(&x, &y)| (x as f64 / ta - y as f64 / tb).abs())
-        .sum();
-    1.0 - 0.5 * l1
+    let af: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+    let bf: Vec<f64> = b.iter().map(|&x| x as f64).collect();
+    crate::metrics::similarity_f64(&af, &bf)
 }
 
 /// Pearson correlation between adjacent distributions (alternative
@@ -102,30 +47,6 @@ mod tests {
     fn similarity_empty_edge() {
         assert_eq!(similarity(&[0, 0], &[0, 0]), 1.0);
         assert_eq!(similarity(&[1, 0], &[0, 0]), 0.0);
-    }
-
-    #[test]
-    fn predictor_beta_one_tracks_last() {
-        let mut p = LocalityPredictor::new(1.0);
-        p.observe(&[10, 20, 30]);
-        p.observe(&[40, 50, 60]);
-        assert_eq!(p.predict().unwrap(), &[40.0, 50.0, 60.0]);
-    }
-
-    #[test]
-    fn predictor_smooths() {
-        let mut p = LocalityPredictor::new(0.5);
-        p.observe(&[100, 0]);
-        p.observe(&[0, 100]);
-        let pred = p.predict().unwrap();
-        assert!((pred[0] - 50.0).abs() < 1e-9);
-        assert!((pred[1] - 50.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn predictor_none_before_observation() {
-        let p = LocalityPredictor::new(0.9);
-        assert!(p.predict().is_none());
     }
 
     #[test]

@@ -6,10 +6,10 @@ pub mod locality;
 pub mod policies;
 
 pub use greedy::{greedy_search, SearchResult};
-pub use locality::LocalityPredictor;
 
 use crate::moe::{LoadMatrix, Placement};
 use crate::perfmodel::PerfModel;
+use crate::prophet::DriftDetector;
 
 /// Sentinel for [`PlannerConfig::n_exclude`]: resolve `n` to D/2 at search
 /// time (replicate a selected expert to the top half of devices by its
@@ -61,6 +61,9 @@ pub struct Planner {
     pub drift_replans: usize,
     /// Distribution the cached placement was planned for.
     planned_dist: Option<Vec<u64>>,
+    /// Shared drift machinery (prophet subsystem); lazily armed by
+    /// [`Planner::plan_with_drift_check`].
+    drift: Option<DriftDetector>,
     /// Wall-clock seconds spent inside greedy_search (the real Plan cost).
     pub search_seconds: f64,
 }
@@ -75,12 +78,14 @@ impl Planner {
             plans_reused: 0,
             drift_replans: 0,
             planned_dist: None,
+            drift: None,
             search_seconds: 0.0,
         }
     }
 
     /// Produce a placement for the upcoming iteration given the observed
-    /// (or locality-predicted) load matrix.
+    /// (or prophet-forecast, see [`crate::prophet::Prophet::forecast_matrix`])
+    /// load matrix.
     pub fn plan(&mut self, w: &LoadMatrix, pm: &PerfModel) -> Placement {
         if let Some(cached) = &self.cached {
             if self.iters_since_plan < self.cfg.replan_interval
@@ -111,7 +116,10 @@ impl Planner {
     /// placement only while the observed distribution stays within
     /// `min_similarity` of the one it was planned for (Fig 4 locality can
     /// break at workload boundaries; a similarity drop forces a replan
-    /// regardless of the replan interval).
+    /// regardless of the replan interval).  Detection is delegated to the
+    /// shared [`crate::prophet::DriftDetector`] (threshold-only here — the
+    /// per-call threshold argument keeps the legacy API; cooldown-based
+    /// suppression lives in the prophet-driven policy loop).
     pub fn plan_with_drift_check(
         &mut self,
         w: &LoadMatrix,
@@ -119,8 +127,12 @@ impl Planner {
         min_similarity: f64,
     ) -> Placement {
         let dist = w.distribution();
+        let det = self
+            .drift
+            .get_or_insert_with(|| DriftDetector::new(min_similarity, 0));
+        det.threshold = min_similarity;
         if let Some(prev) = &self.planned_dist {
-            if locality::similarity(prev, &dist) < min_similarity {
+            if det.check_counts(prev, &dist) {
                 self.invalidate();
                 self.drift_replans += 1;
             }

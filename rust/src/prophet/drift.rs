@@ -1,0 +1,132 @@
+//! Drift detection: forecast-vs-observation error thresholding with a
+//! cooldown, replacing the planner's former ad-hoc similarity check.
+//!
+//! Locality (paper Fig 4) justifies reusing a placement across
+//! iterations, but it breaks at workload boundaries.  The detector
+//! watches the similarity between what the prophet forecast and what the
+//! gate actually routed; a drop below the threshold forces a replan
+//! regardless of the replan interval.  The cooldown suppresses trigger
+//! storms while the predictors re-converge on the new regime (each
+//! trigger already forces a replan — re-triggering every iteration inside
+//! the transient would only burn search time).
+
+/// The shared distribution-similarity core (re-exported so drift callers
+/// and the `prophet` façade keep one obvious name for it).
+pub use crate::metrics::similarity_f64;
+
+/// Threshold + cooldown drift detector.
+#[derive(Clone, Debug)]
+pub struct DriftDetector {
+    /// Minimum forecast/observation similarity before drift is declared.
+    pub threshold: f64,
+    /// Checks to suppress after a trigger (0 = may trigger every check).
+    pub cooldown: usize,
+    /// Checks since the last trigger (saturating).
+    since_trigger: usize,
+    /// Lifetime trigger count.
+    pub triggers: usize,
+    /// Lifetime check count.
+    pub checks: usize,
+}
+
+impl DriftDetector {
+    pub fn new(threshold: f64, cooldown: usize) -> Self {
+        assert!((0.0..=1.0).contains(&threshold), "threshold {threshold} out of [0,1]");
+        DriftDetector {
+            threshold,
+            cooldown,
+            since_trigger: usize::MAX,
+            triggers: 0,
+            checks: 0,
+        }
+    }
+
+    /// Compare a forecast against the observation it was made for.
+    /// Returns true when drift is declared (and the cooldown re-arms).
+    pub fn check(&mut self, expected: &[f64], observed: &[f64]) -> bool {
+        self.checks += 1;
+        let sim = similarity_f64(expected, observed);
+        if sim < self.threshold && self.since_trigger >= self.cooldown {
+            self.since_trigger = 0;
+            self.triggers += 1;
+            true
+        } else {
+            self.since_trigger = self.since_trigger.saturating_add(1);
+            false
+        }
+    }
+
+    /// Integer-count convenience (planner-side distributions).
+    pub fn check_counts(&mut self, expected: &[u64], observed: &[u64]) -> bool {
+        let e: Vec<f64> = expected.iter().map(|&x| x as f64).collect();
+        let o: Vec<f64> = observed.iter().map(|&x| x as f64).collect();
+        self.check(&e, &o)
+    }
+
+    /// True while the cooldown suppresses triggers.
+    pub fn cooling_down(&self) -> bool {
+        self.since_trigger < self.cooldown
+    }
+
+    pub fn reset(&mut self) {
+        self.since_trigger = usize::MAX;
+        self.triggers = 0;
+        self.checks = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn similarity_f64_matches_integer_version() {
+        use crate::planner::locality::similarity;
+        let a = [5u64, 3, 2];
+        let b = [10u64, 6, 4];
+        let af: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+        let bf: Vec<f64> = b.iter().map(|&x| x as f64).collect();
+        assert!((similarity_f64(&af, &bf) - similarity(&a, &b)).abs() < 1e-12);
+        assert_eq!(similarity_f64(&[0.0], &[0.0]), 1.0);
+        assert_eq!(similarity_f64(&[1.0], &[0.0]), 0.0);
+    }
+
+    #[test]
+    fn triggers_on_shift_not_on_stability() {
+        let mut d = DriftDetector::new(0.9, 0);
+        assert!(!d.check(&[100.0, 100.0], &[105.0, 95.0]));
+        assert!(d.check(&[100.0, 100.0], &[500.0, 10.0]));
+        assert_eq!(d.triggers, 1);
+        assert_eq!(d.checks, 2);
+    }
+
+    #[test]
+    fn cooldown_suppresses_storms() {
+        let mut d = DriftDetector::new(0.9, 3);
+        let stable = [100.0, 100.0];
+        let shifted = [500.0, 10.0];
+        assert!(d.check(&stable, &shifted)); // first trigger
+        assert!(!d.check(&stable, &shifted)); // suppressed (1)
+        assert!(d.cooling_down());
+        assert!(!d.check(&stable, &shifted)); // suppressed (2)
+        assert!(!d.check(&stable, &shifted)); // suppressed (3)
+        assert!(d.check(&stable, &shifted)); // cooldown elapsed
+        assert_eq!(d.triggers, 2);
+    }
+
+    #[test]
+    fn first_check_can_trigger() {
+        // A fresh detector is armed (no warm-up grace period).
+        let mut d = DriftDetector::new(0.9, 10);
+        assert!(d.check(&[1.0, 0.0], &[0.0, 1.0]));
+    }
+
+    #[test]
+    fn check_counts_agrees_with_check() {
+        let mut a = DriftDetector::new(0.8, 0);
+        let mut b = DriftDetector::new(0.8, 0);
+        let hit_a = a.check_counts(&[10, 0], &[0, 10]);
+        let hit_b = b.check(&[10.0, 0.0], &[0.0, 10.0]);
+        assert_eq!(hit_a, hit_b);
+    }
+}

@@ -1,0 +1,260 @@
+//! Online ensemble over the predictor family: every member forecasts each
+//! iteration, each forecast is scored against the next observation
+//! (normalized L1 + cosine), and the member with the lowest rolling error
+//! serves the forecast.  This is the adaptive selection FlexMoE-style
+//! monitoring enables (arXiv:2304.03946) without committing to a single
+//! model of the load dynamics.
+
+use super::predictors::{self, LoadPredictor, PredictorKind};
+use crate::metrics::{cosine_similarity, normalized_l1};
+
+/// Per-predictor scoreboard entry (for reports and the fig_forecast bench).
+#[derive(Clone, Debug)]
+pub struct PredictorScore {
+    pub name: &'static str,
+    /// Exponentially-decayed normalized-L1 error (the selection criterion).
+    pub rolling_l1: f64,
+    /// Lifetime mean normalized-L1 error.
+    pub mean_l1: f64,
+    /// Lifetime mean cosine similarity of forecast vs observation.
+    pub mean_cosine: f64,
+    /// Iterations this predictor was the one serving forecasts.
+    pub selections: usize,
+    /// Forecasts of this predictor that were scored.
+    pub evaluations: usize,
+}
+
+/// Adaptive forecaster: the full family plus online model selection.
+pub struct Ensemble {
+    predictors: Vec<Box<dyn LoadPredictor>>,
+    /// Rolling (exponentially decayed) normalized-L1 error per predictor;
+    /// NAN until the predictor has been scored once.
+    rolling: Vec<f64>,
+    sum_l1: Vec<f64>,
+    sum_cos: Vec<f64>,
+    evals: Vec<usize>,
+    selections: Vec<usize>,
+    /// Index of the member currently serving forecasts.
+    selected: usize,
+    /// `Some(i)` pins selection to member i (non-Auto [`PredictorKind`]).
+    forced: Option<usize>,
+    /// Weight of the newest error in the rolling average.
+    error_decay: f64,
+    observations: usize,
+}
+
+impl Ensemble {
+    /// Build the family.  `kind` = [`PredictorKind::Auto`] selects
+    /// adaptively; any other kind pins that member (the others still
+    /// observe and are scored, so reports can compare them).
+    pub fn new(kind: PredictorKind, ema_beta: f64, window: usize, error_decay: f64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&error_decay) && error_decay > 0.0,
+            "error_decay {error_decay} out of (0,1]"
+        );
+        let predictors = predictors::family(ema_beta, window);
+        let forced = match kind {
+            PredictorKind::Auto => None,
+            k => predictors.iter().position(|p| p.name() == k.name()),
+        };
+        let n = predictors.len();
+        Ensemble {
+            predictors,
+            rolling: vec![f64::NAN; n],
+            sum_l1: vec![0.0; n],
+            sum_cos: vec![0.0; n],
+            evals: vec![0; n],
+            selections: vec![0; n],
+            selected: forced.unwrap_or(0),
+            forced,
+            error_decay,
+            observations: 0,
+        }
+    }
+
+    /// Score every member's outstanding forecast against `dist`, feed the
+    /// observation to all members, and re-select.  Returns the normalized
+    /// L1 error of the forecast that was actually SERVED for this
+    /// iteration (None when no forecast existed yet).
+    pub fn observe(&mut self, dist: &[u64]) -> Option<f64> {
+        let mut served_error = None;
+        for (i, p) in self.predictors.iter().enumerate() {
+            if let Some(forecast) = p.predict() {
+                let l1 = normalized_l1(&forecast, dist);
+                let cos = cosine_similarity(&forecast, dist);
+                self.rolling[i] = if self.rolling[i].is_nan() {
+                    l1
+                } else {
+                    self.error_decay * l1 + (1.0 - self.error_decay) * self.rolling[i]
+                };
+                self.sum_l1[i] += l1;
+                self.sum_cos[i] += cos;
+                self.evals[i] += 1;
+                if i == self.selected {
+                    served_error = Some(l1);
+                }
+            }
+        }
+        for p in &mut self.predictors {
+            p.observe(dist);
+        }
+        self.selected = match self.forced {
+            Some(i) => i,
+            None => self.best_by_rolling(),
+        };
+        self.selections[self.selected] += 1;
+        self.observations += 1;
+        served_error
+    }
+
+    fn best_by_rolling(&self) -> usize {
+        let mut best = 0;
+        let mut best_err = f64::INFINITY;
+        for (i, &r) in self.rolling.iter().enumerate() {
+            if !r.is_nan() && r < best_err {
+                best_err = r;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Forecast served for the next iteration (from the selected member;
+    /// falls back to any member with a forecast so one observation is
+    /// always enough to start planning early).
+    pub fn predict(&self) -> Option<Vec<f64>> {
+        self.predictors[self.selected]
+            .predict()
+            .or_else(|| self.predictors.iter().find_map(|p| p.predict()))
+    }
+
+    pub fn selected_name(&self) -> &'static str {
+        self.predictors[self.selected].name()
+    }
+
+    pub fn observations(&self) -> usize {
+        self.observations
+    }
+
+    /// Scoreboard over the whole family.
+    pub fn scores(&self) -> Vec<PredictorScore> {
+        (0..self.predictors.len())
+            .map(|i| PredictorScore {
+                name: self.predictors[i].name(),
+                rolling_l1: self.rolling[i],
+                mean_l1: if self.evals[i] > 0 {
+                    self.sum_l1[i] / self.evals[i] as f64
+                } else {
+                    f64::NAN
+                },
+                mean_cosine: if self.evals[i] > 0 {
+                    self.sum_cos[i] / self.evals[i] as f64
+                } else {
+                    f64::NAN
+                },
+                selections: self.selections[i],
+                evaluations: self.evals[i],
+            })
+            .collect()
+    }
+
+    /// Reset all members and the scoreboard (workload boundary).
+    pub fn reset(&mut self) {
+        for p in &mut self.predictors {
+            p.reset();
+        }
+        self.rolling.fill(f64::NAN);
+        self.sum_l1.fill(0.0);
+        self.sum_cos.fill(0.0);
+        self.evals.fill(0);
+        self.selections.fill(0);
+        self.selected = self.forced.unwrap_or(0);
+        self.observations = 0;
+    }
+}
+
+impl std::fmt::Debug for Ensemble {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ensemble")
+            .field("selected", &self.selected_name())
+            .field("observations", &self.observations)
+            .field("rolling", &self.rolling)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_after_one_observation() {
+        let mut e = Ensemble::new(PredictorKind::Auto, 0.7, 4, 0.3);
+        assert!(e.predict().is_none());
+        assert!(e.observe(&[5, 5]).is_none()); // nothing to score yet
+        assert!(e.predict().is_some());
+    }
+
+    #[test]
+    fn converges_to_trend_on_linear_ramp() {
+        // A steady ramp: trend forecasts exactly, last/ema/window lag.
+        let mut e = Ensemble::new(PredictorKind::Auto, 0.7, 4, 0.3);
+        for t in 0..20u64 {
+            e.observe(&[100 + 40 * t, 1000 - 40 * t]);
+        }
+        assert_eq!(e.selected_name(), "trend");
+        let scores = e.scores();
+        let trend = scores.iter().find(|s| s.name == "trend").unwrap();
+        let last = scores.iter().find(|s| s.name == "last").unwrap();
+        assert!(trend.mean_l1 < last.mean_l1);
+        assert!(trend.selections > 0);
+    }
+
+    #[test]
+    fn converges_to_smoother_on_noisy_constant() {
+        // Alternating noise around a constant: averaging beats last-value.
+        let mut e = Ensemble::new(PredictorKind::Auto, 0.5, 6, 0.3);
+        for t in 0..40u64 {
+            let jitter = if t % 2 == 0 { 60 } else { 0 };
+            e.observe(&[300 + jitter, 300 + (60 - jitter)]);
+        }
+        assert_ne!(e.selected_name(), "last");
+        let scores = e.scores();
+        let window = scores.iter().find(|s| s.name == "window").unwrap();
+        let last = scores.iter().find(|s| s.name == "last").unwrap();
+        assert!(
+            window.mean_l1 < last.mean_l1,
+            "window {} !< last {}",
+            window.mean_l1,
+            last.mean_l1
+        );
+    }
+
+    #[test]
+    fn forced_kind_pins_selection() {
+        let mut e = Ensemble::new(PredictorKind::Ema, 0.7, 4, 0.3);
+        for t in 0..10u64 {
+            e.observe(&[10 * t, 100]);
+        }
+        assert_eq!(e.selected_name(), "ema");
+    }
+
+    #[test]
+    fn served_error_reflects_forecast_quality() {
+        let mut e = Ensemble::new(PredictorKind::LastValue, 0.7, 4, 0.3);
+        e.observe(&[100, 0]);
+        // Forecast was [100, 0]; observation identical -> zero error.
+        assert!(e.observe(&[100, 0]).unwrap() < 1e-12);
+        // Forecast still [100, 0]; observation flipped -> maximal error.
+        assert!((e.observe(&[0, 100]).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_restarts() {
+        let mut e = Ensemble::new(PredictorKind::Auto, 0.7, 4, 0.3);
+        e.observe(&[1, 2]);
+        e.reset();
+        assert_eq!(e.observations(), 0);
+        assert!(e.predict().is_none());
+    }
+}

@@ -1,0 +1,402 @@
+//! Pro-Prophet's profiling & forecasting subsystem: own the training
+//! statistics, predict the next iteration's load, and decide when the
+//! world has drifted enough to force a replan.
+//!
+//! Data flow (trainer/simulator → prophet → planner):
+//!
+//! ```text
+//!   gate loads (LoadMatrix per layer)
+//!        │ observe_layer()
+//!        ▼
+//!   [store]     ring-buffer history (persistable as workload::trace v1)
+//!   [ensemble]  per-layer predictor family + online model selection
+//!   [drift]     forecast-error threshold + cooldown
+//!        │ forecast_matrix()
+//!        ▼
+//!   planner::Planner::plan()  — runs one iteration EARLY on the forecast
+//! ```
+//!
+//! The paper profiles training statistics and feeds them to the planner
+//! (§III–§V); this module makes that a first-class subsystem instead of a
+//! single EMA bolted onto the planner.  "Prediction Is All MoE Needs"
+//! (arXiv:2404.16914) motivates the predictor family: expert loads move
+//! from fluctuating to stabilizing and are highly predictable from
+//! history.
+
+pub mod drift;
+pub mod ensemble;
+pub mod predictors;
+pub mod store;
+
+pub use drift::{similarity_f64, DriftDetector};
+pub use ensemble::{Ensemble, PredictorScore};
+pub use predictors::{LoadPredictor, PredictorKind};
+pub use store::TraceStore;
+
+use crate::moe::LoadMatrix;
+
+/// Prophet knobs (config-file `[prophet]` table / CLI flags).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProphetConfig {
+    /// Trace-store ring-buffer capacity (iterations of history kept).
+    pub history: usize,
+    /// EMA predictor smoothing (weight of the newest observation).
+    pub ema_beta: f64,
+    /// Sliding-window size for the window-mean and trend predictors.
+    pub window: usize,
+    /// Weight of the newest error in each predictor's rolling score.
+    pub error_decay: f64,
+    /// Minimum forecast/observation similarity before drift is declared.
+    pub drift_threshold: f64,
+    /// Iterations a drift trigger stays suppressed after firing.
+    pub drift_cooldown: usize,
+    /// Which predictor serves forecasts (Auto = adaptive ensemble).
+    pub predictor: PredictorKind,
+}
+
+impl Default for ProphetConfig {
+    fn default() -> Self {
+        ProphetConfig {
+            history: 64,
+            ema_beta: 0.7,
+            window: 8,
+            error_decay: 0.3,
+            drift_threshold: 0.8,
+            drift_cooldown: 4,
+            predictor: PredictorKind::Auto,
+        }
+    }
+}
+
+impl ProphetConfig {
+    /// Range-check every knob, so config files and CLI flags fail with a
+    /// proper error instead of a panic deep inside `Prophet::new`.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.history < 1 {
+            return Err("prophet.history must be >= 1".into());
+        }
+        if self.window < 1 {
+            return Err("prophet.window must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.ema_beta) {
+            return Err(format!("prophet.ema_beta {} out of [0,1]", self.ema_beta));
+        }
+        if !(self.error_decay > 0.0 && self.error_decay <= 1.0) {
+            return Err(format!("prophet.error_decay {} out of (0,1]", self.error_decay));
+        }
+        if !(0.0..=1.0).contains(&self.drift_threshold) {
+            return Err(format!(
+                "prophet.drift_threshold {} out of [0,1]",
+                self.drift_threshold
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// What one observation told us about one layer.
+#[derive(Clone, Debug)]
+pub struct LayerObservation {
+    /// The drift detector declared a regime change; the planner's cached
+    /// placement for this layer should be invalidated.
+    pub drift: bool,
+    /// Normalized-L1 error of the forecast that was served for this
+    /// iteration (None when no forecast existed yet).
+    pub forecast_error: Option<f64>,
+}
+
+/// Per-layer forecasting state.
+struct LayerCell {
+    ensemble: Ensemble,
+    drift: DriftDetector,
+    /// Forecast currently outstanding (what we told the planner).
+    served: Option<Vec<f64>>,
+}
+
+/// The subsystem: one ensemble + drift detector per MoE layer, sharing a
+/// bounded trace store.
+pub struct Prophet {
+    pub cfg: ProphetConfig,
+    store: TraceStore,
+    layers: Vec<LayerCell>,
+    /// Layers of the iteration currently being observed (flushed to the
+    /// store when all `n_layers` have arrived).
+    pending: Vec<LoadMatrix>,
+}
+
+impl Prophet {
+    pub fn new(cfg: ProphetConfig, n_layers: usize) -> Self {
+        assert!(n_layers >= 1, "need at least one layer");
+        let layers = (0..n_layers)
+            .map(|_| LayerCell {
+                ensemble: Ensemble::new(
+                    cfg.predictor,
+                    cfg.ema_beta,
+                    cfg.window,
+                    cfg.error_decay,
+                ),
+                drift: DriftDetector::new(cfg.drift_threshold, cfg.drift_cooldown),
+                served: None,
+            })
+            .collect();
+        Prophet {
+            store: TraceStore::new(cfg.history.max(1)),
+            layers,
+            pending: Vec::with_capacity(n_layers),
+            cfg,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Record one layer's observed gating result.  Layers must arrive in
+    /// order 0..n_layers; completing a full iteration flushes it to the
+    /// trace store.  Scores the outstanding forecast, runs drift
+    /// detection, and re-arms the next forecast.
+    pub fn observe_layer(&mut self, layer: usize, w: &LoadMatrix) -> LayerObservation {
+        assert_eq!(
+            layer,
+            self.pending.len(),
+            "layers must be observed in order (expected layer {}, got {layer})",
+            self.pending.len()
+        );
+        let dist = w.distribution();
+        let cell = &mut self.layers[layer];
+        let drift = match &cell.served {
+            Some(forecast) => {
+                let observed: Vec<f64> = dist.iter().map(|&x| x as f64).collect();
+                cell.drift.check(forecast, &observed)
+            }
+            None => false,
+        };
+        let forecast_error = cell.ensemble.observe(&dist);
+        cell.served = cell.ensemble.predict();
+        self.pending.push(w.clone());
+        if self.pending.len() == self.layers.len() {
+            self.store.push(std::mem::take(&mut self.pending));
+        }
+        LayerObservation { drift, forecast_error }
+    }
+
+    /// Record a whole iteration at once.
+    pub fn observe_iteration(&mut self, layers: &[LoadMatrix]) -> Vec<LayerObservation> {
+        assert_eq!(layers.len(), self.layers.len(), "layer count mismatch");
+        layers
+            .iter()
+            .enumerate()
+            .map(|(l, w)| self.observe_layer(l, w))
+            .collect()
+    }
+
+    /// The forecast distribution (tokens per expert) outstanding for
+    /// `layer`'s next iteration.
+    pub fn forecast(&self, layer: usize) -> Option<&[f64]> {
+        self.layers[layer].served.as_deref()
+    }
+
+    /// Forecast as a full [`LoadMatrix`] the planner can consume: the
+    /// latest observed matrix of the layer is rescaled column-by-column to
+    /// the forecast distribution, preserving the device affinity of each
+    /// expert's inputs (experts with no observed inputs are spread evenly).
+    pub fn forecast_matrix(&self, layer: usize) -> Option<LoadMatrix> {
+        let forecast = self.forecast(layer)?;
+        let last = self
+            .pending
+            .get(layer)
+            .or_else(|| self.store.latest_layer(layer))?;
+        let n_devices = last.n_devices();
+        let n_experts = last.n_experts();
+        assert_eq!(forecast.len(), n_experts, "forecast width mismatch");
+        let mut w = LoadMatrix::zeros(n_devices, n_experts);
+        for e in 0..n_experts {
+            let target = forecast[e].max(0.0);
+            let col: u64 = (0..n_devices).map(|d| last.get(d, e)).sum();
+            if col > 0 {
+                for d in 0..n_devices {
+                    let scaled = last.get(d, e) as f64 * target / col as f64;
+                    w.set(d, e, scaled.round() as u64);
+                }
+            } else {
+                // No affinity information: spread evenly (same split rule
+                // as the trainer's spread_histogram).
+                let t = target.round() as u64;
+                for d in 0..n_devices {
+                    w.set(d, e, crate::moe::even_split(t, n_devices, d));
+                }
+            }
+        }
+        Some(w)
+    }
+
+    /// Name of the predictor currently serving `layer`'s forecasts.
+    pub fn selected_predictor(&self, layer: usize) -> &'static str {
+        self.layers[layer].ensemble.selected_name()
+    }
+
+    /// Per-predictor scoreboard for one layer.
+    pub fn scores(&self, layer: usize) -> Vec<PredictorScore> {
+        self.layers[layer].ensemble.scores()
+    }
+
+    /// Mean forecast error per predictor, aggregated across layers
+    /// (NaN-free: layers that never scored a predictor are skipped).
+    pub fn aggregate_scores(&self) -> Vec<(String, f64, f64)> {
+        let names: Vec<&'static str> =
+            self.layers[0].ensemble.scores().iter().map(|s| s.name).collect();
+        names
+            .iter()
+            .map(|&name| {
+                let mut l1 = 0.0;
+                let mut cos = 0.0;
+                let mut n = 0usize;
+                for cell in &self.layers {
+                    for s in cell.ensemble.scores() {
+                        if s.name == name && s.evaluations > 0 {
+                            l1 += s.mean_l1;
+                            cos += s.mean_cosine;
+                            n += 1;
+                        }
+                    }
+                }
+                if n == 0 {
+                    (name.to_string(), f64::NAN, f64::NAN)
+                } else {
+                    (name.to_string(), l1 / n as f64, cos / n as f64)
+                }
+            })
+            .collect()
+    }
+
+    /// Lifetime drift triggers across all layers.
+    pub fn drift_triggers(&self) -> usize {
+        self.layers.iter().map(|c| c.drift.triggers).sum()
+    }
+
+    /// The shared statistics history.
+    pub fn store(&self) -> &TraceStore {
+        &self.store
+    }
+
+    /// Reset all forecasting state (drops history and scoreboards).
+    pub fn reset(&mut self) {
+        let capacity = self.store.capacity();
+        self.store = TraceStore::new(capacity);
+        self.pending.clear();
+        for cell in &mut self.layers {
+            cell.ensemble.reset();
+            cell.drift.reset();
+            cell.served = None;
+        }
+    }
+}
+
+impl std::fmt::Debug for Prophet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Prophet")
+            .field("cfg", &self.cfg)
+            .field("layers", &self.layers.len())
+            .field("history", &self.store.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{WorkloadConfig, WorkloadGen};
+
+    fn gen(drift: f64) -> WorkloadGen {
+        let mut cfg = WorkloadConfig::paper_default(3, 8, 8, 8192);
+        cfg.drift = drift;
+        WorkloadGen::new(cfg)
+    }
+
+    #[test]
+    fn forecast_appears_after_one_iteration() {
+        let mut p = Prophet::new(ProphetConfig::default(), 3);
+        let mut g = gen(0.05);
+        assert!(p.forecast_matrix(0).is_none());
+        p.observe_iteration(&g.next_iteration());
+        for l in 0..3 {
+            assert!(p.forecast(l).is_some());
+            let w = p.forecast_matrix(l).unwrap();
+            assert_eq!(w.n_devices(), 8);
+            assert_eq!(w.n_experts(), 8);
+        }
+    }
+
+    #[test]
+    fn last_value_forecast_matrix_reproduces_last_matrix() {
+        // When the served forecast IS the last distribution, the rescaled
+        // matrix is exactly the last observed matrix.
+        let cfg = ProphetConfig {
+            predictor: PredictorKind::LastValue,
+            ..Default::default()
+        };
+        let mut p = Prophet::new(cfg, 1);
+        let mut g = gen(0.05);
+        let it = g.next_iteration();
+        p.observe_iteration(&it);
+        assert_eq!(p.forecast_matrix(0).unwrap(), it[0]);
+    }
+
+    #[test]
+    fn forecasts_beat_nothing_on_local_workloads() {
+        // On a high-locality stream the served forecast error stays small.
+        let mut p = Prophet::new(ProphetConfig::default(), 3);
+        let mut g = gen(0.05);
+        let mut errs = Vec::new();
+        for _ in 0..15 {
+            for obs in p.observe_iteration(&g.next_iteration()) {
+                if let Some(e) = obs.forecast_error {
+                    errs.push(e);
+                }
+            }
+        }
+        assert!(!errs.is_empty());
+        let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mean < 0.15, "forecast error too large: {mean}");
+    }
+
+    #[test]
+    fn drift_fires_on_regime_change_only() {
+        let cfg = ProphetConfig {
+            drift_threshold: 0.7,
+            drift_cooldown: 2,
+            ..Default::default()
+        };
+        let mut p = Prophet::new(cfg, 1);
+        let stable = LoadMatrix::from_rows(vec![vec![800, 50, 50, 124]; 4]);
+        for _ in 0..5 {
+            let obs = p.observe_iteration(std::slice::from_ref(&stable));
+            assert!(!obs[0].drift, "stable stream must not drift");
+        }
+        // Violent shift: the heavy expert moves.
+        let shifted = LoadMatrix::from_rows(vec![vec![50, 50, 800, 124]; 4]);
+        let obs = p.observe_iteration(std::slice::from_ref(&shifted));
+        assert!(obs[0].drift, "regime change must trigger drift");
+        assert_eq!(p.drift_triggers(), 1);
+    }
+
+    #[test]
+    fn store_collects_full_iterations() {
+        let mut p = Prophet::new(ProphetConfig { history: 4, ..Default::default() }, 2);
+        let mut g = WorkloadGen::new(WorkloadConfig::paper_default(2, 8, 8, 8192));
+        for _ in 0..6 {
+            p.observe_iteration(&g.next_iteration());
+        }
+        assert_eq!(p.store().len(), 4);
+        assert_eq!(p.store().total_pushed(), 6);
+        assert_eq!(p.store().n_layers(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_order_layers_rejected() {
+        let mut p = Prophet::new(ProphetConfig::default(), 2);
+        let w = LoadMatrix::zeros(4, 4);
+        p.observe_layer(1, &w);
+    }
+}

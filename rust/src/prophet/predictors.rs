@@ -1,0 +1,400 @@
+//! The predictor family: one-step-ahead forecasters of a MoE layer's
+//! input distribution (tokens per expert).
+//!
+//! Every predictor sees the stream of observed distributions and offers a
+//! forecast for the NEXT iteration, so the Plan primitive can run one
+//! iteration early (paper §V-A).  The family spans the spectrum the
+//! literature identifies:
+//!
+//! * [`LastValue`] — pure locality (paper Fig 4): tomorrow looks like
+//!   today.
+//! * [`Ema`] — exponential smoothing (absorbs the planner's former
+//!   `LocalityPredictor`).
+//! * [`WindowMean`] — sliding-window mean, robust to sampling noise.
+//! * [`LinearTrend`] — per-expert least-squares trend, tracks the slow
+//!   popularity migration of "Prediction Is All MoE Needs"
+//!   (arXiv:2404.16914).
+
+use std::collections::VecDeque;
+
+/// A one-step-ahead forecaster of per-expert load distributions.
+pub trait LoadPredictor {
+    /// Short stable identifier (used in reports and knob parsing).
+    fn name(&self) -> &'static str;
+    /// Feed the observed distribution of the current iteration.
+    fn observe(&mut self, dist: &[u64]);
+    /// Forecast for the next iteration (None until enough observations).
+    /// Values are in token units (same scale as the observations).
+    fn predict(&self) -> Option<Vec<f64>>;
+    /// Drop all state (e.g. at a workload boundary).
+    fn reset(&mut self);
+}
+
+pub(crate) fn to_f64(dist: &[u64]) -> Vec<f64> {
+    dist.iter().map(|&x| x as f64).collect()
+}
+
+/// Predict exactly the last observed distribution (pure locality).
+#[derive(Clone, Debug, Default)]
+pub struct LastValue {
+    last: Option<Vec<f64>>,
+}
+
+impl LastValue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl LoadPredictor for LastValue {
+    fn name(&self) -> &'static str {
+        "last"
+    }
+
+    fn observe(&mut self, dist: &[u64]) {
+        self.last = Some(to_f64(dist));
+    }
+
+    fn predict(&self) -> Option<Vec<f64>> {
+        self.last.clone()
+    }
+
+    fn reset(&mut self) {
+        self.last = None;
+    }
+}
+
+/// Exponential moving average.  `beta` is the weight of the NEWEST
+/// observation (1.0 degenerates to [`LastValue`]) — the same convention as
+/// the planner's former `LocalityPredictor`.
+#[derive(Clone, Debug)]
+pub struct Ema {
+    pub beta: f64,
+    ema: Option<Vec<f64>>,
+}
+
+impl Ema {
+    pub fn new(beta: f64) -> Self {
+        assert!((0.0..=1.0).contains(&beta), "beta {beta} out of [0,1]");
+        Ema { beta, ema: None }
+    }
+}
+
+impl LoadPredictor for Ema {
+    fn name(&self) -> &'static str {
+        "ema"
+    }
+
+    fn observe(&mut self, dist: &[u64]) {
+        let xs = to_f64(dist);
+        self.ema = Some(match self.ema.take() {
+            None => xs,
+            Some(prev) => prev
+                .iter()
+                .zip(&xs)
+                .map(|(p, x)| (1.0 - self.beta) * p + self.beta * x)
+                .collect(),
+        });
+    }
+
+    fn predict(&self) -> Option<Vec<f64>> {
+        self.ema.clone()
+    }
+
+    fn reset(&mut self) {
+        self.ema = None;
+    }
+}
+
+/// Mean of the last `window` observations.
+#[derive(Clone, Debug)]
+pub struct WindowMean {
+    pub window: usize,
+    buf: VecDeque<Vec<f64>>,
+}
+
+impl WindowMean {
+    pub fn new(window: usize) -> Self {
+        assert!(window >= 1, "window must be >= 1");
+        WindowMean { window, buf: VecDeque::new() }
+    }
+}
+
+impl LoadPredictor for WindowMean {
+    fn name(&self) -> &'static str {
+        "window"
+    }
+
+    fn observe(&mut self, dist: &[u64]) {
+        if self.buf.len() == self.window {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(to_f64(dist));
+    }
+
+    fn predict(&self) -> Option<Vec<f64>> {
+        let first = self.buf.front()?;
+        let mut acc = vec![0.0; first.len()];
+        for obs in &self.buf {
+            for (a, x) in acc.iter_mut().zip(obs) {
+                *a += x;
+            }
+        }
+        let n = self.buf.len() as f64;
+        for a in &mut acc {
+            *a /= n;
+        }
+        Some(acc)
+    }
+
+    fn reset(&mut self) {
+        self.buf.clear();
+    }
+}
+
+/// Per-expert least-squares linear trend over the last `window`
+/// observations, extrapolated one step ahead (negative extrapolations are
+/// clamped to zero — loads are counts).
+#[derive(Clone, Debug)]
+pub struct LinearTrend {
+    pub window: usize,
+    buf: VecDeque<Vec<f64>>,
+}
+
+impl LinearTrend {
+    pub fn new(window: usize) -> Self {
+        assert!(window >= 2, "trend window must be >= 2");
+        LinearTrend { window, buf: VecDeque::new() }
+    }
+}
+
+impl LoadPredictor for LinearTrend {
+    fn name(&self) -> &'static str {
+        "trend"
+    }
+
+    fn observe(&mut self, dist: &[u64]) {
+        if self.buf.len() == self.window {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(to_f64(dist));
+    }
+
+    fn predict(&self) -> Option<Vec<f64>> {
+        let n = self.buf.len();
+        if n == 0 {
+            return None;
+        }
+        if n == 1 {
+            return self.buf.front().cloned();
+        }
+        // x = 0..n-1, forecast at x = n.  Sxx = sum (x - x̄)².
+        let e = self.buf[0].len();
+        let x_mean = (n - 1) as f64 / 2.0;
+        let sxx: f64 = (0..n).map(|t| (t as f64 - x_mean).powi(2)).sum();
+        let mut y_mean = vec![0.0; e];
+        for obs in &self.buf {
+            for (m, y) in y_mean.iter_mut().zip(obs) {
+                *m += y;
+            }
+        }
+        for m in &mut y_mean {
+            *m /= n as f64;
+        }
+        let mut sxy = vec![0.0; e];
+        for (t, obs) in self.buf.iter().enumerate() {
+            let dx = t as f64 - x_mean;
+            for (s, (y, m)) in sxy.iter_mut().zip(obs.iter().zip(&y_mean)) {
+                *s += dx * (y - m);
+            }
+        }
+        Some(
+            (0..e)
+                .map(|i| {
+                    let slope = sxy[i] / sxx;
+                    (y_mean[i] + slope * (n as f64 - x_mean)).max(0.0)
+                })
+                .collect(),
+        )
+    }
+
+    fn reset(&mut self) {
+        self.buf.clear();
+    }
+}
+
+/// Which predictor (or the adaptive ensemble) serves forecasts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PredictorKind {
+    /// Online ensemble: per layer, the predictor with the lowest rolling
+    /// forecast error serves the forecast.
+    #[default]
+    Auto,
+    LastValue,
+    Ema,
+    WindowMean,
+    LinearTrend,
+}
+
+impl PredictorKind {
+    pub fn from_name(name: &str) -> Option<PredictorKind> {
+        match name {
+            "auto" | "ensemble" => Some(PredictorKind::Auto),
+            "last" | "last-value" | "locality" => Some(PredictorKind::LastValue),
+            "ema" => Some(PredictorKind::Ema),
+            "window" | "window-mean" | "mean" => Some(PredictorKind::WindowMean),
+            "trend" | "linear-trend" | "linear" => Some(PredictorKind::LinearTrend),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PredictorKind::Auto => "auto",
+            PredictorKind::LastValue => "last",
+            PredictorKind::Ema => "ema",
+            PredictorKind::WindowMean => "window",
+            PredictorKind::LinearTrend => "trend",
+        }
+    }
+
+    /// All concrete (non-Auto) members of the family.
+    pub fn family() -> [PredictorKind; 4] {
+        [
+            PredictorKind::LastValue,
+            PredictorKind::Ema,
+            PredictorKind::WindowMean,
+            PredictorKind::LinearTrend,
+        ]
+    }
+}
+
+/// Instantiate the full predictor family (ensemble member order is stable:
+/// last, ema, window, trend — ties in the ensemble resolve to the earlier
+/// member).
+pub fn family(ema_beta: f64, window: usize) -> Vec<Box<dyn LoadPredictor>> {
+    vec![
+        Box::new(LastValue::new()),
+        Box::new(Ema::new(ema_beta)),
+        Box::new(WindowMean::new(window)),
+        Box::new(LinearTrend::new(window.max(2))),
+    ]
+}
+
+/// Instantiate a single predictor by kind (`Auto` maps to the whole
+/// family; callers wanting the ensemble should use
+/// [`super::ensemble::Ensemble`] instead).
+pub fn single(kind: PredictorKind, ema_beta: f64, window: usize) -> Box<dyn LoadPredictor> {
+    match kind {
+        PredictorKind::Auto | PredictorKind::LastValue => Box::new(LastValue::new()),
+        PredictorKind::Ema => Box::new(Ema::new(ema_beta)),
+        PredictorKind::WindowMean => Box::new(WindowMean::new(window)),
+        PredictorKind::LinearTrend => Box::new(LinearTrend::new(window.max(2))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(p: &mut dyn LoadPredictor, seq: &[Vec<u64>]) {
+        for d in seq {
+            p.observe(d);
+        }
+    }
+
+    #[test]
+    fn all_predictors_exact_on_constant_sequences() {
+        let seq: Vec<Vec<u64>> = vec![vec![40, 10, 50]; 6];
+        for mut p in family(0.6, 4) {
+            feed(p.as_mut(), &seq);
+            let f = p.predict().expect(p.name());
+            for (got, want) in f.iter().zip([40.0, 10.0, 50.0]) {
+                assert!(
+                    (got - want).abs() < 1e-9,
+                    "{}: {got} != {want}",
+                    p.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn none_before_first_observation() {
+        for p in family(0.5, 4) {
+            assert!(p.predict().is_none(), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn last_value_tracks_latest() {
+        let mut p = LastValue::new();
+        feed(&mut p, &[vec![10, 20, 30], vec![40, 50, 60]]);
+        assert_eq!(p.predict().unwrap(), vec![40.0, 50.0, 60.0]);
+    }
+
+    #[test]
+    fn ema_beta_one_is_last_value() {
+        let mut p = Ema::new(1.0);
+        feed(&mut p, &[vec![10, 20, 30], vec![40, 50, 60]]);
+        assert_eq!(p.predict().unwrap(), vec![40.0, 50.0, 60.0]);
+    }
+
+    #[test]
+    fn ema_smooths() {
+        let mut p = Ema::new(0.5);
+        feed(&mut p, &[vec![100, 0], vec![0, 100]]);
+        let f = p.predict().unwrap();
+        assert!((f[0] - 50.0).abs() < 1e-9);
+        assert!((f[1] - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_mean_averages_and_slides() {
+        let mut p = WindowMean::new(2);
+        feed(&mut p, &[vec![0], vec![10], vec![20]]);
+        // Window holds [10, 20].
+        assert!((p.predict().unwrap()[0] - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_trend_matches_ramps_exactly() {
+        // y = 10 + 5t per expert 0, y = 100 - 2t per expert 1.
+        let mut p = LinearTrend::new(6);
+        for t in 0..5u64 {
+            p.observe(&[10 + 5 * t, 100 - 2 * t]);
+        }
+        let f = p.predict().unwrap();
+        assert!((f[0] - 35.0).abs() < 1e-9, "ramp up: {}", f[0]);
+        assert!((f[1] - 90.0).abs() < 1e-9, "ramp down: {}", f[1]);
+    }
+
+    #[test]
+    fn linear_trend_clamps_negative_forecasts() {
+        let mut p = LinearTrend::new(4);
+        for t in 0..4u64 {
+            p.observe(&[30u64.saturating_sub(10 * t)]);
+        }
+        // Extrapolation would be negative; counts cannot be.
+        assert!(p.predict().unwrap()[0] >= 0.0);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        for mut p in family(0.5, 3) {
+            p.observe(&[1, 2, 3]);
+            assert!(p.predict().is_some());
+            p.reset();
+            assert!(p.predict().is_none(), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in PredictorKind::family() {
+            assert_eq!(PredictorKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(PredictorKind::from_name("auto"), Some(PredictorKind::Auto));
+        assert_eq!(PredictorKind::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,219 @@
+//! Bounded trace store: a ring buffer of per-iteration, per-layer load
+//! matrices — the training-statistics history every prophet component
+//! reads.  Persists via the existing `workload::trace` text format, so
+//! stored history interoperates with `pro-prophet trace`, the simulator
+//! and the benches.
+
+use crate::moe::LoadMatrix;
+use crate::workload::Trace;
+use std::collections::VecDeque;
+use std::path::Path;
+
+/// Ring buffer of the last `capacity` iterations of per-layer gating
+/// statistics.  Dimensions are locked in by the first pushed iteration.
+#[derive(Clone, Debug)]
+pub struct TraceStore {
+    capacity: usize,
+    n_layers: usize,
+    n_devices: usize,
+    n_experts: usize,
+    /// iterations[i][l] = layer l's load matrix, oldest first.
+    iterations: VecDeque<Vec<LoadMatrix>>,
+    /// Lifetime iterations pushed (including evicted ones).
+    total_pushed: usize,
+}
+
+impl TraceStore {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "store capacity must be >= 1");
+        TraceStore {
+            capacity,
+            n_layers: 0,
+            n_devices: 0,
+            n_experts: 0,
+            iterations: VecDeque::with_capacity(capacity),
+            total_pushed: 0,
+        }
+    }
+
+    /// Record one iteration, evicting the oldest when full.  The first
+    /// push fixes (layers, devices, experts); later pushes must match.
+    pub fn push(&mut self, layers: Vec<LoadMatrix>) {
+        assert!(!layers.is_empty(), "iteration must contain >= 1 layer");
+        if self.total_pushed == 0 {
+            self.n_layers = layers.len();
+            self.n_devices = layers[0].n_devices();
+            self.n_experts = layers[0].n_experts();
+        }
+        assert_eq!(layers.len(), self.n_layers, "layer count changed");
+        for w in &layers {
+            assert_eq!(w.n_devices(), self.n_devices, "device count changed");
+            assert_eq!(w.n_experts(), self.n_experts, "expert count changed");
+        }
+        if self.iterations.len() == self.capacity {
+            self.iterations.pop_front();
+        }
+        self.iterations.push_back(layers);
+        self.total_pushed += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.iterations.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.iterations.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn total_pushed(&self) -> usize {
+        self.total_pushed
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Most recent iteration (all layers).
+    pub fn latest(&self) -> Option<&[LoadMatrix]> {
+        self.iterations.back().map(Vec::as_slice)
+    }
+
+    /// Most recent load matrix of one layer.
+    pub fn latest_layer(&self, layer: usize) -> Option<&LoadMatrix> {
+        self.iterations.back().and_then(|it| it.get(layer))
+    }
+
+    /// One layer's history, oldest first.
+    pub fn layer_history(&self, layer: usize) -> Vec<&LoadMatrix> {
+        self.iterations.iter().filter_map(|it| it.get(layer)).collect()
+    }
+
+    /// One layer's distribution history (token counts per expert), oldest
+    /// first — the predictor family's training stream.
+    pub fn distributions(&self, layer: usize) -> Vec<Vec<u64>> {
+        self.iterations
+            .iter()
+            .filter_map(|it| it.get(layer))
+            .map(LoadMatrix::distribution)
+            .collect()
+    }
+
+    /// Snapshot the buffered history as a [`Trace`] (for persistence or
+    /// replay through the simulator).
+    pub fn to_trace(&self) -> Trace {
+        let mut t = Trace::new(self.n_layers, self.n_devices, self.n_experts);
+        for layers in &self.iterations {
+            t.push(layers.clone());
+        }
+        t
+    }
+
+    /// Build a store from a trace, keeping only the newest `capacity`
+    /// iterations (the ring-buffer semantics applied retroactively).
+    pub fn from_trace(capacity: usize, trace: &Trace) -> TraceStore {
+        let mut store = TraceStore::new(capacity);
+        let skip = trace.len().saturating_sub(capacity);
+        for layers in trace.iterations.iter().skip(skip) {
+            store.push(layers.clone());
+        }
+        // Dimension metadata survives even for an empty trace.
+        if store.total_pushed == 0 {
+            store.n_layers = trace.n_layers;
+            store.n_devices = trace.n_devices;
+            store.n_experts = trace.n_experts;
+        } else {
+            store.total_pushed = trace.len();
+        }
+        store
+    }
+
+    /// Persist to the `workload::trace` v1 text format.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        self.to_trace().save(path)
+    }
+
+    /// Load from a trace file, keeping the newest `capacity` iterations.
+    pub fn load(capacity: usize, path: &Path) -> Result<TraceStore, String> {
+        Ok(Self::from_trace(capacity, &Trace::load(path)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{WorkloadConfig, WorkloadGen};
+
+    fn gen_iterations(n: usize) -> Vec<Vec<LoadMatrix>> {
+        let mut g = WorkloadGen::new(WorkloadConfig::paper_default(2, 4, 4, 1024));
+        (0..n).map(|_| g.next_iteration()).collect()
+    }
+
+    #[test]
+    fn ring_buffer_evicts_oldest() {
+        let mut s = TraceStore::new(3);
+        let its = gen_iterations(5);
+        for it in &its {
+            s.push(it.clone());
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.total_pushed(), 5);
+        // Oldest two evicted: history starts at iteration 2.
+        assert_eq!(s.layer_history(0)[0], &its[2][0]);
+        assert_eq!(s.latest_layer(1), Some(&its[4][1]));
+        assert_eq!(s.distributions(0).len(), 3);
+    }
+
+    #[test]
+    fn persistence_roundtrips_via_trace_format() {
+        let mut s = TraceStore::new(8);
+        for it in gen_iterations(4) {
+            s.push(it);
+        }
+        let path = std::env::temp_dir().join("prophet_store_roundtrip.txt");
+        s.save(&path).unwrap();
+        let back = TraceStore::load(8, &path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.len(), 4);
+        assert_eq!(back.to_trace(), s.to_trace());
+    }
+
+    #[test]
+    fn load_respects_capacity() {
+        let mut s = TraceStore::new(16);
+        for it in gen_iterations(6) {
+            s.push(it.clone());
+        }
+        let path = std::env::temp_dir().join("prophet_store_capacity.txt");
+        s.save(&path).unwrap();
+        let back = TraceStore::load(2, &path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.len(), 2);
+        // The kept iterations are the NEWEST two.
+        assert_eq!(
+            back.latest_layer(0).unwrap().distribution(),
+            s.latest_layer(0).unwrap().distribution()
+        );
+    }
+
+    #[test]
+    fn empty_store_accessors() {
+        let s = TraceStore::new(4);
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+        assert!(s.latest().is_none());
+        assert!(s.latest_layer(0).is_none());
+        assert!(s.layer_history(0).is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_change_rejected() {
+        let mut s = TraceStore::new(4);
+        s.push(vec![LoadMatrix::zeros(4, 4)]);
+        s.push(vec![LoadMatrix::zeros(4, 4), LoadMatrix::zeros(4, 4)]);
+    }
+}

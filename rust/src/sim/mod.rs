@@ -16,21 +16,29 @@ use crate::metrics::balance_degree;
 use crate::moe::{LoadMatrix, Placement};
 use crate::perfmodel::PerfModel;
 use crate::planner::{greedy_search, policies, Planner, PlannerConfig};
+use crate::prophet::{Prophet, ProphetConfig};
 use crate::scheduler::{build_blocking, build_blockwise, BlockCosts, LoadBalanceOps};
 use crate::workload::Trace;
 use std::collections::BTreeMap;
 
-/// Pro-Prophet feature switches (the Fig 14 ablation axes).
+/// Pro-Prophet feature switches (the Fig 14 ablation axes plus the
+/// forecasting knobs of the prophet subsystem).
 #[derive(Clone, Debug)]
 pub struct ProphetOptions {
     pub planner: PlannerConfig,
     /// Block-wise overlap scheduling (§V) on/off.
     pub scheduler_on: bool,
+    /// Forecasting subsystem knobs (predictor selection, drift detection).
+    pub prophet: ProphetConfig,
 }
 
 impl Default for ProphetOptions {
     fn default() -> Self {
-        ProphetOptions { planner: PlannerConfig::default(), scheduler_on: true }
+        ProphetOptions {
+            planner: PlannerConfig::default(),
+            scheduler_on: true,
+            prophet: ProphetConfig::default(),
+        }
     }
 }
 
@@ -40,6 +48,7 @@ impl ProphetOptions {
         ProphetOptions {
             planner: PlannerConfig { use_overlap_model: false, ..Default::default() },
             scheduler_on: false,
+            ..Default::default()
         }
     }
 
@@ -49,6 +58,7 @@ impl ProphetOptions {
         ProphetOptions {
             planner: PlannerConfig { use_overlap_model: false, ..Default::default() },
             scheduler_on: true,
+            ..Default::default()
         }
     }
 
@@ -104,6 +114,10 @@ pub struct IterationResult {
     pub balance_after: f64,
     /// Parameter copies moved by Trans this iteration (comm volume proxy).
     pub trans_copies: u64,
+    /// Mean normalized-L1 error of the prophet forecasts this iteration's
+    /// plans were based on (None for non-forecasting policies and for the
+    /// warm-up iteration).
+    pub forecast_error: Option<f64>,
 }
 
 /// Whole-run aggregates.
@@ -111,6 +125,12 @@ pub struct IterationResult {
 pub struct SimReport {
     pub policy: String,
     pub iters: Vec<IterationResult>,
+    /// Greedy searches actually executed (all layers, whole run).
+    pub plans_run: usize,
+    /// Plans served from the placement cache.
+    pub plans_reused: usize,
+    /// Replans forced by prophet drift detection.
+    pub drift_replans: usize,
 }
 
 impl SimReport {
@@ -176,6 +196,17 @@ impl SimReport {
         }
     }
 
+    /// Mean forecast error over the iterations that had a forecast
+    /// (NaN when the policy never forecast anything).
+    pub fn mean_forecast_error(&self) -> f64 {
+        let errs: Vec<f64> = self.iters.iter().filter_map(|i| i.forecast_error).collect();
+        if errs.is_empty() {
+            f64::NAN
+        } else {
+            errs.iter().sum::<f64>() / errs.len() as f64
+        }
+    }
+
     pub fn mean_per_block_time(&self) -> Vec<f64> {
         if self.iters.is_empty() {
             return vec![];
@@ -194,9 +225,12 @@ impl SimReport {
     }
 }
 
-/// Simulate `trace` under `policy`.  Placement decisions for iteration i
-/// use iteration i-1's distributions (the paper's locality-based
-/// prediction); iteration 0 plans on its own distribution.
+/// Simulate `trace` under `policy`.  For Pro-Prophet, placement decisions
+/// for iteration i use the prophet subsystem's forecast built from
+/// iterations 0..i (§V-A: the Plan primitive runs one iteration early on
+/// predicted statistics); iteration 0 plans on its own distribution.
+/// Prophet drift detection invalidates a layer's cached placement, forcing
+/// a replan regardless of the replan interval.
 pub fn simulate(
     model: &ModelSpec,
     cluster: &ClusterSpec,
@@ -207,24 +241,27 @@ pub fn simulate(
     let eng = Engine::new(cluster, &pm);
     let n_layers = trace.n_layers;
 
-    // Per-layer planner state for Pro-Prophet.
+    // Per-layer planner state + the shared forecasting subsystem for
+    // Pro-Prophet.
     let mut planners: Vec<Planner> = match policy {
         Policy::ProProphet(o) => (0..n_layers).map(|_| Planner::new(o.planner.clone())).collect(),
         _ => vec![],
     };
+    let mut prophet: Option<Prophet> = match policy {
+        Policy::ProProphet(o) => Some(Prophet::new(o.prophet.clone(), n_layers)),
+        _ => None,
+    };
 
-    let mut report = SimReport { policy: policy.name(), iters: vec![] };
+    let mut report = SimReport { policy: policy.name(), ..Default::default() };
 
-    for (it, layers) in trace.iterations.iter().enumerate() {
+    for layers in trace.iterations.iter() {
         let mut costs: Vec<BlockCosts> = Vec::with_capacity(n_layers);
         let mut bal_before = 0.0;
         let mut bal_after = 0.0;
         let mut trans_copies = 0u64;
+        let mut forecast_errs: Vec<f64> = Vec::new();
 
         for (l, w) in layers.iter().enumerate() {
-            // Locality: plan from the previous iteration's observation.
-            let w_plan: &LoadMatrix = if it > 0 { &trace.iterations[it - 1][l] } else { w };
-
             let (placement, plan_cost) = match policy {
                 Policy::DeepspeedMoe => {
                     (Placement::identity(w.n_experts(), w.n_devices()), 0.0)
@@ -240,6 +277,11 @@ pub fn simulate(
                     (policies::top_k_to_all(w, *k), 0.0)
                 }
                 Policy::ProProphet(_) => {
+                    // Plan on the prophet's forecast of THIS iteration
+                    // (available from iteration 1 on); warm up on the
+                    // observed matrix.
+                    let forecast = prophet.as_ref().and_then(|p| p.forecast_matrix(l));
+                    let w_plan: &LoadMatrix = forecast.as_ref().unwrap_or(w);
                     let planner = &mut planners[l];
                     let before = planner.plans_run;
                     let p = planner.plan(w_plan, &pm);
@@ -247,6 +289,20 @@ pub fn simulate(
                     (p, cost)
                 }
             };
+
+            // Feed the ACTUAL gating result to the prophet: scores the
+            // outstanding forecast, advances the history, and runs drift
+            // detection for the next iteration's plan.
+            if let Some(prophet) = prophet.as_mut() {
+                let obs = prophet.observe_layer(l, w);
+                if let Some(e) = obs.forecast_error {
+                    forecast_errs.push(e);
+                }
+                if obs.drift {
+                    planners[l].invalidate();
+                    report.drift_replans += 1;
+                }
+            }
 
             let routed_before = w.route_identity();
             let routed_after = w.route(&placement);
@@ -292,7 +348,25 @@ pub fn simulate(
             balance_before: bal_before,
             balance_after: bal_after,
             trans_copies,
+            forecast_error: if forecast_errs.is_empty() {
+                None
+            } else {
+                Some(forecast_errs.iter().sum::<f64>() / forecast_errs.len() as f64)
+            },
         });
+    }
+
+    // Whole-run planning totals.
+    match policy {
+        Policy::ProProphet(_) => {
+            report.plans_run = planners.iter().map(|p| p.plans_run).sum();
+            report.plans_reused = planners.iter().map(|p| p.plans_reused).sum();
+        }
+        Policy::FasterMoe => {
+            // Pays its shadowing search for every layer of every iteration.
+            report.plans_run = trace.len() * n_layers;
+        }
+        Policy::DeepspeedMoe | Policy::TopK(_) => {}
     }
     report
 }
@@ -313,7 +387,7 @@ pub fn single_layer_times(
         build_blocking(&costs, LoadBalanceOps::None).total_time()
     };
     let (placement, overlap) = match policy {
-        Policy::DeepspeedMoe => (ident.clone(), false),
+        Policy::DeepspeedMoe => (ident, false),
         Policy::FasterMoe => (policies::fastermoe_shadowing(w, &pm), false),
         Policy::TopK(k) => (policies::top_k_to_all(w, *k), false),
         Policy::ProProphet(o) => (
@@ -441,6 +515,53 @@ mod tests {
             let sum: f64 = it.per_block_time.iter().sum();
             assert!((sum - it.time).abs() < 1e-9 * it.time.max(1.0));
         }
+    }
+
+    #[test]
+    fn prophet_reports_forecast_and_replan_metrics() {
+        let (m, c, t) = setup();
+        let r = simulate(&m, &c, &t, &Policy::ProProphet(ProphetOptions::full()));
+        // Warm-up iteration has no forecast to score; later ones do.
+        assert!(r.iters[0].forecast_error.is_none());
+        assert!(r.iters.iter().skip(1).all(|i| i.forecast_error.is_some()));
+        assert!(
+            r.mean_forecast_error() < 0.3,
+            "forecast error {} too large for a high-locality trace",
+            r.mean_forecast_error()
+        );
+        // Every layer of every iteration was either planned or reused.
+        assert_eq!(r.plans_run + r.plans_reused, 6 * t.n_layers);
+        let ds = simulate(&m, &c, &t, &Policy::DeepspeedMoe);
+        assert_eq!(ds.plans_run, 0);
+        assert!(ds.mean_forecast_error().is_nan());
+        let fm = simulate(&m, &c, &t, &Policy::FasterMoe);
+        assert_eq!(fm.plans_run, 6 * t.n_layers);
+    }
+
+    #[test]
+    fn drift_forces_replans_under_lazy_replanning() {
+        // 1-layer hand-built trace: stable regime, violent shift, stable
+        // again.  With a huge replan interval only drift detection can
+        // trigger the second plan.
+        let stable = LoadMatrix::from_rows(vec![vec![600, 100, 100, 224]; 4]);
+        let shifted = LoadMatrix::from_rows(vec![vec![50, 100, 100, 774]; 4]);
+        let mut trace = Trace::new(1, 4, 4);
+        for _ in 0..6 {
+            trace.push(vec![stable.clone()]);
+        }
+        for _ in 0..6 {
+            trace.push(vec![shifted.clone()]);
+        }
+        let model = ModelSpec::moe_gpt_s(4, 1, 4096);
+        let cluster = ClusterSpec::hpwnv(1);
+        let opts = ProphetOptions {
+            planner: PlannerConfig { replan_interval: 1000, ..Default::default() },
+            ..Default::default()
+        };
+        let r = simulate(&model, &cluster, &trace, &Policy::ProProphet(opts));
+        assert_eq!(r.drift_replans, 1, "exactly one regime change");
+        assert_eq!(r.plans_run, 2, "initial plan + drift-forced replan");
+        assert_eq!(r.plans_reused, 10);
     }
 
     #[test]

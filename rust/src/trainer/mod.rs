@@ -3,11 +3,13 @@
 //! One step = build a token batch from the synthetic corpus, execute the
 //! fused fwd+bwd+Adam HLO, carry the (params, m, v) literals to the next
 //! step, and harvest the loss plus the per-layer expert-load histograms —
-//! the real "input distributions" that feed the Pro-Prophet planner and
-//! the cluster simulator (see examples/train_moe.rs).
+//! the real "input distributions" that feed the [`crate::prophet`]
+//! subsystem (history, forecasts, drift) and through it the Pro-Prophet
+//! planner and the cluster simulator (see examples/train_moe.rs).
 
 use crate::config::TrainingConfig;
 use crate::moe::LoadMatrix;
+use crate::prophet::{Prophet, ProphetConfig};
 use crate::runtime::{self, Artifact, Manifest, Runtime};
 use crate::util::json::{self, Json};
 use crate::workload::corpus::Corpus;
@@ -22,6 +24,11 @@ pub struct StepResult {
     /// Per-layer expert load histograms (n_layers x n_experts).
     pub loads: Vec<Vec<u64>>,
     pub seconds: f64,
+    /// Mean normalized-L1 error of the prophet forecasts this step's
+    /// loads were compared against (None on the first step).
+    pub forecast_error: Option<f64>,
+    /// Layers whose drift detector fired this step.
+    pub drift_layers: usize,
 }
 
 /// Whole-run record.
@@ -32,6 +39,8 @@ pub struct TrainReport {
     pub step_seconds: Vec<f64>,
     /// loads[step][layer][expert].
     pub loads: Vec<Vec<Vec<u64>>>,
+    /// Per-step mean forecast error (parallel to `losses` from step 2 on).
+    pub forecast_errors: Vec<f64>,
 }
 
 impl TrainReport {
@@ -60,6 +69,14 @@ impl TrainReport {
         self.step_seconds.iter().sum::<f64>() / self.step_seconds.len() as f64
     }
 
+    /// Mean prophet forecast error over the run (NaN before any forecast).
+    pub fn mean_forecast_error(&self) -> f64 {
+        if self.forecast_errors.is_empty() {
+            return f64::NAN;
+        }
+        self.forecast_errors.iter().sum::<f64>() / self.forecast_errors.len() as f64
+    }
+
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("preset", json::s(&self.preset)),
@@ -70,6 +87,7 @@ impl TrainReport {
             ),
             ("step_seconds", json::num_arr(&self.step_seconds)),
             ("mean_step_seconds", json::num(self.mean_step_seconds())),
+            ("forecast_errors", json::num_arr(&self.forecast_errors)),
         ])
     }
 
@@ -100,10 +118,8 @@ impl TrainReport {
 pub fn spread_histogram(hist: &[u64], n_devices: usize) -> LoadMatrix {
     let mut w = LoadMatrix::zeros(n_devices, hist.len());
     for (e, &count) in hist.iter().enumerate() {
-        let base = count / n_devices as u64;
-        let rem = (count % n_devices as u64) as usize;
         for d in 0..n_devices {
-            w.set(d, e, base + u64::from(d < rem));
+            w.set(d, e, crate::moe::even_split(count, n_devices, d));
         }
     }
     w
@@ -118,6 +134,9 @@ pub struct Trainer {
     state: Vec<xla::Literal>,
     corpus: Corpus,
     step: usize,
+    /// The forecasting subsystem fed by every step's observed gate loads
+    /// (spread over the manifest's expert-parallel virtual devices).
+    prophet: Prophet,
 }
 
 impl Trainer {
@@ -140,11 +159,17 @@ impl Trainer {
         }
         let train_step = rt.load_tagged(&manifest, "train_step")?;
         let corpus = Corpus::new(manifest.vocab, 4, cfg.seed);
-        Ok(Trainer { manifest, cfg, train_step, state, corpus, step: 0 })
+        let prophet = Prophet::new(ProphetConfig::default(), manifest.n_layers.max(1));
+        Ok(Trainer { manifest, cfg, train_step, state, corpus, step: 0, prophet })
     }
 
     pub fn step_count(&self) -> usize {
         self.step
+    }
+
+    /// The forecasting subsystem (history, per-layer forecasts, drift).
+    pub fn prophet(&self) -> &Prophet {
+        &self.prophet
     }
 
     /// Execute one fused train step.
@@ -188,11 +213,33 @@ impl Trainer {
             })
             .collect();
 
+        // Feed the observed distributions to the prophet: each layer's
+        // histogram is spread over the EP virtual devices (one expert per
+        // device, the paper's layout) and scored against the outstanding
+        // forecast.
+        let n_devices = man.n_experts.max(1);
+        let mut errs: Vec<f64> = Vec::new();
+        let mut drift_layers = 0usize;
+        for (l, hist) in loads.iter().enumerate() {
+            let w = spread_histogram(hist, n_devices);
+            let obs = self.prophet.observe_layer(l, &w);
+            if let Some(e) = obs.forecast_error {
+                errs.push(e);
+            }
+            drift_layers += usize::from(obs.drift);
+        }
+
         Ok(StepResult {
             step: self.step,
             loss,
             loads,
             seconds: start.elapsed().as_secs_f64(),
+            forecast_error: if errs.is_empty() {
+                None
+            } else {
+                Some(errs.iter().sum::<f64>() / errs.len() as f64)
+            },
+            drift_layers,
         })
     }
 
@@ -211,6 +258,9 @@ impl Trainer {
             on_step(&r);
             report.losses.push(r.loss);
             report.step_seconds.push(r.seconds);
+            if let Some(e) = r.forecast_error {
+                report.forecast_errors.push(e);
+            }
             report.loads.push(r.loads);
         }
         Ok(report)
@@ -252,6 +302,7 @@ mod tests {
             losses: vec![4.0, 3.0, 2.0, 1.0],
             step_seconds: vec![0.1, 0.2, 0.3, 0.4],
             loads: vec![vec![vec![4, 0]]; 4],
+            ..Default::default()
         };
         assert_eq!(r.initial_loss(), 4.0);
         assert_eq!(r.final_loss(), 1.0);
@@ -263,12 +314,21 @@ mod tests {
     }
 
     #[test]
+    fn forecast_error_stats() {
+        let mut r = TrainReport::default();
+        assert!(r.mean_forecast_error().is_nan());
+        r.forecast_errors = vec![0.1, 0.3];
+        assert!((r.mean_forecast_error() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
     fn report_json_parses() {
         let r = TrainReport {
             preset: "t".into(),
             losses: vec![1.5],
             step_seconds: vec![0.01],
             loads: vec![],
+            ..Default::default()
         };
         let j = r.to_json().to_string();
         assert!(crate::util::json::parse(&j).is_ok());

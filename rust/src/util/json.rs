@@ -62,6 +62,9 @@ impl Json {
     }
 
     /// Serialize (stable key order — Obj is a BTreeMap).
+    /// Kept inherent (not `Display`) because callers treat it as the
+    /// one-and-only wire format, not a human rendering.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

@@ -38,6 +38,7 @@ fn full_experiment_from_toml_runs() {
     let opts = ProphetOptions {
         planner: exp.planner.clone(),
         scheduler_on: true,
+        prophet: exp.prophet.clone(),
     };
     let r = simulate(&exp.model, &exp.cluster, &trace, &Policy::ProProphet(opts));
     assert_eq!(r.iters.len(), 5);

@@ -1,0 +1,241 @@
+//! Offline stub of the `xla` (xla_extension) PJRT bindings.
+//!
+//! The real bindings need the xla_extension C++ archive, which is not
+//! available in the offline build environment.  This stub keeps the crate
+//! API-compatible with every call site in `pro_prophet`:
+//!
+//! * [`Literal`] is FULLY functional host-side (typed storage + shape) —
+//!   the runtime's literal construction/extraction helpers and their unit
+//!   tests run for real.
+//! * The PJRT execution surface ([`PjRtClient::compile`],
+//!   [`HloModuleProto::from_text_file`], [`PjRtLoadedExecutable::execute`])
+//!   returns a clear "PJRT unavailable" error at run time.  Callers
+//!   already gate on artifact availability, so tests skip rather than
+//!   fail.
+//!
+//! Swapping the real bindings back in is a one-line change in the root
+//! Cargo.toml (point the `xla` dependency at the registry crate).
+
+use std::borrow::Borrow;
+use std::fmt;
+
+const STUB_MSG: &str =
+    "PJRT unavailable: built against the offline xla stub (vendor/xla)";
+
+/// Error type matching the `Display` usage of the real crate's error.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// --- literals ---------------------------------------------------------------
+
+/// Typed element storage for [`Literal`].  Public only because it appears
+/// in the [`NativeType`] trait signature; not part of the stable surface.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + 'static {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn slice(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn slice(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::F32(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn slice(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::I32(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+/// A host tensor: typed flat storage plus a shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal { dims: vec![], data: T::wrap(vec![x]) }
+    }
+
+    /// Reinterpret the flat data under a new shape.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: shape {:?} wants {want} elements, literal has {}",
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Flat element vector (errors on element-type mismatch).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::slice(&self.data)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// First element (errors on type mismatch or empty literal).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::slice(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error("literal is empty or type mismatch".into()))
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Decompose a tuple literal.  Stub literals are never tuples (they
+    /// only come from [`PjRtLoadedExecutable::execute`], which is
+    /// unavailable), so this is always an error.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+// --- PJRT surface (unavailable in the stub) ---------------------------------
+
+/// Parsed HLO module handle (opaque in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error(format!("{STUB_MSG}; cannot parse {path}")))
+    }
+}
+
+/// Computation handle (opaque in the stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Host "device" client.  Construction succeeds (so `info`-style probes
+/// can report the platform); compilation and execution do not.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "host-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+/// Device buffer handle (never constructed by the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_scalar_and_i32() {
+        assert_eq!(Literal::scalar(7i32).get_first_element::<i32>().unwrap(), 7);
+        assert_eq!(Literal::scalar(2.5f32).get_first_element::<f32>().unwrap(), 2.5);
+        let l = Literal::vec1(&[5i32, -3]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![5, -3]);
+    }
+
+    #[test]
+    fn pjrt_surface_is_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "host-stub");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::scalar(0i32).to_tuple().is_err());
+    }
+}
