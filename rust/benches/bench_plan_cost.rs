@@ -1,0 +1,93 @@
+//! Plan-primitive throughput: old (full re-route per candidate) vs new
+//! (incremental RoutingState) greedy search, in plans/sec.
+//!
+//! The paper's premise is that Plan is cheap enough to run online every
+//! iteration (Table I "Search": low milliseconds); this bench tracks that
+//! cost across cluster scales and seeds the repo's perf trajectory.
+//! Results go to the human-readable table below, bench_results/
+//! plan_cost.json, and the machine-readable BENCH_plan.json at the repo
+//! root (consumed by EXPERIMENTS.md §Perf and CI trend tooling).
+//!
+//! Every combo is equivalence-gated before timing: the incremental search
+//! must return the same placement and bit-identical t_est as the
+//! reference implementation.
+
+use pro_prophet::benchkit::{self, bench_fn};
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::metrics::write_result;
+use pro_prophet::perfmodel::PerfModel;
+use pro_prophet::planner::{
+    greedy_search_reference, greedy_search_with, PlannerConfig, SearchScratch,
+};
+use pro_prophet::util::json::{self, Json};
+use pro_prophet::workload::{WorkloadConfig, WorkloadGen};
+
+fn main() {
+    benchkit::header("plan_cost", "greedy-search plans/sec, old vs incremental");
+    // The acceptance scenario plans EVERY iteration (replan_interval = 1);
+    // the interval only gates how often Planner calls the search, so the
+    // per-search cost measured here IS the per-iteration planning cost.
+    let cfg = PlannerConfig { replan_interval: 1, ..Default::default() };
+    let mut rows: Vec<Json> = Vec::new();
+
+    for (d, e) in [(8usize, 8usize), (16, 32), (64, 64), (128, 256)] {
+        let tokens = 1024 * d as u64;
+        let model = ModelSpec::moe_gpt_m(e, 1, tokens);
+        let cluster = ClusterSpec::hpwnv(d.div_ceil(4));
+        assert_eq!(cluster.n_devices(), d);
+        let pm = PerfModel::new(&model, &cluster);
+        let mut gen = WorkloadGen::new(WorkloadConfig::paper_default(1, e, d, tokens));
+        let w = gen.next_iteration().pop().unwrap();
+
+        // Equivalence gate before timing anything.
+        let mut scratch = SearchScratch::new();
+        let new = greedy_search_with(&w, &pm, &cfg, &mut scratch);
+        let old = greedy_search_reference(&w, &pm, &cfg);
+        assert_eq!(new.placement, old.placement, "D={d} E={e}: placements diverged");
+        assert_eq!(
+            new.t_est.to_bits(),
+            old.t_est.to_bits(),
+            "D={d} E={e}: t_est diverged"
+        );
+
+        let r_old = bench_fn(&format!("greedy old D={d} E={e}"), 250.0, || {
+            std::hint::black_box(greedy_search_reference(&w, &pm, &cfg));
+        });
+        println!("{}", r_old.line());
+        let r_new = bench_fn(&format!("greedy new D={d} E={e}"), 250.0, || {
+            std::hint::black_box(greedy_search_with(&w, &pm, &cfg, &mut scratch));
+        });
+        println!("{}", r_new.line());
+
+        let pps_old = 1.0 / r_old.mean_s.max(1e-12);
+        let pps_new = 1.0 / r_new.mean_s.max(1e-12);
+        let speedup = pps_new / pps_old.max(1e-12);
+        println!(
+            "  -> D={d:<3} E={e:<3}  {pps_old:>10.0} -> {pps_new:>10.0} plans/s  ({speedup:.2}x)\n"
+        );
+        rows.push(json::obj(vec![
+            ("devices", json::num(d as f64)),
+            ("experts", json::num(e as f64)),
+            ("plans_per_sec_old", json::num(pps_old)),
+            ("plans_per_sec_new", json::num(pps_new)),
+            ("speedup", json::num(speedup)),
+            ("mean_s_old", json::num(r_old.mean_s)),
+            ("mean_s_new", json::num(r_new.mean_s)),
+            ("experts_selected", json::num(new.selected.len() as f64)),
+            ("candidates_evaluated", json::num(new.evaluated as f64)),
+        ]));
+    }
+
+    let doc = json::obj(vec![
+        ("bench", json::s("plan_cost")),
+        ("unit", json::s("plans_per_sec")),
+        ("replan_interval", json::num(1.0)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = write_result("plan_cost", &doc).unwrap();
+    println!("-> {}", path.display());
+    // Machine-readable trajectory seed at the repo root.
+    std::fs::write("BENCH_plan.json", doc.to_string()).unwrap();
+    println!("-> BENCH_plan.json");
+}

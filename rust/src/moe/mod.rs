@@ -11,9 +11,11 @@
 
 pub mod memory;
 pub mod placement;
+pub mod routing;
 
 pub use memory::MemoryModel;
 pub use placement::Placement;
+pub use routing::RoutingState;
 
 /// Even integer split: the share of `total` that part `idx` of `parts`
 /// receives (remainder round-robined to the lowest indices, so the parts
@@ -24,18 +26,47 @@ pub fn even_split(total: u64, parts: usize, idx: usize) -> u64 {
     total / parts as u64 + u64::from(idx < (total % parts as u64) as usize)
 }
 
+/// Lazily computed column sums of a [`LoadMatrix`] (the planner's greedy
+/// search reads `expert_load`/`total_tokens` on every selection step, and
+/// the strided column walks dominated its cost at scale — see
+/// EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug)]
+struct SumCache {
+    /// Tokens per expert (length E).
+    distribution: Vec<u64>,
+    total_tokens: u64,
+}
+
 /// Tokens routed from each source device to each expert in one MoE layer:
 /// `w[d][e]` = tokens resident on device `d` whose gate picked expert `e`.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct LoadMatrix {
     n_devices: usize,
     n_experts: usize,
     w: Vec<u64>, // row-major [d][e]
+    /// Column-sum cache; MUST be invalidated by every mutation (`set`,
+    /// `add`) or stale sums leak into planning decisions.
+    sums: std::sync::OnceLock<SumCache>,
+}
+
+/// Equality is defined by shape and contents only — the sum cache is a
+/// derived quantity and never participates.
+impl PartialEq for LoadMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.n_devices == other.n_devices
+            && self.n_experts == other.n_experts
+            && self.w == other.w
+    }
 }
 
 impl LoadMatrix {
     pub fn zeros(n_devices: usize, n_experts: usize) -> Self {
-        LoadMatrix { n_devices, n_experts, w: vec![0; n_devices * n_experts] }
+        LoadMatrix {
+            n_devices,
+            n_experts,
+            w: vec![0; n_devices * n_experts],
+            sums: std::sync::OnceLock::new(),
+        }
     }
 
     pub fn from_rows(rows: Vec<Vec<u64>>) -> Self {
@@ -46,7 +77,7 @@ impl LoadMatrix {
             assert_eq!(r.len(), n_experts, "ragged load matrix");
             w.extend_from_slice(r);
         }
-        LoadMatrix { n_devices, n_experts, w }
+        LoadMatrix { n_devices, n_experts, w, sums: std::sync::OnceLock::new() }
     }
 
     pub fn n_devices(&self) -> usize {
@@ -65,26 +96,51 @@ impl LoadMatrix {
     #[inline]
     pub fn set(&mut self, device: usize, expert: usize, v: u64) {
         self.w[device * self.n_experts + expert] = v;
+        let _ = self.sums.take();
     }
 
     #[inline]
     pub fn add(&mut self, device: usize, expert: usize, v: u64) {
         self.w[device * self.n_experts + expert] += v;
+        let _ = self.sums.take();
+    }
+
+    /// Column sums, computed once and cached until the next mutation.
+    fn sums(&self) -> &SumCache {
+        self.sums.get_or_init(|| {
+            let mut distribution = vec![0u64; self.n_experts];
+            let mut total = 0u64;
+            for d in 0..self.n_devices {
+                let row = &self.w[d * self.n_experts..(d + 1) * self.n_experts];
+                for (acc, &v) in distribution.iter_mut().zip(row) {
+                    *acc += v;
+                }
+            }
+            for &v in &distribution {
+                total += v;
+            }
+            SumCache { distribution, total_tokens: total }
+        })
     }
 
     /// Total tokens routed to `expert` from all devices — the "input
     /// distribution" entry the paper profiles (Fig 3/4).
     pub fn expert_load(&self, expert: usize) -> u64 {
-        (0..self.n_devices).map(|d| self.get(d, expert)).sum()
+        self.sums().distribution[expert]
     }
 
     /// The full input distribution (length E).
     pub fn distribution(&self) -> Vec<u64> {
-        (0..self.n_experts).map(|e| self.expert_load(e)).collect()
+        self.sums().distribution.clone()
+    }
+
+    /// Borrowed view of the input distribution (no clone).
+    pub fn distribution_slice(&self) -> &[u64] {
+        &self.sums().distribution
     }
 
     pub fn total_tokens(&self) -> u64 {
-        self.w.iter().sum()
+        self.sums().total_tokens
     }
 
     /// Tokens resident on a device (its DP shard contribution).
@@ -107,8 +163,10 @@ impl LoadMatrix {
     /// computed (H) and received (R) token counts of the performance
     /// model.
     pub fn route(&self, placement: &Placement) -> RoutedLoad {
-        // Skips the traffic-matrix allocation (the greedy search calls
-        // this once per candidate; see EXPERIMENTS.md §Perf).
+        // Skips the traffic-matrix allocation.  NOTE: the planner's hot
+        // path no longer calls this per candidate — the greedy search
+        // replays deltas on [`RoutingState`], which is equivalence-gated
+        // against this function (see EXPERIMENTS.md §Perf).
         self.route_impl(placement, false).0
     }
 
@@ -222,6 +280,10 @@ impl RoutedLoad {
         self.h.iter().copied().min().unwrap_or(0)
     }
 
+    pub fn max_r(&self) -> u64 {
+        self.r.iter().copied().max().unwrap_or(0)
+    }
+
     /// The paper's balance condition (Eq 7):
     /// max(H) - min(H) < alpha * I / E.
     pub fn is_balanced(&self, alpha: f64, total_tokens: u64, n_experts: usize) -> bool {
@@ -311,5 +373,35 @@ mod tests {
     #[should_panic]
     fn ragged_rows_panic() {
         LoadMatrix::from_rows(vec![vec![1, 2], vec![3]]);
+    }
+
+    #[test]
+    fn mutation_invalidates_cached_sums() {
+        // Regression: the column-sum cache must never survive a `set`/`add`
+        // — a stale distribution would silently misdirect the planner.
+        let mut w = fig6();
+        assert_eq!(w.distribution(), vec![5, 2, 2]); // warm the cache
+        assert_eq!(w.total_tokens(), 9);
+        w.set(0, 1, 10);
+        assert_eq!(w.distribution(), vec![5, 11, 2]);
+        assert_eq!(w.expert_load(1), 11);
+        assert_eq!(w.total_tokens(), 18);
+        let _ = w.distribution_slice(); // warm again
+        w.add(2, 2, 5);
+        assert_eq!(w.distribution_slice(), &[5, 11, 7]);
+        assert_eq!(w.total_tokens(), 23);
+    }
+
+    #[test]
+    fn clones_and_equality_ignore_cache_state() {
+        let mut a = fig6();
+        let b = fig6();
+        assert_eq!(a.total_tokens(), 9); // a cached, b not
+        assert_eq!(a, b);
+        let c = a.clone(); // clone carries the (valid) cache
+        assert_eq!(c.distribution(), b.distribution());
+        a.set(0, 0, 0);
+        assert_ne!(a, b);
+        assert_eq!(c, b, "clone must be unaffected by the original's mutation");
     }
 }

@@ -51,14 +51,39 @@ impl Placement {
 
     /// Replicate `expert` onto all devices EXCEPT `excluded` (the paper's
     /// greedy step: skip the n devices with the fewest inputs for it).
-    /// The home device is always retained.
+    /// The home device is always retained.  Mutates the existing replica
+    /// set in place — no allocation on the planner's hot path.
     pub fn replicate_except(&mut self, expert: usize, excluded: &[usize]) {
-        let mut set = BitSet::full(self.n_devices);
+        let home = self.home(expert);
+        let set = &mut self.replicas[expert];
+        set.insert_all();
         for &d in excluded {
             set.remove(d);
         }
-        set.insert(self.home(expert));
-        self.replicas[expert] = set;
+        set.insert(home);
+    }
+
+    /// Reset to the identity placement, reusing the existing bitsets when
+    /// the shape matches (the incremental router re-inits once per search).
+    pub(crate) fn reset_identity(&mut self, n_experts: usize, n_devices: usize) {
+        if self.n_experts() == n_experts && self.n_devices() == n_devices {
+            for e in 0..n_experts {
+                self.set_replicas(e, [e % n_devices]);
+            }
+        } else {
+            *self = Placement::identity(n_experts, n_devices);
+        }
+    }
+
+    /// Replace `expert`'s replica set with exactly `devices` (in place).
+    /// Used by the incremental router's undo path; the caller is
+    /// responsible for keeping the home replica (see [`Placement::validate`]).
+    pub fn set_replicas(&mut self, expert: usize, devices: impl IntoIterator<Item = usize>) {
+        let set = &mut self.replicas[expert];
+        set.clear();
+        for d in devices {
+            set.insert(d);
+        }
     }
 
     /// Experts with more than one replica (the paper's `s` = |selected|).
@@ -136,6 +161,18 @@ mod tests {
         assert_eq!(p.replicas(1).iter().collect::<Vec<_>>(), vec![0, 1, 2]);
         assert_eq!(p.transferred_experts(), vec![1]);
         assert_eq!(p.transfer_copies(), 2);
+    }
+
+    #[test]
+    fn set_replicas_replaces_exactly() {
+        let mut p = Placement::identity(4, 4);
+        p.replicate_to_all(1);
+        p.set_replicas(1, [1usize, 3]);
+        assert_eq!(p.replicas(1).iter().collect::<Vec<_>>(), vec![1, 3]);
+        assert!(p.validate().is_ok());
+        // Restoring the identity singleton round-trips.
+        p.set_replicas(1, [1usize]);
+        assert!(p.is_identity());
     }
 
     #[test]

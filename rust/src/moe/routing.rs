@@ -1,0 +1,385 @@
+//! Incremental routing engine for the Plan primitive.
+//!
+//! The greedy search (planner Algorithm 1) evaluates one candidate
+//! placement per selected expert, and each evaluation used to call
+//! [`LoadMatrix::route`] from scratch: allocate H/R/sent, walk all D·E
+//! cells, materialize every expert's replica list, and sort the remote
+//! batch list — per candidate.  [`RoutingState`] hoists everything that
+//! does not depend on the candidate out of the loop:
+//!
+//! * the batch list `(tokens, src, expert)` is built and sorted **once**
+//!   (its order — heaviest first, then source, then expert — is a fixed
+//!   total order independent of the placement; only *membership* in the
+//!   remote set changes, which is an O(1) bitset probe per batch);
+//! * per-device local sums (`local_h`) and per-expert replica lists are
+//!   maintained **incrementally**: replicating one expert is an O(D) delta
+//!   (`apply_*`), and every delta can be reverted exactly (`undo`);
+//! * all scratch (H/R/sent, the undo log) lives in reusable buffers, so a
+//!   steady-state search performs no heap allocation.
+//!
+//! Equivalence contract: after any sequence of `apply_*`/`undo`,
+//! [`RoutingState::evaluate`] + [`RoutingState::to_routed_load`] produce a
+//! [`RoutedLoad`] **bit-identical** to `w.route(state.placement())` — the
+//! replay processes the surviving remote batches in exactly the order the
+//! full router sorts them into, with identical tie-breaking (least-loaded
+//! replica, ties to the lowest device id).  Enforced by unit tests here
+//! and by `prop_routing_state_matches_full_route` in
+//! `rust/tests/property_tests.rs`; measured in EXPERIMENTS.md §Perf.
+
+use super::{LoadMatrix, Placement, RoutedLoad};
+
+/// Per-device maxima/minima of one evaluation — everything the perf
+/// model's Eq 1–3 need (see `PerfModel::layer_time_sn_from_maxes`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalStats {
+    pub max_h: u64,
+    pub min_h: u64,
+    pub max_r: u64,
+}
+
+/// One applied delta, for the undo log: which expert changed and where its
+/// previous replica list starts in the pooled `undo_devices` buffer.
+#[derive(Clone, Copy, Debug)]
+struct UndoFrame {
+    expert: u32,
+    offset: u32,
+}
+
+/// Incremental routing state (see module docs).
+///
+/// Buffers are reused across `init` calls, so a long-lived instance (e.g.
+/// inside the planner's `SearchScratch`) allocates only while growing to
+/// the largest (D, E) it has seen.
+#[derive(Clone, Debug)]
+pub struct RoutingState {
+    n_devices: usize,
+    n_experts: usize,
+    placement: Placement,
+    /// Ascending device ids per expert (mirrors `placement`'s bitsets;
+    /// kept as flat lists for the least-loaded scan).
+    replica_lists: Vec<Vec<u32>>,
+    /// Pass-1 sums: tokens computed locally per device under `placement`.
+    local_h: Vec<u64>,
+    /// All non-zero (tokens, src, expert) batches, sorted by
+    /// (heaviest, src, expert) — fixed for the lifetime of one `init`.
+    batches: Vec<(u64, u32, u32)>,
+    // Evaluation scratch (valid after `evaluate`).
+    h: Vec<u64>,
+    r: Vec<u64>,
+    sent: Vec<u64>,
+    // Undo machinery: previous replica lists pooled in one flat buffer.
+    undo_log: Vec<UndoFrame>,
+    undo_devices: Vec<u32>,
+}
+
+impl Default for RoutingState {
+    fn default() -> Self {
+        RoutingState {
+            n_devices: 0,
+            n_experts: 0,
+            placement: Placement::identity(0, 0),
+            replica_lists: Vec::new(),
+            local_h: Vec::new(),
+            batches: Vec::new(),
+            h: Vec::new(),
+            r: Vec::new(),
+            sent: Vec::new(),
+            undo_log: Vec::new(),
+            undo_devices: Vec::new(),
+        }
+    }
+}
+
+impl RoutingState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// (Re)attach to a load matrix, starting from the identity placement.
+    /// Every later call must pass the SAME matrix to `apply_*`/`undo`.
+    pub fn init(&mut self, w: &LoadMatrix) {
+        let (d, e) = (w.n_devices(), w.n_experts());
+        self.n_devices = d;
+        self.n_experts = e;
+        self.placement.reset_identity(e, d);
+        self.replica_lists.resize(e, Vec::new());
+        for (x, list) in self.replica_lists.iter_mut().enumerate() {
+            list.clear();
+            list.push((x % d.max(1)) as u32);
+        }
+        self.local_h.clear();
+        self.local_h.resize(d, 0);
+        self.batches.clear();
+        for dev in 0..d {
+            for x in 0..e {
+                let tokens = w.get(dev, x);
+                if tokens == 0 {
+                    continue;
+                }
+                if x % d == dev {
+                    self.local_h[dev] += tokens;
+                } else {
+                    self.batches.push((tokens, dev as u32, x as u32));
+                }
+            }
+        }
+        // Home cells (dev == home(x)) are folded into local_h and kept out
+        // of the batch list: the home replica survives every apply_* and
+        // every undo, so those cells can never become remote.  All other
+        // non-zero cells stay listed — their locality is re-probed against
+        // the live placement on each replay.
+        self.batches
+            .sort_unstable_by_key(|&(n, dev, x)| (std::cmp::Reverse(n), dev, x));
+        self.h.clear();
+        self.h.resize(d, 0);
+        self.r.clear();
+        self.r.resize(d, 0);
+        self.sent.clear();
+        self.sent.resize(d, 0);
+        self.undo_log.clear();
+        self.undo_devices.clear();
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// Number of deltas currently applied (undo depth).
+    pub fn depth(&self) -> usize {
+        self.undo_log.len()
+    }
+
+    /// Per-device computed tokens of the LAST `evaluate` call.
+    pub fn h(&self) -> &[u64] {
+        &self.h
+    }
+
+    /// Snapshot the last evaluation as an owned [`RoutedLoad`]
+    /// (bit-identical to `w.route(self.placement())`).
+    pub fn to_routed_load(&self) -> RoutedLoad {
+        RoutedLoad { h: self.h.clone(), r: self.r.clone(), sent: self.sent.clone() }
+    }
+
+    // --- deltas -------------------------------------------------------------
+
+    /// Record `expert`'s current replica list on the undo log; returns the
+    /// list's start offset in the pooled buffer.
+    fn snapshot(&mut self, expert: usize) -> usize {
+        let offset = self.undo_devices.len();
+        self.undo_devices.extend_from_slice(&self.replica_lists[expert]);
+        self.undo_log.push(UndoFrame { expert: expert as u32, offset: offset as u32 });
+        offset
+    }
+
+    /// Refresh `local_h` and the replica list after `placement`'s set for
+    /// `expert` changed from `old` (device list) to its current value.
+    fn resync_expert(&mut self, w: &LoadMatrix, expert: usize, old_start: usize) {
+        for i in old_start..self.undo_devices.len() {
+            let dev = self.undo_devices[i] as usize;
+            self.local_h[dev] -= w.get(dev, expert);
+        }
+        let list = &mut self.replica_lists[expert];
+        list.clear();
+        for dev in self.placement.replicas(expert).iter() {
+            self.local_h[dev] += w.get(dev, expert);
+            list.push(dev as u32);
+        }
+    }
+
+    /// Delta form of [`Placement::replicate_except`]: replicate `expert`
+    /// everywhere but `excluded` (home retained).  O(D).
+    pub fn apply_replicate_except(&mut self, w: &LoadMatrix, expert: usize, excluded: &[usize]) {
+        self.debug_check(w);
+        let old_start = self.snapshot(expert);
+        self.placement.replicate_except(expert, excluded);
+        self.resync_expert(w, expert, old_start);
+    }
+
+    /// Delta form of [`Placement::add_replica`].  O(D).
+    pub fn apply_add_replica(&mut self, w: &LoadMatrix, expert: usize, device: usize) {
+        self.debug_check(w);
+        let old_start = self.snapshot(expert);
+        self.placement.add_replica(expert, device);
+        self.resync_expert(w, expert, old_start);
+    }
+
+    /// Delta form of [`Placement::replicate_to_all`].  O(D).
+    pub fn apply_replicate_to_all(&mut self, w: &LoadMatrix, expert: usize) {
+        self.debug_check(w);
+        let old_start = self.snapshot(expert);
+        self.placement.replicate_to_all(expert);
+        self.resync_expert(w, expert, old_start);
+    }
+
+    /// Revert the most recent delta exactly.  O(D).
+    pub fn undo(&mut self, w: &LoadMatrix) {
+        self.debug_check(w);
+        let frame = self.undo_log.pop().expect("undo on an empty delta stack");
+        let expert = frame.expert as usize;
+        let old_start = frame.offset as usize;
+        // Remove the current set's local contributions...
+        for dev in self.placement.replicas(expert).iter() {
+            self.local_h[dev] -= w.get(dev, expert);
+        }
+        // ...restore the recorded set...
+        self.placement.set_replicas(
+            expert,
+            self.undo_devices[old_start..].iter().map(|&d| d as usize),
+        );
+        // ...and re-add its contributions + replica list.
+        let list = &mut self.replica_lists[expert];
+        list.clear();
+        for &dev in &self.undo_devices[old_start..] {
+            self.local_h[dev as usize] += w.get(dev as usize, expert);
+            list.push(dev);
+        }
+        self.undo_devices.truncate(old_start);
+    }
+
+    #[inline]
+    fn debug_check(&self, w: &LoadMatrix) {
+        debug_assert_eq!(w.n_devices(), self.n_devices, "RoutingState fed a different matrix");
+        debug_assert_eq!(w.n_experts(), self.n_experts, "RoutingState fed a different matrix");
+    }
+
+    // --- evaluation ---------------------------------------------------------
+
+    /// Route under the current placement: replay the pre-sorted batch list
+    /// against the incremental local sums.  Allocation-free; O(B) plus the
+    /// least-loaded scans of replicated experts' surviving remote batches.
+    pub fn evaluate(&mut self) -> EvalStats {
+        self.h.copy_from_slice(&self.local_h);
+        self.r.fill(0);
+        self.sent.fill(0);
+        for &(tokens, src, expert) in &self.batches {
+            let (src, expert) = (src as usize, expert as usize);
+            if self.placement.replicas(expert).contains(src) {
+                continue; // became local under the current placement
+            }
+            let list = &self.replica_lists[expert];
+            let target = if list.is_empty() {
+                expert % self.n_devices
+            } else {
+                let mut best = list[0] as usize;
+                for &cand in &list[1..] {
+                    if self.h[cand as usize] < self.h[best] {
+                        best = cand as usize;
+                    }
+                }
+                best
+            };
+            self.h[target] += tokens;
+            if target != src {
+                self.r[target] += tokens;
+                self.sent[src] += tokens;
+            }
+        }
+        EvalStats {
+            max_h: self.h.iter().copied().max().unwrap_or(0),
+            min_h: self.h.iter().copied().min().unwrap_or(0),
+            max_r: self.r.iter().copied().max().unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig6() -> LoadMatrix {
+        LoadMatrix::from_rows(vec![vec![2, 1, 0], vec![2, 0, 1], vec![1, 1, 1]])
+    }
+
+    fn assert_matches_full_route(rs: &mut RoutingState, w: &LoadMatrix) {
+        rs.evaluate();
+        let incremental = rs.to_routed_load();
+        let full = w.route(rs.placement());
+        assert_eq!(incremental, full, "incremental router diverged from route()");
+    }
+
+    #[test]
+    fn identity_matches_route() {
+        let w = fig6();
+        let mut rs = RoutingState::new();
+        rs.init(&w);
+        assert_matches_full_route(&mut rs, &w);
+        assert_eq!(rs.to_routed_load().h, vec![5, 2, 2]);
+    }
+
+    #[test]
+    fn apply_matches_route_after_each_delta() {
+        let w = fig6();
+        let mut rs = RoutingState::new();
+        rs.init(&w);
+        rs.apply_replicate_to_all(&w, 0);
+        assert_matches_full_route(&mut rs, &w);
+        rs.apply_add_replica(&w, 1, 0);
+        assert_matches_full_route(&mut rs, &w);
+        rs.apply_replicate_except(&w, 2, &[0]);
+        assert_matches_full_route(&mut rs, &w);
+        assert_eq!(rs.depth(), 3);
+    }
+
+    #[test]
+    fn undo_restores_exactly() {
+        let w = fig6();
+        let mut rs = RoutingState::new();
+        rs.init(&w);
+        rs.evaluate();
+        let baseline = rs.to_routed_load();
+        rs.apply_replicate_to_all(&w, 0);
+        rs.apply_replicate_except(&w, 1, &[2]);
+        rs.undo(&w);
+        assert_matches_full_route(&mut rs, &w);
+        rs.undo(&w);
+        rs.evaluate();
+        assert_eq!(rs.to_routed_load(), baseline);
+        assert!(rs.placement().is_identity());
+        assert_eq!(rs.depth(), 0);
+    }
+
+    #[test]
+    fn reinit_reuses_buffers_across_shapes() {
+        let mut rs = RoutingState::new();
+        let w1 = fig6();
+        rs.init(&w1);
+        rs.apply_replicate_to_all(&w1, 0);
+        assert_matches_full_route(&mut rs, &w1);
+        // Different shape: must fully reset.
+        let w2 = LoadMatrix::from_rows(vec![vec![10, 0, 3, 1]; 2]);
+        rs.init(&w2);
+        assert_matches_full_route(&mut rs, &w2);
+        assert_eq!(rs.depth(), 0);
+        // Same shape again: placement reset in place.
+        rs.init(&w1);
+        assert!(rs.placement().is_identity());
+        assert_matches_full_route(&mut rs, &w1);
+    }
+
+    #[test]
+    fn shrinking_delta_roundtrips() {
+        // replicate_except can SHRINK a previously grown set; the local_h
+        // bookkeeping must follow both directions.
+        let w = fig6();
+        let mut rs = RoutingState::new();
+        rs.init(&w);
+        rs.apply_replicate_to_all(&w, 0);
+        rs.apply_replicate_except(&w, 0, &[0, 1]); // {0,1,2} -> {0 (home), 2}
+        assert_matches_full_route(&mut rs, &w);
+        rs.undo(&w);
+        assert_matches_full_route(&mut rs, &w);
+        rs.undo(&w);
+        assert!(rs.placement().is_identity());
+    }
+
+    #[test]
+    fn zero_matrix_is_fine() {
+        let w = LoadMatrix::zeros(4, 4);
+        let mut rs = RoutingState::new();
+        rs.init(&w);
+        let stats = rs.evaluate();
+        assert_eq!(stats, EvalStats { max_h: 0, min_h: 0, max_r: 0 });
+        rs.apply_replicate_except(&w, 1, &[3]);
+        assert_matches_full_route(&mut rs, &w);
+    }
+}

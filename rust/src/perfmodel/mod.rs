@@ -164,12 +164,29 @@ impl PerfModel {
         n: usize,
         overlapped: bool,
     ) -> f64 {
-        let t_fec = self.t_fec(&routed.h);
-        let a2a = 4.0 * self.t_a2a(&routed.r) + 3.0 * t_fec;
+        self.layer_time_sn_from_maxes(routed.max_h(), routed.max_r(), s, n, overlapped)
+    }
+
+    /// Delta-friendly form of [`PerfModel::layer_time_sn`]: Eq 1–3 only
+    /// ever read max(H) and max(R), so an incremental router that tracks
+    /// the maxima (see [`crate::moe::RoutingState::evaluate`]) can price a
+    /// candidate without materializing the H/R vectors.  Same arithmetic,
+    /// bit-identical result.
+    pub fn layer_time_sn_from_maxes(
+        &self,
+        max_h: u64,
+        max_r: u64,
+        s: usize,
+        n: usize,
+        overlapped: bool,
+    ) -> f64 {
+        let t_fec = max_h as f64 / self.tokens_per_s;
+        let t_a2a = max_r as f64 * self.token_bytes / self.avg_bw;
+        let a2a = 4.0 * t_a2a + 3.0 * t_fec;
         if overlapped {
+            let t_bec = 2.0 * t_fec;
             let p_trans = (self.t_trans_sn(s, n) - t_fec - self.t_fnec).max(0.0);
-            let p_agg =
-                (self.t_agg_sn(s, n) - self.t_bec(&routed.h) - self.t_bnec).max(0.0);
+            let p_agg = (self.t_agg_sn(s, n) - t_bec - self.t_bnec).max(0.0);
             a2a + p_trans + p_agg
         } else {
             a2a + self.t_trans_sn(s, n) + self.t_agg_sn(s, n)
@@ -299,6 +316,23 @@ mod tests {
         let ao = pm.layer_time_sn(&routed, 1, 1, true);
         let bo = pm.layer_time_overlapped(&routed, &p);
         assert!((ao - bo).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sn_from_maxes_is_bit_identical() {
+        let (_, _, pm) = setup();
+        let routed = RoutedLoad {
+            h: vec![530, 210, 377, 512],
+            r: vec![12, 300, 7, 0],
+            sent: vec![0, 0, 0, 319],
+        };
+        for overlapped in [false, true] {
+            for (s, n) in [(0, 0), (1, 1), (3, 2)] {
+                let a = pm.layer_time_sn(&routed, s, n, overlapped);
+                let b = pm.layer_time_sn_from_maxes(530, 300, s, n, overlapped);
+                assert_eq!(a.to_bits(), b.to_bits(), "s={s} n={n} ov={overlapped}");
+            }
+        }
     }
 
     #[test]

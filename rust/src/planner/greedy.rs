@@ -14,9 +14,20 @@
 //!    the heaviest device repeats (`Used` check), or when every expert has
 //!    been selected;
 //! 5. returns the placement built from the best prefix `L[0..cnt]`.
+//!
+//! The search must be cheap enough to run online, off the critical path
+//! (paper Table I "Search": low milliseconds).  Candidate evaluation
+//! therefore runs on the incremental router ([`RoutingState`]): each
+//! selection applies an O(D) delta and replays a pre-sorted batch list
+//! instead of re-routing the whole O(D·E) matrix, and all scratch lives
+//! in a reusable [`SearchScratch`] so the steady-state search is
+//! allocation-free.  [`greedy_search_reference`] preserves the original
+//! full-re-route implementation; `prop_greedy_matches_reference` gates
+//! the two on bit-identical results, and `bench_plan_cost` measures the
+//! gap (BENCH_plan.json / EXPERIMENTS.md §Perf).
 
 use super::PlannerConfig;
-use crate::moe::{LoadMatrix, Placement};
+use crate::moe::{LoadMatrix, Placement, RoutingState};
 use crate::perfmodel::PerfModel;
 
 /// Outcome of one greedy search.
@@ -34,7 +45,162 @@ pub struct SearchResult {
     pub selected: Vec<usize>,
 }
 
-/// Devices holding the fewest inputs for `expert` (the BottomK of Alg 1).
+/// Reusable buffers for [`greedy_search_with`].  A long-lived scratch
+/// (e.g. inside [`super::Planner`]) makes repeated searches over
+/// same-shaped matrices allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct SearchScratch {
+    routing: RoutingState,
+    /// BottomK exclusion list of the current selection.
+    nb: Vec<usize>,
+    /// Device-ordering buffer backing the BottomK selection.
+    dev_order: Vec<usize>,
+    used_devices: Vec<bool>,
+    in_l: Vec<bool>,
+    selected: Vec<usize>,
+}
+
+impl SearchScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Devices holding the fewest inputs for `expert` (the BottomK of Alg 1),
+/// written into `nb` using the reusable `order` buffer.
+///
+/// Each expert is selected (and therefore BottomK'd) at most once per
+/// search, so sorting lazily here costs at most one D-element sort per
+/// SELECTED expert — strictly less work than pre-sorting all E orderings
+/// up front — while the reused buffers keep it allocation-free.
+fn bottom_k_into(
+    w: &LoadMatrix,
+    expert: usize,
+    n: usize,
+    order: &mut Vec<usize>,
+    nb: &mut Vec<usize>,
+) {
+    order.clear();
+    order.extend(0..w.n_devices());
+    order.sort_unstable_by_key(|&d| (w.get(d, expert), d));
+    nb.clear();
+    nb.extend_from_slice(&order[..n.min(w.n_devices())]);
+}
+
+/// Greedy search on the incremental router, with caller-provided scratch.
+pub fn greedy_search_with(
+    w: &LoadMatrix,
+    pm: &PerfModel,
+    cfg: &PlannerConfig,
+    scratch: &mut SearchScratch,
+) -> SearchResult {
+    let n_experts = w.n_experts();
+    let n_devices = w.n_devices();
+    let total = w.total_tokens();
+    let overlap = cfg.use_overlap_model;
+    let n_exclude = if cfg.n_exclude == super::AUTO_EXCLUDE {
+        n_devices / 2
+    } else {
+        cfg.n_exclude.min(n_devices.saturating_sub(1))
+    };
+
+    let rs = &mut scratch.routing;
+    rs.init(w);
+    let mut stats = rs.evaluate();
+    let t_identity = pm.layer_time_sn_from_maxes(stats.max_h, stats.max_r, 0, 0, overlap);
+    let mut t_output = t_identity;
+
+    scratch.used_devices.clear();
+    scratch.used_devices.resize(n_devices, false);
+    scratch.in_l.clear();
+    scratch.in_l.resize(n_experts, false);
+    scratch.selected.clear();
+    let dist = w.distribution_slice();
+    let mut cnt = 0usize;
+    let mut evaluated = 0usize;
+
+    loop {
+        // Balanced already? (Eq 7)
+        let spread = (stats.max_h - stats.min_h) as f64;
+        if spread < cfg.alpha * total as f64 / n_experts as f64 {
+            break;
+        }
+        // Heaviest device; bail if we have seen it before (Alg 1 line 7).
+        let heaviest_dev = rs
+            .h()
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &h)| h)
+            .map(|(d, _)| d)
+            .unwrap_or(0);
+        if scratch.used_devices[heaviest_dev] {
+            break;
+        }
+        scratch.used_devices[heaviest_dev] = true;
+
+        // Heaviest unselected expert (prefer one homed on the heaviest
+        // device, since shedding its load is what relieves that device).
+        let candidate_expert = (0..n_experts)
+            .filter(|&e| !scratch.in_l[e])
+            .max_by_key(|&e| {
+                let home_bonus = u64::from(w.home(e) == heaviest_dev);
+                (home_bonus, dist[e], std::cmp::Reverse(e))
+            });
+        let Some(expert) = candidate_expert else { break };
+        scratch.in_l[expert] = true;
+
+        bottom_k_into(w, expert, n_exclude, &mut scratch.dev_order, &mut scratch.nb);
+        // Memory constraint: devices without replica headroom are excluded
+        // too (the optimizer states stay home, but params+grads must fit).
+        if let Some(mem) = &cfg.memory {
+            for d in mem.full_devices(rs.placement()) {
+                if !scratch.nb.contains(&d) {
+                    scratch.nb.push(d);
+                }
+            }
+        }
+        rs.apply_replicate_except(w, expert, &scratch.nb);
+        scratch.selected.push(expert);
+
+        // Re-route and evaluate (Alg 1 lines 15-20).
+        stats = rs.evaluate();
+        let s = scratch.selected.len();
+        let t_changed =
+            pm.layer_time_sn_from_maxes(stats.max_h, stats.max_r, s, n_exclude, overlap);
+        evaluated += 1;
+        if t_changed < t_output {
+            t_output = t_changed;
+            cnt = s;
+        }
+        if s == n_experts {
+            break;
+        }
+    }
+
+    // Keep the best prefix L[0..cnt] by unwinding the excess deltas
+    // (Alg 1 line 22 rebuilt from scratch; undo reaches the same state).
+    for _ in cnt..scratch.selected.len() {
+        rs.undo(w);
+    }
+    let best = rs.placement().clone();
+    debug_assert!(best.validate().is_ok());
+    SearchResult {
+        placement: best,
+        t_est: t_output,
+        t_identity,
+        evaluated,
+        selected: scratch.selected[..cnt].to_vec(),
+    }
+}
+
+/// Greedy search with one-shot scratch (see [`greedy_search_with`] for the
+/// allocation-free form the planner uses).
+pub fn greedy_search(w: &LoadMatrix, pm: &PerfModel, cfg: &PlannerConfig) -> SearchResult {
+    greedy_search_with(w, pm, cfg, &mut SearchScratch::new())
+}
+
+/// Devices holding the fewest inputs for `expert` (allocating form, kept
+/// for the reference implementation).
 fn bottom_k(w: &LoadMatrix, expert: usize, n: usize) -> Vec<usize> {
     let mut devs: Vec<usize> = (0..w.n_devices()).collect();
     devs.sort_by_key(|&d| (w.get(d, expert), d));
@@ -42,7 +208,15 @@ fn bottom_k(w: &LoadMatrix, expert: usize, n: usize) -> Vec<usize> {
     devs
 }
 
-pub fn greedy_search(w: &LoadMatrix, pm: &PerfModel, cfg: &PlannerConfig) -> SearchResult {
+/// The pre-incremental implementation: full `w.route()` re-evaluation per
+/// candidate.  Kept (compiled, not test-gated) as the equivalence oracle
+/// for the property tests AND as the "old" side of `bench_plan_cost`'s
+/// old-vs-new plans/sec measurement.  Must never be called on a hot path.
+pub fn greedy_search_reference(
+    w: &LoadMatrix,
+    pm: &PerfModel,
+    cfg: &PlannerConfig,
+) -> SearchResult {
     let n_experts = w.n_experts();
     let n_devices = w.n_devices();
     let total = w.total_tokens();
@@ -151,6 +325,18 @@ mod tests {
         )
     }
 
+    fn assert_same_result(a: &SearchResult, b: &SearchResult) {
+        assert_eq!(a.placement, b.placement, "placements differ");
+        assert_eq!(a.selected, b.selected, "selections differ");
+        assert_eq!(a.evaluated, b.evaluated, "evaluation counts differ");
+        assert_eq!(a.t_est.to_bits(), b.t_est.to_bits(), "t_est differs");
+        assert_eq!(
+            a.t_identity.to_bits(),
+            b.t_identity.to_bits(),
+            "t_identity differs"
+        );
+    }
+
     #[test]
     fn never_worse_than_identity() {
         let w = LoadMatrix::from_rows(vec![
@@ -162,6 +348,7 @@ mod tests {
         let r = greedy_search(&w, &pm(4), &PlannerConfig::default());
         assert!(r.t_est <= r.t_identity + 1e-15);
         assert!(r.placement.validate().is_ok());
+        assert_same_result(&r, &greedy_search_reference(&w, &pm(4), &PlannerConfig::default()));
     }
 
     #[test]
@@ -203,6 +390,12 @@ mod tests {
         assert_eq!(bottom_k(&w, 0, 0), Vec::<usize>::new());
         // n larger than D saturates.
         assert_eq!(bottom_k(&w, 0, 99).len(), 4);
+        // The scratch-based form agrees.
+        let (mut order, mut nb) = (Vec::new(), Vec::new());
+        bottom_k_into(&w, 0, 2, &mut order, &mut nb);
+        assert_eq!(nb, vec![3, 1]);
+        bottom_k_into(&w, 0, 99, &mut order, &mut nb);
+        assert_eq!(nb.len(), 4);
     }
 
     #[test]
@@ -228,6 +421,7 @@ mod tests {
         let r = greedy_search(&w, &pm(8), &PlannerConfig::default());
         assert!(r.evaluated <= 8);
         assert!(r.placement.validate().is_ok());
+        assert_same_result(&r, &greedy_search_reference(&w, &pm(8), &PlannerConfig::default()));
 
         // Zero tokens entirely.
         let w0 = LoadMatrix::zeros(4, 4);
@@ -249,5 +443,44 @@ mod tests {
             assert!(r.placement.validate().is_ok());
             assert!(r.t_est <= r.t_identity + 1e-15);
         }
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        // Two searches through ONE scratch must match fresh-scratch runs,
+        // including across different shapes.
+        let w1 = LoadMatrix::from_rows(vec![
+            vec![900, 50, 30, 44],
+            vec![800, 100, 60, 64],
+            vec![850, 70, 40, 64],
+            vec![900, 60, 20, 44],
+        ]);
+        let mut w2 = LoadMatrix::zeros(8, 8);
+        w2.set(0, 0, 100_000);
+        w2.set(3, 5, 40_000);
+        let cfg = PlannerConfig::default();
+        let mut scratch = SearchScratch::new();
+        let a1 = greedy_search_with(&w1, &pm(4), &cfg, &mut scratch);
+        let a2 = greedy_search_with(&w2, &pm(8), &cfg, &mut scratch);
+        let a3 = greedy_search_with(&w1, &pm(4), &cfg, &mut scratch);
+        assert_same_result(&a1, &greedy_search(&w1, &pm(4), &cfg));
+        assert_same_result(&a2, &greedy_search(&w2, &pm(8), &cfg));
+        assert_same_result(&a1, &a3);
+    }
+
+    #[test]
+    fn memory_constrained_search_matches_reference() {
+        use crate::moe::MemoryModel;
+        let w = LoadMatrix::from_rows(vec![
+            vec![900, 50, 30, 44],
+            vec![800, 100, 60, 64],
+            vec![850, 70, 40, 64],
+            vec![900, 60, 20, 44],
+        ]);
+        // Room for roughly one extra replica per device.
+        let mem = MemoryModel::new(4e6, 1.0, 12, 100e6);
+        let cfg = PlannerConfig { memory: Some(mem), ..Default::default() };
+        let r = greedy_search(&w, &pm(4), &cfg);
+        assert_same_result(&r, &greedy_search_reference(&w, &pm(4), &cfg));
     }
 }

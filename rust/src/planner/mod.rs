@@ -5,11 +5,14 @@ pub mod greedy;
 pub mod locality;
 pub mod policies;
 
-pub use greedy::{greedy_search, SearchResult};
+pub use greedy::{
+    greedy_search, greedy_search_reference, greedy_search_with, SearchResult, SearchScratch,
+};
 
 use crate::moe::{LoadMatrix, Placement};
 use crate::perfmodel::PerfModel;
 use crate::prophet::DriftDetector;
+use std::sync::Arc;
 
 /// Sentinel for [`PlannerConfig::n_exclude`]: resolve `n` to D/2 at search
 /// time (replicate a selected expert to the top half of devices by its
@@ -53,7 +56,9 @@ impl Default for PlannerConfig {
 #[derive(Clone, Debug)]
 pub struct Planner {
     pub cfg: PlannerConfig,
-    cached: Option<Placement>,
+    /// Cache reuse hands out a shared handle instead of deep-cloning the
+    /// placement (E bitsets) on every iteration between replans.
+    cached: Option<Arc<Placement>>,
     iters_since_plan: usize,
     pub plans_run: usize,
     pub plans_reused: usize,
@@ -66,6 +71,9 @@ pub struct Planner {
     drift: Option<DriftDetector>,
     /// Wall-clock seconds spent inside greedy_search (the real Plan cost).
     pub search_seconds: f64,
+    /// Reusable search buffers (incremental routing state, BottomK
+    /// ordering): steady-state planning allocates nothing.
+    scratch: SearchScratch,
 }
 
 impl Planner {
@@ -80,29 +88,31 @@ impl Planner {
             planned_dist: None,
             drift: None,
             search_seconds: 0.0,
+            scratch: SearchScratch::new(),
         }
     }
 
     /// Produce a placement for the upcoming iteration given the observed
     /// (or prophet-forecast, see [`crate::prophet::Prophet::forecast_matrix`])
     /// load matrix.
-    pub fn plan(&mut self, w: &LoadMatrix, pm: &PerfModel) -> Placement {
+    pub fn plan(&mut self, w: &LoadMatrix, pm: &PerfModel) -> Arc<Placement> {
         if let Some(cached) = &self.cached {
             if self.iters_since_plan < self.cfg.replan_interval
                 && cached.n_experts() == w.n_experts()
             {
                 self.iters_since_plan += 1;
                 self.plans_reused += 1;
-                return cached.clone();
+                return Arc::clone(cached);
             }
         }
         let start = std::time::Instant::now();
-        let result = greedy_search(w, pm, &self.cfg);
+        let result = greedy_search_with(w, pm, &self.cfg, &mut self.scratch);
         self.search_seconds += start.elapsed().as_secs_f64();
         self.plans_run += 1;
         self.iters_since_plan = 1;
-        self.cached = Some(result.placement.clone());
-        result.placement
+        let placement = Arc::new(result.placement);
+        self.cached = Some(Arc::clone(&placement));
+        placement
     }
 
     /// Drop the cache (e.g. when the predictor detects a distribution
@@ -125,7 +135,7 @@ impl Planner {
         w: &LoadMatrix,
         pm: &PerfModel,
         min_similarity: f64,
-    ) -> Placement {
+    ) -> Arc<Placement> {
         let dist = w.distribution();
         let det = self
             .drift

@@ -18,7 +18,11 @@
 use std::collections::VecDeque;
 
 /// A one-step-ahead forecaster of per-expert load distributions.
-pub trait LoadPredictor {
+///
+/// `Send + Sync` are supertraits so a `Prophet` (which boxes a predictor
+/// family per layer) can be shared read-only across the simulator's
+/// scoped-thread planning fan-out; every in-tree predictor is plain data.
+pub trait LoadPredictor: Send + Sync {
     /// Short stable identifier (used in reports and knob parsing).
     fn name(&self) -> &'static str;
     /// Feed the observed distribution of the current iteration.

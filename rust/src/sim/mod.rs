@@ -18,8 +18,10 @@ use crate::perfmodel::PerfModel;
 use crate::planner::{greedy_search, policies, Planner, PlannerConfig};
 use crate::prophet::{Prophet, ProphetConfig};
 use crate::scheduler::{build_blocking, build_blockwise, BlockCosts, LoadBalanceOps};
+use crate::util::threads;
 use crate::workload::Trace;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Pro-Prophet feature switches (the Fig 14 ablation axes plus the
 /// forecasting knobs of the prophet subsystem).
@@ -225,12 +227,74 @@ impl SimReport {
     }
 }
 
+/// Per-layer planning + pricing outcome (the parallel phase's unit of
+/// work; see [`plan_and_price`]).
+struct LayerOutcome {
+    costs: BlockCosts,
+    bal_before: f64,
+    bal_after: f64,
+    trans_copies: u64,
+}
+
+/// Decide a placement for one layer and price its block operators.
+/// Layers are independent within an iteration — planning reads only
+/// forecasts armed by PREVIOUS iterations — so `simulate` fans this out
+/// across layers with scoped threads.
+fn plan_and_price(
+    layer: usize,
+    w: &LoadMatrix,
+    policy: &Policy,
+    pm: &PerfModel,
+    eng: &Engine,
+    planner: Option<&mut Planner>,
+    prophet: Option<&Prophet>,
+) -> LayerOutcome {
+    let (placement, plan_cost): (Arc<Placement>, f64) = match policy {
+        Policy::DeepspeedMoe => {
+            (Arc::new(Placement::identity(w.n_experts(), w.n_devices())), 0.0)
+        }
+        Policy::FasterMoe => {
+            // FasterMoE decides on the CURRENT iteration's gating (it has
+            // no locality prediction) and pays its search every iteration.
+            (Arc::new(policies::fastermoe_shadowing(w, pm)), pm.t_plan)
+        }
+        Policy::TopK(k) => {
+            // topk() on the load vector: negligible decision cost.
+            (Arc::new(policies::top_k_to_all(w, *k)), 0.0)
+        }
+        Policy::ProProphet(_) => {
+            // Plan on the prophet's forecast of THIS iteration (available
+            // from iteration 1 on); warm up on the observed matrix.
+            let planner = planner.expect("Pro-Prophet pricing needs a planner");
+            let forecast = prophet.and_then(|p| p.forecast_matrix(layer));
+            let w_plan: &LoadMatrix = forecast.as_ref().unwrap_or(w);
+            let before = planner.plans_run;
+            let p = planner.plan(w_plan, pm);
+            let cost = if planner.plans_run > before { pm.t_plan } else { 0.0 };
+            (p, cost)
+        }
+    };
+    let routed_before = w.route_identity();
+    let routed_after = w.route(&placement);
+    let unicast = matches!(policy, Policy::FasterMoe | Policy::TopK(_));
+    LayerOutcome {
+        costs: eng.block_costs_styled(w, &placement, plan_cost, unicast),
+        bal_before: balance_degree(&routed_before.h),
+        bal_after: balance_degree(&routed_after.h),
+        trans_copies: placement.transfer_copies(),
+    }
+}
+
 /// Simulate `trace` under `policy`.  For Pro-Prophet, placement decisions
 /// for iteration i use the prophet subsystem's forecast built from
 /// iterations 0..i (§V-A: the Plan primitive runs one iteration early on
 /// predicted statistics); iteration 0 plans on its own distribution.
 /// Prophet drift detection invalidates a layer's cached placement, forcing
 /// a replan regardless of the replan interval.
+///
+/// The per-layer planning/pricing fan-out runs on scoped threads
+/// ([`crate::util::threads`]); prophet observation stays sequential, so
+/// results are identical to the serial loop (`PRO_PROPHET_THREADS=1`).
 pub fn simulate(
     model: &ModelSpec,
     cluster: &ClusterSpec,
@@ -255,45 +319,28 @@ pub fn simulate(
     let mut report = SimReport { policy: policy.name(), ..Default::default() };
 
     for layers in trace.iterations.iter() {
-        let mut costs: Vec<BlockCosts> = Vec::with_capacity(n_layers);
-        let mut bal_before = 0.0;
-        let mut bal_after = 0.0;
-        let mut trans_copies = 0u64;
+        // Phase 1 (parallel across layers): plan placements and price the
+        // block operators.  Planning consumes forecasts armed by previous
+        // iterations only, so layer order does not matter.
+        let outcomes: Vec<LayerOutcome> = match policy {
+            Policy::ProProphet(_) => {
+                let prophet_ref = prophet.as_ref();
+                threads::par_map_mut(&mut planners, |l, planner| {
+                    plan_and_price(l, &layers[l], policy, &pm, &eng, Some(planner), prophet_ref)
+                })
+            }
+            _ => threads::par_map(n_layers, |l| {
+                plan_and_price(l, &layers[l], policy, &pm, &eng, None, None)
+            }),
+        };
+
+        // Phase 2 (sequential): feed the ACTUAL gating results to the
+        // prophet — scores the outstanding forecasts, advances the
+        // history, and runs drift detection for the next iteration's
+        // plans.
         let mut forecast_errs: Vec<f64> = Vec::new();
-
-        for (l, w) in layers.iter().enumerate() {
-            let (placement, plan_cost) = match policy {
-                Policy::DeepspeedMoe => {
-                    (Placement::identity(w.n_experts(), w.n_devices()), 0.0)
-                }
-                Policy::FasterMoe => {
-                    // FasterMoE decides on the CURRENT iteration's gating
-                    // (it has no locality prediction) and pays its search
-                    // every iteration.
-                    (policies::fastermoe_shadowing(w, &pm), pm.t_plan)
-                }
-                Policy::TopK(k) => {
-                    // topk() on the load vector: negligible decision cost.
-                    (policies::top_k_to_all(w, *k), 0.0)
-                }
-                Policy::ProProphet(_) => {
-                    // Plan on the prophet's forecast of THIS iteration
-                    // (available from iteration 1 on); warm up on the
-                    // observed matrix.
-                    let forecast = prophet.as_ref().and_then(|p| p.forecast_matrix(l));
-                    let w_plan: &LoadMatrix = forecast.as_ref().unwrap_or(w);
-                    let planner = &mut planners[l];
-                    let before = planner.plans_run;
-                    let p = planner.plan(w_plan, &pm);
-                    let cost = if planner.plans_run > before { pm.t_plan } else { 0.0 };
-                    (p, cost)
-                }
-            };
-
-            // Feed the ACTUAL gating result to the prophet: scores the
-            // outstanding forecast, advances the history, and runs drift
-            // detection for the next iteration's plan.
-            if let Some(prophet) = prophet.as_mut() {
+        if let Some(prophet) = prophet.as_mut() {
+            for (l, w) in layers.iter().enumerate() {
                 let obs = prophet.observe_layer(l, w);
                 if let Some(e) = obs.forecast_error {
                     forecast_errs.push(e);
@@ -303,15 +350,17 @@ pub fn simulate(
                     report.drift_replans += 1;
                 }
             }
+        }
 
-            let routed_before = w.route_identity();
-            let routed_after = w.route(&placement);
-            bal_before += balance_degree(&routed_before.h);
-            bal_after += balance_degree(&routed_after.h);
-            trans_copies += placement.transfer_copies();
-
-            let unicast = matches!(policy, Policy::FasterMoe | Policy::TopK(_));
-            costs.push(eng.block_costs_styled(w, &placement, plan_cost, unicast));
+        let mut costs: Vec<BlockCosts> = Vec::with_capacity(n_layers);
+        let mut bal_before = 0.0;
+        let mut bal_after = 0.0;
+        let mut trans_copies = 0u64;
+        for o in outcomes {
+            bal_before += o.bal_before;
+            bal_after += o.bal_after;
+            trans_copies += o.trans_copies;
+            costs.push(o.costs);
         }
         bal_before /= n_layers as f64;
         bal_after /= n_layers as f64;

@@ -216,13 +216,16 @@ impl Trainer {
         // Feed the observed distributions to the prophet: each layer's
         // histogram is spread over the EP virtual devices (one expert per
         // device, the paper's layout) and scored against the outstanding
-        // forecast.
+        // forecast.  Spreading is independent per layer and fans out over
+        // scoped threads; observation (which orders the history) stays
+        // sequential.
         let n_devices = man.n_experts.max(1);
+        let spread: Vec<LoadMatrix> =
+            crate::util::threads::par_map(loads.len(), |l| spread_histogram(&loads[l], n_devices));
         let mut errs: Vec<f64> = Vec::new();
         let mut drift_layers = 0usize;
-        for (l, hist) in loads.iter().enumerate() {
-            let w = spread_histogram(hist, n_devices);
-            let obs = self.prophet.observe_layer(l, &w);
+        for (l, w) in spread.iter().enumerate() {
+            let obs = self.prophet.observe_layer(l, w);
             if let Some(e) = obs.forecast_error {
                 errs.push(e);
             }

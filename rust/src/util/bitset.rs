@@ -45,6 +45,22 @@ impl BitSet {
         self.words[bit / 64] &= !(1u64 << (bit % 64));
     }
 
+    /// Remove every bit (in place, no reallocation).
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Insert every bit in `0..capacity` (in place, no reallocation).
+    pub fn insert_all(&mut self) {
+        self.words.fill(!0);
+        let tail = self.capacity % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
     #[inline]
     pub fn contains(&self, bit: usize) -> bool {
         bit < self.capacity && self.words[bit / 64] & (1u64 << (bit % 64)) != 0
@@ -128,6 +144,19 @@ mod tests {
     #[should_panic]
     fn out_of_range_panics() {
         BitSet::new(8).insert(8);
+    }
+
+    #[test]
+    fn clear_and_insert_all_in_place() {
+        for cap in [0usize, 1, 8, 63, 64, 65, 130] {
+            let mut s = BitSet::new(cap);
+            s.insert_all();
+            assert_eq!(s.len(), cap, "insert_all must fill exactly {cap} bits");
+            assert_eq!(s, BitSet::full(cap));
+            s.clear();
+            assert!(s.is_empty());
+            assert_eq!(s.capacity(), cap);
+        }
     }
 
     #[test]

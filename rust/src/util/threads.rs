@@ -1,0 +1,118 @@
+//! Scoped-thread fan-out helpers (no external crates offline, so a tiny
+//! deterministic chunked map built on `std::thread::scope`).
+//!
+//! Used by the simulator and trainer to parallelize per-layer work
+//! (planning, pricing, histogram spreading) across MoE layers.  Results
+//! are always returned in input order, so parallel and serial execution
+//! are observably identical; `PRO_PROPHET_THREADS=1` forces serial.
+
+/// Worker threads to use for `tasks` independent items: the machine's
+/// available parallelism, capped by the task count, overridable via the
+/// `PRO_PROPHET_THREADS` environment variable (0/unset = auto).
+pub fn for_tasks(tasks: usize) -> usize {
+    let auto = std::thread::available_parallelism().map_or(1, std::num::NonZeroUsize::get);
+    let n = std::env::var("PRO_PROPHET_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(auto);
+    n.min(tasks).max(1)
+}
+
+/// `out[i] = f(i)` for `i in 0..n`, fanned out over scoped threads in
+/// contiguous chunks.  Deterministic: identical to the serial map.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = for_tasks(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|s| {
+        for (ci, slots) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (i, slot) in slots.iter_mut().enumerate() {
+                    *slot = Some(f(ci * chunk + i));
+                }
+            });
+        }
+    });
+    out.into_iter()
+        .map(|slot| slot.expect("par_map worker panicked"))
+        .collect()
+}
+
+/// `out[i] = f(i, &mut items[i])`, fanned out over scoped threads.  Each
+/// worker owns a disjoint sub-slice, so per-item mutable state (e.g. one
+/// `Planner` per MoE layer) parallelizes without locks.
+pub fn par_map_mut<P, T, F>(items: &mut [P], f: F) -> Vec<T>
+where
+    P: Send,
+    T: Send,
+    F: Fn(usize, &mut P) -> T + Sync,
+{
+    let n = items.len();
+    let threads = for_tasks(n);
+    if threads <= 1 {
+        return items.iter_mut().enumerate().map(|(i, p)| f(i, p)).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|s| {
+        for ((ci, slots), part) in
+            out.chunks_mut(chunk).enumerate().zip(items.chunks_mut(chunk))
+        {
+            let f = &f;
+            s.spawn(move || {
+                for ((i, slot), p) in slots.iter_mut().enumerate().zip(part.iter_mut()) {
+                    *slot = Some(f(ci * chunk + i, p));
+                }
+            });
+        }
+    });
+    out.into_iter()
+        .map(|slot| slot.expect("par_map_mut worker panicked"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial_in_order() {
+        for n in [0usize, 1, 2, 7, 64, 1000] {
+            let got = par_map(n, |i| i * i + 1);
+            let want: Vec<usize> = (0..n).map(|i| i * i + 1).collect();
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn par_map_mut_mutates_each_item_once() {
+        let mut items: Vec<u64> = (0..37).collect();
+        let doubled = par_map_mut(&mut items, |i, p| {
+            *p *= 2;
+            (i as u64, *p)
+        });
+        for (i, &(idx, v)) in doubled.iter().enumerate() {
+            assert_eq!(idx, i as u64);
+            assert_eq!(v, 2 * i as u64);
+            assert_eq!(items[i], 2 * i as u64);
+        }
+    }
+
+    #[test]
+    fn thread_count_bounds() {
+        assert_eq!(for_tasks(0), 1);
+        assert_eq!(for_tasks(1), 1);
+        assert!(for_tasks(1000) >= 1);
+    }
+}

@@ -6,9 +6,11 @@
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::ModelSpec;
 use pro_prophet::metrics::balance_degree;
-use pro_prophet::moe::{LoadMatrix, Placement};
+use pro_prophet::moe::{LoadMatrix, Placement, RoutingState};
 use pro_prophet::perfmodel::PerfModel;
-use pro_prophet::planner::{greedy_search, locality, policies, PlannerConfig};
+use pro_prophet::planner::{
+    greedy_search, greedy_search_reference, locality, policies, PlannerConfig,
+};
 use pro_prophet::scheduler::{build_blocking, build_blockwise, BlockCosts, LoadBalanceOps};
 use pro_prophet::sim::Engine;
 use pro_prophet::util::prop::{self, Cases};
@@ -102,6 +104,85 @@ fn prop_full_replication_kills_all_traffic() {
         for d in 0..w.n_devices() {
             assert_eq!(routed.h[d], w.device_tokens(d));
         }
+    });
+}
+
+#[test]
+fn prop_routing_state_matches_full_route() {
+    // Equivalence gate of the incremental router: after ANY sequence of
+    // apply/undo deltas, the replayed RoutedLoad is bit-identical to a
+    // fresh route() of the same placement.
+    Cases::default().run(|rng| {
+        let w = random_w(rng);
+        let (e, d) = (w.n_experts(), w.n_devices());
+        let mut rs = RoutingState::new();
+        rs.init(&w);
+        for _ in 0..(2 + rng.below(2 * e)) {
+            // Mostly applies, sometimes an undo in the middle.
+            if rs.depth() > 0 && rng.below(4) == 0 {
+                rs.undo(&w);
+            } else {
+                let expert = rng.below(e);
+                match rng.below(3) {
+                    0 => rs.apply_replicate_to_all(&w, expert),
+                    1 => rs.apply_add_replica(&w, expert, rng.below(d)),
+                    _ => {
+                        let excl: Vec<usize> =
+                            (0..rng.below(d)).map(|_| rng.below(d)).collect();
+                        rs.apply_replicate_except(&w, expert, &excl);
+                    }
+                }
+            }
+            rs.evaluate();
+            let incremental = rs.to_routed_load();
+            let full = w.route(rs.placement());
+            assert_eq!(incremental, full, "diverged at depth {}", rs.depth());
+        }
+        // Unwinding everything restores the identity route exactly.
+        while rs.depth() > 0 {
+            rs.undo(&w);
+        }
+        rs.evaluate();
+        assert!(rs.placement().is_identity());
+        assert_eq!(rs.to_routed_load(), w.route_identity());
+    });
+}
+
+#[test]
+fn prop_greedy_matches_reference() {
+    // The incremental-router greedy search must reproduce the reference
+    // (full re-route) implementation exactly: same placement, same
+    // selection order, and bit-identical time estimates.
+    Cases::new(64).run(|rng| {
+        let w = random_w(rng);
+        let pm = pm_for(w.n_devices());
+        let cfg = PlannerConfig {
+            alpha: 0.05 + rng.f64(),
+            n_exclude: if rng.below(2) == 0 {
+                pro_prophet::planner::AUTO_EXCLUDE
+            } else {
+                rng.below(w.n_devices())
+            },
+            use_overlap_model: rng.below(2) == 0,
+            ..Default::default()
+        };
+        let new = greedy_search(&w, &pm, &cfg);
+        let reference = greedy_search_reference(&w, &pm, &cfg);
+        assert_eq!(new.placement, reference.placement, "placements diverged");
+        assert_eq!(new.selected, reference.selected, "selection order diverged");
+        assert_eq!(new.evaluated, reference.evaluated, "candidate counts diverged");
+        assert_eq!(
+            new.t_est.to_bits(),
+            reference.t_est.to_bits(),
+            "t_est diverged: {} vs {}",
+            new.t_est,
+            reference.t_est
+        );
+        assert_eq!(
+            new.t_identity.to_bits(),
+            reference.t_identity.to_bits(),
+            "t_identity diverged"
+        );
     });
 }
 
