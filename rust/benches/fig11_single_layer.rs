@@ -3,11 +3,12 @@
 //!
 //! Paper: 1.60-2.25x vs Deepspeed-MoE, 1.09-1.49x vs FasterMoE per layer.
 
+use pro_prophet::balancer::{registry, ProphetOptions};
 use pro_prophet::benchkit::{self, scenario};
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::ModelSpec;
 use pro_prophet::metrics::{write_result, TableReport};
-use pro_prophet::sim::{single_layer_times, Policy, ProphetOptions};
+use pro_prophet::sim::single_layer_times_policy;
 use pro_prophet::util::json::{self, Json};
 use pro_prophet::util::rng::Rng;
 
@@ -30,16 +31,16 @@ fn main() {
             &format!("k={k}: single-layer time (ms) and speedups"),
             &["DS (ms)", "FM (ms)", "PP (ms)", "PP/DS", "PP/FM"],
         );
+        let opts = ProphetOptions::full();
+        let policy = |name: &str| registry::build(name, &opts).expect("registered");
         for &l in &idx {
             let w = &layers[l];
-            let (t_ds, _) = single_layer_times(&model, &cluster, w, &Policy::DeepspeedMoe);
-            let (_, t_fm) = single_layer_times(&model, &cluster, w, &Policy::FasterMoe);
-            let (_, t_pp) = single_layer_times(
-                &model,
-                &cluster,
-                w,
-                &Policy::ProProphet(ProphetOptions::full()),
-            );
+            let (t_ds, _) =
+                single_layer_times_policy(&model, &cluster, w, policy("deepspeed"));
+            let (_, t_fm) =
+                single_layer_times_policy(&model, &cluster, w, policy("fastermoe"));
+            let (_, t_pp) =
+                single_layer_times_policy(&model, &cluster, w, policy("pro-prophet"));
             table.row(
                 &format!("layer {l}"),
                 vec![

@@ -8,7 +8,6 @@ use pro_prophet::benchkit::{self, scenario};
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::ModelSpec;
 use pro_prophet::metrics::write_result;
-use pro_prophet::sim::{simulate, Policy, ProphetOptions};
 use pro_prophet::util::json;
 use pro_prophet::util::stats;
 
@@ -18,13 +17,8 @@ fn main() {
     let d = cluster.n_devices();
     let model = ModelSpec::moe_gpt_m(d, 1, 16384);
     let trace = scenario::trace_for(&model, d, 100, 2026);
-    let fm = simulate(&model, &cluster, &trace, &Policy::FasterMoe);
-    let pp = simulate(
-        &model,
-        &cluster,
-        &trace,
-        &Policy::ProProphet(ProphetOptions::full()),
-    );
+    let fm = scenario::report_for("fastermoe", &model, &cluster, &trace);
+    let pp = scenario::report_for("pro-prophet", &model, &cluster, &trace);
     let fm_t = fm.iter_times();
     let pp_t = pp.iter_times();
 

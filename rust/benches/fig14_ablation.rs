@@ -8,8 +8,8 @@
 use pro_prophet::benchkit::{self, scenario};
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::ModelSpec;
+use pro_prophet::balancer::ProphetOptions;
 use pro_prophet::metrics::{write_result, TableReport};
-use pro_prophet::sim::{simulate, Policy, ProphetOptions};
 use pro_prophet::util::json::{self, Json};
 
 fn main() {
@@ -20,25 +20,22 @@ fn main() {
     for k in [1usize, 2] {
         let model = ModelSpec::moe_gpt_m(d, k, 16384);
         let trace = scenario::trace_for(&model, d, 12, 55);
-        let base = simulate(&model, &cluster, &trace, &Policy::DeepspeedMoe);
-        let planner = simulate(
+        let base = scenario::report_for("deepspeed", &model, &cluster, &trace);
+        let planner = scenario::report_with(
+            "pro-prophet",
+            &ProphetOptions::planner_only(),
             &model,
             &cluster,
             &trace,
-            &Policy::ProProphet(ProphetOptions::planner_only()),
         );
-        let scheduler = simulate(
+        let scheduler = scenario::report_with(
+            "pro-prophet",
+            &ProphetOptions::without_combination(),
             &model,
             &cluster,
             &trace,
-            &Policy::ProProphet(ProphetOptions::without_combination()),
         );
-        let full = simulate(
-            &model,
-            &cluster,
-            &trace,
-            &Policy::ProProphet(ProphetOptions::full()),
-        );
+        let full = scenario::report_for("pro-prophet", &model, &cluster, &trace);
         let b = base.avg_iter_time();
         let mut table = TableReport::new(
             &format!("k={k}: speedup over no-optimization baseline"),

@@ -9,7 +9,6 @@ use pro_prophet::benchkit::{self, scenario};
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::ModelSpec;
 use pro_prophet::metrics::{write_result, TableReport};
-use pro_prophet::sim::{simulate, Policy, ProphetOptions};
 use pro_prophet::util::json::{self, Json};
 
 fn main() {
@@ -22,14 +21,9 @@ fn main() {
         let trace = scenario::trace_for(&model, d, 12, 66);
         // Planner without the scheduler, matching the paper's policy-level
         // comparison.
-        let planner = simulate(
-            &model,
-            &cluster,
-            &trace,
-            &Policy::ProProphet(ProphetOptions::planner_only()),
-        );
-        let top2 = simulate(&model, &cluster, &trace, &Policy::TopK(2));
-        let top3 = simulate(&model, &cluster, &trace, &Policy::TopK(3));
+        let planner = scenario::report_for("planner-only", &model, &cluster, &trace);
+        let top2 = scenario::report_for("top2", &model, &cluster, &trace);
+        let top3 = scenario::report_for("top3", &model, &cluster, &trace);
         let mut table = TableReport::new(
             &format!("k={k}: iteration latency (s)"),
             &["latency_s", "planner_speedup"],

@@ -7,13 +7,13 @@
 //! forecaster keeps iteration time low with FEW plans; a bad one either
 //! eats drift-forced replans (search time) or mis-balanced iterations.
 
-use pro_prophet::benchkit;
+use pro_prophet::balancer::ProphetOptions;
+use pro_prophet::benchkit::{self, scenario};
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::ModelSpec;
 use pro_prophet::metrics::{write_result, TableReport};
 use pro_prophet::planner::PlannerConfig;
 use pro_prophet::prophet::{PredictorKind, ProphetConfig};
-use pro_prophet::sim::{simulate, Policy, ProphetOptions};
 use pro_prophet::util::json::{self, Json};
 use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
 
@@ -66,7 +66,7 @@ fn main() {
                 scheduler_on: true,
                 prophet: ProphetConfig { predictor: kind, ..Default::default() },
             };
-            let r = simulate(&model, &cluster, &trace, &Policy::ProProphet(opts));
+            let r = scenario::report_with("pro-prophet", &opts, &model, &cluster, &trace);
             let fcast = r.mean_forecast_error();
             table.row(
                 kind.name(),

@@ -5,14 +5,14 @@
 //! These numbers feed EXPERIMENTS.md §Perf; the planner search must stay
 //! well under the A2A it hides beneath (hundreds of µs at most).
 
-use pro_prophet::benchkit::{self, bench_fn};
+use pro_prophet::benchkit::{self, bench_fn, scenario};
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::ModelSpec;
 use pro_prophet::metrics::write_result;
 use pro_prophet::perfmodel::PerfModel;
 use pro_prophet::planner::{greedy_search, PlannerConfig};
 use pro_prophet::scheduler::{build_blockwise, BlockCosts};
-use pro_prophet::sim::{simulate, Engine, Policy, ProphetOptions};
+use pro_prophet::sim::Engine;
 use pro_prophet::util::json::{self, Json};
 use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
 
@@ -79,12 +79,7 @@ fn main() {
         1,
     );
     record(bench_fn("simulate 1 iter x 12 layers (prophet)", 120.0, || {
-        std::hint::black_box(simulate(
-            &model,
-            &cluster,
-            &trace,
-            &Policy::ProProphet(ProphetOptions::full()),
-        ));
+        std::hint::black_box(scenario::report_for("pro-prophet", &model, &cluster, &trace));
     }));
 
     let path = write_result("micro_hotpath", &Json::Arr(results)).unwrap();

@@ -9,7 +9,6 @@ use pro_prophet::benchkit::{self, scenario};
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::ModelSpec;
 use pro_prophet::metrics::{pct, write_result, TableReport};
-use pro_prophet::sim::{simulate, Policy};
 use pro_prophet::util::json::{self, Json};
 
 fn main() {
@@ -23,7 +22,7 @@ fn main() {
     let mut results = Vec::new();
     for model in ModelSpec::table3(d, 1, 16384) {
         let trace = scenario::trace_for(&model, d, 12, 42);
-        let r = simulate(&model, &cluster, &trace, &Policy::FasterMoe);
+        let r = scenario::report_for("fastermoe", &model, &cluster, &trace);
         let search = r.breakdown_fraction("search");
         let place = r.breakdown_fraction("place");
         let reduce = r.breakdown_fraction("reduce");

@@ -1,0 +1,285 @@
+//! The four original policies as [`BalancingPolicy`] impls: Deepspeed-MoE,
+//! FasterMoE, static top-k, and Pro-Prophet itself.
+//!
+//! The placement *algorithms* stay in [`crate::planner`] (the greedy
+//! search and the baseline placement constructions of
+//! `planner::policies`); this module only adapts them to the
+//! [`Decision`]/session contract.  The golden equivalence test pins each
+//! impl bit-for-bit to its pre-refactor `sim::Policy` enum arm.
+
+use super::{
+    BalancingPolicy, CommStyle, DecideCtx, Decision, LayerFeedback, PolicyCounters,
+    ProphetOptions, ScheduleKind,
+};
+use crate::moe::{LoadMatrix, Placement};
+use crate::planner::{policies, Planner};
+use crate::prophet::ProphetConfig;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Deepspeed-MoE: pure expert parallelism, no load balancing at all.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeepspeedMoe;
+
+impl BalancingPolicy for DeepspeedMoe {
+    fn name(&self) -> String {
+        "Deepspeed-MoE".into()
+    }
+
+    fn bind(&mut self, _n_layers: usize) {}
+
+    fn decide(&self, _layer: usize, w: &LoadMatrix, _ctx: &DecideCtx<'_>) -> Decision {
+        Decision {
+            placement: Arc::new(Placement::identity(w.n_experts(), w.n_devices())),
+            plan_cost: 0.0,
+            comm_style: CommStyle::Pipelined,
+            schedule_kind: ScheduleKind::NoLoadBalance,
+        }
+    }
+}
+
+/// FasterMoE: dynamic shadowing to ALL devices, decided on the CURRENT
+/// iteration's gating (no locality prediction), paying its search and a
+/// coarse blocking broadcast every iteration.
+#[derive(Debug, Default)]
+pub struct FasterMoe {
+    plans: AtomicUsize,
+}
+
+impl FasterMoe {
+    pub fn new() -> Self {
+        FasterMoe::default()
+    }
+}
+
+impl BalancingPolicy for FasterMoe {
+    fn name(&self) -> String {
+        "FasterMoE".into()
+    }
+
+    fn bind(&mut self, _n_layers: usize) {}
+
+    fn decide(&self, _layer: usize, w: &LoadMatrix, ctx: &DecideCtx<'_>) -> Decision {
+        self.plans.fetch_add(1, Ordering::Relaxed);
+        Decision {
+            placement: Arc::new(policies::fastermoe_shadowing(w, ctx.pm)),
+            plan_cost: ctx.pm.t_plan,
+            comm_style: CommStyle::Coarse,
+            schedule_kind: ScheduleKind::Blocking,
+        }
+    }
+
+    fn counters(&self) -> PolicyCounters {
+        PolicyCounters {
+            plans_run: self.plans.load(Ordering::Relaxed),
+            ..Default::default()
+        }
+    }
+}
+
+/// Replicate the k heaviest experts to all devices (Fig 15 top2/top3):
+/// a topk() on the load vector, negligible decision cost, coarse
+/// broadcast transfer.
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK { k }
+    }
+}
+
+impl BalancingPolicy for TopK {
+    fn name(&self) -> String {
+        format!("top{}", self.k)
+    }
+
+    fn bind(&mut self, _n_layers: usize) {}
+
+    fn decide(&self, _layer: usize, w: &LoadMatrix, _ctx: &DecideCtx<'_>) -> Decision {
+        Decision {
+            placement: Arc::new(policies::top_k_to_all(w, self.k)),
+            plan_cost: 0.0,
+            comm_style: CommStyle::Coarse,
+            schedule_kind: ScheduleKind::Blocking,
+        }
+    }
+}
+
+/// Pro-Prophet: per-layer locality-aware planners fed by the session's
+/// shared prophet — plan on the forecast of THIS iteration when one is
+/// outstanding (§V-A: the Plan primitive runs one iteration early on
+/// predicted statistics), warm up on the observed matrix, and let drift
+/// detection invalidate stale cached placements.
+#[derive(Debug)]
+pub struct ProProphet {
+    pub opts: ProphetOptions,
+    /// One planner per MoE layer, behind a per-layer lock so `decide`
+    /// can fan out across layers with `&self` (each lock is only ever
+    /// taken by its own layer's thread — uncontended).
+    planners: Vec<Mutex<Planner>>,
+    drift_replans: usize,
+}
+
+impl ProProphet {
+    pub fn new(opts: ProphetOptions) -> Self {
+        ProProphet { opts, planners: Vec::new(), drift_replans: 0 }
+    }
+}
+
+impl BalancingPolicy for ProProphet {
+    fn name(&self) -> String {
+        if self.opts.scheduler_on && self.opts.planner.use_overlap_model {
+            "Pro-Prophet".into()
+        } else if self.opts.scheduler_on {
+            "Pro-Prophet(no-comb)".into()
+        } else {
+            "Pro-Prophet(planner)".into()
+        }
+    }
+
+    fn bind(&mut self, n_layers: usize) {
+        self.planners =
+            (0..n_layers).map(|_| Mutex::new(Planner::new(self.opts.planner.clone()))).collect();
+    }
+
+    fn prophet_config(&self) -> Option<ProphetConfig> {
+        Some(self.opts.prophet.clone())
+    }
+
+    fn decide(&self, layer: usize, w: &LoadMatrix, ctx: &DecideCtx<'_>) -> Decision {
+        let mut planner = self
+            .planners
+            .get(layer)
+            .expect("ProProphet::decide before bind()")
+            .lock()
+            .expect("planner lock poisoned");
+        let forecast = ctx.prophet.and_then(|p| p.forecast_matrix(layer));
+        let w_plan: &LoadMatrix = forecast.as_ref().unwrap_or(w);
+        let before = planner.plans_run;
+        let placement = planner.plan(w_plan, ctx.pm);
+        let plan_cost = if planner.plans_run > before { ctx.pm.t_plan } else { 0.0 };
+        Decision {
+            placement,
+            plan_cost,
+            comm_style: CommStyle::Pipelined,
+            schedule_kind: if self.opts.scheduler_on {
+                ScheduleKind::Blockwise
+            } else {
+                ScheduleKind::Blocking
+            },
+        }
+    }
+
+    fn observe(&mut self, layer: usize, _w: &LoadMatrix, fb: &LayerFeedback) {
+        if fb.drift {
+            self.planners[layer].lock().expect("planner lock poisoned").invalidate();
+            self.drift_replans += 1;
+        }
+    }
+
+    fn counters(&self) -> PolicyCounters {
+        let mut c = PolicyCounters { drift_replans: self.drift_replans, ..Default::default() };
+        for planner in &self.planners {
+            let p = planner.lock().expect("planner lock poisoned");
+            c.plans_run += p.plans_run;
+            c.plans_reused += p.plans_reused;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::ModelSpec;
+    use crate::perfmodel::PerfModel;
+
+    fn skewed_w() -> LoadMatrix {
+        LoadMatrix::from_rows(vec![vec![600, 100, 100, 224]; 4])
+    }
+
+    fn pm() -> PerfModel {
+        PerfModel::new(&ModelSpec::moe_gpt_s(4, 1, 4096), &ClusterSpec::hpwnv(1))
+    }
+
+    #[test]
+    fn deepspeed_decides_identity_for_free() {
+        let mut p = DeepspeedMoe;
+        p.bind(1);
+        let pm = pm();
+        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm, prophet: None });
+        assert!(d.placement.is_identity());
+        assert_eq!(d.plan_cost, 0.0);
+        assert_eq!(d.schedule_kind, ScheduleKind::NoLoadBalance);
+        assert_eq!(p.counters(), PolicyCounters::default());
+    }
+
+    #[test]
+    fn fastermoe_pays_search_every_decide() {
+        let mut p = FasterMoe::new();
+        p.bind(1);
+        let pm = pm();
+        let w = skewed_w();
+        for _ in 0..3 {
+            let d = p.decide(0, &w, &DecideCtx { pm: &pm, prophet: None });
+            assert_eq!(d.plan_cost, pm.t_plan);
+            assert_eq!(d.comm_style, CommStyle::Coarse);
+        }
+        assert_eq!(p.counters().plans_run, 3);
+    }
+
+    #[test]
+    fn topk_matches_algorithm() {
+        let mut p = TopK::new(2);
+        p.bind(1);
+        let pm = pm();
+        let w = skewed_w();
+        let d = p.decide(0, &w, &DecideCtx { pm: &pm, prophet: None });
+        assert_eq!(*d.placement, policies::top_k_to_all(&w, 2));
+        assert_eq!(p.name(), "top2");
+    }
+
+    #[test]
+    fn pro_prophet_names_track_ablation() {
+        assert_eq!(ProProphet::new(ProphetOptions::full()).name(), "Pro-Prophet");
+        assert_eq!(
+            ProProphet::new(ProphetOptions::without_combination()).name(),
+            "Pro-Prophet(no-comb)"
+        );
+        assert_eq!(
+            ProProphet::new(ProphetOptions::planner_only()).name(),
+            "Pro-Prophet(planner)"
+        );
+    }
+
+    #[test]
+    fn pro_prophet_caches_and_invalidates() {
+        let mut p = ProProphet::new(ProphetOptions {
+            planner: crate::planner::PlannerConfig {
+                replan_interval: 100,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        p.bind(1);
+        let pm = pm();
+        let w = skewed_w();
+        let ctx = DecideCtx { pm: &pm, prophet: None };
+        let d1 = p.decide(0, &w, &ctx);
+        assert_eq!(d1.plan_cost, pm.t_plan, "first decision runs the search");
+        let d2 = p.decide(0, &w, &ctx);
+        assert_eq!(d2.plan_cost, 0.0, "second decision reuses the cache");
+        assert_eq!(p.counters().plans_run, 1);
+        assert_eq!(p.counters().plans_reused, 1);
+        // Drift feedback invalidates the cached placement.
+        p.observe(0, &w, &LayerFeedback { drift: true, forecast_error: Some(0.9) });
+        let d3 = p.decide(0, &w, &ctx);
+        assert_eq!(d3.plan_cost, pm.t_plan, "drift forces a replan");
+        assert_eq!(p.counters().drift_replans, 1);
+        assert_eq!(p.counters().plans_run, 2);
+    }
+}

@@ -1,0 +1,322 @@
+//! FlexMoE-style dynamic re-placement baseline — and the worked example
+//! of adding a policy to the open [`crate::balancer`] API in one file.
+//!
+//! FlexMoE (Nie et al., SIGMOD'23; see PAPERS.md) monitors expert
+//! popularity during training and *incrementally* expands/shrinks each
+//! expert's replica set instead of re-solving placement from scratch:
+//! a hot expert gains a replica on a device that sends it many tokens, a
+//! cooled-down expert gives its replicas back, and a per-iteration
+//! migration budget bounds how many parameter movements one adjustment
+//! step may trigger.
+//!
+//! Contrast with the neighbours in the registry:
+//! * FasterMoE re-decides from scratch every iteration and always
+//!   broadcasts to ALL devices (coarse);
+//! * Pro-Prophet re-plans on forecasts with a full greedy search;
+//! * FlexMoE carries yesterday's placement forward and nudges it — cheap
+//!   decisions, bounded movement, but it reacts one iteration late and
+//!   has no overlap scheduler.
+//!
+//! This file imports **nothing from `sim::`** — only `moe`, `perfmodel`
+//! and the trait contract — which is exactly the point: the simulator,
+//! trainer and CLI run it unmodified through the registry.
+
+use super::{
+    BalancingPolicy, CommStyle, DecideCtx, Decision, LayerFeedback, PolicyCounters, ScheduleKind,
+};
+use crate::moe::{LoadMatrix, Placement};
+use std::sync::{Arc, Mutex};
+
+/// Knobs of the FlexMoE-style baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct FlexMoeConfig {
+    /// Adjust only while max/mean per-device computed load exceeds this
+    /// (1.0 = always chase perfect balance; FlexMoE tolerates slack).
+    pub imbalance_trigger: f64,
+    /// Replica expansions + shrinks one observation step may perform per
+    /// layer (the migration budget bounding Trans volume per iteration).
+    pub migration_budget: usize,
+}
+
+impl Default for FlexMoeConfig {
+    fn default() -> Self {
+        FlexMoeConfig { imbalance_trigger: 1.1, migration_budget: 4 }
+    }
+}
+
+/// Per-layer state: the placement carried across iterations.
+#[derive(Debug, Default)]
+struct LayerState {
+    /// Current placement (None until the first matrix fixes the shape).
+    placement: Option<Arc<Placement>>,
+    /// The last observation changed the placement; the next decide pays
+    /// one Plan cost for it.
+    pending_adjustment: bool,
+    plans_run: usize,
+    plans_reused: usize,
+}
+
+impl LayerState {
+    /// Current placement, (re)initialized to identity on first use or
+    /// shape change.
+    fn placement_for(&mut self, w: &LoadMatrix) -> Arc<Placement> {
+        let stale = match &self.placement {
+            Some(p) => p.n_experts() != w.n_experts() || p.n_devices() != w.n_devices(),
+            None => true,
+        };
+        if stale {
+            self.placement = Some(Arc::new(Placement::identity(w.n_experts(), w.n_devices())));
+            self.pending_adjustment = false;
+        }
+        Arc::clone(self.placement.as_ref().unwrap())
+    }
+}
+
+/// The policy. One `LayerState` per MoE layer, behind per-layer locks so
+/// `decide` can fan out with `&self`.
+#[derive(Debug, Default)]
+pub struct FlexMoe {
+    pub cfg: FlexMoeConfig,
+    layers: Vec<Mutex<LayerState>>,
+}
+
+impl FlexMoe {
+    pub fn new(cfg: FlexMoeConfig) -> Self {
+        FlexMoe { cfg, layers: Vec::new() }
+    }
+}
+
+impl BalancingPolicy for FlexMoe {
+    fn name(&self) -> String {
+        "FlexMoE".into()
+    }
+
+    fn bind(&mut self, n_layers: usize) {
+        self.layers = (0..n_layers).map(|_| Mutex::new(LayerState::default())).collect();
+    }
+
+    fn decide(&self, layer: usize, w: &LoadMatrix, ctx: &DecideCtx<'_>) -> Decision {
+        let mut st = self
+            .layers
+            .get(layer)
+            .expect("FlexMoe::decide before bind()")
+            .lock()
+            .expect("layer lock poisoned");
+        let placement = st.placement_for(w);
+        let plan_cost = if st.pending_adjustment {
+            st.pending_adjustment = false;
+            st.plans_run += 1;
+            ctx.pm.t_plan
+        } else {
+            st.plans_reused += 1;
+            0.0
+        };
+        Decision {
+            placement,
+            plan_cost,
+            comm_style: CommStyle::Pipelined,
+            schedule_kind: ScheduleKind::Blocking,
+        }
+    }
+
+    fn observe(&mut self, layer: usize, w: &LoadMatrix, _fb: &LayerFeedback) {
+        let mut st = self.layers[layer].lock().expect("layer lock poisoned");
+        // Adjust a WORKING COPY against the freshly observed load; the
+        // result serves the next iteration's decide.
+        let mut p = (*st.placement_for(w)).clone();
+        if adjust_placement(&mut p, w, &self.cfg) {
+            st.placement = Some(Arc::new(p));
+            st.pending_adjustment = true;
+        }
+    }
+
+    fn counters(&self) -> PolicyCounters {
+        let mut c = PolicyCounters::default();
+        for st in &self.layers {
+            let st = st.lock().expect("layer lock poisoned");
+            c.plans_run += st.plans_run;
+            c.plans_reused += st.plans_reused;
+        }
+        c
+    }
+}
+
+/// One FlexMoE adjustment step: shrink replicas of cooled-down experts,
+/// then expand hot experts towards their token sources, spending at most
+/// `cfg.migration_budget` replica changes.  Returns whether anything
+/// changed.  Deterministic: ties break towards the lowest index.
+fn adjust_placement(p: &mut Placement, w: &LoadMatrix, cfg: &FlexMoeConfig) -> bool {
+    let d = w.n_devices();
+    let e_count = w.n_experts();
+    if d < 2 || w.total_tokens() == 0 {
+        return false;
+    }
+    let total = w.total_tokens();
+    let mut changed = false;
+    let mut budget = cfg.migration_budget;
+
+    // Shrink: an expert whose whole load fits the per-device average no
+    // longer justifies replication — give its replicas back (reclaims
+    // memory and future Agg volume, FlexMoE's "shrink" transition).
+    for e in 0..e_count {
+        if budget == 0 {
+            break;
+        }
+        if p.replicas(e).len() > 1 && w.expert_load(e).saturating_mul(d as u64) <= total {
+            p.set_replicas(e, [p.home(e)]);
+            changed = true;
+            budget -= 1;
+        }
+    }
+
+    // Expand: while the computed load is imbalanced, replicate the
+    // hottest device's most remote-fed expert onto its largest token
+    // source (routing then computes those tokens at the source — the
+    // lightweight-placement effect, without FasterMoE's full broadcast).
+    //
+    // Each step re-routes in full: bounded by the migration budget (a
+    // handful of O(D·E) passes, same order as the simulator's own
+    // pricing), unlike the per-candidate re-route PR 2 eliminated from
+    // the greedy search.  If budgets ever grow, port this loop to
+    // `moe::RoutingState` deltas.
+    while budget > 0 {
+        let h = w.route(p).h;
+        let max = h.iter().copied().max().unwrap_or(0);
+        let mean = total as f64 / d as f64;
+        if (max as f64) <= cfg.imbalance_trigger * mean.max(1.0) {
+            break;
+        }
+        let mut hot = 0;
+        for (i, &v) in h.iter().enumerate() {
+            if v > h[hot] {
+                hot = i;
+            }
+        }
+        // Best (expert homed on hot, source device) by remote inflow.
+        let mut best: Option<(u64, usize, usize)> = None;
+        for e in (0..e_count).filter(|&e| p.home(e) == hot) {
+            for src in (0..d).filter(|&src| !p.replicas(e).contains(src)) {
+                let inflow = w.get(src, e);
+                if inflow > 0 && best.map_or(true, |(b, _, _)| inflow > b) {
+                    best = Some((inflow, e, src));
+                }
+            }
+        }
+        match best {
+            Some((_, e, src)) => {
+                p.add_replica(e, src);
+                changed = true;
+                budget -= 1;
+            }
+            None => break, // hot device's load is not expandable
+        }
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::ModelSpec;
+    use crate::metrics::balance_degree;
+    use crate::perfmodel::PerfModel;
+
+    fn pm() -> PerfModel {
+        PerfModel::new(&ModelSpec::moe_gpt_s(4, 1, 4096), &ClusterSpec::hpwnv(1))
+    }
+
+    /// Expert 0 (homed on device 0) is fed mostly by devices 1-3.
+    fn skewed_w() -> LoadMatrix {
+        LoadMatrix::from_rows(vec![
+            vec![100, 64, 64, 64],
+            vec![300, 64, 64, 64],
+            vec![300, 64, 64, 64],
+            vec![300, 64, 64, 64],
+        ])
+    }
+
+    #[test]
+    fn first_decision_is_identity_and_free() {
+        let mut p = FlexMoe::default();
+        p.bind(1);
+        let pm = pm();
+        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm, prophet: None });
+        assert!(d.placement.is_identity());
+        assert_eq!(d.plan_cost, 0.0);
+        assert_eq!(d.schedule_kind, ScheduleKind::Blocking);
+    }
+
+    #[test]
+    fn observation_expands_hot_expert_towards_sources() {
+        let mut p = FlexMoe::default();
+        p.bind(1);
+        let pm = pm();
+        let w = skewed_w();
+        let ctx = DecideCtx { pm: &pm, prophet: None };
+        p.decide(0, &w, &ctx);
+        p.observe(0, &w, &LayerFeedback::default());
+        let d = p.decide(0, &w, &ctx);
+        assert!(!d.placement.is_identity(), "imbalance must trigger expansion");
+        assert!(d.placement.replicas(0).len() > 1, "expert 0 is the hot one");
+        assert!(
+            d.placement.replicas(0).len() < 4,
+            "expansion is incremental, not a FasterMoE broadcast"
+        );
+        assert_eq!(d.plan_cost, pm.t_plan, "the adjustment pays one Plan cost");
+        assert!(d.placement.validate().is_ok());
+        // The adjusted placement balances the observed load better.
+        let before = balance_degree(&w.route_identity().h);
+        let after = balance_degree(&w.route(&d.placement).h);
+        assert!(after < before, "balance degree {after} !< {before}");
+        assert_eq!(p.counters().plans_run, 1);
+        assert_eq!(p.counters().plans_reused, 1);
+    }
+
+    #[test]
+    fn balanced_load_is_left_alone() {
+        let mut p = FlexMoe::default();
+        p.bind(1);
+        let w = LoadMatrix::from_rows(vec![vec![256; 4]; 4]);
+        p.observe(0, &w, &LayerFeedback::default());
+        let pm = pm();
+        let d = p.decide(0, &w, &DecideCtx { pm: &pm, prophet: None });
+        assert!(d.placement.is_identity());
+        assert_eq!(d.plan_cost, 0.0);
+    }
+
+    #[test]
+    fn cooled_expert_shrinks_back() {
+        let mut p = FlexMoe::new(FlexMoeConfig { migration_budget: 8, ..Default::default() });
+        p.bind(1);
+        let pm = pm();
+        let ctx = DecideCtx { pm: &pm, prophet: None };
+        let hot = skewed_w();
+        p.decide(0, &hot, &ctx);
+        p.observe(0, &hot, &LayerFeedback::default());
+        assert!(p.decide(0, &hot, &ctx).placement.replicas(0).len() > 1);
+        // Load evens out: the replicas are given back.
+        let cool = LoadMatrix::from_rows(vec![vec![256; 4]; 4]);
+        p.observe(0, &cool, &LayerFeedback::default());
+        let d = p.decide(0, &cool, &ctx);
+        assert!(d.placement.is_identity(), "shrink must reclaim replicas");
+    }
+
+    #[test]
+    fn migration_budget_bounds_changes() {
+        let mut p = FlexMoe::new(FlexMoeConfig {
+            imbalance_trigger: 1.0,
+            migration_budget: 1,
+        });
+        p.bind(1);
+        let w = skewed_w();
+        p.observe(0, &w, &LayerFeedback::default());
+        let pm = pm();
+        let d = p.decide(0, &w, &DecideCtx { pm: &pm, prophet: None });
+        assert_eq!(
+            d.placement.transfer_copies(),
+            1,
+            "budget 1 allows exactly one replica move per observation"
+        );
+    }
+}

@@ -1,0 +1,267 @@
+//! Open load-balancing policy API: the trait-based successor of the
+//! closed `sim::Policy` enum.
+//!
+//! The paper frames Pro-Prophet as one point in a *space* of system-level
+//! MoE load balancers (Deepspeed-MoE, FasterMoE and top-k shadowing are
+//! its baselines).  This module makes that space pluggable: a policy is a
+//! [`BalancingPolicy`] trait object, and everything that used to be a
+//! `match` arm smeared across `sim::simulate`, `single_layer_times` and
+//! `Trainer::step` — planning, prophet observation, drift bookkeeping,
+//! comm-style flags — now flows through two calls:
+//!
+//! ```text
+//!   decide(layer, W, ctx)  ->  Decision { placement, plan_cost,
+//!                                         comm_style, schedule_kind }
+//!   observe(layer, W, fb)  <-  actual gating + prophet verdict
+//! ```
+//!
+//! # The Decision/Session contract
+//!
+//! A **[`Decision`]** is everything the execution substrate needs to
+//! price and schedule one layer: the expert [`Placement`] for the
+//! upcoming iteration, the Plan cost actually paid (0 on cache reuse),
+//! the [`CommStyle`] its parameter transfers use on the wire, and the
+//! [`ScheduleKind`] its iteration timeline is assembled with.  Policies
+//! return data; they never touch the engine or the scheduler directly —
+//! that is what keeps them simulator-agnostic.
+//!
+//! A **[`BalancerSession`]** binds one policy to one run (a layer count
+//! plus, when the policy forecasts, a shared [`Prophet`]).  It owns the
+//! observe → score → drift → invalidate loop that the simulator and the
+//! trainer previously each re-implemented (and had let diverge subtly):
+//! `observe_iteration` scores outstanding forecasts, advances history,
+//! runs drift detection, and hands each layer's verdict to the policy as
+//! a [`LayerFeedback`].
+//!
+//! Threading: `decide` takes `&self` and is fanned out across layers on
+//! scoped threads ([`crate::util::threads`]); per-layer mutable state
+//! lives behind per-layer locks (uncontended — one thread per layer), so
+//! parallel and serial execution are observably identical.  `observe` is
+//! sequential in layer order, because history order matters.
+//!
+//! # Adding a policy in one file
+//!
+//! [`flexmoe`] is the worked example: a FlexMoE-style dynamic
+//! re-placement baseline (expand/shrink expert replicas on observed load,
+//! under a per-iteration migration budget) written entirely against this
+//! module — it imports nothing from `sim::` and the simulator needed no
+//! edits to run it.  The recipe:
+//!
+//! 1. Implement [`BalancingPolicy`] for your type.  `bind` allocates
+//!    per-layer state, `decide` returns a [`Decision`], `observe` reacts
+//!    to actual gating (see `flexmoe.rs` for the expand/shrink reaction).
+//! 2. Register a constructor in [`registry`] (one `PolicyEntry` line).
+//! 3. Done: `pro-prophet simulate --policy <name>`, the `[policy]` TOML
+//!    table, and `sim::simulate_policy` all pick it up.
+//!
+//! The legacy `sim::Policy` enum survives one more PR as a deprecated
+//! shim (`From<Policy> for Box<dyn BalancingPolicy>`); the golden test in
+//! `rust/tests/golden_equivalence.rs` pins the trait path bit-for-bit to
+//! the pre-refactor enum path for all four original policies.
+
+pub mod builtin;
+pub mod flexmoe;
+pub mod registry;
+pub mod session;
+
+pub use builtin::{DeepspeedMoe, FasterMoe, ProProphet, TopK};
+pub use flexmoe::{FlexMoe, FlexMoeConfig};
+pub use session::{BalancerSession, IterationFeedback};
+
+use crate::moe::{LoadMatrix, Placement};
+use crate::perfmodel::PerfModel;
+use crate::planner::PlannerConfig;
+use crate::prophet::{Prophet, ProphetConfig};
+use std::sync::Arc;
+
+/// How a policy's parameter transfers (Trans/Agg) hit the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommStyle {
+    /// Chunked scatter+allgather collective, pipelinable by the §V
+    /// scheduler (Pro-Prophet's lightweight placements).
+    Pipelined,
+    /// Coarse blocking broadcast (FasterMoE shadowing, top-k-to-all):
+    /// [`crate::perfmodel::COARSE_FACTOR`] slower per byte.
+    Coarse,
+}
+
+/// How an iteration's block costs are assembled into a timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// Blocking timeline with no load-balancing ops at all (pure EP).
+    NoLoadBalance,
+    /// Blocking timeline including the policy's LB ops.
+    Blocking,
+    /// Pro-Prophet's block-wise overlap schedule (paper §V, Algorithm 2).
+    Blockwise,
+}
+
+/// One layer's placement decision for the upcoming iteration — the unit
+/// the execution substrate prices and schedules.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// Expert placement to run the iteration under.
+    pub placement: Arc<Placement>,
+    /// Seconds of Plan cost actually paid this iteration (0 when a cached
+    /// placement was reused or the policy never searches).
+    pub plan_cost: f64,
+    pub comm_style: CommStyle,
+    pub schedule_kind: ScheduleKind,
+}
+
+/// Whole-run decision counters, aggregated across layers (the
+/// `SimReport` planning totals).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PolicyCounters {
+    /// Placement searches actually executed.
+    pub plans_run: usize,
+    /// Decisions served from a cached placement.
+    pub plans_reused: usize,
+    /// Replans forced by drift detection.
+    pub drift_replans: usize,
+}
+
+/// Read-only context handed to [`BalancingPolicy::decide`].
+pub struct DecideCtx<'a> {
+    /// Analytic performance model of the (model, cluster) pair.
+    pub pm: &'a PerfModel,
+    /// The session's shared forecasting subsystem — present iff the
+    /// policy asked for one via [`BalancingPolicy::prophet_config`].
+    pub prophet: Option<&'a Prophet>,
+}
+
+/// Post-iteration verdict for one layer, delivered with the observed
+/// gating result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerFeedback {
+    /// The session's drift detector declared a regime change; cached
+    /// placements for this layer should be invalidated.
+    pub drift: bool,
+    /// Normalized-L1 error of the forecast that was outstanding for this
+    /// iteration (None when no forecast existed yet, or no prophet runs).
+    pub forecast_error: Option<f64>,
+}
+
+/// A pluggable load-balancing policy.
+///
+/// Implementations are driven by a [`BalancerSession`]: `bind` once per
+/// run, then per iteration `decide` for every layer (parallel, `&self`)
+/// followed by `observe` for every layer (sequential, in order).  See the
+/// [module docs](self) for the full contract and `flexmoe.rs` for a
+/// worked one-file example.
+pub trait BalancingPolicy: Send + Sync {
+    /// Display name (report rows, CLI tables).
+    fn name(&self) -> String;
+
+    /// Bind to a run: allocate per-layer state for `n_layers` MoE layers.
+    /// Called exactly once, before the first `decide`.
+    fn bind(&mut self, n_layers: usize);
+
+    /// Prophet configuration when this policy plans on forecasts; the
+    /// session then owns a shared [`Prophet`], serves it to `decide` via
+    /// [`DecideCtx`], and feeds every observation through it.
+    fn prophet_config(&self) -> Option<ProphetConfig> {
+        None
+    }
+
+    /// Placement decision for `layer`'s upcoming iteration.  `w` is the
+    /// freshest load matrix available to the caller (the current
+    /// iteration's gating in the simulator's warm-up, the last observed
+    /// one otherwise); forecasting policies should prefer
+    /// `ctx.prophet.forecast_matrix(layer)` when it exists.
+    ///
+    /// Takes `&self`: the session fans this call out across layers on
+    /// scoped threads, so per-layer mutable state must live behind
+    /// per-layer locks (see [`builtin::ProProphet`]).
+    fn decide(&self, layer: usize, w: &LoadMatrix, ctx: &DecideCtx<'_>) -> Decision;
+
+    /// Observed gating result of `layer`, with the session's prophet
+    /// verdict.  Called sequentially in layer order once per iteration.
+    fn observe(&mut self, layer: usize, w: &LoadMatrix, fb: &LayerFeedback) {
+        let _ = (layer, w, fb);
+    }
+
+    /// Whole-run counters (see [`PolicyCounters`]).
+    fn counters(&self) -> PolicyCounters {
+        PolicyCounters::default()
+    }
+}
+
+/// Options of the Pro-Prophet policy family (planner knobs, §V scheduler
+/// switch, prophet forecasting knobs) — the Fig 14 ablation axes.
+///
+/// Lives here (not in `sim`) since the refactor; `sim::ProphetOptions`
+/// re-exports it for the legacy enum path.
+#[derive(Clone, Debug)]
+pub struct ProphetOptions {
+    pub planner: PlannerConfig,
+    /// Block-wise overlap scheduling (§V) on/off.
+    pub scheduler_on: bool,
+    /// Forecasting subsystem knobs (predictor selection, drift detection).
+    pub prophet: ProphetConfig,
+}
+
+impl Default for ProphetOptions {
+    fn default() -> Self {
+        ProphetOptions {
+            planner: PlannerConfig::default(),
+            scheduler_on: true,
+            prophet: ProphetConfig::default(),
+        }
+    }
+}
+
+impl ProphetOptions {
+    /// Planner only (scheduler ablated): Eq 6 evaluation, blocking timeline.
+    pub fn planner_only() -> Self {
+        ProphetOptions {
+            planner: PlannerConfig { use_overlap_model: false, ..Default::default() },
+            scheduler_on: false,
+            ..Default::default()
+        }
+    }
+
+    /// Scheduler on, but the planner evaluates with the blocking Eq 6
+    /// (i.e. without the §V-C combination).
+    pub fn without_combination() -> Self {
+        ProphetOptions {
+            planner: PlannerConfig { use_overlap_model: false, ..Default::default() },
+            scheduler_on: true,
+            ..Default::default()
+        }
+    }
+
+    /// Full system: block-wise scheduler + Eq 8-aware planner.
+    pub fn full() -> Self {
+        ProphetOptions::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_is_cheap_to_clone() {
+        let d = Decision {
+            placement: Arc::new(Placement::identity(4, 4)),
+            plan_cost: 0.5,
+            comm_style: CommStyle::Pipelined,
+            schedule_kind: ScheduleKind::Blockwise,
+        };
+        let d2 = d.clone();
+        assert!(Arc::ptr_eq(&d.placement, &d2.placement));
+        assert_eq!(d2.comm_style, CommStyle::Pipelined);
+        assert_eq!(d2.schedule_kind, ScheduleKind::Blockwise);
+    }
+
+    #[test]
+    fn prophet_options_presets() {
+        let full = ProphetOptions::full();
+        assert!(full.scheduler_on && full.planner.use_overlap_model);
+        let po = ProphetOptions::planner_only();
+        assert!(!po.scheduler_on && !po.planner.use_overlap_model);
+        let nc = ProphetOptions::without_combination();
+        assert!(nc.scheduler_on && !nc.planner.use_overlap_model);
+    }
+}

@@ -1,0 +1,180 @@
+//! String-keyed policy registry — the single lookup behind the CLI
+//! (`--policy`, `pro-prophet info`), the `[policy]` TOML table and the
+//! benches.
+//!
+//! Every entry is a constructor taking the run's [`ProphetOptions`] (the
+//! Pro-Prophet family reads them; baselines ignore them), so one options
+//! object parameterizes any policy uniformly.  `top<k>` names are parsed
+//! generically (`top2`, `top3`, `top7`, ...).
+
+use super::{builtin, flexmoe, BalancingPolicy, ProphetOptions};
+use crate::planner::PlannerConfig;
+
+/// One registered policy.
+pub struct PolicyEntry {
+    /// Canonical registry key.
+    pub name: &'static str,
+    /// Alternative spellings accepted by [`build`].
+    pub aliases: &'static [&'static str],
+    /// One-line description for `--help`/`info` listings.
+    pub summary: &'static str,
+    build: fn(&ProphetOptions) -> Box<dyn BalancingPolicy>,
+}
+
+impl PolicyEntry {
+    /// Construct this policy with `opts`.
+    pub fn build(&self, opts: &ProphetOptions) -> Box<dyn BalancingPolicy> {
+        (self.build)(opts)
+    }
+}
+
+/// The registry. Order is the display order of listings.
+pub const ENTRIES: &[PolicyEntry] = &[
+    PolicyEntry {
+        name: "deepspeed",
+        aliases: &["deepspeed-moe"],
+        summary: "Deepspeed-MoE: pure expert parallelism, no load balancing",
+        build: |_| Box::new(builtin::DeepspeedMoe),
+    },
+    PolicyEntry {
+        name: "fastermoe",
+        aliases: &[],
+        summary: "FasterMoE: dynamic shadowing to ALL devices, blocking broadcast",
+        build: |_| Box::new(builtin::FasterMoe::new()),
+    },
+    PolicyEntry {
+        name: "top2",
+        aliases: &[],
+        summary: "replicate the 2 heaviest experts to every device (top<k> works too)",
+        build: |_| Box::new(builtin::TopK::new(2)),
+    },
+    PolicyEntry {
+        name: "top3",
+        aliases: &[],
+        summary: "replicate the 3 heaviest experts to every device",
+        build: |_| Box::new(builtin::TopK::new(3)),
+    },
+    PolicyEntry {
+        name: "flexmoe",
+        aliases: &[],
+        summary: "FlexMoE-style incremental replica expand/shrink under a migration budget",
+        build: |_| Box::new(flexmoe::FlexMoe::default()),
+    },
+    PolicyEntry {
+        name: "pro-prophet",
+        aliases: &["prophet"],
+        summary: "Pro-Prophet: forecast-driven planner + block-wise overlap scheduler",
+        build: |opts| Box::new(builtin::ProProphet::new(opts.clone())),
+    },
+    PolicyEntry {
+        name: "planner-only",
+        aliases: &[],
+        summary: "Pro-Prophet planner with the scheduler ablated (Fig 14 arm)",
+        build: |opts| {
+            Box::new(builtin::ProProphet::new(ProphetOptions {
+                planner: PlannerConfig {
+                    use_overlap_model: false,
+                    ..opts.planner.clone()
+                },
+                scheduler_on: false,
+                prophet: opts.prophet.clone(),
+            }))
+        },
+    },
+];
+
+/// Canonical names, in display order.
+pub fn names() -> Vec<&'static str> {
+    ENTRIES.iter().map(|e| e.name).collect()
+}
+
+/// Whether `name` resolves to a policy (canonical, alias, or `top<k>`).
+pub fn is_known(name: &str) -> bool {
+    lookup(name).is_some() || parse_top_k(name).is_some()
+}
+
+/// Construct the policy registered under `name` with `opts`; None for
+/// unknown names.
+pub fn build(name: &str, opts: &ProphetOptions) -> Option<Box<dyn BalancingPolicy>> {
+    if let Some(entry) = lookup(name) {
+        return Some(entry.build(opts));
+    }
+    parse_top_k(name).map(|k| Box::new(builtin::TopK::new(k)) as Box<dyn BalancingPolicy>)
+}
+
+/// Multi-line listing for `--help` and `pro-prophet info`.
+pub fn describe() -> String {
+    let mut out = String::from("registered balancing policies:\n");
+    for e in ENTRIES {
+        let alias = if e.aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" (alias: {})", e.aliases.join(", "))
+        };
+        out.push_str(&format!("  {:<14}{}{}\n", e.name, e.summary, alias));
+    }
+    out
+}
+
+fn lookup(name: &str) -> Option<&'static PolicyEntry> {
+    ENTRIES
+        .iter()
+        .find(|e| e.name == name || e.aliases.contains(&name))
+}
+
+/// `top<k>` with k >= 1 (top2/top3 are also first-class entries).
+fn parse_top_k(name: &str) -> Option<usize> {
+    name.strip_prefix("top")?.parse::<usize>().ok().filter(|&k| k >= 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registered_name_constructs() {
+        let opts = ProphetOptions::default();
+        for e in ENTRIES {
+            let p = build(e.name, &opts)
+                .unwrap_or_else(|| panic!("registered name {:?} failed to build", e.name));
+            assert!(!p.name().is_empty(), "{} has an empty display name", e.name);
+            for alias in e.aliases {
+                assert!(build(alias, &opts).is_some(), "alias {alias:?} broken");
+            }
+        }
+    }
+
+    #[test]
+    fn generic_top_k_parses() {
+        let opts = ProphetOptions::default();
+        assert_eq!(build("top7", &opts).unwrap().name(), "top7");
+        assert!(build("top0", &opts).is_none(), "top0 is not a policy");
+        assert!(build("topx", &opts).is_none());
+    }
+
+    #[test]
+    fn unknown_names_are_rejected() {
+        let opts = ProphetOptions::default();
+        for bad in ["", "magic", "pro_prophet", "deepspeedmoe"] {
+            assert!(build(bad, &opts).is_none(), "{bad:?} should not resolve");
+            assert!(!is_known(bad));
+        }
+        assert!(is_known("pro-prophet"));
+        assert!(is_known("prophet"));
+        assert!(is_known("top5"));
+    }
+
+    #[test]
+    fn planner_only_entry_ablates_scheduler() {
+        let p = build("planner-only", &ProphetOptions::default()).unwrap();
+        assert_eq!(p.name(), "Pro-Prophet(planner)");
+    }
+
+    #[test]
+    fn listing_covers_all_entries() {
+        let d = describe();
+        for e in ENTRIES {
+            assert!(d.contains(e.name), "listing misses {}", e.name);
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! [`BalancerSession`]: one policy bound to one run.
+//!
+//! The session owns what is shared per run — the layer count and, for
+//! forecasting policies, the [`Prophet`] — and centralizes the
+//! observe → score → drift → invalidate loop that `sim::simulate` (phase
+//! 2) and `Trainer::step` used to each re-implement.  Drivers call
+//! [`BalancerSession::decide_layer`] from their per-layer fan-out (or
+//! [`BalancerSession::decide_iteration`] to let the session fan out) and
+//! [`BalancerSession::observe_iteration`] once per iteration with the
+//! actual gating results.
+
+use super::{BalancingPolicy, DecideCtx, Decision, LayerFeedback, PolicyCounters};
+use crate::moe::LoadMatrix;
+use crate::perfmodel::PerfModel;
+use crate::prophet::Prophet;
+use crate::util::threads;
+
+/// What one iteration's observations told the session, aggregated over
+/// layers (in layer order).
+#[derive(Clone, Debug, Default)]
+pub struct IterationFeedback {
+    /// Forecast errors of the layers that had an outstanding forecast.
+    pub forecast_errors: Vec<f64>,
+    /// Layers whose drift detector fired this iteration.
+    pub drift_layers: usize,
+}
+
+impl IterationFeedback {
+    /// Mean forecast error (None when no layer had a forecast — warm-up
+    /// iterations and non-forecasting policies).
+    pub fn mean_forecast_error(&self) -> Option<f64> {
+        if self.forecast_errors.is_empty() {
+            None
+        } else {
+            Some(self.forecast_errors.iter().sum::<f64>() / self.forecast_errors.len() as f64)
+        }
+    }
+}
+
+/// One [`BalancingPolicy`] bound to one run.
+pub struct BalancerSession {
+    policy: Box<dyn BalancingPolicy>,
+    prophet: Option<Prophet>,
+    n_layers: usize,
+    iterations_observed: usize,
+}
+
+impl BalancerSession {
+    /// Bind `policy` to a run over `n_layers` MoE layers; builds the
+    /// shared prophet when the policy forecasts.
+    pub fn new(mut policy: Box<dyn BalancingPolicy>, n_layers: usize) -> Self {
+        assert!(n_layers >= 1, "session needs at least one layer");
+        policy.bind(n_layers);
+        let prophet = policy.prophet_config().map(|cfg| Prophet::new(cfg, n_layers));
+        BalancerSession { policy, prophet, n_layers, iterations_observed: 0 }
+    }
+
+    pub fn policy_name(&self) -> String {
+        self.policy.name()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Iterations fed through [`BalancerSession::observe_iteration`].
+    pub fn iterations_observed(&self) -> usize {
+        self.iterations_observed
+    }
+
+    /// The shared forecasting subsystem (None for non-forecasting
+    /// policies).
+    pub fn prophet(&self) -> Option<&Prophet> {
+        self.prophet.as_ref()
+    }
+
+    /// Whole-run decision counters.
+    pub fn counters(&self) -> PolicyCounters {
+        self.policy.counters()
+    }
+
+    /// Decide one layer's placement.  `&self`: safe to call from a
+    /// per-layer thread fan-out (drivers that also price per layer fold
+    /// this into their own [`crate::util::threads::par_map`] closure).
+    pub fn decide_layer(&self, layer: usize, w: &LoadMatrix, pm: &PerfModel) -> Decision {
+        assert!(layer < self.n_layers, "layer {layer} out of range");
+        let ctx = DecideCtx { pm, prophet: self.prophet.as_ref() };
+        self.policy.decide(layer, w, &ctx)
+    }
+
+    /// Decide all layers of one iteration, fanned out over scoped threads
+    /// (serial below the [`threads`] work threshold — results identical).
+    pub fn decide_iteration(&self, layers: &[LoadMatrix], pm: &PerfModel) -> Vec<Decision> {
+        assert_eq!(layers.len(), self.n_layers, "layer count mismatch");
+        let work = layers.first().map_or(1, |w| w.n_devices() * w.n_experts());
+        threads::par_map(layers.len(), work, |l| self.decide_layer(l, &layers[l], pm))
+    }
+
+    /// Feed the ACTUAL gating results of one iteration, in layer order:
+    /// scores the outstanding forecasts, advances the history, runs drift
+    /// detection, and hands each layer's verdict to the policy (which
+    /// reacts by invalidating caches, adjusting placements, ...).
+    pub fn observe_iteration(&mut self, layers: &[LoadMatrix]) -> IterationFeedback {
+        assert_eq!(layers.len(), self.n_layers, "layer count mismatch");
+        let mut fb = IterationFeedback::default();
+        for (l, w) in layers.iter().enumerate() {
+            let layer_fb = match self.prophet.as_mut() {
+                Some(prophet) => {
+                    let obs = prophet.observe_layer(l, w);
+                    LayerFeedback { drift: obs.drift, forecast_error: obs.forecast_error }
+                }
+                None => LayerFeedback::default(),
+            };
+            if layer_fb.drift {
+                fb.drift_layers += 1;
+            }
+            if let Some(e) = layer_fb.forecast_error {
+                fb.forecast_errors.push(e);
+            }
+            self.policy.observe(l, w, &layer_fb);
+        }
+        self.iterations_observed += 1;
+        fb
+    }
+}
+
+impl std::fmt::Debug for BalancerSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BalancerSession")
+            .field("policy", &self.policy.name())
+            .field("n_layers", &self.n_layers)
+            .field("forecasting", &self.prophet.is_some())
+            .field("iterations_observed", &self.iterations_observed)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::{builtin, ProphetOptions};
+    use crate::cluster::ClusterSpec;
+    use crate::config::ModelSpec;
+    use crate::workload::{WorkloadConfig, WorkloadGen};
+
+    fn pm() -> PerfModel {
+        PerfModel::new(&ModelSpec::moe_gpt_s(8, 1, 8192), &ClusterSpec::hpwnv(2))
+    }
+
+    #[test]
+    fn non_forecasting_session_has_no_prophet() {
+        let s = BalancerSession::new(Box::new(builtin::DeepspeedMoe), 3);
+        assert!(s.prophet().is_none());
+        assert_eq!(s.policy_name(), "Deepspeed-MoE");
+        assert_eq!(s.n_layers(), 3);
+    }
+
+    #[test]
+    fn forecasting_session_scores_and_feeds_back() {
+        let mut s = BalancerSession::new(
+            Box::new(builtin::ProProphet::new(ProphetOptions::full())),
+            3,
+        );
+        assert!(s.prophet().is_some());
+        let mut gen = WorkloadGen::new(WorkloadConfig::paper_default(3, 8, 8, 8192));
+        // Warm-up iteration: no outstanding forecast to score.
+        let fb0 = s.observe_iteration(&gen.next_iteration());
+        assert!(fb0.mean_forecast_error().is_none());
+        // From iteration 1 on, every layer's forecast gets scored.
+        let fb1 = s.observe_iteration(&gen.next_iteration());
+        assert_eq!(fb1.forecast_errors.len(), 3);
+        assert!(fb1.mean_forecast_error().unwrap() >= 0.0);
+        assert_eq!(s.iterations_observed(), 2);
+    }
+
+    #[test]
+    fn decide_iteration_matches_per_layer_decides() {
+        let pm = pm();
+        let mut gen = WorkloadGen::new(WorkloadConfig::paper_default(4, 8, 8, 8192));
+        let layers = gen.next_iteration();
+        let s = BalancerSession::new(Box::new(builtin::TopK::new(2)), 4);
+        let batch = s.decide_iteration(&layers, &pm);
+        for (l, d) in batch.iter().enumerate() {
+            let single = s.decide_layer(l, &layers[l], &pm);
+            assert_eq!(*d.placement, *single.placement, "layer {l}");
+            assert_eq!(d.plan_cost, single.plan_cost);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn layer_out_of_range_rejected() {
+        let s = BalancerSession::new(Box::new(builtin::DeepspeedMoe), 2);
+        let w = LoadMatrix::zeros(4, 4);
+        s.decide_layer(2, &w, &pm());
+    }
+}

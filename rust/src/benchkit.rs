@@ -82,9 +82,10 @@ pub fn header(id: &str, what: &str) {
 
 /// Shared experiment scaffolding for the paper-table benches.
 pub mod scenario {
+    use crate::balancer::{registry, ProphetOptions};
     use crate::cluster::ClusterSpec;
     use crate::config::ModelSpec;
-    use crate::sim::{simulate, Policy, ProphetOptions, SimReport};
+    use crate::sim::{simulate_policy, SimReport};
     use crate::workload::{Trace, WorkloadConfig, WorkloadGen};
 
     /// Synthetic trace matching a model on a cluster (top-k slots).
@@ -99,21 +100,41 @@ pub mod scenario {
         Trace::capture(&mut WorkloadGen::new(cfg), iters)
     }
 
+    /// Simulate one registry policy (default options) on a scenario —
+    /// the bench-side entry to the open policy API.
+    pub fn report_for(
+        policy: &str,
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        trace: &Trace,
+    ) -> SimReport {
+        report_with(policy, &ProphetOptions::default(), model, cluster, trace)
+    }
+
+    /// Like [`report_for`] with explicit options (ablation arms).
+    pub fn report_with(
+        policy: &str,
+        opts: &ProphetOptions,
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        trace: &Trace,
+    ) -> SimReport {
+        let p = registry::build(policy, opts)
+            .unwrap_or_else(|| panic!("unknown policy {policy:?}"));
+        simulate_policy(model, cluster, trace, p)
+    }
+
     /// (Deepspeed-MoE, FasterMoE, Pro-Prophet) reports on one scenario.
     pub fn three_way(
         model: &ModelSpec,
         cluster: &ClusterSpec,
         trace: &Trace,
     ) -> (SimReport, SimReport, SimReport) {
-        let ds = simulate(model, cluster, trace, &Policy::DeepspeedMoe);
-        let fm = simulate(model, cluster, trace, &Policy::FasterMoe);
-        let pp = simulate(
-            model,
-            cluster,
-            trace,
-            &Policy::ProProphet(ProphetOptions::full()),
-        );
-        (ds, fm, pp)
+        (
+            report_for("deepspeed", model, cluster, trace),
+            report_for("fastermoe", model, cluster, trace),
+            report_for("pro-prophet", model, cluster, trace),
+        )
     }
 
     /// Speedups (FasterMoE/DS, Pro-Prophet/DS) like Table IV/V rows.

@@ -7,6 +7,7 @@
 
 pub mod toml;
 
+use crate::balancer::{registry, BalancingPolicy, ProphetOptions};
 use crate::cluster::ClusterSpec;
 use crate::planner::PlannerConfig;
 use crate::prophet::{PredictorKind, ProphetConfig};
@@ -145,6 +146,10 @@ pub struct TrainingConfig {
     /// Feed observed gate loads into the planner+simulator as we train.
     pub analyze_balance: bool,
     pub report_path: Option<String>,
+    /// Persist the prophet's history ring buffer (workload-trace format)
+    /// here after the run — replayable via `pro-prophet trace
+    /// --from-store` and the simulator.
+    pub store_path: Option<String>,
 }
 
 impl Default for TrainingConfig {
@@ -157,15 +162,23 @@ impl Default for TrainingConfig {
             log_every: 10,
             analyze_balance: true,
             report_path: None,
+            store_path: None,
         }
     }
 }
 
-/// A full experiment: model x cluster x planner x prophet settings.
+/// A full experiment: model x cluster x policy x planner x prophet
+/// settings.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     pub model: ModelSpec,
     pub cluster: ClusterSpec,
+    /// Balancing-policy registry name (`[policy] name = "..."`; see
+    /// [`crate::balancer::registry`]).
+    pub policy: String,
+    /// Block-wise overlap scheduling on/off (`[policy] scheduler = ...`,
+    /// consumed by the Pro-Prophet family).
+    pub scheduler_on: bool,
     pub planner: PlannerConfig,
     /// Forecasting subsystem knobs (`[prophet]` table).
     pub prophet: ProphetConfig,
@@ -218,9 +231,18 @@ impl ExperimentConfig {
                 .ok_or_else(|| format!("unknown prophet.predictor {predictor_name:?}"))?,
         };
         prophet.validate()?;
+        let policy = t.str_or("policy.name", "pro-prophet");
+        if !registry::is_known(&policy) {
+            return Err(format!(
+                "unknown policy.name {policy:?} (known: {})",
+                registry::names().join(", ")
+            ));
+        }
         Ok(ExperimentConfig {
             model,
             cluster,
+            policy,
+            scheduler_on: t.bool_or("policy.scheduler", true),
             planner,
             prophet,
             iterations: t.usize_or("iterations", 100),
@@ -230,6 +252,22 @@ impl ExperimentConfig {
 
     pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
         Self::from_table(&toml::parse_file(path)?)
+    }
+
+    /// The experiment's planner/scheduler/prophet knobs as the options
+    /// object every registry constructor takes.
+    pub fn prophet_options(&self) -> ProphetOptions {
+        ProphetOptions {
+            planner: self.planner.clone(),
+            scheduler_on: self.scheduler_on,
+            prophet: self.prophet.clone(),
+        }
+    }
+
+    /// Construct the configured balancing policy from the registry.
+    pub fn build_policy(&self) -> Result<Box<dyn BalancingPolicy>, String> {
+        registry::build(&self.policy, &self.prophet_options())
+            .ok_or_else(|| format!("unknown policy {:?}", self.policy))
     }
 }
 
@@ -323,6 +361,25 @@ mod tests {
         assert!(ExperimentConfig::from_table(&t4).is_err());
         let t5 = toml::parse("[prophet]\nwindow = 0").unwrap();
         assert!(ExperimentConfig::from_table(&t5).is_err());
+    }
+
+    #[test]
+    fn policy_table_parses_and_builds() {
+        let t = toml::parse("[policy]\nname = \"flexmoe\"\nscheduler = false").unwrap();
+        let e = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(e.policy, "flexmoe");
+        assert!(!e.scheduler_on);
+        assert_eq!(e.build_policy().unwrap().name(), "FlexMoE");
+        // Default policy is pro-prophet with the scheduler on.
+        let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(d.policy, "pro-prophet");
+        assert!(d.scheduler_on);
+        assert_eq!(d.build_policy().unwrap().name(), "Pro-Prophet");
+        assert!(d.prophet_options().scheduler_on);
+        // Unknown names fail at parse time with the known list.
+        let bad = toml::parse("[policy]\nname = \"magic\"").unwrap();
+        let err = ExperimentConfig::from_table(&bad).unwrap_err();
+        assert!(err.contains("magic") && err.contains("pro-prophet"), "{err}");
     }
 
     #[test]

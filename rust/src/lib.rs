@@ -12,6 +12,14 @@
 //!   per layer from rolling forecast error, and drift detection that
 //!   forces replans.  Data flow: trainer/sim → `prophet::store` →
 //!   `prophet::ensemble` → [`planner`].
+//! * [`balancer`] — the open policy API: the [`balancer::BalancingPolicy`]
+//!   trait (decide → `Decision { placement, plan_cost, comm_style,
+//!   schedule_kind }`, observe ← feedback), the
+//!   [`balancer::BalancerSession`] owning the shared prophet and the
+//!   observe→score→drift→invalidate loop, the string-keyed policy
+//!   registry behind the CLI/TOML/benches, the four paper policies as
+//!   trait impls, and the FlexMoE-style dynamic re-placement baseline as
+//!   the worked add-a-policy-in-one-file example.
 //! * [`planner`] — the paper's §IV contribution: lightweight expert
 //!   placements, the analytic performance model (Eq 1–6/8) and the
 //!   locality-based greedy search (Algorithm 1), planning one iteration
@@ -19,8 +27,10 @@
 //! * [`scheduler`] — the paper's §V contribution: the MoE-block scheduling
 //!   space and the block-wise overlap strategy (Algorithm 2).
 //! * [`sim`] — a discrete-event cluster simulator standing in for the
-//!   authors' GPU testbeds (see DESIGN.md §3), plus the Deepspeed-MoE /
-//!   FasterMoE / static-top-k baseline policies.
+//!   authors' GPU testbeds (see DESIGN.md §3), now a thin driver over
+//!   [`balancer`] sessions (the legacy `sim::Policy` enum is a
+//!   deprecated shim; `sim::reference` freezes the pre-refactor path as
+//!   the golden-equivalence oracle).
 //! * [`runtime`] + [`trainer`] + [`coordinator`] — the execution stack:
 //!   PJRT loading of the AOT'd JAX/Pallas artifacts, the end-to-end
 //!   training loop, and a threaded expert-parallel coordinator with
@@ -32,6 +42,7 @@
 //! the model to HLO text under `artifacts/`, and everything at run time is
 //! this crate.
 
+pub mod balancer;
 pub mod benchkit;
 pub mod cluster;
 pub mod config;

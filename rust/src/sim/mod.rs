@@ -1,76 +1,50 @@
-//! Training simulation: policies (Pro-Prophet and the baselines) executed
-//! over workload traces on the discrete-event engine.
+//! Training simulation: balancing policies executed over workload traces
+//! on the discrete-event engine.
 //!
 //! This is the harness behind every paper table and figure: it prices one
 //! training iteration of a (model, cluster, policy) triple and aggregates
 //! per-iteration, per-layer, and breakdown statistics.
+//!
+//! Since the balancer refactor the simulator is a *thin driver* over
+//! [`crate::balancer::BalancerSession`]: policies come in as
+//! `Box<dyn BalancingPolicy>` (see [`simulate_policy`]), the session owns
+//! the observe→score→drift→invalidate loop, and this module only prices
+//! each [`Decision`] on the engine and assembles the timeline its
+//! [`ScheduleKind`] asks for.  The legacy [`Policy`] enum survives one
+//! more PR as a deprecated shim; `reference.rs` preserves the
+//! pre-refactor enum path as the frozen golden-equivalence oracle.
 
 pub mod engine;
+pub mod reference;
 pub mod timeline;
 
 pub use engine::Engine;
 
+use crate::balancer::{
+    BalancerSession, BalancingPolicy, CommStyle, Decision, ScheduleKind,
+};
 use crate::cluster::ClusterSpec;
 use crate::config::ModelSpec;
 use crate::metrics::balance_degree;
 use crate::moe::{LoadMatrix, Placement};
 use crate::perfmodel::PerfModel;
-use crate::planner::{greedy_search, policies, Planner, PlannerConfig};
-use crate::prophet::{Prophet, ProphetConfig};
 use crate::scheduler::{build_blocking, build_blockwise, BlockCosts, LoadBalanceOps};
 use crate::util::threads;
 use crate::workload::Trace;
 use std::collections::BTreeMap;
-use std::sync::Arc;
 
-/// Pro-Prophet feature switches (the Fig 14 ablation axes plus the
-/// forecasting knobs of the prophet subsystem).
-#[derive(Clone, Debug)]
-pub struct ProphetOptions {
-    pub planner: PlannerConfig,
-    /// Block-wise overlap scheduling (§V) on/off.
-    pub scheduler_on: bool,
-    /// Forecasting subsystem knobs (predictor selection, drift detection).
-    pub prophet: ProphetConfig,
-}
-
-impl Default for ProphetOptions {
-    fn default() -> Self {
-        ProphetOptions {
-            planner: PlannerConfig::default(),
-            scheduler_on: true,
-            prophet: ProphetConfig::default(),
-        }
-    }
-}
-
-impl ProphetOptions {
-    /// Planner only (scheduler ablated): Eq 6 evaluation, blocking timeline.
-    pub fn planner_only() -> Self {
-        ProphetOptions {
-            planner: PlannerConfig { use_overlap_model: false, ..Default::default() },
-            scheduler_on: false,
-            ..Default::default()
-        }
-    }
-
-    /// Scheduler on, but the planner evaluates with the blocking Eq 6
-    /// (i.e. without the §V-C combination).
-    pub fn without_combination() -> Self {
-        ProphetOptions {
-            planner: PlannerConfig { use_overlap_model: false, ..Default::default() },
-            scheduler_on: true,
-            ..Default::default()
-        }
-    }
-
-    /// Full system: block-wise scheduler + Eq 8-aware planner.
-    pub fn full() -> Self {
-        ProphetOptions::default()
-    }
-}
+/// Re-exported from [`crate::balancer`] (its canonical home since the
+/// refactor) so existing `sim::ProphetOptions` imports keep working.
+pub use crate::balancer::ProphetOptions;
 
 /// A load-balancing policy under simulation.
+///
+/// **Deprecated shim.**  The closed enum is superseded by the open
+/// [`BalancingPolicy`] trait + [`crate::balancer::registry`]; it is kept
+/// for one PR so benches/tests can migrate incrementally, and converts
+/// losslessly via `From<Policy> for Box<dyn BalancingPolicy>`.  The
+/// golden test (`rust/tests/golden_equivalence.rs`) pins the conversion
+/// bit-for-bit against the pre-refactor enum path in [`reference`].
 #[derive(Clone, Debug)]
 pub enum Policy {
     /// Deepspeed-MoE: pure EP, no load balancing.
@@ -99,6 +73,24 @@ impl Policy {
                 }
             }
         }
+    }
+}
+
+impl From<&Policy> for Box<dyn BalancingPolicy> {
+    fn from(p: &Policy) -> Self {
+        use crate::balancer::builtin;
+        match p {
+            Policy::DeepspeedMoe => Box::new(builtin::DeepspeedMoe),
+            Policy::FasterMoe => Box::new(builtin::FasterMoe::new()),
+            Policy::TopK(k) => Box::new(builtin::TopK::new(*k)),
+            Policy::ProProphet(o) => Box::new(builtin::ProProphet::new(o.clone())),
+        }
+    }
+}
+
+impl From<Policy> for Box<dyn BalancingPolicy> {
+    fn from(p: Policy) -> Self {
+        Box::<dyn BalancingPolicy>::from(&p)
     }
 }
 
@@ -227,136 +219,78 @@ impl SimReport {
     }
 }
 
-/// Per-layer planning + pricing outcome (the parallel phase's unit of
-/// work; see [`plan_and_price`]).
+/// Per-layer decide + price outcome (the parallel phase's unit of work).
 struct LayerOutcome {
     costs: BlockCosts,
     bal_before: f64,
     bal_after: f64,
     trans_copies: u64,
+    schedule: ScheduleKind,
 }
 
-/// Decide a placement for one layer and price its block operators.
-/// Layers are independent within an iteration — planning reads only
-/// forecasts armed by PREVIOUS iterations — so `simulate` fans this out
-/// across layers with scoped threads.
-fn plan_and_price(
-    layer: usize,
-    w: &LoadMatrix,
-    policy: &Policy,
-    pm: &PerfModel,
-    eng: &Engine,
-    planner: Option<&mut Planner>,
-    prophet: Option<&Prophet>,
-) -> LayerOutcome {
-    let (placement, plan_cost): (Arc<Placement>, f64) = match policy {
-        Policy::DeepspeedMoe => {
-            (Arc::new(Placement::identity(w.n_experts(), w.n_devices())), 0.0)
-        }
-        Policy::FasterMoe => {
-            // FasterMoE decides on the CURRENT iteration's gating (it has
-            // no locality prediction) and pays its search every iteration.
-            (Arc::new(policies::fastermoe_shadowing(w, pm)), pm.t_plan)
-        }
-        Policy::TopK(k) => {
-            // topk() on the load vector: negligible decision cost.
-            (Arc::new(policies::top_k_to_all(w, *k)), 0.0)
-        }
-        Policy::ProProphet(_) => {
-            // Plan on the prophet's forecast of THIS iteration (available
-            // from iteration 1 on); warm up on the observed matrix.
-            let planner = planner.expect("Pro-Prophet pricing needs a planner");
-            let forecast = prophet.and_then(|p| p.forecast_matrix(layer));
-            let w_plan: &LoadMatrix = forecast.as_ref().unwrap_or(w);
-            let before = planner.plans_run;
-            let p = planner.plan(w_plan, pm);
-            let cost = if planner.plans_run > before { pm.t_plan } else { 0.0 };
-            (p, cost)
-        }
-    };
+/// Price one layer's [`Decision`] on the engine.
+fn price_layer(eng: &Engine, w: &LoadMatrix, d: Decision) -> LayerOutcome {
     let routed_before = w.route_identity();
-    let routed_after = w.route(&placement);
-    let unicast = matches!(policy, Policy::FasterMoe | Policy::TopK(_));
+    let routed_after = w.route(&d.placement);
+    let unicast = d.comm_style == CommStyle::Coarse;
     LayerOutcome {
-        costs: eng.block_costs_styled(w, &placement, plan_cost, unicast),
+        costs: eng.block_costs_styled(w, &d.placement, d.plan_cost, unicast),
         bal_before: balance_degree(&routed_before.h),
         bal_after: balance_degree(&routed_after.h),
-        trans_copies: placement.transfer_copies(),
+        trans_copies: d.placement.transfer_copies(),
+        schedule: d.schedule_kind,
     }
 }
 
-/// Simulate `trace` under `policy`.  For Pro-Prophet, placement decisions
-/// for iteration i use the prophet subsystem's forecast built from
-/// iterations 0..i (§V-A: the Plan primitive runs one iteration early on
-/// predicted statistics); iteration 0 plans on its own distribution.
-/// Prophet drift detection invalidates a layer's cached placement, forcing
-/// a replan regardless of the replan interval.
+/// Simulate `trace` under any [`BalancingPolicy`].
 ///
-/// The per-layer planning/pricing fan-out runs on scoped threads
-/// ([`crate::util::threads`]); prophet observation stays sequential, so
-/// results are identical to the serial loop (`PRO_PROPHET_THREADS=1`).
-pub fn simulate(
+/// Per iteration: phase 1 fans `decide` + pricing out across layers on
+/// scoped threads (planning reads only forecasts armed by PREVIOUS
+/// iterations, so layer order does not matter); phase 2 feeds the ACTUAL
+/// gating results through the session sequentially (scores forecasts,
+/// advances history, runs drift detection, lets the policy react).
+/// Results are identical to the serial loop (`PRO_PROPHET_THREADS=1`).
+pub fn simulate_policy(
     model: &ModelSpec,
     cluster: &ClusterSpec,
     trace: &Trace,
-    policy: &Policy,
+    policy: Box<dyn BalancingPolicy>,
 ) -> SimReport {
     let pm = PerfModel::new(model, cluster);
     let eng = Engine::new(cluster, &pm);
     let n_layers = trace.n_layers;
-
-    // Per-layer planner state + the shared forecasting subsystem for
-    // Pro-Prophet.
-    let mut planners: Vec<Planner> = match policy {
-        Policy::ProProphet(o) => (0..n_layers).map(|_| Planner::new(o.planner.clone())).collect(),
-        _ => vec![],
-    };
-    let mut prophet: Option<Prophet> = match policy {
-        Policy::ProProphet(o) => Some(Prophet::new(o.prophet.clone(), n_layers)),
-        _ => None,
-    };
-
-    let mut report = SimReport { policy: policy.name(), ..Default::default() };
+    if n_layers == 0 {
+        return SimReport { policy: policy.name(), ..Default::default() };
+    }
+    let mut session = BalancerSession::new(policy, n_layers);
+    let mut report = SimReport { policy: session.policy_name(), ..Default::default() };
 
     for layers in trace.iterations.iter() {
-        // Phase 1 (parallel across layers): plan placements and price the
-        // block operators.  Planning consumes forecasts armed by previous
-        // iterations only, so layer order does not matter.
-        let outcomes: Vec<LayerOutcome> = match policy {
-            Policy::ProProphet(_) => {
-                let prophet_ref = prophet.as_ref();
-                threads::par_map_mut(&mut planners, |l, planner| {
-                    plan_and_price(l, &layers[l], policy, &pm, &eng, Some(planner), prophet_ref)
-                })
-            }
-            _ => threads::par_map(n_layers, |l| {
-                plan_and_price(l, &layers[l], policy, &pm, &eng, None, None)
-            }),
+        // Phase 1 (parallel across layers): decide placements and price
+        // the block operators.
+        let work = layers.first().map_or(1, |w| w.n_devices() * w.n_experts());
+        let outcomes: Vec<LayerOutcome> = {
+            let session = &session;
+            threads::par_map(n_layers, work, |l| {
+                let w = &layers[l];
+                price_layer(&eng, w, session.decide_layer(l, w, &pm))
+            })
         };
 
-        // Phase 2 (sequential): feed the ACTUAL gating results to the
-        // prophet — scores the outstanding forecasts, advances the
-        // history, and runs drift detection for the next iteration's
-        // plans.
-        let mut forecast_errs: Vec<f64> = Vec::new();
-        if let Some(prophet) = prophet.as_mut() {
-            for (l, w) in layers.iter().enumerate() {
-                let obs = prophet.observe_layer(l, w);
-                if let Some(e) = obs.forecast_error {
-                    forecast_errs.push(e);
-                }
-                if obs.drift {
-                    planners[l].invalidate();
-                    report.drift_replans += 1;
-                }
-            }
-        }
+        // Phase 2 (sequential): the session's observe→score→drift→
+        // invalidate loop over the actual gating results.
+        let fb = session.observe_iteration(layers);
 
+        let kind = outcomes[0].schedule;
         let mut costs: Vec<BlockCosts> = Vec::with_capacity(n_layers);
         let mut bal_before = 0.0;
         let mut bal_after = 0.0;
         let mut trans_copies = 0u64;
         for o in outcomes {
+            debug_assert!(
+                o.schedule == kind,
+                "policy returned mixed schedule kinds within one iteration"
+            );
             bal_before += o.bal_before;
             bal_after += o.bal_after;
             trans_copies += o.trans_copies;
@@ -365,18 +299,10 @@ pub fn simulate(
         bal_before /= n_layers as f64;
         bal_after /= n_layers as f64;
 
-        let schedule = match policy {
-            Policy::DeepspeedMoe => build_blocking(&costs, LoadBalanceOps::None),
-            Policy::FasterMoe | Policy::TopK(_) => {
-                build_blocking(&costs, LoadBalanceOps::Blocking)
-            }
-            Policy::ProProphet(o) => {
-                if o.scheduler_on {
-                    build_blockwise(&costs)
-                } else {
-                    build_blocking(&costs, LoadBalanceOps::Blocking)
-                }
-            }
+        let schedule = match kind {
+            ScheduleKind::NoLoadBalance => build_blocking(&costs, LoadBalanceOps::None),
+            ScheduleKind::Blocking => build_blocking(&costs, LoadBalanceOps::Blocking),
+            ScheduleKind::Blockwise => build_blockwise(&costs),
         };
         debug_assert!(schedule.validate_dependencies().is_ok());
 
@@ -397,36 +323,37 @@ pub fn simulate(
             balance_before: bal_before,
             balance_after: bal_after,
             trans_copies,
-            forecast_error: if forecast_errs.is_empty() {
-                None
-            } else {
-                Some(forecast_errs.iter().sum::<f64>() / forecast_errs.len() as f64)
-            },
+            forecast_error: fb.mean_forecast_error(),
         });
     }
 
-    // Whole-run planning totals.
-    match policy {
-        Policy::ProProphet(_) => {
-            report.plans_run = planners.iter().map(|p| p.plans_run).sum();
-            report.plans_reused = planners.iter().map(|p| p.plans_reused).sum();
-        }
-        Policy::FasterMoe => {
-            // Pays its shadowing search for every layer of every iteration.
-            report.plans_run = trace.len() * n_layers;
-        }
-        Policy::DeepspeedMoe | Policy::TopK(_) => {}
-    }
+    let counters = session.counters();
+    report.plans_run = counters.plans_run;
+    report.plans_reused = counters.plans_reused;
+    report.drift_replans = counters.drift_replans;
     report
 }
 
-/// Convenience: simulate a single layer's load matrix once under a given
-/// placement strategy, returning (identity placement time, policy time).
-pub fn single_layer_times(
+/// Simulate `trace` under a legacy [`Policy`] (deprecated shim over
+/// [`simulate_policy`]; see the enum docs).
+pub fn simulate(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    trace: &Trace,
+    policy: &Policy,
+) -> SimReport {
+    simulate_policy(model, cluster, trace, policy.into())
+}
+
+/// Convenience: simulate a single layer's load matrix once under any
+/// [`BalancingPolicy`], returning (identity placement time, policy time).
+/// The one-shot comparison excludes the Plan primitive's cost on both
+/// sides (pre-refactor convention, pinned by the golden test).
+pub fn single_layer_times_policy(
     model: &ModelSpec,
     cluster: &ClusterSpec,
     w: &LoadMatrix,
-    policy: &Policy,
+    policy: Box<dyn BalancingPolicy>,
 ) -> (f64, f64) {
     let pm = PerfModel::new(model, cluster);
     let eng = Engine::new(cluster, &pm);
@@ -435,18 +362,11 @@ pub fn single_layer_times(
         let costs = [eng.block_costs(w, &ident, 0.0)];
         build_blocking(&costs, LoadBalanceOps::None).total_time()
     };
-    let (placement, overlap) = match policy {
-        Policy::DeepspeedMoe => (ident, false),
-        Policy::FasterMoe => (policies::fastermoe_shadowing(w, &pm), false),
-        Policy::TopK(k) => (policies::top_k_to_all(w, *k), false),
-        Policy::ProProphet(o) => (
-            greedy_search(w, &pm, &o.planner).placement,
-            o.scheduler_on,
-        ),
-    };
-    let unicast = matches!(policy, Policy::FasterMoe | Policy::TopK(_));
-    let costs = [eng.block_costs_styled(w, &placement, 0.0, unicast)];
-    let t_policy = if overlap {
+    let session = BalancerSession::new(policy, 1);
+    let d = session.decide_layer(0, w, &pm);
+    let unicast = d.comm_style == CommStyle::Coarse;
+    let costs = [eng.block_costs_styled(w, &d.placement, 0.0, unicast)];
+    let t_policy = if d.schedule_kind == ScheduleKind::Blockwise {
         build_blockwise(&costs).total_time()
     } else {
         build_blocking(&costs, LoadBalanceOps::Blocking).total_time()
@@ -454,9 +374,21 @@ pub fn single_layer_times(
     (t_ident, t_policy)
 }
 
+/// Legacy-enum form of [`single_layer_times_policy`] (deprecated shim).
+pub fn single_layer_times(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    w: &LoadMatrix,
+    policy: &Policy,
+) -> (f64, f64) {
+    single_layer_times_policy(model, cluster, w, policy.into())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::balancer::registry;
+    use crate::planner::PlannerConfig;
     use crate::workload::{Trace, WorkloadConfig, WorkloadGen};
 
     fn setup() -> (ModelSpec, ClusterSpec, Trace) {
@@ -630,5 +562,49 @@ mod tests {
         let (ident, pp) =
             single_layer_times(&m, &c, w, &Policy::ProProphet(ProphetOptions::full()));
         assert!(pp < ident, "single layer: prophet {pp} !< identity {ident}");
+    }
+
+    #[test]
+    fn flexmoe_runs_entirely_through_the_trait() {
+        // The open-API proof: a policy implemented outside sim/ runs the
+        // full harness via the registry, no enum arm anywhere.
+        let (m, c, t) = setup();
+        let fx = simulate_policy(
+            &m,
+            &c,
+            &t,
+            registry::build("flexmoe", &ProphetOptions::default()).unwrap(),
+        );
+        assert_eq!(fx.policy, "FlexMoE");
+        assert_eq!(fx.iters.len(), 6);
+        assert!(fx.plans_run > 0, "skewed load must trigger adjustments");
+        assert!(fx.mean_forecast_error().is_nan(), "FlexMoE does not forecast");
+        // It must not be meaningfully slower than doing nothing, and its
+        // placements must improve balance once warmed up.
+        let ds = simulate(&m, &c, &t, &Policy::DeepspeedMoe);
+        assert!(
+            fx.avg_iter_time() <= ds.avg_iter_time() * 1.05,
+            "FlexMoE {:.4} much slower than Deepspeed {:.4}",
+            fx.avg_iter_time(),
+            ds.avg_iter_time()
+        );
+        // Its placements actually move replicas (Trans volume) once the
+        // skew is observed, and balance is not made worse on average.
+        assert!(fx.iters.iter().any(|i| i.trans_copies > 0), "no replicas moved");
+        assert!(fx.mean_rb() > 0.9, "RB {}", fx.mean_rb());
+    }
+
+    #[test]
+    fn enum_shim_and_trait_path_agree() {
+        // Cheap smoke of the shim (the exhaustive bit-equality gate lives
+        // in rust/tests/golden_equivalence.rs against the frozen oracle).
+        let (m, c, t) = setup();
+        let via_enum = simulate(&m, &c, &t, &Policy::TopK(2));
+        let via_trait =
+            simulate_policy(&m, &c, &t, Box::<dyn BalancingPolicy>::from(Policy::TopK(2)));
+        assert_eq!(via_enum.policy, via_trait.policy);
+        for (a, b) in via_enum.iters.iter().zip(&via_trait.iters) {
+            assert_eq!(a.time.to_bits(), b.time.to_bits());
+        }
     }
 }

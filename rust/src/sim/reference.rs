@@ -1,0 +1,220 @@
+//! Frozen pre-refactor simulation path — the equivalence oracle for the
+//! [`crate::balancer`] trait API.
+//!
+//! This module is a verbatim copy of the `match`-on-[`Policy`] simulator
+//! that shipped before the balancer refactor (PR 3): planning, prophet
+//! observation, drift bookkeeping and comm-style selection all inlined as
+//! enum arms.  The trait-based driver in [`super`] must reproduce its
+//! [`SimReport`]s bit-for-bit; the golden test
+//! (`rust/tests/golden_equivalence.rs`) pins that.
+//!
+//! **Behaviorally frozen** — like `planner::greedy_search_reference`, this
+//! code must not be "improved".  If policy SEMANTICS ever change on
+//! purpose, change both implementations in lockstep or retire the oracle
+//! (see ROADMAP).
+
+use crate::cluster::ClusterSpec;
+use crate::config::ModelSpec;
+use crate::metrics::balance_degree;
+use crate::moe::{LoadMatrix, Placement};
+use crate::perfmodel::PerfModel;
+use crate::planner::{greedy_search, policies, Planner};
+use crate::prophet::Prophet;
+use crate::scheduler::{build_blocking, build_blockwise, BlockCosts, LoadBalanceOps};
+use crate::sim::{Engine, IterationResult, Policy, SimReport};
+use crate::util::threads;
+use crate::workload::Trace;
+use std::sync::Arc;
+
+/// Per-layer planning + pricing outcome (pre-refactor shape).
+struct LayerOutcome {
+    costs: BlockCosts,
+    bal_before: f64,
+    bal_after: f64,
+    trans_copies: u64,
+}
+
+fn plan_and_price(
+    layer: usize,
+    w: &LoadMatrix,
+    policy: &Policy,
+    pm: &PerfModel,
+    eng: &Engine,
+    planner: Option<&mut Planner>,
+    prophet: Option<&Prophet>,
+) -> LayerOutcome {
+    let (placement, plan_cost): (Arc<Placement>, f64) = match policy {
+        Policy::DeepspeedMoe => {
+            (Arc::new(Placement::identity(w.n_experts(), w.n_devices())), 0.0)
+        }
+        Policy::FasterMoe => {
+            (Arc::new(policies::fastermoe_shadowing(w, pm)), pm.t_plan)
+        }
+        Policy::TopK(k) => (Arc::new(policies::top_k_to_all(w, *k)), 0.0),
+        Policy::ProProphet(_) => {
+            let planner = planner.expect("Pro-Prophet pricing needs a planner");
+            let forecast = prophet.and_then(|p| p.forecast_matrix(layer));
+            let w_plan: &LoadMatrix = forecast.as_ref().unwrap_or(w);
+            let before = planner.plans_run;
+            let p = planner.plan(w_plan, pm);
+            let cost = if planner.plans_run > before { pm.t_plan } else { 0.0 };
+            (p, cost)
+        }
+    };
+    let routed_before = w.route_identity();
+    let routed_after = w.route(&placement);
+    let unicast = matches!(policy, Policy::FasterMoe | Policy::TopK(_));
+    LayerOutcome {
+        costs: eng.block_costs_styled(w, &placement, plan_cost, unicast),
+        bal_before: balance_degree(&routed_before.h),
+        bal_after: balance_degree(&routed_after.h),
+        trans_copies: placement.transfer_copies(),
+    }
+}
+
+/// The pre-refactor `sim::simulate`, preserved bit-for-bit.
+pub fn simulate_reference(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    trace: &Trace,
+    policy: &Policy,
+) -> SimReport {
+    let pm = PerfModel::new(model, cluster);
+    let eng = Engine::new(cluster, &pm);
+    let n_layers = trace.n_layers;
+
+    let mut planners: Vec<Planner> = match policy {
+        Policy::ProProphet(o) => (0..n_layers).map(|_| Planner::new(o.planner.clone())).collect(),
+        _ => vec![],
+    };
+    let mut prophet: Option<Prophet> = match policy {
+        Policy::ProProphet(o) => Some(Prophet::new(o.prophet.clone(), n_layers)),
+        _ => None,
+    };
+
+    let mut report = SimReport { policy: policy.name(), ..Default::default() };
+
+    for layers in trace.iterations.iter() {
+        let work = layers.first().map_or(1, |w| w.n_devices() * w.n_experts());
+        let outcomes: Vec<LayerOutcome> = match policy {
+            Policy::ProProphet(_) => {
+                let prophet_ref = prophet.as_ref();
+                threads::par_map_mut(&mut planners, work, |l, planner| {
+                    plan_and_price(l, &layers[l], policy, &pm, &eng, Some(planner), prophet_ref)
+                })
+            }
+            _ => threads::par_map(n_layers, work, |l| {
+                plan_and_price(l, &layers[l], policy, &pm, &eng, None, None)
+            }),
+        };
+
+        let mut forecast_errs: Vec<f64> = Vec::new();
+        if let Some(prophet) = prophet.as_mut() {
+            for (l, w) in layers.iter().enumerate() {
+                let obs = prophet.observe_layer(l, w);
+                if let Some(e) = obs.forecast_error {
+                    forecast_errs.push(e);
+                }
+                if obs.drift {
+                    planners[l].invalidate();
+                    report.drift_replans += 1;
+                }
+            }
+        }
+
+        let mut costs: Vec<BlockCosts> = Vec::with_capacity(n_layers);
+        let mut bal_before = 0.0;
+        let mut bal_after = 0.0;
+        let mut trans_copies = 0u64;
+        for o in outcomes {
+            bal_before += o.bal_before;
+            bal_after += o.bal_after;
+            trans_copies += o.trans_copies;
+            costs.push(o.costs);
+        }
+        bal_before /= n_layers as f64;
+        bal_after /= n_layers as f64;
+
+        let schedule = match policy {
+            Policy::DeepspeedMoe => build_blocking(&costs, LoadBalanceOps::None),
+            Policy::FasterMoe | Policy::TopK(_) => {
+                build_blocking(&costs, LoadBalanceOps::Blocking)
+            }
+            Policy::ProProphet(o) => {
+                if o.scheduler_on {
+                    build_blockwise(&costs)
+                } else {
+                    build_blocking(&costs, LoadBalanceOps::Blocking)
+                }
+            }
+        };
+        debug_assert!(schedule.validate_dependencies().is_ok());
+
+        let mut per_block = vec![0.0; n_layers];
+        for stage in &schedule.stages {
+            if let Some(op) = stage.comp.first().or(stage.comm.first()) {
+                let b = op.op.block().min(n_layers - 1);
+                per_block[b] += stage.time();
+            }
+        }
+
+        report.iters.push(IterationResult {
+            time: schedule.total_time(),
+            breakdown: schedule.exposed_breakdown(),
+            per_block_time: per_block,
+            balance_before: bal_before,
+            balance_after: bal_after,
+            trans_copies,
+            forecast_error: if forecast_errs.is_empty() {
+                None
+            } else {
+                Some(forecast_errs.iter().sum::<f64>() / forecast_errs.len() as f64)
+            },
+        });
+    }
+
+    match policy {
+        Policy::ProProphet(_) => {
+            report.plans_run = planners.iter().map(|p| p.plans_run).sum();
+            report.plans_reused = planners.iter().map(|p| p.plans_reused).sum();
+        }
+        Policy::FasterMoe => {
+            report.plans_run = trace.len() * n_layers;
+        }
+        Policy::DeepspeedMoe | Policy::TopK(_) => {}
+    }
+    report
+}
+
+/// The pre-refactor `sim::single_layer_times`, preserved bit-for-bit.
+pub fn single_layer_times_reference(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    w: &LoadMatrix,
+    policy: &Policy,
+) -> (f64, f64) {
+    let pm = PerfModel::new(model, cluster);
+    let eng = Engine::new(cluster, &pm);
+    let ident = Placement::identity(w.n_experts(), w.n_devices());
+    let t_ident = {
+        let costs = [eng.block_costs(w, &ident, 0.0)];
+        build_blocking(&costs, LoadBalanceOps::None).total_time()
+    };
+    let (placement, overlap) = match policy {
+        Policy::DeepspeedMoe => (ident, false),
+        Policy::FasterMoe => (policies::fastermoe_shadowing(w, &pm), false),
+        Policy::TopK(k) => (policies::top_k_to_all(w, *k), false),
+        Policy::ProProphet(o) => (
+            greedy_search(w, &pm, &o.planner).placement,
+            o.scheduler_on,
+        ),
+    };
+    let unicast = matches!(policy, Policy::FasterMoe | Policy::TopK(_));
+    let costs = [eng.block_costs_styled(w, &placement, 0.0, unicast)];
+    let t_policy = if overlap {
+        build_blockwise(&costs).total_time()
+    } else {
+        build_blocking(&costs, LoadBalanceOps::Blocking).total_time()
+    };
+    (t_ident, t_policy)
+}

@@ -3,13 +3,17 @@
 //! One step = build a token batch from the synthetic corpus, execute the
 //! fused fwd+bwd+Adam HLO, carry the (params, m, v) literals to the next
 //! step, and harvest the loss plus the per-layer expert-load histograms —
-//! the real "input distributions" that feed the [`crate::prophet`]
-//! subsystem (history, forecasts, drift) and through it the Pro-Prophet
-//! planner and the cluster simulator (see examples/train_moe.rs).
+//! the real "input distributions" that feed a
+//! [`crate::balancer::BalancerSession`] (and through its shared
+//! [`Prophet`] the Pro-Prophet planner and the cluster simulator; see
+//! examples/train_moe.rs).  The session owns the observe→score→drift
+//! loop, so the trainer and the simulator run the exact same feedback
+//! path instead of two hand-rolled copies.
 
+use crate::balancer::{registry, BalancerSession, ProphetOptions};
 use crate::config::TrainingConfig;
 use crate::moe::LoadMatrix;
-use crate::prophet::{Prophet, ProphetConfig};
+use crate::prophet::Prophet;
 use crate::runtime::{self, Artifact, Manifest, Runtime};
 use crate::util::json::{self, Json};
 use crate::workload::corpus::Corpus;
@@ -134,9 +138,10 @@ pub struct Trainer {
     state: Vec<xla::Literal>,
     corpus: Corpus,
     step: usize,
-    /// The forecasting subsystem fed by every step's observed gate loads
-    /// (spread over the manifest's expert-parallel virtual devices).
-    prophet: Prophet,
+    /// Balancing session fed by every step's observed gate loads (spread
+    /// over the manifest's expert-parallel virtual devices); owns the
+    /// shared forecasting subsystem.
+    session: BalancerSession,
 }
 
 impl Trainer {
@@ -159,8 +164,10 @@ impl Trainer {
         }
         let train_step = rt.load_tagged(&manifest, "train_step")?;
         let corpus = Corpus::new(manifest.vocab, 4, cfg.seed);
-        let prophet = Prophet::new(ProphetConfig::default(), manifest.n_layers.max(1));
-        Ok(Trainer { manifest, cfg, train_step, state, corpus, step: 0, prophet })
+        let policy = registry::build("pro-prophet", &ProphetOptions::default())
+            .expect("pro-prophet is always registered");
+        let session = BalancerSession::new(policy, manifest.n_layers.max(1));
+        Ok(Trainer { manifest, cfg, train_step, state, corpus, step: 0, session })
     }
 
     pub fn step_count(&self) -> usize {
@@ -169,7 +176,14 @@ impl Trainer {
 
     /// The forecasting subsystem (history, per-layer forecasts, drift).
     pub fn prophet(&self) -> &Prophet {
-        &self.prophet
+        self.session
+            .prophet()
+            .expect("the trainer's pro-prophet policy always forecasts")
+    }
+
+    /// The balancing session driving the feedback loop.
+    pub fn session(&self) -> &BalancerSession {
+        &self.session
     }
 
     /// Execute one fused train step.
@@ -213,36 +227,32 @@ impl Trainer {
             })
             .collect();
 
-        // Feed the observed distributions to the prophet: each layer's
-        // histogram is spread over the EP virtual devices (one expert per
-        // device, the paper's layout) and scored against the outstanding
-        // forecast.  Spreading is independent per layer and fans out over
-        // scoped threads; observation (which orders the history) stays
-        // sequential.
+        // Feed the observed distributions through the balancing session:
+        // each layer's histogram is spread over the EP virtual devices
+        // (one expert per device, the paper's layout), then the session
+        // scores outstanding forecasts, advances history and runs drift
+        // detection — the same observe loop the simulator uses.
+        // Spreading is independent per layer and fans out over scoped
+        // threads (serial below the tiny-work threshold); observation
+        // (which orders the history) stays sequential.
         let n_devices = man.n_experts.max(1);
-        let spread: Vec<LoadMatrix> =
-            crate::util::threads::par_map(loads.len(), |l| spread_histogram(&loads[l], n_devices));
-        let mut errs: Vec<f64> = Vec::new();
-        let mut drift_layers = 0usize;
-        for (l, w) in spread.iter().enumerate() {
-            let obs = self.prophet.observe_layer(l, w);
-            if let Some(e) = obs.forecast_error {
-                errs.push(e);
-            }
-            drift_layers += usize::from(obs.drift);
-        }
+        let work = n_devices * man.n_experts.max(1);
+        let spread: Vec<LoadMatrix> = crate::util::threads::par_map(loads.len(), work, |l| {
+            spread_histogram(&loads[l], n_devices)
+        });
+        let fb = if spread.is_empty() {
+            crate::balancer::IterationFeedback::default()
+        } else {
+            self.session.observe_iteration(&spread)
+        };
 
         Ok(StepResult {
             step: self.step,
             loss,
             loads,
             seconds: start.elapsed().as_secs_f64(),
-            forecast_error: if errs.is_empty() {
-                None
-            } else {
-                Some(errs.iter().sum::<f64>() / errs.len() as f64)
-            },
-            drift_layers,
+            forecast_error: fb.mean_forecast_error(),
+            drift_layers: fb.drift_layers,
         })
     }
 

@@ -1,32 +1,67 @@
 //! Scoped-thread fan-out helpers (no external crates offline, so a tiny
 //! deterministic chunked map built on `std::thread::scope`).
 //!
-//! Used by the simulator and trainer to parallelize per-layer work
-//! (planning, pricing, histogram spreading) across MoE layers.  Results
-//! are always returned in input order, so parallel and serial execution
-//! are observably identical; `PRO_PROPHET_THREADS=1` forces serial.
+//! Used by the simulator, session and trainer to parallelize per-layer
+//! work (planning, pricing, histogram spreading) across MoE layers.
+//! Results are always returned in input order, so parallel and serial
+//! execution are observably identical; `PRO_PROPHET_THREADS=1` forces
+//! serial and any explicit `PRO_PROPHET_THREADS=N` overrides the
+//! work-size heuristic below.
+//!
+//! Callers pass a `work` hint — approximate units of work per item
+//! (conventionally the D·E cell count of the layer's load matrix).  When
+//! the whole map's `items × work` falls under
+//! [`SERIAL_WORK_THRESHOLD`], the map stays serial: thread spawn
+//! overhead (tens of µs per worker) dominates planning/pricing at tiny
+//! (D, E), which is exactly the regime the ROADMAP flagged.
 
-/// Worker threads to use for `tasks` independent items: the machine's
-/// available parallelism, capped by the task count, overridable via the
-/// `PRO_PROPHET_THREADS` environment variable (0/unset = auto).
-pub fn for_tasks(tasks: usize) -> usize {
-    let auto = std::thread::available_parallelism().map_or(1, std::num::NonZeroUsize::get);
-    let n = std::env::var("PRO_PROPHET_THREADS")
+/// Total work units (items × per-item hint) below which fan-outs stay
+/// serial.  Calibrated coarsely: one D·E "unit" costs on the order of
+/// tens of ns in planning/pricing, a spawned worker costs tens of µs, so
+/// a map under ~4k units cannot amortize even one extra thread.
+pub const SERIAL_WORK_THRESHOLD: usize = 4096;
+
+/// Worker threads to use for `tasks` independent items of roughly
+/// `work_per_task` units each: the machine's available parallelism,
+/// capped by the task count, serial below [`SERIAL_WORK_THRESHOLD`].
+/// An explicit `PRO_PROPHET_THREADS` (>0) overrides both the auto count
+/// and the threshold; 0/unset = auto.
+pub fn for_tasks(tasks: usize, work_per_task: usize) -> usize {
+    let explicit = std::env::var("PRO_PROPHET_THREADS")
         .ok()
         .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or(auto);
+        .filter(|&n| n > 0);
+    thread_count(tasks, work_per_task, explicit)
+}
+
+/// The pure decision behind [`for_tasks`]: `explicit` is the parsed
+/// `PRO_PROPHET_THREADS` override (None/0 = auto).  Split out so the
+/// threshold and override rules are testable without mutating
+/// process-global environment (setenv races with concurrent readers).
+pub fn thread_count(tasks: usize, work_per_task: usize, explicit: Option<usize>) -> usize {
+    let n = match explicit {
+        Some(n) => n,
+        None => {
+            if tasks.saturating_mul(work_per_task.max(1)) < SERIAL_WORK_THRESHOLD {
+                1
+            } else {
+                std::thread::available_parallelism()
+                    .map_or(1, std::num::NonZeroUsize::get)
+            }
+        }
+    };
     n.min(tasks).max(1)
 }
 
 /// `out[i] = f(i)` for `i in 0..n`, fanned out over scoped threads in
-/// contiguous chunks.  Deterministic: identical to the serial map.
-pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+/// contiguous chunks (serial below the work threshold).  Deterministic:
+/// identical to the serial map.
+pub fn par_map<T, F>(n: usize, work_per_task: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let threads = for_tasks(n);
+    let threads = for_tasks(n, work_per_task);
     if threads <= 1 {
         return (0..n).map(f).collect();
     }
@@ -51,14 +86,14 @@ where
 /// `out[i] = f(i, &mut items[i])`, fanned out over scoped threads.  Each
 /// worker owns a disjoint sub-slice, so per-item mutable state (e.g. one
 /// `Planner` per MoE layer) parallelizes without locks.
-pub fn par_map_mut<P, T, F>(items: &mut [P], f: F) -> Vec<T>
+pub fn par_map_mut<P, T, F>(items: &mut [P], work_per_task: usize, f: F) -> Vec<T>
 where
     P: Send,
     T: Send,
     F: Fn(usize, &mut P) -> T + Sync,
 {
     let n = items.len();
-    let threads = for_tasks(n);
+    let threads = for_tasks(n, work_per_task);
     if threads <= 1 {
         return items.iter_mut().enumerate().map(|(i, p)| f(i, p)).collect();
     }
@@ -86,10 +121,13 @@ where
 mod tests {
     use super::*;
 
+    /// A hint large enough that n >= 2 always crosses the threshold.
+    const BIG: usize = SERIAL_WORK_THRESHOLD;
+
     #[test]
     fn par_map_matches_serial_in_order() {
         for n in [0usize, 1, 2, 7, 64, 1000] {
-            let got = par_map(n, |i| i * i + 1);
+            let got = par_map(n, BIG, |i| i * i + 1);
             let want: Vec<usize> = (0..n).map(|i| i * i + 1).collect();
             assert_eq!(got, want, "n={n}");
         }
@@ -98,7 +136,7 @@ mod tests {
     #[test]
     fn par_map_mut_mutates_each_item_once() {
         let mut items: Vec<u64> = (0..37).collect();
-        let doubled = par_map_mut(&mut items, |i, p| {
+        let doubled = par_map_mut(&mut items, BIG, |i, p| {
             *p *= 2;
             (i as u64, *p)
         });
@@ -110,9 +148,73 @@ mod tests {
     }
 
     #[test]
+    fn results_identical_on_both_sides_of_threshold() {
+        // The regression gate for the work-size heuristic: tiny work
+        // (serial path) and huge work (parallel path) must be observably
+        // identical, for both map flavors.
+        for n in [1usize, 3, 16, 257] {
+            let serial = par_map(n, 1, |i| i.wrapping_mul(31) ^ 7);
+            let parallel = par_map(n, BIG, |i| i.wrapping_mul(31) ^ 7);
+            assert_eq!(serial, parallel, "par_map n={n}");
+
+            let mut a: Vec<u64> = (0..n as u64).collect();
+            let mut b = a.clone();
+            let ra = par_map_mut(&mut a, 1, |i, p| {
+                *p += i as u64;
+                *p
+            });
+            let rb = par_map_mut(&mut b, BIG, |i, p| {
+                *p += i as u64;
+                *p
+            });
+            assert_eq!(ra, rb, "par_map_mut n={n}");
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
     fn thread_count_bounds() {
-        assert_eq!(for_tasks(0), 1);
-        assert_eq!(for_tasks(1), 1);
-        assert!(for_tasks(1000) >= 1);
+        assert_eq!(thread_count(0, BIG, None), 1);
+        assert_eq!(thread_count(1, BIG, None), 1);
+        assert!(thread_count(1000, BIG, None) >= 1);
+        // Saturating total-work product: no overflow panic.
+        assert!(thread_count(usize::MAX, usize::MAX, None) >= 1);
+    }
+
+    #[test]
+    fn work_threshold_and_explicit_override() {
+        // All assertions go through the pure `thread_count` so the test
+        // neither mutates process-global environment (setenv races with
+        // every concurrent par_map caller reading it) nor breaks when a
+        // developer runs the suite with PRO_PROPHET_THREADS exported.
+
+        // Auto mode, tiny work: 12 layers of an 8x8 load matrix (the
+        // ROADMAP's "tiny D·E" case) stays serial; one task never fans
+        // out regardless of work.
+        assert_eq!(thread_count(12, 64, None), 1);
+        assert_eq!(thread_count(1, usize::MAX, None), 1, "one task never fans out");
+        assert!(thread_count(12, BIG, None) >= 1);
+
+        // PRO_PROPHET_THREADS=1 is the manual escape hatch and an
+        // explicit count beats the work heuristic in both directions.
+        assert_eq!(thread_count(1000, BIG, Some(1)), 1);
+        assert_eq!(thread_count(1000, 1, Some(3)), 3);
+        // 0/unparsable map to None before thread_count (see for_tasks).
+        assert_eq!(thread_count(1000, 1, None), 1);
+    }
+
+    #[test]
+    fn for_tasks_is_consistent_with_current_env() {
+        // The env plumbing itself, WITHOUT mutating the variable: read
+        // whatever is set and check for_tasks agrees with thread_count
+        // fed the same parse.  Holds whether or not the suite runs with
+        // PRO_PROPHET_THREADS exported.
+        let explicit = std::env::var("PRO_PROPHET_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0);
+        for (tasks, work) in [(0, BIG), (1, 1), (12, 64), (1000, BIG)] {
+            assert_eq!(for_tasks(tasks, work), thread_count(tasks, work, explicit));
+        }
     }
 }

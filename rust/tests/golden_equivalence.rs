@@ -1,0 +1,159 @@
+//! Golden equivalence gate for the balancer refactor: the trait-based
+//! driver (`sim::simulate_policy`, reached through the deprecated
+//! `sim::Policy` shim) must reproduce the pre-refactor enum path —
+//! frozen verbatim in `sim::reference` — **bit for bit**: iteration
+//! times, breakdowns, per-block times, balance degrees, transfer
+//! volumes, forecast errors, and all planning counters, for all four
+//! original policies on fixed-seed traces.
+//!
+//! Everything compared here is a deterministic function of the trace
+//! (modeled seconds, not wall clock), so `to_bits` equality is the right
+//! bar and holds across thread counts (`PRO_PROPHET_THREADS`).
+
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::moe::LoadMatrix;
+use pro_prophet::planner::PlannerConfig;
+use pro_prophet::prophet::PredictorKind;
+use pro_prophet::sim::reference::{simulate_reference, single_layer_times_reference};
+use pro_prophet::sim::{simulate, single_layer_times, Policy, ProphetOptions, SimReport};
+use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
+
+/// The four original policies plus the Pro-Prophet ablation arms.
+fn all_policies() -> Vec<Policy> {
+    vec![
+        Policy::DeepspeedMoe,
+        Policy::FasterMoe,
+        Policy::TopK(2),
+        Policy::TopK(3),
+        Policy::ProProphet(ProphetOptions::full()),
+        Policy::ProProphet(ProphetOptions::planner_only()),
+        Policy::ProProphet(ProphetOptions::without_combination()),
+    ]
+}
+
+fn fixed_trace(layers: usize, e: usize, d: usize, iters: usize, seed: u64) -> Trace {
+    let mut cfg = WorkloadConfig::paper_default(layers, e, d, 8192);
+    cfg.seed = seed;
+    Trace::capture(&mut WorkloadGen::new(cfg), iters)
+}
+
+fn assert_reports_identical(oracle: &SimReport, trait_path: &SimReport, what: &str) {
+    assert_eq!(oracle.policy, trait_path.policy, "{what}: policy name");
+    assert_eq!(oracle.plans_run, trait_path.plans_run, "{what}: plans_run");
+    assert_eq!(oracle.plans_reused, trait_path.plans_reused, "{what}: plans_reused");
+    assert_eq!(oracle.drift_replans, trait_path.drift_replans, "{what}: drift_replans");
+    assert_eq!(oracle.iters.len(), trait_path.iters.len(), "{what}: iteration count");
+    for (i, (a, b)) in oracle.iters.iter().zip(&trait_path.iters).enumerate() {
+        let it = format!("{what}: iter {i}");
+        assert_eq!(a.time.to_bits(), b.time.to_bits(), "{it}: time");
+        assert_eq!(a.trans_copies, b.trans_copies, "{it}: trans_copies");
+        assert_eq!(
+            a.balance_before.to_bits(),
+            b.balance_before.to_bits(),
+            "{it}: balance_before"
+        );
+        assert_eq!(
+            a.balance_after.to_bits(),
+            b.balance_after.to_bits(),
+            "{it}: balance_after"
+        );
+        assert_eq!(
+            a.forecast_error.map(f64::to_bits),
+            b.forecast_error.map(f64::to_bits),
+            "{it}: forecast_error"
+        );
+        assert_eq!(a.per_block_time.len(), b.per_block_time.len(), "{it}: blocks");
+        for (l, (x, y)) in a.per_block_time.iter().zip(&b.per_block_time).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{it}: per_block_time[{l}]");
+        }
+        assert_eq!(
+            a.breakdown.keys().collect::<Vec<_>>(),
+            b.breakdown.keys().collect::<Vec<_>>(),
+            "{it}: breakdown keys"
+        );
+        for (k, x) in &a.breakdown {
+            assert_eq!(
+                x.to_bits(),
+                b.breakdown[k].to_bits(),
+                "{it}: breakdown[{k}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn trait_path_matches_frozen_oracle_on_paper_workload() {
+    let model = ModelSpec::moe_gpt_s(8, 1, 8192);
+    let cluster = ClusterSpec::hpwnv(2);
+    let trace = fixed_trace(4, 8, 8, 6, 42);
+    for policy in all_policies() {
+        let oracle = simulate_reference(&model, &cluster, &trace, &policy);
+        let new = simulate(&model, &cluster, &trace, &policy);
+        assert_reports_identical(&oracle, &new, &policy.name());
+    }
+}
+
+#[test]
+fn trait_path_matches_oracle_across_cluster_shapes() {
+    // A second (cluster, seed, size) point so the gate is not tuned to
+    // one topology: 16 devices, 3 layers, k-style heavier trace.
+    let model = ModelSpec::moe_gpt_m(16, 1, 16384);
+    let cluster = ClusterSpec::hpnv(4);
+    let trace = fixed_trace(3, 16, 16, 4, 7);
+    for policy in all_policies() {
+        let oracle = simulate_reference(&model, &cluster, &trace, &policy);
+        let new = simulate(&model, &cluster, &trace, &policy);
+        assert_reports_identical(&oracle, &new, &policy.name());
+    }
+}
+
+#[test]
+fn drift_bookkeeping_matches_oracle_under_lazy_replanning() {
+    // The drift-driven invalidation path (the subtlest duplicated loop):
+    // stable regime then a violent shift, huge replan interval so ONLY
+    // drift can force the second plan.  Counters must agree exactly.
+    let stable = LoadMatrix::from_rows(vec![vec![600, 100, 100, 224]; 4]);
+    let shifted = LoadMatrix::from_rows(vec![vec![50, 100, 100, 774]; 4]);
+    let mut trace = Trace::new(1, 4, 4);
+    for _ in 0..6 {
+        trace.push(vec![stable.clone()]);
+    }
+    for _ in 0..6 {
+        trace.push(vec![shifted.clone()]);
+    }
+    let model = ModelSpec::moe_gpt_s(4, 1, 4096);
+    let cluster = ClusterSpec::hpwnv(1);
+    for predictor in [PredictorKind::Auto, PredictorKind::LastValue] {
+        let opts = ProphetOptions {
+            planner: PlannerConfig { replan_interval: 1000, ..Default::default() },
+            prophet: pro_prophet::prophet::ProphetConfig {
+                predictor,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let policy = Policy::ProProphet(opts);
+        let oracle = simulate_reference(&model, &cluster, &trace, &policy);
+        let new = simulate(&model, &cluster, &trace, &policy);
+        assert_reports_identical(&oracle, &new, &format!("drift/{predictor:?}"));
+        assert_eq!(oracle.drift_replans, 1, "scenario sanity: one regime change");
+    }
+}
+
+#[test]
+fn single_layer_times_match_oracle() {
+    let model = ModelSpec::moe_gpt_s(8, 1, 8192);
+    let cluster = ClusterSpec::hpwnv(2);
+    let trace = fixed_trace(2, 8, 8, 3, 99);
+    for policy in all_policies() {
+        for layers in &trace.iterations {
+            for w in layers {
+                let (oi, op) = single_layer_times_reference(&model, &cluster, w, &policy);
+                let (ni, np) = single_layer_times(&model, &cluster, w, &policy);
+                assert_eq!(oi.to_bits(), ni.to_bits(), "{}: identity time", policy.name());
+                assert_eq!(op.to_bits(), np.to_bits(), "{}: policy time", policy.name());
+            }
+        }
+    }
+}

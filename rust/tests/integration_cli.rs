@@ -1,0 +1,116 @@
+//! Integration: the `pro-prophet` binary — policy-registry listings,
+//! unknown-name error paths, and the `trace --from-store` round trip
+//! (recorded prophet history → workload trace).
+
+use pro_prophet::balancer::registry;
+use pro_prophet::prophet::TraceStore;
+use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn run(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_pro-prophet"))
+        .args(args)
+        .output()
+        .expect("failed to spawn pro-prophet binary")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pro_prophet_cli_{}_{name}", std::process::id()))
+}
+
+fn small_trace(iters: usize) -> Trace {
+    let mut gen = WorkloadGen::new(WorkloadConfig::paper_default(2, 4, 4, 1024));
+    Trace::capture(&mut gen, iters)
+}
+
+#[test]
+fn help_lists_the_policy_registry() {
+    let out = run(&["simulate", "--help"]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for name in registry::names() {
+        assert!(stdout.contains(name), "--help output misses policy {name:?}");
+    }
+}
+
+#[test]
+fn info_lists_the_policy_registry() {
+    let out = run(&["info"]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("registered balancing policies"), "{stdout}");
+    for name in ["deepspeed", "fastermoe", "flexmoe", "pro-prophet"] {
+        assert!(stdout.contains(name), "info output misses policy {name:?}");
+    }
+}
+
+#[test]
+fn unknown_policy_fails_fast_with_known_list() {
+    let out = run(&["simulate", "--policy", "warlock", "--iters", "1"]);
+    assert!(!out.status.success(), "unknown policy must be an error");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown policy"), "{stderr}");
+    assert!(stderr.contains("pro-prophet"), "error should list known names: {stderr}");
+}
+
+#[test]
+fn trace_from_store_round_trips() {
+    // A "recorded run": the prophet's history ring buffer persisted via
+    // TraceStore (what `train --save-store` writes).
+    let recorded = small_trace(4);
+    let mut store = TraceStore::new(8);
+    for layers in &recorded.iterations {
+        store.push(layers.clone());
+    }
+    let store_path = tmp("store.txt");
+    let out_path = tmp("reexport.txt");
+    store.save(&store_path).unwrap();
+
+    let out = run(&[
+        "trace",
+        "--from-store",
+        store_path.to_str().unwrap(),
+        "--out",
+        out_path.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "trace --from-store failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let exported = Trace::load(&out_path).unwrap();
+    assert_eq!(exported, recorded, "round trip must be lossless");
+
+    // --iters keeps only the NEWEST n iterations (ring-buffer semantics).
+    let out2 = run(&[
+        "trace",
+        "--from-store",
+        store_path.to_str().unwrap(),
+        "--out",
+        out_path.to_str().unwrap(),
+        "--iters",
+        "2",
+    ]);
+    assert!(out2.status.success());
+    let tail = Trace::load(&out_path).unwrap();
+    assert_eq!(tail.len(), 2);
+    assert_eq!(tail.iterations[..], recorded.iterations[2..]);
+
+    let _ = std::fs::remove_file(&store_path);
+    let _ = std::fs::remove_file(&out_path);
+}
+
+#[test]
+fn trace_from_store_rejects_missing_or_empty() {
+    let out = run(&[
+        "trace",
+        "--from-store",
+        "/nonexistent/prophet_store.txt",
+        "--out",
+        tmp("never.txt").to_str().unwrap(),
+    ]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("load store"), "{stderr}");
+}

@@ -2,7 +2,7 @@
 //! example config shipped in examples/configs/.
 
 use pro_prophet::config::{toml, ExperimentConfig};
-use pro_prophet::sim::{simulate, Policy, ProphetOptions};
+use pro_prophet::sim::{simulate, simulate_policy, Policy, ProphetOptions};
 use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
 
 #[test]
@@ -42,6 +42,41 @@ fn full_experiment_from_toml_runs() {
     };
     let r = simulate(&exp.model, &exp.cluster, &trace, &Policy::ProProphet(opts));
     assert_eq!(r.iters.len(), 5);
+    assert!(r.avg_iter_time() > 0.0);
+}
+
+#[test]
+fn policy_table_drives_simulation_end_to_end() {
+    // `[policy] name = ...` picks the balancer from the registry; the
+    // experiment object builds it and the simulator runs it — no enum in
+    // the loop.
+    let t = toml::parse(
+        r#"
+        iterations = 3
+        [policy]
+        name = "flexmoe"
+        [model]
+        name = "MoE-GPT-S"
+        tokens_per_iter = 4096
+        [cluster]
+        kind = "hpwnv"
+        nodes = 1
+        "#,
+    )
+    .unwrap();
+    let exp = ExperimentConfig::from_table(&t).unwrap();
+    assert_eq!(exp.policy, "flexmoe");
+    let mut wcfg = WorkloadConfig::paper_default(
+        exp.model.n_layers,
+        exp.model.n_experts,
+        exp.cluster.n_devices(),
+        exp.model.tokens_per_iter * exp.model.k as u64,
+    );
+    wcfg.seed = exp.seed;
+    let trace = Trace::capture(&mut WorkloadGen::new(wcfg), exp.iterations);
+    let r = simulate_policy(&exp.model, &exp.cluster, &trace, exp.build_policy().unwrap());
+    assert_eq!(r.policy, "FlexMoE");
+    assert_eq!(r.iters.len(), 3);
     assert!(r.avg_iter_time() > 0.0);
 }
 
