@@ -7,7 +7,6 @@ use pro_prophet::benchkit::scenario;
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::ModelSpec;
 use pro_prophet::metrics::TableReport;
-use pro_prophet::sim::{simulate, Policy};
 
 fn main() {
     println!("Pro-Prophet — condensed paper reproduction (see cargo bench for full set)\n");
@@ -28,7 +27,7 @@ fn main() {
     // Table I condensed: FasterMoE LB overhead.
     let model = ModelSpec::moe_gpt_m(d, 1, 16384);
     let trace = scenario::trace_for(&model, d, 8, 42);
-    let fm = simulate(&model, &cluster, &trace, &Policy::FasterMoe);
+    let fm = scenario::report_for("fastermoe", &model, &cluster, &trace);
     println!(
         "Table I (MoE-GPT-M): FasterMoE-style LB overhead = {:.1}% of iteration (paper 29-37%)\n",
         100.0 * fm.lb_fraction()

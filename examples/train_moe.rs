@@ -16,10 +16,11 @@
 //!
 //! Results are recorded in EXPERIMENTS.md ("End-to-end validation").
 
+use pro_prophet::balancer::{registry, ProphetOptions};
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::{ModelSpec, TrainingConfig};
 use pro_prophet::metrics::{balance_degree, write_result};
-use pro_prophet::sim::{simulate, Policy, ProphetOptions};
+use pro_prophet::sim::simulate_policy;
 use pro_prophet::trainer::Trainer;
 use pro_prophet::util::cli::Args;
 use pro_prophet::util::json;
@@ -90,14 +91,11 @@ fn main() -> anyhow::Result<()> {
         d
     );
 
-    let ds = simulate(&model, &cluster, &trace, &Policy::DeepspeedMoe);
-    let fm = simulate(&model, &cluster, &trace, &Policy::FasterMoe);
-    let pp = simulate(
-        &model,
-        &cluster,
-        &trace,
-        &Policy::ProProphet(ProphetOptions::full()),
-    );
+    let opts = ProphetOptions::full();
+    let policy = |name: &str| registry::build(name, &opts).expect("registered policy");
+    let ds = simulate_policy(&model, &cluster, &trace, policy("deepspeed"));
+    let fm = simulate_policy(&model, &cluster, &trace, policy("fastermoe"));
+    let pp = simulate_policy(&model, &cluster, &trace, policy("pro-prophet"));
     println!("avg iteration time (s):");
     println!("  Deepspeed-MoE  {:.6}", ds.avg_iter_time());
     println!("  FasterMoE      {:.6}", fm.avg_iter_time());

@@ -1,9 +1,12 @@
 //! Micro-benchmarks of the L3 hot paths (the §Perf deliverable):
 //! greedy search latency, routing/traffic computation, engine pricing,
-//! schedule construction, and a whole simulated iteration.
+//! schedule construction, the device-level event timeline, and a whole
+//! simulated iteration.
 //!
 //! These numbers feed EXPERIMENTS.md §Perf; the planner search must stay
-//! well under the A2A it hides beneath (hundreds of µs at most).
+//! well under the A2A it hides beneath (hundreds of µs at most), and the
+//! per-iteration DES pass (barrier lowering + execute) must stay a small
+//! fraction of the schedule-construction budget it rides on.
 
 use pro_prophet::benchkit::{self, bench_fn, scenario};
 use pro_prophet::cluster::ClusterSpec;
@@ -11,8 +14,8 @@ use pro_prophet::config::ModelSpec;
 use pro_prophet::metrics::write_result;
 use pro_prophet::perfmodel::PerfModel;
 use pro_prophet::planner::{greedy_search, PlannerConfig};
-use pro_prophet::scheduler::{build_blockwise, BlockCosts};
-use pro_prophet::sim::Engine;
+use pro_prophet::scheduler::{build_blockwise, build_blockwise_dag, dag, BlockCosts, DeviceBlockCosts};
+use pro_prophet::sim::{events, Engine};
 use pro_prophet::util::json::{self, Json};
 use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
 
@@ -69,6 +72,21 @@ fn main() {
     ];
     record(bench_fn("build_blockwise 24 blocks", 30.0, || {
         std::hint::black_box(build_blockwise(&costs));
+    }));
+
+    // Device-level event timeline: lower the 24-block schedule to a
+    // barrier DAG on 16 devices and execute it (this pass now runs once
+    // per simulated iteration), plus the relaxed Algorithm-2 DAG.
+    let sched24 = build_blockwise(&costs);
+    record(bench_fn("dag lower+execute 24 blocks x 16 dev", 30.0, || {
+        let lowered = dag::from_schedule(&sched24, 16);
+        std::hint::black_box(events::execute(&lowered));
+    }));
+    let dev_costs: Vec<DeviceBlockCosts> =
+        costs.iter().map(|c| DeviceBlockCosts::uniform(c, 16)).collect();
+    record(bench_fn("blockwise_dag execute 24 blocks x 16 dev", 30.0, || {
+        let relaxed = build_blockwise_dag(&dev_costs, Default::default());
+        std::hint::black_box(events::execute(&relaxed));
     }));
 
     // Whole simulated iteration (12-layer model, 16 devices).

@@ -5,7 +5,8 @@
 //! search and the baseline placement constructions of
 //! `planner::policies`); this module only adapts them to the
 //! [`Decision`]/session contract.  The golden equivalence test pins each
-//! impl bit-for-bit to its pre-refactor `sim::Policy` enum arm.
+//! impl bit-for-bit to its pre-refactor enum arm (frozen in
+//! `sim::reference`).
 
 use super::{
     BalancingPolicy, CommStyle, DecideCtx, Decision, LayerFeedback, PolicyCounters,

@@ -1,5 +1,6 @@
 //! Open load-balancing policy API: the trait-based successor of the
-//! closed `sim::Policy` enum.
+//! closed policy enum that predated it (now `sim::reference::Policy`,
+//! kept only as the frozen oracle's input vocabulary).
 //!
 //! The paper frames Pro-Prophet as one point in a *space* of system-level
 //! MoE load balancers (Deepspeed-MoE, FasterMoE and top-k shadowing are
@@ -54,8 +55,9 @@
 //! 3. Done: `pro-prophet simulate --policy <name>`, the `[policy]` TOML
 //!    table, and `sim::simulate_policy` all pick it up.
 //!
-//! The legacy `sim::Policy` enum survives one more PR as a deprecated
-//! shim (`From<Policy> for Box<dyn BalancingPolicy>`); the golden test in
+//! The legacy `sim::Policy` migration shim is retired; the closed enum's
+//! last copy lives in `sim::reference` as the frozen oracle's input
+//! vocabulary, and the golden test in
 //! `rust/tests/golden_equivalence.rs` pins the trait path bit-for-bit to
 //! the pre-refactor enum path for all four original policies.
 

@@ -31,6 +31,14 @@ pub struct ClusterSpec {
     pub gpu_tflops: f64,
     /// Model FLOPs utilization actually achieved on expert GEMMs.
     pub mfu: f64,
+    /// Per-device compute slowdown factors for heterogeneous / straggler
+    /// scenarios: device `d`'s computation takes `device_slowdown[d]`
+    /// times its homogeneous duration.  Empty means homogeneous (factor
+    /// 1.0 everywhere).  Consumed by the device-level event timeline
+    /// (`sim::events`) via the engine's `*_per_device` costs; the scalar
+    /// (pre-maxed) cost path deliberately ignores it, so a straggler's
+    /// effect is exactly the DES-vs-barrier gap.
+    pub device_slowdown: Vec<f64>,
 }
 
 impl ClusterSpec {
@@ -48,6 +56,7 @@ impl ClusterSpec {
             nvlink_pairs: false,
             gpu_tflops: 35.6, // RTX 3090 fp32 peak
             mfu: 0.35,
+            device_slowdown: Vec::new(),
         }
     }
 
@@ -77,6 +86,41 @@ impl ClusterSpec {
             "lpwnv" => Some(Self::lpwnv(n_nodes)),
             _ => None,
         }
+    }
+
+    // --- heterogeneity ------------------------------------------------------
+
+    /// Compute slowdown factor of `device` (1.0 when homogeneous).
+    pub fn slowdown(&self, device: usize) -> f64 {
+        self.device_slowdown.get(device).copied().unwrap_or(1.0)
+    }
+
+    /// Whether any device deviates from the homogeneous baseline.
+    pub fn is_heterogeneous(&self) -> bool {
+        self.device_slowdown.iter().any(|&s| s != 1.0)
+    }
+
+    /// Builder: slow `device` down by `factor` (>= 1.0 models a
+    /// straggler; < 1.0 a faster-than-baseline device).
+    pub fn with_slowdown(mut self, device: usize, factor: f64) -> Self {
+        assert!(device < self.n_devices(), "device {device} out of range");
+        assert!(factor.is_finite() && factor > 0.0, "bad slowdown factor {factor}");
+        if self.device_slowdown.is_empty() {
+            self.device_slowdown = vec![1.0; self.n_devices()];
+        }
+        self.device_slowdown[device] = factor;
+        self
+    }
+
+    /// Builder: set the full per-device slowdown vector at once.
+    pub fn with_slowdowns(mut self, factors: Vec<f64>) -> Self {
+        assert_eq!(factors.len(), self.n_devices(), "slowdown vector length");
+        assert!(
+            factors.iter().all(|f| f.is_finite() && *f > 0.0),
+            "bad slowdown factors {factors:?}"
+        );
+        self.device_slowdown = factors;
+        self
     }
 
     // --- topology queries ---------------------------------------------------
@@ -203,6 +247,27 @@ mod tests {
         let f = 4.0 * 512.0 * 1024.0;
         assert!(lp.tokens_per_sec(f) < hp.tokens_per_sec(f));
         assert_eq!(lp.inter_bw, hp.inter_bw);
+    }
+
+    #[test]
+    fn slowdown_defaults_to_homogeneous() {
+        let c = ClusterSpec::hpwnv(2);
+        assert!(!c.is_heterogeneous());
+        assert_eq!(c.slowdown(0), 1.0);
+        assert_eq!(c.slowdown(7), 1.0);
+        let het = c.with_slowdown(3, 2.5);
+        assert!(het.is_heterogeneous());
+        assert_eq!(het.slowdown(3), 2.5);
+        assert_eq!(het.slowdown(0), 1.0);
+        // A full vector of ones is still homogeneous.
+        let ones = ClusterSpec::hpwnv(1).with_slowdowns(vec![1.0; 4]);
+        assert!(!ones.is_heterogeneous());
+    }
+
+    #[test]
+    #[should_panic]
+    fn slowdown_out_of_range_rejected() {
+        let _ = ClusterSpec::hpwnv(1).with_slowdown(4, 2.0);
     }
 
     #[test]

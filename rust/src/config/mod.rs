@@ -190,11 +190,54 @@ impl ExperimentConfig {
     /// Load from a TOML-subset file; unspecified keys fall back to the
     /// paper's defaults (MoE-GPT-M on 4 HPWNV nodes).
     pub fn from_table(t: &toml::Table) -> Result<Self, String> {
-        let cluster = ClusterSpec::by_name(
+        let mut cluster = ClusterSpec::by_name(
             &t.str_or("cluster.kind", "hpwnv"),
             t.usize_or("cluster.nodes", 4),
         )
         .ok_or_else(|| format!("unknown cluster kind {:?}", t.str_or("cluster.kind", "")))?;
+        // Heterogeneity knobs: a full per-device `slowdown` vector, or
+        // the `straggler_device` (+ optional `straggler_slowdown`, default
+        // 2.0) shorthand for the one-slow-GPU scenario.
+        if let Some(v) = t.get("cluster.slowdown") {
+            let vals = match v {
+                toml::Value::Arr(vals) => vals,
+                _ => return Err("cluster.slowdown must be an array of factors".into()),
+            };
+            let factors: Vec<f64> = vals
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .ok_or_else(|| "cluster.slowdown entries must be numbers".to_string())
+                })
+                .collect::<Result<_, _>>()?;
+            if factors.len() != cluster.n_devices() {
+                return Err(format!(
+                    "cluster.slowdown has {} entries for {} devices",
+                    factors.len(),
+                    cluster.n_devices()
+                ));
+            }
+            if factors.iter().any(|f| !f.is_finite() || *f <= 0.0) {
+                return Err(format!("cluster.slowdown factors must be > 0: {factors:?}"));
+            }
+            cluster = cluster.with_slowdowns(factors);
+        }
+        if let Some(v) = t.get("cluster.straggler_device") {
+            let dev = v.as_usize().ok_or_else(|| {
+                "cluster.straggler_device must be a non-negative integer".to_string()
+            })?;
+            if dev >= cluster.n_devices() {
+                return Err(format!(
+                    "cluster.straggler_device {dev} out of range for {} devices",
+                    cluster.n_devices()
+                ));
+            }
+            let factor = t.f64_or("cluster.straggler_slowdown", 2.0);
+            if !factor.is_finite() || factor <= 0.0 {
+                return Err(format!("cluster.straggler_slowdown must be > 0, got {factor}"));
+            }
+            cluster = cluster.with_slowdown(dev, factor);
+        }
         let e = t.usize_or("model.experts", cluster.n_devices());
         let k = t.usize_or("model.k", 1);
         let tokens = t.usize_or("model.tokens_per_iter", 16384) as u64;
@@ -380,6 +423,44 @@ mod tests {
         let bad = toml::parse("[policy]\nname = \"magic\"").unwrap();
         let err = ExperimentConfig::from_table(&bad).unwrap_err();
         assert!(err.contains("magic") && err.contains("pro-prophet"), "{err}");
+    }
+
+    #[test]
+    fn cluster_slowdown_knobs_parse_and_validate() {
+        // Straggler shorthand.
+        let t = toml::parse(
+            "[cluster]\nkind = \"hpwnv\"\nnodes = 1\nstraggler_device = 2\nstraggler_slowdown = 2.5",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_table(&t).unwrap();
+        assert!(e.cluster.is_heterogeneous());
+        assert_eq!(e.cluster.slowdown(2), 2.5);
+        assert_eq!(e.cluster.slowdown(0), 1.0);
+        // Shorthand defaults to 2x.
+        let t = toml::parse("[cluster]\nkind = \"hpwnv\"\nnodes = 1\nstraggler_device = 0").unwrap();
+        assert_eq!(ExperimentConfig::from_table(&t).unwrap().cluster.slowdown(0), 2.0);
+        // Full vector.
+        let t = toml::parse("[cluster]\nnodes = 1\nslowdown = [1.0, 1.0, 3.0, 1.0]").unwrap();
+        let e = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(e.cluster.slowdown(2), 3.0);
+        // Errors: wrong arity, bad values, out-of-range device.
+        assert!(ExperimentConfig::from_table(
+            &toml::parse("[cluster]\nnodes = 1\nslowdown = [1.0, 2.0]").unwrap()
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_table(
+            &toml::parse("[cluster]\nnodes = 1\nslowdown = [1.0, 1.0, 1.0, 0.0]").unwrap()
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_table(
+            &toml::parse("[cluster]\nnodes = 1\nstraggler_device = 99").unwrap()
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_table(
+            &toml::parse("[cluster]\nnodes = 1\nstraggler_device = 0\nstraggler_slowdown = -1.0")
+                .unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -25,12 +25,20 @@
 //!   locality-based greedy search (Algorithm 1), planning one iteration
 //!   early on [`prophet`] forecasts.
 //! * [`scheduler`] — the paper's §V contribution: the MoE-block scheduling
-//!   space and the block-wise overlap strategy (Algorithm 2).
+//!   space, the block-wise overlap strategy (Algorithm 2), and
+//!   `scheduler::dag` — operator DAGs with per-device duration vectors
+//!   and explicit dependency edges (Algorithm 2 emitted dependency-first
+//!   via `build_blockwise_dag`; barrier schedules lowered via
+//!   `dag::from_schedule`).
 //! * [`sim`] — a discrete-event cluster simulator standing in for the
-//!   authors' GPU testbeds (see DESIGN.md §3), now a thin driver over
-//!   [`balancer`] sessions (the legacy `sim::Policy` enum is a
-//!   deprecated shim; `sim::reference` freezes the pre-refactor path as
-//!   the golden-equivalence oracle).
+//!   authors' GPU testbeds (see DESIGN.md §3): a thin driver over
+//!   [`balancer`] sessions that prices every iteration twice — on the
+//!   frozen barrier `Schedule` and on the device-level event timeline
+//!   (`sim::events`: one comp+comm stream pair per device, per-device
+//!   exposed/idle breakdowns, straggler identification, heterogeneous
+//!   clusters via `ClusterSpec::device_slowdown`).  `sim::reference`
+//!   freezes the pre-refactor path (and the closed `Policy` enum) as the
+//!   golden-equivalence oracle.
 //! * [`runtime`] + [`trainer`] + [`coordinator`] — the execution stack:
 //!   PJRT loading of the AOT'd JAX/Pallas artifacts, the end-to-end
 //!   training loop, and a threaded expert-parallel coordinator with

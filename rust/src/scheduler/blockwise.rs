@@ -14,6 +14,7 @@
 //!   computation to hide under and stay exposed — the scheduling-space
 //!   constraint that confines Trans/Agg within one iteration (§V-A).
 
+use super::dag::OpDag;
 use super::{A2aPhase, Op, OpInstance, Schedule, Stage};
 
 /// Modeled durations of every operator of one MoE block.
@@ -27,6 +28,46 @@ pub struct BlockCosts {
     pub trans: f64, // parameter transfer of this block's placement
     pub agg: f64,   // gradient aggregation (mirrors trans)
     pub plan: f64,  // greedy-search cost for this block's next iteration
+}
+
+/// Per-device durations of every operator of one MoE block — the
+/// device-level refinement of [`BlockCosts`] the DAG builders and the
+/// discrete-event executor consume (each vector has one entry per
+/// device; see [`crate::sim::Engine::device_block_costs_styled`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DeviceBlockCosts {
+    pub a2a: Vec<f64>,
+    pub fec: Vec<f64>,
+    pub bec: Vec<f64>,
+    pub fnec: Vec<f64>,
+    pub bnec: Vec<f64>,
+    pub trans: Vec<f64>,
+    pub agg: Vec<f64>,
+    pub plan: Vec<f64>,
+}
+
+impl DeviceBlockCosts {
+    /// Replicate scalar costs onto every device (the homogeneous case).
+    pub fn uniform(c: &BlockCosts, n_devices: usize) -> Self {
+        DeviceBlockCosts {
+            a2a: vec![c.a2a; n_devices],
+            fec: vec![c.fec; n_devices],
+            bec: vec![c.bec; n_devices],
+            fnec: vec![c.fnec; n_devices],
+            bnec: vec![c.bnec; n_devices],
+            trans: vec![c.trans; n_devices],
+            agg: vec![c.agg; n_devices],
+            plan: vec![c.plan; n_devices],
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.a2a.len()
+    }
+}
+
+fn any_pos(v: &[f64]) -> bool {
+    v.iter().any(|&x| x > 0.0)
 }
 
 /// Which load-balancing ops a policy performs at all.
@@ -242,6 +283,141 @@ pub fn build_blockwise_mode(blocks: &[BlockCosts], mode: SplitMode) -> Schedule 
     Schedule { stages }
 }
 
+/// Element-wise [`split2`] over per-device vectors: each device splits
+/// its own share of the transfer against its own static window.
+fn split2_vec(total: &[f64], window2: &[f64], mode: SplitMode) -> (Vec<f64>, Vec<f64>) {
+    let mut part1 = Vec::with_capacity(total.len());
+    let mut part2 = Vec::with_capacity(total.len());
+    for (&t, &w) in total.iter().zip(window2) {
+        let (a, b) = split2(t, w, mode);
+        part1.push(a);
+        part2.push(b);
+    }
+    (part1, part2)
+}
+
+/// Algorithm 2 emitted as an explicit dependency DAG
+/// ([`crate::scheduler::dag::OpDag`]) with per-device durations — the
+/// relaxed, device-level form of [`build_blockwise`].
+///
+/// Node issue order is Algorithm 2's launch order (it doubles as the
+/// per-stream FIFO order on every device); dependency edges carry only
+/// the TRUE data dependencies of Fig 7:
+///
+/// * `A2A_dispatch(i)` and `Plan(i)` wait for `FNEC(i-1)` (block input);
+/// * `FEC(i)` waits for its dispatch A2A and for this block's `Trans`
+///   sub-operators (parameters must have arrived);
+/// * `FNEC(i)` waits only for the combine A2A — unlike the barrier
+///   model, it does NOT wait for the next block's in-flight `Trans`;
+/// * backward mirrors forward, with `Agg(i)` waiting on `BEC(i)` (the
+///   gradients it aggregates) rather than on a stage boundary.
+///
+/// With uniform per-device costs the executed DAG is never slower than
+/// the barrier [`build_blockwise`] schedule (every DAG edge is implied
+/// by some stage barrier); with per-device costs it additionally models
+/// stragglers and per-device exposed communication.
+pub fn build_blockwise_dag(blocks: &[DeviceBlockCosts], mode: SplitMode) -> OpDag {
+    let l = blocks.len();
+    if l == 0 {
+        return OpDag::new(1);
+    }
+    let d = blocks[0].n_devices();
+    let mut dag = OpDag::new(d);
+
+    // Trans sub-operator node ids per block (FEC deps of that block).
+    let mut trans_parts: Vec<Vec<usize>> = vec![Vec::new(); l];
+    // Block 0's Trans is exposed at the start of FP (its Plan ran during
+    // the previous iteration's A2A window).
+    if any_pos(&blocks[0].trans) {
+        let id = dag.push(Op::Trans { block: 0, part: 0 }, blocks[0].trans.clone(), vec![]);
+        trans_parts[0].push(id);
+    }
+
+    // ---- forward pass ----
+    let mut fnec_ids: Vec<usize> = Vec::with_capacity(l);
+    let mut prev_fnec: Option<usize> = None;
+    for i in 0..l {
+        let c = &blocks[i];
+        let input_dep: Vec<usize> = prev_fnec.into_iter().collect();
+        if any_pos(&c.plan) {
+            dag.push(Op::Plan { block: i }, c.plan.clone(), input_dep.clone());
+        }
+        let a2a1 = dag.push(
+            Op::A2a { block: i, phase: A2aPhase::FwdDispatch },
+            c.a2a.clone(),
+            input_dep,
+        );
+        // Next block's Trans, split across this block's two comp windows
+        // (issue order places part 0 in the FEC window, part 1 in FNEC's).
+        let (t_fec_part, t_fnec_part) = match blocks.get(i + 1) {
+            Some(nxt) => split2_vec(&nxt.trans, &c.fnec, mode),
+            None => (vec![], vec![]),
+        };
+        if any_pos(&t_fec_part) {
+            let id = dag.push(Op::Trans { block: i + 1, part: 0 }, t_fec_part, vec![]);
+            trans_parts[i + 1].push(id);
+        }
+        let mut fec_deps = vec![a2a1];
+        fec_deps.extend_from_slice(&trans_parts[i]);
+        let fec = dag.push(Op::Fec { block: i }, c.fec.clone(), fec_deps);
+        let a2a2 = dag.push(
+            Op::A2a { block: i, phase: A2aPhase::FwdCombine },
+            c.a2a.clone(),
+            vec![fec],
+        );
+        if any_pos(&t_fnec_part) {
+            let id = dag.push(Op::Trans { block: i + 1, part: 1 }, t_fnec_part, vec![]);
+            trans_parts[i + 1].push(id);
+        }
+        let fnec = dag.push(Op::Fnec { block: i }, c.fnec.clone(), vec![a2a2]);
+        fnec_ids.push(fnec);
+        prev_fnec = Some(fnec);
+    }
+
+    // ---- backward pass (blocks in reverse; Agg of block i+1 hides
+    // under block i's backward computations) ----
+    let mut bec_ids: Vec<usize> = vec![usize::MAX; l];
+    let mut prev_bwd_combine: Option<usize> = None;
+    for i in (0..l).rev() {
+        let c = &blocks[i];
+        let (agg_bec_part, agg_bnec_part) = match blocks.get(i + 1) {
+            Some(nxt) => split2_vec(&nxt.agg, &c.bnec, mode),
+            None => (vec![], vec![]),
+        };
+        if any_pos(&agg_bnec_part) {
+            dag.push(Op::Agg { block: i + 1, part: 0 }, agg_bnec_part, vec![bec_ids[i + 1]]);
+        }
+        let bnec_dep = match prev_bwd_combine {
+            Some(id) => vec![id],
+            None => vec![fnec_ids[l - 1]], // loss boundary: end of forward
+        };
+        let bnec = dag.push(Op::Bnec { block: i }, c.bnec.clone(), bnec_dep);
+        let a2a3 = dag.push(
+            Op::A2a { block: i, phase: A2aPhase::BwdDispatch },
+            c.a2a.clone(),
+            vec![bnec],
+        );
+        if any_pos(&agg_bec_part) {
+            dag.push(Op::Agg { block: i + 1, part: 1 }, agg_bec_part, vec![bec_ids[i + 1]]);
+        }
+        let bec = dag.push(Op::Bec { block: i }, c.bec.clone(), vec![a2a3]);
+        bec_ids[i] = bec;
+        let a2a4 = dag.push(
+            Op::A2a { block: i, phase: A2aPhase::BwdCombine },
+            c.a2a.clone(),
+            vec![bec],
+        );
+        prev_bwd_combine = Some(a2a4);
+    }
+
+    // Block 0's Agg has no later computation to hide under.
+    if any_pos(&blocks[0].agg) {
+        dag.push(Op::Agg { block: 0, part: 0 }, blocks[0].agg.clone(), vec![bec_ids[0]]);
+    }
+
+    dag
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +532,73 @@ mod tests {
     #[test]
     fn empty_schedule() {
         assert_eq!(build_blockwise(&[]).total_time(), 0.0);
+        assert!(build_blockwise_dag(&[], SplitMode::Split).is_empty());
+    }
+
+    #[test]
+    fn device_costs_uniform_replicates_scalars() {
+        let c = costs(1.0, 2.0);
+        let dc = DeviceBlockCosts::uniform(&c, 3);
+        assert_eq!(dc.n_devices(), 3);
+        assert_eq!(dc.fec, vec![2.0; 3]);
+        assert_eq!(dc.trans, vec![1.0; 3]);
+        assert_eq!(dc.agg, vec![2.0; 3]);
+    }
+
+    #[test]
+    fn blockwise_dag_structure_matches_alg2() {
+        let blocks: Vec<DeviceBlockCosts> =
+            (0..3).map(|_| DeviceBlockCosts::uniform(&costs(2.0, 2.0), 4)).collect();
+        let dag = build_blockwise_dag(&blocks, SplitMode::Split);
+        dag.validate().unwrap();
+        assert_eq!(dag.n_devices, 4);
+        // Every op class present; per-block op multiset mirrors Fig 7.
+        let count = |pred: &dyn Fn(&Op) -> bool| -> usize {
+            dag.nodes().iter().filter(|n| pred(&n.op)).count()
+        };
+        assert_eq!(count(&|o| matches!(o, Op::Fec { .. })), 3);
+        assert_eq!(count(&|o| matches!(o, Op::Bec { .. })), 3);
+        assert_eq!(count(&|o| matches!(o, Op::A2a { .. })), 12);
+        assert_eq!(count(&|o| matches!(o, Op::Plan { .. })), 3);
+        assert!(count(&|o| matches!(o, Op::Trans { .. })) >= 3);
+        assert!(count(&|o| matches!(o, Op::Agg { .. })) >= 3);
+        // FEC depends on its dispatch A2A and on this block's Trans parts.
+        for (i, n) in dag.nodes().iter().enumerate() {
+            if let Op::Fec { block } = n.op {
+                assert!(!n.deps.is_empty(), "FEC{block} has no deps");
+                assert!(n.deps.iter().all(|&dx| dx < i));
+                let has_dispatch = n.deps.iter().any(|&dx| {
+                    matches!(
+                        dag.nodes()[dx].op,
+                        Op::A2a { block: b, phase: A2aPhase::FwdDispatch } if b == block
+                    )
+                });
+                assert!(has_dispatch, "FEC{block} missing dispatch dep");
+            }
+            if let Op::Agg { block, .. } = n.op {
+                let on_bec = n.deps.iter().any(|&dx| {
+                    matches!(dag.nodes()[dx].op, Op::Bec { block: b } if b == block)
+                });
+                assert!(on_bec, "Agg{block} must wait for its BEC");
+            }
+        }
+        // Trans/Agg volume is conserved vs the stage builder.
+        let scalar = [costs(2.0, 2.0); 3];
+        let sched = build_blockwise(&scalar);
+        let sched_vol: f64 = sched
+            .stages
+            .iter()
+            .flat_map(|s| s.comm.iter())
+            .filter(|o| o.op.is_load_balancing())
+            .map(|o| o.dur)
+            .sum();
+        let dag_vol: f64 = dag
+            .nodes()
+            .iter()
+            .filter(|n| n.op.is_load_balancing() && !matches!(n.op, Op::Plan { .. }))
+            .map(|n| n.dur[0])
+            .sum();
+        assert!((sched_vol - dag_vol).abs() < 1e-9, "{sched_vol} vs {dag_vol}");
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Explicit operator dependency DAGs with **per-device** durations — the
+//! input of the device-level discrete-event executor
+//! ([`crate::sim::events`]).
+//!
+//! The barrier-stage [`Schedule`] collapses an iteration into one global
+//! two-stream timeline: every op carries a single scalar duration (the
+//! max over devices, pre-computed by the engine) and a hard barrier
+//! separates consecutive stages.  That model cannot express stragglers,
+//! per-device exposed communication, or heterogeneous clusters — exactly
+//! the per-device phenomena the paper's §V timelines (Fig 7/8) reason
+//! about.
+//!
+//! An [`OpDag`] keeps the operator vocabulary ([`Op`]) but
+//!
+//! * gives every node a **duration vector** (seconds per device), and
+//! * replaces stage barriers with **explicit dependency edges**.
+//!
+//! Nodes are stored in issue order, which doubles as the per-stream FIFO
+//! order on each device (one compute stream + one communication stream
+//! per device, like the CUDA/NCCL pair the paper schedules onto).
+//! Dependencies must point backwards (`dep < node index`), so a cycle is
+//! unrepresentable by construction.
+//!
+//! Two builders produce DAGs:
+//!
+//! * [`from_schedule`] lowers a frozen [`Schedule`] into a
+//!   **barrier-shaped** DAG (every op of stage *s* depends on every op of
+//!   stage *s-1*, uniform durations).  Executing that DAG reproduces
+//!   `Schedule::total_time()` and `Schedule::exposed_breakdown()`
+//!   bit-for-bit — the equivalence gate of
+//!   `rust/tests/integration_timeline.rs`.
+//! * [`super::build_blockwise_dag`] emits Algorithm 2 directly as a DAG
+//!   with true data dependencies (no cross-stream barriers), the relaxed
+//!   form the barrier model over-constrains.
+
+use super::{Op, OpInstance, Schedule, Stream};
+
+/// One operator node: the op, its per-device durations, and the nodes
+/// that must finish before it may start.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DagNode {
+    pub op: Op,
+    /// Seconds the op occupies its stream on each device
+    /// (length == [`OpDag::n_devices`]).
+    pub dur: Vec<f64>,
+    /// Prerequisite node indices, each strictly less than this node's own
+    /// index (issue order is a topological order).
+    pub deps: Vec<usize>,
+}
+
+/// A whole iteration as an operator dependency DAG over `n_devices`
+/// device-local stream pairs.  (No `Default`: a zero-device DAG would
+/// bypass [`OpDag::new`]'s `n_devices >= 1` invariant.)
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpDag {
+    pub n_devices: usize,
+    nodes: Vec<DagNode>,
+}
+
+impl OpDag {
+    pub fn new(n_devices: usize) -> Self {
+        assert!(n_devices >= 1, "DAG needs at least one device");
+        OpDag { n_devices, nodes: Vec::new() }
+    }
+
+    /// Append a node with per-device durations; returns its index.
+    pub fn push(&mut self, op: Op, dur: Vec<f64>, deps: Vec<usize>) -> usize {
+        assert_eq!(dur.len(), self.n_devices, "duration vector length for {op:?}");
+        debug_assert!(
+            dur.iter().all(|d| d.is_finite() && *d >= 0.0),
+            "non-finite or negative duration for {op:?}"
+        );
+        let idx = self.nodes.len();
+        for &d in &deps {
+            assert!(d < idx, "dep {d} of node {idx} is not an earlier node");
+        }
+        self.nodes.push(DagNode { op, dur, deps });
+        idx
+    }
+
+    /// Append a node whose duration is the same on every device.
+    pub fn push_uniform(&mut self, op: Op, dur: f64, deps: Vec<usize>) -> usize {
+        let d = self.n_devices;
+        self.push(op, vec![dur; d], deps)
+    }
+
+    pub fn nodes(&self) -> &[DagNode] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Highest block id referenced by any node (None when empty).
+    pub fn max_block(&self) -> Option<usize> {
+        self.nodes.iter().map(|n| n.op.block()).max()
+    }
+
+    /// Structural invariants: dependency edges point backwards (which
+    /// also proves acyclicity — issue order is a topological order),
+    /// duration vectors span every device, and all durations are finite
+    /// and non-negative.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.dur.len() != self.n_devices {
+                return Err(format!(
+                    "node {i} ({:?}): {} durations for {} devices",
+                    n.op,
+                    n.dur.len(),
+                    self.n_devices
+                ));
+            }
+            for (dev, &d) in n.dur.iter().enumerate() {
+                if !d.is_finite() || d < 0.0 {
+                    return Err(format!("node {i} ({:?}): bad duration {d} on device {dev}", n.op));
+                }
+            }
+            for &dep in &n.deps {
+                if dep >= i {
+                    return Err(format!(
+                        "node {i} ({:?}): dep {dep} not earlier (cycle or forward edge)",
+                        n.op
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total busy seconds per device and stream: `(comp, comm)` vectors.
+    pub fn busy_per_device(&self) -> (Vec<f64>, Vec<f64>) {
+        let mut comp = vec![0.0; self.n_devices];
+        let mut comm = vec![0.0; self.n_devices];
+        for n in &self.nodes {
+            let acc = match n.op.stream() {
+                Stream::Comp => &mut comp,
+                Stream::Comm => &mut comm,
+            };
+            for (a, &d) in acc.iter_mut().zip(&n.dur) {
+                *a += d;
+            }
+        }
+        (comp, comm)
+    }
+}
+
+/// Lower a barrier-stage [`Schedule`] into a barrier-shaped [`OpDag`]
+/// with **uniform** per-device durations: every op of stage *s* depends
+/// on every op of stage *s-1*, and each op takes its scalar duration on
+/// all devices.  Executing the result on the DES reproduces the Stage
+/// model's `total_time()` / `exposed_breakdown()` bit-for-bit (the
+/// oracle-equivalence property; see `rust/tests/integration_timeline.rs`).
+pub fn from_schedule(schedule: &Schedule, n_devices: usize) -> OpDag {
+    from_schedule_with(schedule, n_devices, |op| vec![op.dur; n_devices])
+}
+
+/// Like [`from_schedule`], but per-device durations come from `dur_of`
+/// (e.g. the engine's `*_per_device` costs, or slowdown-scaled vectors
+/// for straggler scenarios).  The barrier shape is preserved; only the
+/// durations refine.
+pub fn from_schedule_with(
+    schedule: &Schedule,
+    n_devices: usize,
+    mut dur_of: impl FnMut(&OpInstance) -> Vec<f64>,
+) -> OpDag {
+    let mut dag = OpDag::new(n_devices);
+    let mut prev_stage: Vec<usize> = Vec::new();
+    for stage in &schedule.stages {
+        let mut this_stage = Vec::with_capacity(stage.comp.len() + stage.comm.len());
+        for op in stage.comp.iter().chain(&stage.comm) {
+            this_stage.push(dag.push(op.op, dur_of(op), prev_stage.clone()));
+        }
+        if !this_stage.is_empty() {
+            prev_stage = this_stage;
+        }
+    }
+    dag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{A2aPhase, Stage};
+
+    fn inst(op: Op, dur: f64) -> OpInstance {
+        OpInstance::new(op, dur)
+    }
+
+    #[test]
+    fn push_orders_and_validates() {
+        let mut dag = OpDag::new(2);
+        let a = dag.push_uniform(Op::Fec { block: 0 }, 1.0, vec![]);
+        let b = dag.push(Op::A2a { block: 0, phase: A2aPhase::FwdCombine }, vec![0.5, 0.7], vec![a]);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(dag.len(), 2);
+        assert_eq!(dag.max_block(), Some(0));
+        dag.validate().unwrap();
+        let (comp, comm) = dag.busy_per_device();
+        assert_eq!(comp, vec![1.0, 1.0]);
+        assert_eq!(comm, vec![0.5, 0.7]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forward_dep_rejected() {
+        let mut dag = OpDag::new(1);
+        dag.push_uniform(Op::Fec { block: 0 }, 1.0, vec![3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_duration_arity_rejected() {
+        let mut dag = OpDag::new(4);
+        dag.push(Op::Fec { block: 0 }, vec![1.0, 2.0], vec![]);
+    }
+
+    #[test]
+    fn schedule_lowering_is_barrier_shaped() {
+        let sched = Schedule {
+            stages: vec![
+                Stage::pair(
+                    vec![inst(Op::Fec { block: 0 }, 2.0)],
+                    vec![inst(Op::Trans { block: 1, part: 0 }, 1.0)],
+                ),
+                Stage::comm_only(vec![inst(
+                    Op::A2a { block: 0, phase: A2aPhase::FwdCombine },
+                    0.5,
+                )]),
+            ],
+        };
+        let dag = from_schedule(&sched, 3);
+        dag.validate().unwrap();
+        assert_eq!(dag.len(), 3);
+        // Stage 0 ops have no deps; the stage-1 op depends on BOTH.
+        assert!(dag.nodes()[0].deps.is_empty());
+        assert!(dag.nodes()[1].deps.is_empty());
+        assert_eq!(dag.nodes()[2].deps, vec![0, 1]);
+        // Uniform lowering replicates the scalar duration.
+        assert_eq!(dag.nodes()[0].dur, vec![2.0; 3]);
+    }
+
+    #[test]
+    fn custom_durations_flow_through() {
+        let sched = Schedule {
+            stages: vec![Stage::comp_only(vec![inst(Op::Fec { block: 0 }, 2.0)])],
+        };
+        let dag = from_schedule_with(&sched, 2, |op| vec![op.dur, 2.0 * op.dur]);
+        assert_eq!(dag.nodes()[0].dur, vec![2.0, 4.0]);
+    }
+}

@@ -6,10 +6,24 @@
 //! backward pass `A2A → BEC → A2A → BNEC → Agg` (paper Fig 7).  Each op is
 //! either pure-communication (*comm*) or pure-computation (*comp*); ops in
 //! the same [`Stage`] run on the two independent streams and overlap.
+//!
+//! The [`Stage`]/[`Schedule`] form is the frozen barrier model (one
+//! global stream pair, a barrier after every stage).  Its device-level
+//! successor lives in [`dag`]: ops carry per-device duration vectors and
+//! ordering comes from explicit dependency edges, executed by
+//! [`crate::sim::events`].  [`dag::from_schedule`] lowers a `Schedule`
+//! into a barrier-shaped DAG (bit-for-bit equivalent under uniform
+//! costs); [`build_blockwise_dag`] emits Algorithm 2 with true data
+//! dependencies instead of barriers.
 
 pub mod blockwise;
+pub mod dag;
 
-pub use blockwise::{build_blocking, build_blockwise, BlockCosts, LoadBalanceOps};
+pub use blockwise::{
+    build_blocking, build_blockwise, build_blockwise_dag, BlockCosts, DeviceBlockCosts,
+    LoadBalanceOps,
+};
+pub use dag::{DagNode, OpDag};
 
 /// The phase of one of the four A2A exchanges in a block (paper Fig 7).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -191,10 +205,19 @@ impl Schedule {
         }
     }
 
-    /// All data-dependency orderings hold: within a block, fwd ops appear
-    /// in Fig-7 order and Trans precedes that block's FEC.
+    /// All data-dependency orderings of Fig 7 hold, per block:
+    ///
+    /// * `Trans` (last part) precedes the block's FEC (parameters before
+    ///   compute);
+    /// * forward A2A phase order: `FwdDispatch ≤ FEC ≤ FwdCombine`;
+    /// * `FEC ≤ BEC` (forward before backward);
+    /// * backward A2A phase order: `BwdDispatch ≤ BEC ≤ BwdCombine`;
+    /// * `Agg` (first part) follows the block's BEC (gradients exist
+    ///   before aggregation).
+    ///
+    /// Ops in the same stage launch together, so ties (`==`) are legal.
     pub fn validate_dependencies(&self) -> Result<(), String> {
-        let pos = |pred: &dyn Fn(&Op) -> bool| -> Option<usize> {
+        let first = |pred: &dyn Fn(&Op) -> bool| -> Option<usize> {
             self.stages.iter().enumerate().find_map(|(i, s)| {
                 s.comp
                     .iter()
@@ -203,38 +226,57 @@ impl Schedule {
                     .then_some(i)
             })
         };
+        let last = |pred: &dyn Fn(&Op) -> bool| -> Option<usize> {
+            self.stages
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.comp.iter().chain(&s.comm).any(|o| pred(&o.op)))
+                .map(|(i, _)| i)
+                .next_back()
+        };
         let blocks: std::collections::BTreeSet<usize> = self
             .stages
             .iter()
             .flat_map(|s| s.comp.iter().chain(&s.comm))
             .map(|o| o.op.block())
             .collect();
+        // `a ≤ b` when both exist, else vacuously fine.
+        let ordered = |a: Option<usize>, b: Option<usize>| match (a, b) {
+            (Some(x), Some(y)) => x <= y,
+            _ => true,
+        };
         for &b in &blocks {
-            let fec = pos(&|o: &Op| matches!(o, Op::Fec { block } if *block == b));
-            let trans_last = self
-                .stages
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| {
-                    s.comm
-                        .iter()
-                        .any(|o| matches!(o.op, Op::Trans { block, .. } if block == b))
+            let a2a = |phase: A2aPhase| {
+                first(&move |o: &Op| {
+                    matches!(o, Op::A2a { block, phase: p } if *block == b && *p == phase)
                 })
-                .map(|(i, _)| i)
-                .max();
-            if let (Some(f), Some(t)) = (fec, trans_last) {
-                if t > f {
-                    return Err(format!(
-                        "block {b}: Trans finishes at stage {t} after its FEC at {f}"
-                    ));
-                }
+            };
+            let fec = first(&|o: &Op| matches!(o, Op::Fec { block } if *block == b));
+            let bec = first(&|o: &Op| matches!(o, Op::Bec { block } if *block == b));
+            let trans_last = last(&|o: &Op| matches!(o, Op::Trans { block, .. } if *block == b));
+            let agg_first = first(&|o: &Op| matches!(o, Op::Agg { block, .. } if *block == b));
+            if !ordered(trans_last, fec) {
+                return Err(format!(
+                    "block {b}: Trans finishes at stage {trans_last:?} after its FEC at {fec:?}"
+                ));
             }
-            // Bec must come after Fec.
-            let bec = pos(&|o: &Op| matches!(o, Op::Bec { block } if *block == b));
-            if let (Some(f), Some(bk)) = (fec, bec) {
-                if bk < f {
-                    return Err(format!("block {b}: BEC at {bk} before FEC at {f}"));
-                }
+            if !ordered(a2a(A2aPhase::FwdDispatch), fec) {
+                return Err(format!("block {b}: forward dispatch A2A after FEC"));
+            }
+            if !ordered(fec, a2a(A2aPhase::FwdCombine)) {
+                return Err(format!("block {b}: forward combine A2A before FEC"));
+            }
+            if !ordered(fec, bec) {
+                return Err(format!("block {b}: BEC at {bec:?} before FEC at {fec:?}"));
+            }
+            if !ordered(a2a(A2aPhase::BwdDispatch), bec) {
+                return Err(format!("block {b}: backward dispatch A2A after BEC"));
+            }
+            if !ordered(bec, a2a(A2aPhase::BwdCombine)) {
+                return Err(format!("block {b}: backward combine A2A before BEC"));
+            }
+            if !ordered(bec, agg_first) {
+                return Err(format!("block {b}: Agg at {agg_first:?} before BEC at {bec:?}"));
             }
         }
         Ok(())
@@ -311,6 +353,55 @@ mod tests {
         let bd = sched.exposed_breakdown();
         assert_eq!(bd.get("place"), Some(&4.0));
         assert!((sched.lb_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dependency_validation_catches_phase_violations() {
+        let fec = || Stage::comp_only(vec![inst(Op::Fec { block: 0 }, 1.0)]);
+        let bec = || Stage::comp_only(vec![inst(Op::Bec { block: 0 }, 1.0)]);
+        let a2a = |p: A2aPhase| {
+            Stage::comm_only(vec![inst(Op::A2a { block: 0, phase: p }, 1.0)])
+        };
+        // Forward dispatch after FEC.
+        let bad = Schedule { stages: vec![fec(), a2a(A2aPhase::FwdDispatch)] };
+        assert!(bad.validate_dependencies().unwrap_err().contains("dispatch"));
+        // Forward combine before FEC.
+        let bad = Schedule { stages: vec![a2a(A2aPhase::FwdCombine), fec()] };
+        assert!(bad.validate_dependencies().unwrap_err().contains("combine"));
+        // Backward dispatch after BEC.
+        let bad = Schedule { stages: vec![fec(), bec(), a2a(A2aPhase::BwdDispatch)] };
+        assert!(bad
+            .validate_dependencies()
+            .unwrap_err()
+            .contains("backward dispatch"));
+        // Backward combine before BEC.
+        let bad = Schedule { stages: vec![fec(), a2a(A2aPhase::BwdCombine), bec()] };
+        assert!(bad
+            .validate_dependencies()
+            .unwrap_err()
+            .contains("backward combine"));
+        // Agg before BEC.
+        let bad = Schedule {
+            stages: vec![
+                fec(),
+                Stage::comm_only(vec![inst(Op::Agg { block: 0, part: 0 }, 1.0)]),
+                bec(),
+            ],
+        };
+        assert!(bad.validate_dependencies().unwrap_err().contains("Agg"));
+        // The full Fig-7 order passes.
+        let good = Schedule {
+            stages: vec![
+                a2a(A2aPhase::FwdDispatch),
+                fec(),
+                a2a(A2aPhase::FwdCombine),
+                a2a(A2aPhase::BwdDispatch),
+                bec(),
+                a2a(A2aPhase::BwdCombine),
+                Stage::comm_only(vec![inst(Op::Agg { block: 0, part: 0 }, 1.0)]),
+            ],
+        };
+        good.validate_dependencies().unwrap();
     }
 
     #[test]

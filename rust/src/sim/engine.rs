@@ -11,7 +11,7 @@
 use crate::cluster::ClusterSpec;
 use crate::moe::{LoadMatrix, Placement};
 use crate::perfmodel::PerfModel;
-use crate::scheduler::BlockCosts;
+use crate::scheduler::{BlockCosts, DeviceBlockCosts};
 
 pub struct Engine<'a> {
     pub cluster: &'a ClusterSpec,
@@ -101,6 +101,114 @@ impl<'a> Engine<'a> {
         2.0 * self.fec_time(h)
     }
 
+    // --- per-device cost vectors -------------------------------------------
+    //
+    // The scalar costs above pre-collapse every operator to its
+    // worst-case device (`max`), which is what the frozen barrier
+    // [`crate::scheduler::Schedule`] consumes.  The `*_per_device`
+    // variants keep the whole vector so the device-level event timeline
+    // ([`crate::sim::events`]) can see stragglers, per-device exposed
+    // communication and the cluster's [`ClusterSpec::device_slowdown`]
+    // knob.  Compute costs scale with the per-device slowdown;
+    // communication costs do not (a slow GPU's NIC is not slower).
+
+    /// Per-device A2A busy time: each device serializes its egress and
+    /// its ingress; the slower of the two bounds its participation
+    /// (`max` over this vector == [`Engine::a2a_time`]).
+    pub fn a2a_time_per_device(&self, traffic: &[Vec<u64>]) -> Vec<f64> {
+        let d = self.cluster.n_devices();
+        let bytes = self.pm.token_bytes;
+        let mut out = vec![0.0; d];
+        for (i, slot) in out.iter_mut().enumerate() {
+            let mut egress = 0.0;
+            let mut ingress = 0.0;
+            for j in 0..d {
+                if i == j {
+                    continue;
+                }
+                if traffic[i][j] > 0 {
+                    egress += traffic[i][j] as f64 * bytes / self.cluster.bandwidth(i, j);
+                }
+                if traffic[j][i] > 0 {
+                    ingress += traffic[j][i] as f64 * bytes / self.cluster.bandwidth(j, i);
+                }
+            }
+            *slot = egress.max(ingress);
+        }
+        out
+    }
+
+    /// Per-device expert computation: the device's token queue over its
+    /// (slowdown-scaled) throughput.
+    pub fn fec_time_per_device(&self, h: &[u64]) -> Vec<f64> {
+        h.iter()
+            .enumerate()
+            .map(|(i, &t)| t as f64 * self.cluster.slowdown(i) / self.pm.tokens_per_s)
+            .collect()
+    }
+
+    pub fn bec_time_per_device(&self, h: &[u64]) -> Vec<f64> {
+        self.fec_time_per_device(h).into_iter().map(|t| 2.0 * t).collect()
+    }
+
+    /// Per-device non-MoE computation (static per §V-B, scaled only by
+    /// the device's slowdown factor).
+    pub fn fnec_time_per_device(&self) -> Vec<f64> {
+        (0..self.cluster.n_devices())
+            .map(|i| self.pm.t_fnec * self.cluster.slowdown(i))
+            .collect()
+    }
+
+    pub fn bnec_time_per_device(&self) -> Vec<f64> {
+        (0..self.cluster.n_devices())
+            .map(|i| self.pm.t_bnec * self.cluster.slowdown(i))
+            .collect()
+    }
+
+    /// Per-device Trans busy time: each device pays the collectives it
+    /// PARTICIPATES in (home or replica of a transferred expert), so
+    /// `max` over this vector is at most the globally serialized
+    /// [`Engine::trans_time`] — the per-device refinement the barrier
+    /// model cannot express.
+    pub fn trans_time_per_device(&self, p: &Placement) -> Vec<f64> {
+        let d = self.cluster.n_devices() as f64;
+        let bytes = self.pm.expert_bytes;
+        let mut out = vec![0.0; self.cluster.n_devices()];
+        for e in p.transferred_experts() {
+            let home = p.home(e);
+            let mut bottleneck = f64::INFINITY;
+            for dev in p.replicas(e).iter() {
+                if dev != home {
+                    bottleneck = bottleneck.min(self.cluster.bandwidth(home, dev));
+                }
+            }
+            if bottleneck.is_finite() {
+                let r = p.replicas(e).len() as f64;
+                let cost = r * bytes / (d * bottleneck);
+                out[home] += cost;
+                for dev in p.replicas(e).iter() {
+                    if dev != home {
+                        out[dev] += cost;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn agg_time_per_device(&self, p: &Placement) -> Vec<f64> {
+        self.trans_time_per_device(p)
+    }
+
+    /// Coarse (blocking, un-chunked) variant of
+    /// [`Engine::trans_time_per_device`].
+    pub fn trans_time_coarse_per_device(&self, p: &Placement) -> Vec<f64> {
+        self.trans_time_per_device(p)
+            .into_iter()
+            .map(|t| crate::perfmodel::COARSE_FACTOR * t)
+            .collect()
+    }
+
     /// All operator costs of one MoE block under `placement`.
     /// `plan_time` is the Plan cost this iteration actually pays (0 when
     /// the planner reused a cached placement or the policy never plans).
@@ -141,6 +249,72 @@ impl<'a> Engine<'a> {
             agg,
             plan: plan_time,
         }
+    }
+
+    /// Per-device operator costs of one MoE block (the
+    /// [`DeviceBlockCosts`] the DAG builders and the event timeline
+    /// consume).  `Plan` runs on the host and stays uniform.
+    pub fn device_block_costs_styled(
+        &self,
+        w: &LoadMatrix,
+        placement: &Placement,
+        plan_time: f64,
+        coarse: bool,
+    ) -> DeviceBlockCosts {
+        self.priced_block_styled(w, placement, plan_time, coarse).1
+    }
+
+    /// Scalar + per-device costs + the routed load, all from ONE routing
+    /// pass.  The scalar side is computed with exactly the same calls as
+    /// [`Engine::block_costs_styled`], so it is bit-identical to the
+    /// frozen path; the vector side refines it per device; the
+    /// [`crate::moe::RoutedLoad`] is returned so callers (the simulator's
+    /// balance-degree accounting) need no second route of the same
+    /// placement.
+    pub fn priced_block_styled(
+        &self,
+        w: &LoadMatrix,
+        placement: &Placement,
+        plan_time: f64,
+        coarse: bool,
+    ) -> (BlockCosts, DeviceBlockCosts, crate::moe::RoutedLoad) {
+        let (routed, traffic) = w.route_full(placement);
+        let (trans, agg) = if coarse {
+            let t = self.trans_time_coarse(placement);
+            (t, t)
+        } else {
+            (self.trans_time(placement), self.agg_time(placement))
+        };
+        let scalar = BlockCosts {
+            a2a: self.a2a_time(&traffic),
+            fec: self.fec_time(&routed.h),
+            bec: self.bec_time(&routed.h),
+            fnec: self.pm.t_fnec,
+            bnec: self.pm.t_bnec,
+            trans,
+            agg,
+            plan: plan_time,
+        };
+        let (trans_dev, agg_dev) = if coarse {
+            let t = self.trans_time_coarse_per_device(placement);
+            (t.clone(), t)
+        } else {
+            (
+                self.trans_time_per_device(placement),
+                self.agg_time_per_device(placement),
+            )
+        };
+        let device = DeviceBlockCosts {
+            a2a: self.a2a_time_per_device(&traffic),
+            fec: self.fec_time_per_device(&routed.h),
+            bec: self.bec_time_per_device(&routed.h),
+            fnec: self.fnec_time_per_device(),
+            bnec: self.bnec_time_per_device(),
+            trans: trans_dev,
+            agg: agg_dev,
+            plan: vec![plan_time; self.cluster.n_devices()],
+        };
+        (scalar, device, routed)
     }
 }
 
@@ -225,6 +399,96 @@ mod tests {
         let real = eng.a2a_time(&w.traffic(&ident));
         let err = (est - real).abs() / real.max(1e-12);
         assert!(err < 0.6, "estimate {est} vs engine {real} (err {err})");
+    }
+
+    #[test]
+    fn per_device_vectors_refine_the_scalars() {
+        let (m, c) = setup();
+        let pm = PerfModel::new(&m, &c);
+        let eng = Engine::new(&c, &pm);
+        let mut gen = crate::workload::WorkloadGen::new(
+            crate::workload::WorkloadConfig::paper_default(1, 8, 8, 8192),
+        );
+        let w = &gen.next_iteration()[0];
+        let mut p = Placement::identity(8, 8);
+        p.add_replica(0, 1);
+        p.add_replica(0, 2);
+        let (routed, traffic) = w.route_full(&p);
+        // max over devices reproduces the pre-maxed scalar exactly.
+        let a2a = eng.a2a_time_per_device(&traffic);
+        let max_a2a = a2a.iter().copied().fold(0.0f64, f64::max);
+        assert_eq!(max_a2a.to_bits(), eng.a2a_time(&traffic).to_bits());
+        let fec = eng.fec_time_per_device(&routed.h);
+        let max_fec = fec.iter().copied().fold(0.0f64, f64::max);
+        assert_eq!(max_fec.to_bits(), eng.fec_time(&routed.h).to_bits());
+        for (b2, f2) in eng.bec_time_per_device(&routed.h).iter().zip(&fec) {
+            assert!((b2 - 2.0 * f2).abs() < 1e-18);
+        }
+        // Per-device Trans charges only participants; its max is bounded
+        // by the globally serialized scalar.
+        let trans = eng.trans_time_per_device(&p);
+        let max_trans = trans.iter().copied().fold(0.0f64, f64::max);
+        assert!(max_trans <= eng.trans_time(&p) + 1e-15);
+        assert!(max_trans > 0.0);
+        // Non-participants pay nothing (experts 0's collective touches
+        // devices 0..=2 only under this placement).
+        assert_eq!(trans[5], 0.0);
+        assert!(trans[0] > 0.0 && trans[1] > 0.0 && trans[2] > 0.0);
+    }
+
+    #[test]
+    fn slowdown_scales_compute_not_comm() {
+        let (m, c) = setup();
+        let het = c.clone().with_slowdown(3, 2.0);
+        let pm = PerfModel::new(&m, &c);
+        let eng = Engine::new(&c, &pm);
+        let eng_het = Engine::new(&het, &pm);
+        let h: Vec<u64> = vec![100; 8];
+        let fec = eng.fec_time_per_device(&h);
+        let fec_het = eng_het.fec_time_per_device(&h);
+        assert!((fec_het[3] - 2.0 * fec[3]).abs() < 1e-18);
+        assert_eq!(fec_het[0].to_bits(), fec[0].to_bits());
+        assert!((eng_het.fnec_time_per_device()[3] - 2.0 * pm.t_fnec).abs() < 1e-18);
+        // Communication is not scaled.
+        let mut traffic = vec![vec![0u64; 8]; 8];
+        traffic[3][0] = 1000;
+        let a = eng.a2a_time_per_device(&traffic);
+        let b = eng_het.a2a_time_per_device(&traffic);
+        assert_eq!(a, b);
+        // The scalar path deliberately ignores the knob.
+        assert_eq!(eng.fec_time(&h).to_bits(), eng_het.fec_time(&h).to_bits());
+    }
+
+    #[test]
+    fn priced_block_scalar_matches_block_costs() {
+        let (m, c) = setup();
+        let pm = PerfModel::new(&m, &c);
+        let eng = Engine::new(&c, &pm);
+        let mut gen = crate::workload::WorkloadGen::new(
+            crate::workload::WorkloadConfig::paper_default(1, 8, 8, 8192),
+        );
+        let w = &gen.next_iteration()[0];
+        let mut p = Placement::identity(8, 8);
+        p.replicate_to_all(0);
+        for coarse in [false, true] {
+            let want = eng.block_costs_styled(w, &p, 0.25, coarse);
+            let (got, dev, routed) = eng.priced_block_styled(w, &p, 0.25, coarse);
+            assert_eq!(routed, w.route(&p), "returned routed load must match route()");
+            for (a, b) in [
+                (want.a2a, got.a2a),
+                (want.fec, got.fec),
+                (want.bec, got.bec),
+                (want.fnec, got.fnec),
+                (want.bnec, got.bnec),
+                (want.trans, got.trans),
+                (want.agg, got.agg),
+                (want.plan, got.plan),
+            ] {
+                assert_eq!(a.to_bits(), b.to_bits(), "coarse={coarse}");
+            }
+            assert_eq!(dev.n_devices(), 8);
+            assert_eq!(dev.plan, vec![0.25; 8]);
+        }
     }
 
     #[test]

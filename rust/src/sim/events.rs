@@ -1,0 +1,435 @@
+//! Device-level discrete-event executor: plays an [`OpDag`] onto one
+//! (compute, communication) stream pair **per device** and reports the
+//! per-device critical path.
+//!
+//! This is the successor of pricing an iteration as a single global
+//! two-stream [`crate::scheduler::Schedule`]: instead of collapsing every
+//! operator to a scalar (the max over devices) before the timeline sees
+//! it, ops carry per-device duration vectors and the makespan emerges
+//! from per-device stream occupancy plus the DAG's dependency edges —
+//! which is where stragglers, per-device exposed communication, and
+//! heterogeneous clusters become visible (paper §V, Fig 7/8).
+//!
+//! # Semantics
+//!
+//! * Nodes execute in issue order on each stream (FIFO per device, one
+//!   comp + one comm stream — the CUDA/NCCL pair).
+//! * A **compute** node starts on device `d` when `d`'s comp stream is
+//!   free and all its dependencies have finished **on `d`** (its inputs
+//!   are device-local).
+//! * A **communication** node is a collective: it starts on *all* devices
+//!   at once, when every device's comm stream is free and every
+//!   dependency has finished on every device; it then occupies device
+//!   `d`'s comm stream for its per-device duration.
+//! * The **critical path** is recovered by walking back from the
+//!   last-finishing (node, device) through whichever predecessor
+//!   determined each start time.  Ties prefer compute-stream sources
+//!   (matching `Schedule::exposed_breakdown`'s `comp >= comm` rule), then
+//!   the later node, then the lower device.  Charging the path's
+//!   durations by [`crate::scheduler::Op::breakdown_key`] yields an
+//!   exposed breakdown that sums exactly to the makespan.
+//!
+//! # Oracle equivalence
+//!
+//! On a barrier-shaped DAG with uniform per-device durations
+//! ([`crate::scheduler::dag::from_schedule`]), the executor reproduces
+//! the frozen Stage model's `total_time()` and `exposed_breakdown()`
+//! **bit-for-bit** (every start is a `max` of previously computed finish
+//! times — the same additions in the same order).  That equivalence is
+//! pinned for all built-in policies in
+//! `rust/tests/integration_timeline.rs`; relaxing the barriers
+//! ([`crate::scheduler::build_blockwise_dag`]) and slowing devices
+//! ([`crate::cluster::ClusterSpec::with_slowdown`]) are the new
+//! capabilities on top.
+
+use crate::scheduler::dag::OpDag;
+use crate::scheduler::Stream;
+use std::collections::BTreeMap;
+
+/// Per-device stream/idle accounting of one executed DAG.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DeviceStats {
+    /// Seconds the device's compute stream is busy.
+    pub busy_comp: f64,
+    /// Seconds the device's communication stream is busy.
+    pub busy_comm: f64,
+    /// Communication seconds NOT overlapped by computation on this
+    /// device — the per-device "exposed communication" of §V.
+    pub exposed_comm: f64,
+    /// Seconds neither stream is busy, up to the global makespan (a
+    /// straggler elsewhere shows up as idle time here).
+    pub idle: f64,
+    /// When this device's last op finishes.
+    pub finish: f64,
+}
+
+/// Outcome of executing an [`OpDag`].
+#[derive(Clone, Debug, Default)]
+pub struct DesResult {
+    /// Iteration time: the per-device critical path (latest finish over
+    /// all nodes and devices).
+    pub makespan: f64,
+    /// `start[node][device]` / `finish[node][device]` in seconds.
+    pub start: Vec<Vec<f64>>,
+    pub finish: Vec<Vec<f64>>,
+    /// Exposed seconds per breakdown category, from critical-path
+    /// attribution; values sum to `makespan`.
+    pub exposed: BTreeMap<&'static str, f64>,
+    /// Exposed seconds per block id (critical-path attribution; sums to
+    /// `makespan` like `exposed`).
+    pub per_block_exposed: Vec<f64>,
+    /// Per-device stream/idle accounting.
+    pub devices: Vec<DeviceStats>,
+    /// The iteration's straggler: the device whose streams are busy
+    /// longest (ties -> lowest id) — the one the others idle-wait on at
+    /// collectives.
+    pub straggler: usize,
+}
+
+/// Candidate source of a start time: (finish, from-comp-stream, node,
+/// device).  `better` is the tie-break order documented in the module
+/// docs.
+type Cand = (f64, bool, usize, usize);
+
+fn better(a: Cand, b: Cand) -> bool {
+    if a.0 != b.0 {
+        return a.0 > b.0;
+    }
+    if a.1 != b.1 {
+        return a.1;
+    }
+    if a.2 != b.2 {
+        return a.2 > b.2;
+    }
+    a.3 < b.3
+}
+
+fn consider(best: &mut Option<Cand>, cand: Cand) {
+    let replace = match best {
+        None => true,
+        Some(b) => better(cand, *b),
+    };
+    if replace {
+        *best = Some(cand);
+    }
+}
+
+/// Execute `dag` and return times, per-device stats and the
+/// critical-path exposed breakdown.
+pub fn execute(dag: &OpDag) -> DesResult {
+    debug_assert!(dag.validate().is_ok(), "invalid DAG: {:?}", dag.validate());
+    let d = dag.n_devices;
+    let n = dag.len();
+    let nodes = dag.nodes();
+    let mut start = vec![vec![0.0f64; d]; n];
+    let mut finish = vec![vec![0.0f64; d]; n];
+    // Which (node, device) determined each start (None = started at 0).
+    let mut pred: Vec<Vec<Option<(usize, usize)>>> = vec![vec![None; d]; n];
+    // Last node issued on each device's comp / comm stream.
+    let mut comp_last: Vec<Option<usize>> = vec![None; d];
+    let mut comm_last: Vec<Option<usize>> = vec![None; d];
+
+    let is_comp = |i: usize| nodes[i].op.stream() == Stream::Comp;
+
+    for (i, node) in nodes.iter().enumerate() {
+        match node.op.stream() {
+            Stream::Comp => {
+                for dev in 0..d {
+                    let mut best: Option<Cand> = None;
+                    if let Some(p) = comp_last[dev] {
+                        consider(&mut best, (finish[p][dev], true, p, dev));
+                    }
+                    for &dep in &node.deps {
+                        consider(&mut best, (finish[dep][dev], is_comp(dep), dep, dev));
+                    }
+                    let s = best.map_or(0.0, |c| c.0);
+                    start[i][dev] = s;
+                    finish[i][dev] = s + node.dur[dev];
+                    pred[i][dev] = best.map(|c| (c.2, c.3));
+                    comp_last[dev] = Some(i);
+                }
+            }
+            Stream::Comm => {
+                // Collective: one synchronized start across all devices.
+                let mut best: Option<Cand> = None;
+                for dev in 0..d {
+                    if let Some(p) = comm_last[dev] {
+                        consider(&mut best, (finish[p][dev], false, p, dev));
+                    }
+                    for &dep in &node.deps {
+                        consider(&mut best, (finish[dep][dev], is_comp(dep), dep, dev));
+                    }
+                }
+                let s = best.map_or(0.0, |c| c.0);
+                for dev in 0..d {
+                    start[i][dev] = s;
+                    finish[i][dev] = s + node.dur[dev];
+                    pred[i][dev] = best.map(|c| (c.2, c.3));
+                    comm_last[dev] = Some(i);
+                }
+            }
+        }
+    }
+
+    // Terminal: the last-finishing (node, device), same tie-break as the
+    // per-start predecessor choice.
+    let mut terminal: Option<Cand> = None;
+    for i in 0..n {
+        for dev in 0..d {
+            consider(&mut terminal, (finish[i][dev], is_comp(i), i, dev));
+        }
+    }
+    let makespan = terminal.map_or(0.0, |c| c.0);
+
+    // Critical path: walk predecessors back from the terminal, then
+    // charge durations in chronological order (same addition order as
+    // `Schedule::exposed_breakdown` on the barrier lowering).
+    let mut path: Vec<(usize, usize)> = Vec::new();
+    let mut cur = terminal.map(|c| (c.2, c.3));
+    while let Some((i, dev)) = cur {
+        path.push((i, dev));
+        cur = pred[i][dev];
+    }
+    path.reverse();
+    let mut exposed: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let n_blocks = dag.max_block().map_or(0, |b| b + 1);
+    let mut per_block_exposed = vec![0.0; n_blocks];
+    for &(i, dev) in &path {
+        let dur = nodes[i].dur[dev];
+        if dur > 0.0 {
+            *exposed.entry(nodes[i].op.breakdown_key()).or_insert(0.0) += dur;
+            per_block_exposed[nodes[i].op.block()] += dur;
+        }
+    }
+
+    // Per-device stream/idle accounting (interval arithmetic over the
+    // placed ops).
+    let mut devices = Vec::with_capacity(d);
+    for dev in 0..d {
+        let mut comp_iv: Vec<(f64, f64)> = Vec::new();
+        let mut comm_iv: Vec<(f64, f64)> = Vec::new();
+        let mut busy_comp = 0.0;
+        let mut busy_comm = 0.0;
+        let mut dev_finish = 0.0f64;
+        for (i, node) in nodes.iter().enumerate() {
+            let dur = node.dur[dev];
+            dev_finish = dev_finish.max(finish[i][dev]);
+            if dur <= 0.0 {
+                continue;
+            }
+            match node.op.stream() {
+                Stream::Comp => {
+                    busy_comp += dur;
+                    comp_iv.push((start[i][dev], finish[i][dev]));
+                }
+                Stream::Comm => {
+                    busy_comm += dur;
+                    comm_iv.push((start[i][dev], finish[i][dev]));
+                }
+            }
+        }
+        let comp_merged = merge(&mut comp_iv);
+        let exposed_comm: f64 =
+            comm_iv.iter().map(|&iv| uncovered(iv, &comp_merged)).sum();
+        let mut all = comp_merged.clone();
+        all.extend(comm_iv.iter().copied());
+        let covered: f64 = merge(&mut all).iter().map(|&(a, b)| b - a).sum();
+        devices.push(DeviceStats {
+            busy_comp,
+            busy_comm,
+            exposed_comm,
+            idle: (makespan - covered).max(0.0),
+            finish: dev_finish,
+        });
+    }
+    // Straggler: the busiest device (ties -> lowest id).  Synchronized
+    // collectives drag every device's FINISH to nearly the same instant,
+    // so "finishes last" cannot identify the cause; the device whose
+    // streams work longest is the one the others idle-wait on.
+    let mut straggler = 0;
+    for (i, s) in devices.iter().enumerate().skip(1) {
+        let cur = &devices[straggler];
+        if s.busy_comp + s.busy_comm > cur.busy_comp + cur.busy_comm {
+            straggler = i;
+        }
+    }
+
+    DesResult {
+        makespan,
+        start,
+        finish,
+        exposed,
+        per_block_exposed,
+        devices,
+        straggler,
+    }
+}
+
+/// Sort and merge half-open busy intervals; returns the disjoint union.
+fn merge(intervals: &mut [(f64, f64)]) -> Vec<(f64, f64)> {
+    intervals.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(intervals.len());
+    for &(a, b) in intervals.iter() {
+        match out.last_mut() {
+            Some(last) if a <= last.1 => last.1 = last.1.max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+/// Length of `iv` not covered by the disjoint sorted `cover` intervals.
+fn uncovered(iv: (f64, f64), cover: &[(f64, f64)]) -> f64 {
+    let (a, b) = iv;
+    let mut exposed = b - a;
+    for &(ca, cb) in cover {
+        if cb <= a {
+            continue;
+        }
+        if ca >= b {
+            break;
+        }
+        exposed -= cb.min(b) - ca.max(a);
+    }
+    exposed.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::dag::{from_schedule, OpDag};
+    use crate::scheduler::{A2aPhase, Op, OpInstance, Schedule, Stage};
+
+    fn inst(op: Op, dur: f64) -> OpInstance {
+        OpInstance::new(op, dur)
+    }
+
+    #[test]
+    fn empty_dag_is_trivial() {
+        let r = execute(&OpDag::new(4));
+        assert_eq!(r.makespan, 0.0);
+        assert_eq!(r.devices.len(), 4);
+        assert!(r.exposed.is_empty());
+        assert_eq!(r.straggler, 0);
+    }
+
+    #[test]
+    fn comp_and_comm_overlap_within_a_device() {
+        // FEC (2s, comp) issued first; an independent Trans (1s, comm)
+        // overlaps it entirely.
+        let mut dag = OpDag::new(1);
+        dag.push_uniform(Op::Fec { block: 0 }, 2.0, vec![]);
+        dag.push_uniform(Op::Trans { block: 0, part: 0 }, 1.0, vec![]);
+        let r = execute(&dag);
+        assert_eq!(r.makespan, 2.0);
+        assert_eq!(r.devices[0].busy_comp, 2.0);
+        assert_eq!(r.devices[0].busy_comm, 1.0);
+        assert_eq!(r.devices[0].exposed_comm, 0.0, "comm fully hidden");
+        assert_eq!(r.devices[0].idle, 0.0);
+        assert_eq!(r.exposed.get("expert_comp"), Some(&2.0));
+        assert_eq!(r.exposed.get("place"), None, "hidden comm not charged");
+    }
+
+    #[test]
+    fn dependency_serializes_across_streams() {
+        let mut dag = OpDag::new(1);
+        let a = dag.push_uniform(Op::A2a { block: 0, phase: A2aPhase::FwdDispatch }, 1.0, vec![]);
+        dag.push_uniform(Op::Fec { block: 0 }, 2.0, vec![a]);
+        let r = execute(&dag);
+        assert_eq!(r.makespan, 3.0);
+        assert_eq!(r.start[1][0], 1.0);
+        assert_eq!(r.exposed.get("a2a"), Some(&1.0));
+        assert_eq!(r.exposed.get("expert_comp"), Some(&2.0));
+        // Comm had nothing to hide under: fully exposed on the device.
+        assert_eq!(r.devices[0].exposed_comm, 1.0);
+    }
+
+    #[test]
+    fn collectives_synchronize_across_devices() {
+        // Device 1's FEC is slower; the following A2A (collective) must
+        // wait for it on BOTH devices.
+        let mut dag = OpDag::new(2);
+        let f = dag.push(Op::Fec { block: 0 }, vec![1.0, 3.0], vec![]);
+        dag.push(Op::A2a { block: 0, phase: A2aPhase::FwdCombine }, vec![0.5, 0.5], vec![f]);
+        let r = execute(&dag);
+        assert_eq!(r.start[1][0], 3.0, "device 0 waits for device 1's FEC");
+        assert_eq!(r.makespan, 3.5);
+        assert_eq!(r.straggler, 1);
+        // Device 0 idles from 1.0 to 3.0.
+        assert!((r.devices[0].idle - 2.0).abs() < 1e-12);
+        assert_eq!(r.devices[1].idle, 0.0);
+    }
+
+    #[test]
+    fn comp_deps_are_device_local() {
+        // A per-device comp chain: device 0 finishes earlier and does NOT
+        // wait for device 1 (no collective in between).
+        let mut dag = OpDag::new(2);
+        let f = dag.push(Op::Fec { block: 0 }, vec![1.0, 3.0], vec![]);
+        dag.push(Op::Fnec { block: 0 }, vec![1.0, 1.0], vec![f]);
+        let r = execute(&dag);
+        assert_eq!(r.start[1][0], 1.0);
+        assert_eq!(r.start[1][1], 3.0);
+        assert_eq!(r.makespan, 4.0);
+    }
+
+    #[test]
+    fn exposed_sums_to_makespan() {
+        let mut dag = OpDag::new(2);
+        let a = dag.push(Op::A2a { block: 0, phase: A2aPhase::FwdDispatch }, vec![0.5, 1.0], vec![]);
+        let f = dag.push(Op::Fec { block: 0 }, vec![2.0, 1.0], vec![a]);
+        dag.push(Op::A2a { block: 0, phase: A2aPhase::FwdCombine }, vec![0.25, 0.25], vec![f]);
+        let r = execute(&dag);
+        let total: f64 = r.exposed.values().sum();
+        assert!((total - r.makespan).abs() < 1e-12, "{total} vs {}", r.makespan);
+        let per_block: f64 = r.per_block_exposed.iter().sum();
+        assert!((per_block - r.makespan).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_lowering_matches_stage_model_bitwise() {
+        // The module-level equivalence property on a hand-built schedule
+        // (the policy-driven gate lives in integration_timeline.rs).
+        let sched = Schedule {
+            stages: vec![
+                Stage::comm_only(vec![inst(Op::Trans { block: 0, part: 0 }, 0.7)]),
+                Stage::pair(
+                    vec![inst(Op::Fec { block: 0 }, 2.0)],
+                    vec![inst(Op::Trans { block: 1, part: 0 }, 3.0)],
+                ),
+                Stage::pair(
+                    vec![inst(Op::Plan { block: 0 }, 0.4)],
+                    vec![inst(Op::A2a { block: 0, phase: A2aPhase::FwdCombine }, 0.4)],
+                ),
+                Stage::comp_only(vec![inst(Op::Fnec { block: 0 }, 1.1)]),
+            ],
+        };
+        let r = execute(&from_schedule(&sched, 4));
+        assert_eq!(r.makespan.to_bits(), sched.total_time().to_bits());
+        let want = sched.exposed_breakdown();
+        assert_eq!(r.exposed.keys().collect::<Vec<_>>(), want.keys().collect::<Vec<_>>());
+        for (k, v) in &want {
+            assert_eq!(r.exposed[k].to_bits(), v.to_bits(), "key {k}");
+        }
+        // Equal-duration stage 2: comp wins the tie, like the Stage rule.
+        assert_eq!(r.exposed.get("search"), Some(&0.4));
+        assert_eq!(r.exposed.get("a2a"), None);
+    }
+
+    #[test]
+    fn straggler_prefers_lowest_id_on_ties() {
+        let mut dag = OpDag::new(3);
+        dag.push(Op::Fec { block: 0 }, vec![1.0, 1.0, 1.0], vec![]);
+        let r = execute(&dag);
+        assert_eq!(r.straggler, 0);
+    }
+
+    #[test]
+    fn interval_helpers() {
+        let mut iv = vec![(2.0, 3.0), (0.0, 1.0), (0.5, 1.5)];
+        assert_eq!(merge(&mut iv), vec![(0.0, 1.5), (2.0, 3.0)]);
+        assert_eq!(uncovered((0.0, 4.0), &[(0.0, 1.5), (2.0, 3.0)]), 1.5);
+        assert_eq!(uncovered((1.5, 2.0), &[(0.0, 1.5), (2.0, 3.0)]), 0.5);
+        assert_eq!(uncovered((0.0, 1.0), &[(0.0, 2.0)]), 0.0);
+    }
+}

@@ -3,22 +3,39 @@
 //!
 //! This is the harness behind every paper table and figure: it prices one
 //! training iteration of a (model, cluster, policy) triple and aggregates
-//! per-iteration, per-layer, and breakdown statistics.
+//! per-iteration, per-layer, per-device and breakdown statistics.
 //!
-//! Since the balancer refactor the simulator is a *thin driver* over
+//! The simulator is a *thin driver* over
 //! [`crate::balancer::BalancerSession`]: policies come in as
 //! `Box<dyn BalancingPolicy>` (see [`simulate_policy`]), the session owns
-//! the observe→score→drift→invalidate loop, and this module only prices
-//! each [`Decision`] on the engine and assembles the timeline its
-//! [`ScheduleKind`] asks for.  The legacy [`Policy`] enum survives one
-//! more PR as a deprecated shim; `reference.rs` preserves the
-//! pre-refactor enum path as the frozen golden-equivalence oracle.
+//! the observe→score→drift→invalidate loop, and this module prices each
+//! [`Decision`] on the engine and assembles the timeline its
+//! [`ScheduleKind`] asks for — twice:
+//!
+//! * the frozen barrier [`crate::scheduler::Schedule`] (scalar, pre-maxed
+//!   operator costs), whose `total_time()`/`exposed_breakdown()` remain
+//!   the reported `time`/`breakdown` on homogeneous clusters (pinned by
+//!   the golden test against [`reference`]);
+//! * the device-level event timeline ([`events`]): the same schedule
+//!   lowered to a barrier-shaped [`crate::scheduler::OpDag`] with the
+//!   engine's per-device cost vectors, executed on one comp+comm stream
+//!   pair per device.  It fills the per-device report fields
+//!   (`des_time`, `devices`, `straggler`) always, and **becomes** the
+//!   reported `time`/`breakdown` when the cluster is heterogeneous
+//!   (`ClusterSpec::device_slowdown`) — the barrier model cannot see a
+//!   straggler at all.
+//!
+//! The closed `Policy` enum that predated the balancer trait is fully
+//! retired; its last copy lives in [`reference`] as input vocabulary for
+//! the frozen pre-refactor oracle.
 
 pub mod engine;
+pub mod events;
 pub mod reference;
 pub mod timeline;
 
 pub use engine::Engine;
+pub use events::{DesResult, DeviceStats};
 
 use crate::balancer::{
     BalancerSession, BalancingPolicy, CommStyle, Decision, ScheduleKind,
@@ -28,77 +45,27 @@ use crate::config::ModelSpec;
 use crate::metrics::balance_degree;
 use crate::moe::{LoadMatrix, Placement};
 use crate::perfmodel::PerfModel;
-use crate::scheduler::{build_blocking, build_blockwise, BlockCosts, LoadBalanceOps};
+use crate::scheduler::{
+    build_blocking, build_blockwise, dag, BlockCosts, DeviceBlockCosts, LoadBalanceOps, Op,
+    OpDag, OpInstance, Schedule,
+};
 use crate::util::threads;
 use crate::workload::Trace;
 use std::collections::BTreeMap;
 
-/// Re-exported from [`crate::balancer`] (its canonical home since the
-/// refactor) so existing `sim::ProphetOptions` imports keep working.
+/// Re-exported from [`crate::balancer`] (its canonical home) so existing
+/// `sim::ProphetOptions` imports keep working.
 pub use crate::balancer::ProphetOptions;
-
-/// A load-balancing policy under simulation.
-///
-/// **Deprecated shim.**  The closed enum is superseded by the open
-/// [`BalancingPolicy`] trait + [`crate::balancer::registry`]; it is kept
-/// for one PR so benches/tests can migrate incrementally, and converts
-/// losslessly via `From<Policy> for Box<dyn BalancingPolicy>`.  The
-/// golden test (`rust/tests/golden_equivalence.rs`) pins the conversion
-/// bit-for-bit against the pre-refactor enum path in [`reference`].
-#[derive(Clone, Debug)]
-pub enum Policy {
-    /// Deepspeed-MoE: pure EP, no load balancing.
-    DeepspeedMoe,
-    /// FasterMoE: dynamic shadowing to ALL devices, blocking timeline.
-    FasterMoe,
-    /// Replicate the k heaviest experts to all devices (Fig 15 top2/top3).
-    TopK(usize),
-    /// Pro-Prophet (planner + optional scheduler).
-    ProProphet(ProphetOptions),
-}
-
-impl Policy {
-    pub fn name(&self) -> String {
-        match self {
-            Policy::DeepspeedMoe => "Deepspeed-MoE".into(),
-            Policy::FasterMoe => "FasterMoE".into(),
-            Policy::TopK(k) => format!("top{k}"),
-            Policy::ProProphet(o) => {
-                if o.scheduler_on && o.planner.use_overlap_model {
-                    "Pro-Prophet".into()
-                } else if o.scheduler_on {
-                    "Pro-Prophet(no-comb)".into()
-                } else {
-                    "Pro-Prophet(planner)".into()
-                }
-            }
-        }
-    }
-}
-
-impl From<&Policy> for Box<dyn BalancingPolicy> {
-    fn from(p: &Policy) -> Self {
-        use crate::balancer::builtin;
-        match p {
-            Policy::DeepspeedMoe => Box::new(builtin::DeepspeedMoe),
-            Policy::FasterMoe => Box::new(builtin::FasterMoe::new()),
-            Policy::TopK(k) => Box::new(builtin::TopK::new(*k)),
-            Policy::ProProphet(o) => Box::new(builtin::ProProphet::new(o.clone())),
-        }
-    }
-}
-
-impl From<Policy> for Box<dyn BalancingPolicy> {
-    fn from(p: Policy) -> Self {
-        Box::<dyn BalancingPolicy>::from(&p)
-    }
-}
 
 /// Aggregates of one simulated iteration.
 #[derive(Clone, Debug)]
 pub struct IterationResult {
+    /// Iteration time: the barrier Stage model on homogeneous clusters
+    /// (frozen semantics), the device-level DES makespan when the
+    /// cluster has per-device slowdowns.
     pub time: f64,
-    /// Exposed seconds per breakdown category (search/place/reduce/...).
+    /// Exposed seconds per breakdown category (search/place/reduce/...),
+    /// from the same model `time` came from.
     pub breakdown: BTreeMap<&'static str, f64>,
     /// Per-MoE-block exposed time (sums to `time`).
     pub per_block_time: Vec<f64>,
@@ -112,6 +79,16 @@ pub struct IterationResult {
     /// plans were based on (None for non-forecasting policies and for the
     /// warm-up iteration).
     pub forecast_error: Option<f64>,
+    /// Device-level event-timeline makespan of the same iteration (the
+    /// per-device critical path).  At most `time` on homogeneous
+    /// clusters (the per-device refinement only removes pessimism);
+    /// equals `time` on heterogeneous ones.
+    pub des_time: f64,
+    /// Per-device stream/idle accounting from the event timeline.
+    pub devices: Vec<DeviceStats>,
+    /// The event timeline's straggler: the device whose streams are busy
+    /// longest this iteration (ties -> lowest id).
+    pub straggler: usize,
 }
 
 /// Whole-run aggregates.
@@ -140,8 +117,50 @@ impl SimReport {
         }
     }
 
+    /// Mean device-level event-timeline makespan (see
+    /// [`IterationResult::des_time`]).
+    pub fn avg_des_time(&self) -> f64 {
+        if self.iters.is_empty() {
+            0.0
+        } else {
+            self.iters.iter().map(|i| i.des_time).sum::<f64>() / self.iters.len() as f64
+        }
+    }
+
     pub fn iter_times(&self) -> Vec<f64> {
         self.iters.iter().map(|i| i.time).collect()
+    }
+
+    /// The device most often identified as the iteration straggler
+    /// (None for an empty report).
+    pub fn straggler_device(&self) -> Option<usize> {
+        let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+        for it in &self.iters {
+            *counts.entry(it.straggler).or_insert(0) += 1;
+        }
+        counts
+            .into_iter()
+            .max_by_key(|&(dev, n)| (n, std::cmp::Reverse(dev)))
+            .map(|(dev, _)| dev)
+    }
+
+    /// Mean idle seconds per device across iterations (empty when the
+    /// report is empty).
+    pub fn mean_device_idle(&self) -> Vec<f64> {
+        let Some(first) = self.iters.first() else {
+            return vec![];
+        };
+        let d = first.devices.len();
+        let mut acc = vec![0.0; d];
+        for it in &self.iters {
+            for (a, s) in acc.iter_mut().zip(&it.devices) {
+                *a += s.idle;
+            }
+        }
+        for a in &mut acc {
+            *a /= self.iters.len() as f64;
+        }
+        acc
     }
 
     /// Mean exposed load-balancing fraction (Table I's "L.B." column).
@@ -222,24 +241,124 @@ impl SimReport {
 /// Per-layer decide + price outcome (the parallel phase's unit of work).
 struct LayerOutcome {
     costs: BlockCosts,
+    dev_costs: DeviceBlockCosts,
     bal_before: f64,
     bal_after: f64,
     trans_copies: u64,
     schedule: ScheduleKind,
 }
 
-/// Price one layer's [`Decision`] on the engine.
+/// Price one layer's [`Decision`] on the engine (scalar + per-device).
+/// One routing pass per side: the identity route for the "before"
+/// balance degree, and `priced_block_styled`'s single pass for costs AND
+/// the "after" balance degree.
 fn price_layer(eng: &Engine, w: &LoadMatrix, d: Decision) -> LayerOutcome {
     let routed_before = w.route_identity();
-    let routed_after = w.route(&d.placement);
     let unicast = d.comm_style == CommStyle::Coarse;
+    let (costs, dev_costs, routed_after) =
+        eng.priced_block_styled(w, &d.placement, d.plan_cost, unicast);
     LayerOutcome {
-        costs: eng.block_costs_styled(w, &d.placement, d.plan_cost, unicast),
+        costs,
+        dev_costs,
         bal_before: balance_degree(&routed_before.h),
         bal_after: balance_degree(&routed_after.h),
         trans_copies: d.placement.transfer_copies(),
         schedule: d.schedule_kind,
     }
+}
+
+/// Per-device durations of one schedule op, from the engine's
+/// [`DeviceBlockCosts`].  `Trans`/`Agg` sub-operators carry a fraction of
+/// their block's scalar total; every device contributes the same fraction
+/// of its own share.  `Plan` runs on the host and stays uniform.
+fn device_durations(
+    op: &OpInstance,
+    scalar: &[BlockCosts],
+    device: &[DeviceBlockCosts],
+    n_devices: usize,
+) -> Vec<f64> {
+    let b = op.op.block().min(scalar.len() - 1);
+    let (dev, total) = match op.op {
+        Op::Plan { .. } => return vec![op.dur; n_devices],
+        Op::A2a { .. } => return device[b].a2a.clone(),
+        Op::Fec { .. } => return device[b].fec.clone(),
+        Op::Bec { .. } => return device[b].bec.clone(),
+        Op::Fnec { .. } => return device[b].fnec.clone(),
+        Op::Bnec { .. } => return device[b].bnec.clone(),
+        Op::Trans { .. } => (&device[b].trans, scalar[b].trans),
+        Op::Agg { .. } => (&device[b].agg, scalar[b].agg),
+    };
+    if total <= 0.0 {
+        return vec![0.0; n_devices];
+    }
+    let frac = op.dur / total;
+    dev.iter().map(|&t| t * frac).collect()
+}
+
+/// One fully priced iteration: the frozen barrier schedule, its
+/// device-level lowering, and the executed event timeline.
+struct PricedIteration {
+    schedule: Schedule,
+    des: DesResult,
+    bal_before: f64,
+    bal_after: f64,
+    trans_copies: u64,
+}
+
+fn price_iteration(
+    eng: &Engine,
+    pm: &PerfModel,
+    session: &BalancerSession,
+    layers: &[LoadMatrix],
+) -> (PricedIteration, OpDag) {
+    let n_layers = layers.len();
+    let n_devices = eng.cluster.n_devices();
+    // Phase 1 (parallel across layers): decide placements and price the
+    // block operators.
+    let work = layers.first().map_or(1, |w| w.n_devices() * w.n_experts());
+    let outcomes: Vec<LayerOutcome> = threads::par_map(n_layers, work, |l| {
+        let w = &layers[l];
+        price_layer(eng, w, session.decide_layer(l, w, pm))
+    });
+
+    let kind = outcomes[0].schedule;
+    let mut costs: Vec<BlockCosts> = Vec::with_capacity(n_layers);
+    let mut dev_costs: Vec<DeviceBlockCosts> = Vec::with_capacity(n_layers);
+    let mut bal_before = 0.0;
+    let mut bal_after = 0.0;
+    let mut trans_copies = 0u64;
+    for o in outcomes {
+        debug_assert!(
+            o.schedule == kind,
+            "policy returned mixed schedule kinds within one iteration"
+        );
+        bal_before += o.bal_before;
+        bal_after += o.bal_after;
+        trans_copies += o.trans_copies;
+        costs.push(o.costs);
+        dev_costs.push(o.dev_costs);
+    }
+    bal_before /= n_layers as f64;
+    bal_after /= n_layers as f64;
+
+    let schedule = match kind {
+        ScheduleKind::NoLoadBalance => build_blocking(&costs, LoadBalanceOps::None),
+        ScheduleKind::Blocking => build_blocking(&costs, LoadBalanceOps::Blocking),
+        ScheduleKind::Blockwise => build_blockwise(&costs),
+    };
+    debug_assert!(schedule.validate_dependencies().is_ok());
+
+    // Device-level event timeline: the same schedule shape, per-device
+    // durations, one comp+comm stream pair per device.
+    let op_dag = dag::from_schedule_with(&schedule, n_devices, |op| {
+        device_durations(op, &costs, &dev_costs, n_devices)
+    });
+    let des = events::execute(&op_dag);
+
+    (
+        PricedIteration { schedule, des, bal_before, bal_after, trans_copies },
+        op_dag,
+    )
 }
 
 /// Simulate `trace` under any [`BalancingPolicy`].
@@ -262,68 +381,51 @@ pub fn simulate_policy(
     if n_layers == 0 {
         return SimReport { policy: policy.name(), ..Default::default() };
     }
+    let heterogeneous = cluster.is_heterogeneous();
     let mut session = BalancerSession::new(policy, n_layers);
     let mut report = SimReport { policy: session.policy_name(), ..Default::default() };
 
     for layers in trace.iterations.iter() {
-        // Phase 1 (parallel across layers): decide placements and price
-        // the block operators.
-        let work = layers.first().map_or(1, |w| w.n_devices() * w.n_experts());
-        let outcomes: Vec<LayerOutcome> = {
-            let session = &session;
-            threads::par_map(n_layers, work, |l| {
-                let w = &layers[l];
-                price_layer(&eng, w, session.decide_layer(l, w, &pm))
-            })
-        };
+        let (priced, _dag) = price_iteration(&eng, &pm, &session, layers);
 
         // Phase 2 (sequential): the session's observe→score→drift→
         // invalidate loop over the actual gating results.
         let fb = session.observe_iteration(layers);
 
-        let kind = outcomes[0].schedule;
-        let mut costs: Vec<BlockCosts> = Vec::with_capacity(n_layers);
-        let mut bal_before = 0.0;
-        let mut bal_after = 0.0;
-        let mut trans_copies = 0u64;
-        for o in outcomes {
-            debug_assert!(
-                o.schedule == kind,
-                "policy returned mixed schedule kinds within one iteration"
-            );
-            bal_before += o.bal_before;
-            bal_after += o.bal_after;
-            trans_copies += o.trans_copies;
-            costs.push(o.costs);
-        }
-        bal_before /= n_layers as f64;
-        bal_after /= n_layers as f64;
-
-        let schedule = match kind {
-            ScheduleKind::NoLoadBalance => build_blocking(&costs, LoadBalanceOps::None),
-            ScheduleKind::Blocking => build_blocking(&costs, LoadBalanceOps::Blocking),
-            ScheduleKind::Blockwise => build_blockwise(&costs),
-        };
-        debug_assert!(schedule.validate_dependencies().is_ok());
-
-        // Per-block exposed time: assign each stage to the block of its
-        // first op.
-        let mut per_block = vec![0.0; n_layers];
-        for stage in &schedule.stages {
-            if let Some(op) = stage.comp.first().or(stage.comm.first()) {
-                let b = op.op.block().min(n_layers - 1);
-                per_block[b] += stage.time();
+        let (time, breakdown, per_block_time) = if heterogeneous {
+            // The barrier model cannot see per-device slowdowns; report
+            // the device-level critical path instead.
+            let mut pb = priced.des.per_block_exposed.clone();
+            pb.resize(n_layers, 0.0);
+            (priced.des.makespan, priced.des.exposed.clone(), pb)
+        } else {
+            // Frozen barrier pricing: per-block exposed time assigns each
+            // stage to the block of its first op.
+            let mut per_block = vec![0.0; n_layers];
+            for stage in &priced.schedule.stages {
+                if let Some(op) = stage.comp.first().or(stage.comm.first()) {
+                    let b = op.op.block().min(n_layers - 1);
+                    per_block[b] += stage.time();
+                }
             }
-        }
+            (
+                priced.schedule.total_time(),
+                priced.schedule.exposed_breakdown(),
+                per_block,
+            )
+        };
 
         report.iters.push(IterationResult {
-            time: schedule.total_time(),
-            breakdown: schedule.exposed_breakdown(),
-            per_block_time: per_block,
-            balance_before: bal_before,
-            balance_after: bal_after,
-            trans_copies,
+            time,
+            breakdown,
+            per_block_time,
+            balance_before: priced.bal_before,
+            balance_after: priced.bal_after,
+            trans_copies: priced.trans_copies,
             forecast_error: fb.mean_forecast_error(),
+            des_time: priced.des.makespan,
+            devices: priced.des.devices,
+            straggler: priced.des.straggler,
         });
     }
 
@@ -334,15 +436,30 @@ pub fn simulate_policy(
     report
 }
 
-/// Simulate `trace` under a legacy [`Policy`] (deprecated shim over
-/// [`simulate_policy`]; see the enum docs).
-pub fn simulate(
+/// Replay `trace` under `policy` up to iteration `index` and return that
+/// iteration's device-level DAG and executed timeline (Chrome-trace
+/// export, straggler inspection).  None when the trace is too short.
+pub fn iteration_des(
     model: &ModelSpec,
     cluster: &ClusterSpec,
     trace: &Trace,
-    policy: &Policy,
-) -> SimReport {
-    simulate_policy(model, cluster, trace, policy.into())
+    policy: Box<dyn BalancingPolicy>,
+    index: usize,
+) -> Option<(OpDag, DesResult)> {
+    if trace.n_layers == 0 || index >= trace.len() {
+        return None;
+    }
+    let pm = PerfModel::new(model, cluster);
+    let eng = Engine::new(cluster, &pm);
+    let mut session = BalancerSession::new(policy, trace.n_layers);
+    for (i, layers) in trace.iterations.iter().enumerate() {
+        let (priced, op_dag) = price_iteration(&eng, &pm, &session, layers);
+        if i == index {
+            return Some((op_dag, priced.des));
+        }
+        session.observe_iteration(layers);
+    }
+    None
 }
 
 /// Convenience: simulate a single layer's load matrix once under any
@@ -374,20 +491,10 @@ pub fn single_layer_times_policy(
     (t_ident, t_policy)
 }
 
-/// Legacy-enum form of [`single_layer_times_policy`] (deprecated shim).
-pub fn single_layer_times(
-    model: &ModelSpec,
-    cluster: &ClusterSpec,
-    w: &LoadMatrix,
-    policy: &Policy,
-) -> (f64, f64) {
-    single_layer_times_policy(model, cluster, w, policy.into())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::balancer::registry;
+    use crate::balancer::{builtin, registry};
     use crate::planner::PlannerConfig;
     use crate::workload::{Trace, WorkloadConfig, WorkloadGen};
 
@@ -399,10 +506,25 @@ mod tests {
         (model, cluster, trace)
     }
 
+    /// Simulate a registry policy with default options.
+    fn run(m: &ModelSpec, c: &ClusterSpec, t: &Trace, name: &str) -> SimReport {
+        simulate_policy(
+            m,
+            c,
+            t,
+            registry::build(name, &ProphetOptions::default()).unwrap(),
+        )
+    }
+
+    /// Simulate the Pro-Prophet family with explicit options.
+    fn run_pp(m: &ModelSpec, c: &ClusterSpec, t: &Trace, opts: ProphetOptions) -> SimReport {
+        simulate_policy(m, c, t, Box::new(builtin::ProProphet::new(opts)))
+    }
+
     #[test]
     fn deepspeed_has_zero_lb_overhead() {
         let (m, c, t) = setup();
-        let r = simulate(&m, &c, &t, &Policy::DeepspeedMoe);
+        let r = run(&m, &c, &t, "deepspeed");
         assert_eq!(r.lb_fraction(), 0.0);
         assert!(r.avg_iter_time() > 0.0);
         assert_eq!(r.iters.len(), 6);
@@ -411,8 +533,8 @@ mod tests {
     #[test]
     fn fastermoe_beats_deepspeed_on_skewed_load() {
         let (m, c, t) = setup();
-        let ds = simulate(&m, &c, &t, &Policy::DeepspeedMoe);
-        let fm = simulate(&m, &c, &t, &Policy::FasterMoe);
+        let ds = run(&m, &c, &t, "deepspeed");
+        let fm = run(&m, &c, &t, "fastermoe");
         assert!(
             fm.avg_iter_time() < ds.avg_iter_time(),
             "FasterMoE {:.4} !< Deepspeed {:.4}",
@@ -425,8 +547,8 @@ mod tests {
     #[test]
     fn pro_prophet_beats_fastermoe() {
         let (m, c, t) = setup();
-        let fm = simulate(&m, &c, &t, &Policy::FasterMoe);
-        let pp = simulate(&m, &c, &t, &Policy::ProProphet(ProphetOptions::full()));
+        let fm = run(&m, &c, &t, "fastermoe");
+        let pp = run_pp(&m, &c, &t, ProphetOptions::full());
         assert!(
             pp.avg_iter_time() < fm.avg_iter_time(),
             "Pro-Prophet {:.4} !< FasterMoE {:.4}",
@@ -439,10 +561,9 @@ mod tests {
     fn scheduler_ablation_ordering() {
         // full <= planner-only <= deepspeed (on skewed workloads).
         let (m, c, t) = setup();
-        let full = simulate(&m, &c, &t, &Policy::ProProphet(ProphetOptions::full()));
-        let planner_only =
-            simulate(&m, &c, &t, &Policy::ProProphet(ProphetOptions::planner_only()));
-        let ds = simulate(&m, &c, &t, &Policy::DeepspeedMoe);
+        let full = run_pp(&m, &c, &t, ProphetOptions::full());
+        let planner_only = run_pp(&m, &c, &t, ProphetOptions::planner_only());
+        let ds = run(&m, &c, &t, "deepspeed");
         assert!(full.avg_iter_time() <= planner_only.avg_iter_time() + 1e-12);
         assert!(planner_only.avg_iter_time() < ds.avg_iter_time());
     }
@@ -450,7 +571,7 @@ mod tests {
     #[test]
     fn balance_improves_under_planner() {
         let (m, c, t) = setup();
-        let pp = simulate(&m, &c, &t, &Policy::ProProphet(ProphetOptions::full()));
+        let pp = run_pp(&m, &c, &t, ProphetOptions::full());
         assert!(pp.mean_rb() > 1.5, "RB {}", pp.mean_rb());
         for it in &pp.iters {
             assert!(it.balance_after <= it.balance_before + 1e-9);
@@ -491,7 +612,7 @@ mod tests {
     #[test]
     fn per_block_times_sum_to_iteration() {
         let (m, c, t) = setup();
-        let r = simulate(&m, &c, &t, &Policy::ProProphet(ProphetOptions::full()));
+        let r = run_pp(&m, &c, &t, ProphetOptions::full());
         for it in &r.iters {
             let sum: f64 = it.per_block_time.iter().sum();
             assert!((sum - it.time).abs() < 1e-9 * it.time.max(1.0));
@@ -501,7 +622,7 @@ mod tests {
     #[test]
     fn prophet_reports_forecast_and_replan_metrics() {
         let (m, c, t) = setup();
-        let r = simulate(&m, &c, &t, &Policy::ProProphet(ProphetOptions::full()));
+        let r = run_pp(&m, &c, &t, ProphetOptions::full());
         // Warm-up iteration has no forecast to score; later ones do.
         assert!(r.iters[0].forecast_error.is_none());
         assert!(r.iters.iter().skip(1).all(|i| i.forecast_error.is_some()));
@@ -512,10 +633,10 @@ mod tests {
         );
         // Every layer of every iteration was either planned or reused.
         assert_eq!(r.plans_run + r.plans_reused, 6 * t.n_layers);
-        let ds = simulate(&m, &c, &t, &Policy::DeepspeedMoe);
+        let ds = run(&m, &c, &t, "deepspeed");
         assert_eq!(ds.plans_run, 0);
         assert!(ds.mean_forecast_error().is_nan());
-        let fm = simulate(&m, &c, &t, &Policy::FasterMoe);
+        let fm = run(&m, &c, &t, "fastermoe");
         assert_eq!(fm.plans_run, 6 * t.n_layers);
     }
 
@@ -539,7 +660,7 @@ mod tests {
             planner: PlannerConfig { replan_interval: 1000, ..Default::default() },
             ..Default::default()
         };
-        let r = simulate(&model, &cluster, &trace, &Policy::ProProphet(opts));
+        let r = run_pp(&model, &cluster, &trace, opts);
         assert_eq!(r.drift_replans, 1, "exactly one regime change");
         assert_eq!(r.plans_run, 2, "initial plan + drift-forced replan");
         assert_eq!(r.plans_reused, 10);
@@ -549,7 +670,7 @@ mod tests {
     fn topk_policies_run() {
         let (m, c, t) = setup();
         for k in [2, 3] {
-            let r = simulate(&m, &c, &t, &Policy::TopK(k));
+            let r = run(&m, &c, &t, &format!("top{k}"));
             assert!(r.avg_iter_time() > 0.0);
             assert_eq!(r.policy, format!("top{k}"));
         }
@@ -559,8 +680,12 @@ mod tests {
     fn single_layer_policy_times() {
         let (m, c, t) = setup();
         let w = &t.iterations[0][0];
-        let (ident, pp) =
-            single_layer_times(&m, &c, w, &Policy::ProProphet(ProphetOptions::full()));
+        let (ident, pp) = single_layer_times_policy(
+            &m,
+            &c,
+            w,
+            Box::new(builtin::ProProphet::new(ProphetOptions::full())),
+        );
         assert!(pp < ident, "single layer: prophet {pp} !< identity {ident}");
     }
 
@@ -569,19 +694,14 @@ mod tests {
         // The open-API proof: a policy implemented outside sim/ runs the
         // full harness via the registry, no enum arm anywhere.
         let (m, c, t) = setup();
-        let fx = simulate_policy(
-            &m,
-            &c,
-            &t,
-            registry::build("flexmoe", &ProphetOptions::default()).unwrap(),
-        );
+        let fx = run(&m, &c, &t, "flexmoe");
         assert_eq!(fx.policy, "FlexMoE");
         assert_eq!(fx.iters.len(), 6);
         assert!(fx.plans_run > 0, "skewed load must trigger adjustments");
         assert!(fx.mean_forecast_error().is_nan(), "FlexMoE does not forecast");
         // It must not be meaningfully slower than doing nothing, and its
         // placements must improve balance once warmed up.
-        let ds = simulate(&m, &c, &t, &Policy::DeepspeedMoe);
+        let ds = run(&m, &c, &t, "deepspeed");
         assert!(
             fx.avg_iter_time() <= ds.avg_iter_time() * 1.05,
             "FlexMoE {:.4} much slower than Deepspeed {:.4}",
@@ -595,16 +715,57 @@ mod tests {
     }
 
     #[test]
-    fn enum_shim_and_trait_path_agree() {
-        // Cheap smoke of the shim (the exhaustive bit-equality gate lives
-        // in rust/tests/golden_equivalence.rs against the frozen oracle).
+    fn des_enrichment_populated_and_bounded() {
+        // Homogeneous cluster: `time` stays the frozen barrier estimate;
+        // the per-device DES refines it (never slower — relaxing the
+        // pre-maxed scalars only removes pessimism).
         let (m, c, t) = setup();
-        let via_enum = simulate(&m, &c, &t, &Policy::TopK(2));
-        let via_trait =
-            simulate_policy(&m, &c, &t, Box::<dyn BalancingPolicy>::from(Policy::TopK(2)));
-        assert_eq!(via_enum.policy, via_trait.policy);
-        for (a, b) in via_enum.iters.iter().zip(&via_trait.iters) {
-            assert_eq!(a.time.to_bits(), b.time.to_bits());
+        for name in ["deepspeed", "fastermoe", "pro-prophet"] {
+            let r = run(&m, &c, &t, name);
+            for it in &r.iters {
+                assert_eq!(it.devices.len(), c.n_devices(), "{name}");
+                assert!(it.straggler < c.n_devices());
+                assert!(it.des_time > 0.0, "{name}");
+                assert!(
+                    it.des_time <= it.time + 1e-12,
+                    "{name}: DES {} exceeds barrier {}",
+                    it.des_time,
+                    it.time
+                );
+                for dstat in &it.devices {
+                    assert!(dstat.idle >= 0.0 && dstat.idle <= it.des_time + 1e-9);
+                    assert!(dstat.exposed_comm <= dstat.busy_comm + 1e-9);
+                }
+            }
+            assert!(r.avg_des_time() > 0.0);
+            assert!(r.straggler_device().is_some());
+            assert_eq!(r.mean_device_idle().len(), c.n_devices());
         }
+    }
+
+    #[test]
+    fn iteration_des_exports_a_timeline() {
+        let (m, c, t) = setup();
+        let opts = ProphetOptions::default();
+        let (op_dag, des) = iteration_des(
+            &m,
+            &c,
+            &t,
+            registry::build("pro-prophet", &opts).unwrap(),
+            2,
+        )
+        .unwrap();
+        assert_eq!(op_dag.n_devices, c.n_devices());
+        assert!(!op_dag.is_empty());
+        assert!(des.makespan > 0.0);
+        // Out-of-range iterations return None.
+        assert!(iteration_des(
+            &m,
+            &c,
+            &t,
+            registry::build("pro-prophet", &opts).unwrap(),
+            t.len()
+        )
+        .is_none());
     }
 }

@@ -4,15 +4,19 @@
 //! This module is a verbatim copy of the `match`-on-[`Policy`] simulator
 //! that shipped before the balancer refactor (PR 3): planning, prophet
 //! observation, drift bookkeeping and comm-style selection all inlined as
-//! enum arms.  The trait-based driver in [`super`] must reproduce its
-//! [`SimReport`]s bit-for-bit; the golden test
-//! (`rust/tests/golden_equivalence.rs`) pins that.
+//! enum arms.  The closed [`Policy`] enum itself now lives HERE (the
+//! public `sim::Policy` migration shim is fully retired): it is the
+//! oracle's input vocabulary, nothing else.  The trait-based driver in
+//! [`super`] must reproduce this module's [`SimReport`]s bit-for-bit;
+//! the golden test (`rust/tests/golden_equivalence.rs`) pins that by
+//! driving both sides directly.
 //!
 //! **Behaviorally frozen** — like `planner::greedy_search_reference`, this
 //! code must not be "improved".  If policy SEMANTICS ever change on
 //! purpose, change both implementations in lockstep or retire the oracle
 //! (see ROADMAP).
 
+use crate::balancer::ProphetOptions;
 use crate::cluster::ClusterSpec;
 use crate::config::ModelSpec;
 use crate::metrics::balance_degree;
@@ -21,10 +25,43 @@ use crate::perfmodel::PerfModel;
 use crate::planner::{greedy_search, policies, Planner};
 use crate::prophet::Prophet;
 use crate::scheduler::{build_blocking, build_blockwise, BlockCosts, LoadBalanceOps};
-use crate::sim::{Engine, IterationResult, Policy, SimReport};
+use crate::sim::{Engine, IterationResult, SimReport};
 use crate::util::threads;
 use crate::workload::Trace;
 use std::sync::Arc;
+
+/// The closed pre-refactor policy vocabulary, preserved as the oracle's
+/// input side.  Use [`crate::balancer::registry`] everywhere else.
+#[derive(Clone, Debug)]
+pub enum Policy {
+    /// Deepspeed-MoE: pure EP, no load balancing.
+    DeepspeedMoe,
+    /// FasterMoE: dynamic shadowing to ALL devices, blocking timeline.
+    FasterMoe,
+    /// Replicate the k heaviest experts to all devices (Fig 15 top2/top3).
+    TopK(usize),
+    /// Pro-Prophet (planner + optional scheduler).
+    ProProphet(ProphetOptions),
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::DeepspeedMoe => "Deepspeed-MoE".into(),
+            Policy::FasterMoe => "FasterMoE".into(),
+            Policy::TopK(k) => format!("top{k}"),
+            Policy::ProProphet(o) => {
+                if o.scheduler_on && o.planner.use_overlap_model {
+                    "Pro-Prophet".into()
+                } else if o.scheduler_on {
+                    "Pro-Prophet(no-comb)".into()
+                } else {
+                    "Pro-Prophet(planner)".into()
+                }
+            }
+        }
+    }
+}
 
 /// Per-layer planning + pricing outcome (pre-refactor shape).
 struct LayerOutcome {
@@ -170,6 +207,12 @@ pub fn simulate_reference(
             } else {
                 Some(forecast_errs.iter().sum::<f64>() / forecast_errs.len() as f64)
             },
+            // The pre-refactor path had no device-level timeline; these
+            // post-refactor report fields stay at their neutral values
+            // (the golden gate does not compare them).
+            des_time: 0.0,
+            devices: Vec::new(),
+            straggler: 0,
         });
     }
 

@@ -1,9 +1,13 @@
-//! Timeline export: convert a [`Schedule`] into Chrome-trace JSON
-//! (chrome://tracing / Perfetto) so an iteration's comm/comp overlap can
-//! be inspected visually — the repo's equivalent of the paper's Fig 7/8
-//! timelines.
+//! Timeline export: convert a [`Schedule`] (global two-stream barrier
+//! model) or an executed [`OpDag`] (device-level event timeline) into
+//! Chrome-trace JSON (chrome://tracing / Perfetto) so an iteration's
+//! comm/comp overlap can be inspected visually — the repo's equivalent
+//! of the paper's Fig 7/8 timelines.  The DAG export emits **one comp +
+//! comm lane pair per device**, so stragglers and per-device exposed
+//! communication are visible at a glance.
 
-use crate::scheduler::{Schedule, Stream};
+use crate::scheduler::{OpDag, Schedule, Stream};
+use crate::sim::events::DesResult;
 use crate::util::json::{self, Json};
 
 /// One placed event on the two-stream timeline.
@@ -78,6 +82,66 @@ pub fn save_chrome_trace(schedule: &Schedule, name: &str) -> std::io::Result<std
     crate::metrics::write_result(name, &to_chrome_trace(schedule))
 }
 
+/// Thread id of device `dev`'s lane (comp and comm interleave so a
+/// device's pair sorts together in the viewer).
+fn des_tid(dev: usize, stream: Stream) -> f64 {
+    (2 * dev
+        + match stream {
+            Stream::Comp => 1,
+            Stream::Comm => 2,
+        }) as f64
+}
+
+/// Chrome-trace JSON of an executed device-level DAG: one comp + comm
+/// lane pair per device (named via thread_name metadata), ops placed at
+/// their simulated start times.
+pub fn to_chrome_trace_des(dag: &OpDag, des: &DesResult) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    // Lane names: "dev3 comp" / "dev3 comm".
+    for dev in 0..dag.n_devices {
+        for (stream, label) in [(Stream::Comp, "comp"), (Stream::Comm, "comm")] {
+            events.push(json::obj(vec![
+                ("name", json::s("thread_name")),
+                ("ph", json::s("M")),
+                ("pid", json::num(1.0)),
+                ("tid", json::num(des_tid(dev, stream))),
+                (
+                    "args",
+                    json::obj(vec![("name", json::s(&format!("dev{dev} {label}")))]),
+                ),
+            ]));
+        }
+    }
+    for (i, node) in dag.nodes().iter().enumerate() {
+        for dev in 0..dag.n_devices {
+            if node.dur[dev] <= 0.0 {
+                continue;
+            }
+            events.push(json::obj(vec![
+                ("name", json::s(&format!("{:?}", node.op))),
+                ("ph", json::s("X")),
+                ("ts", json::num(des.start[i][dev] * 1e6)),
+                ("dur", json::num((node.dur[dev] * 1e6).max(0.01))),
+                ("pid", json::num(1.0)),
+                ("tid", json::num(des_tid(dev, node.op.stream()))),
+            ]));
+        }
+    }
+    json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+}
+
+/// Write an executed DAG's per-device trace next to other results.
+pub fn save_chrome_trace_des(
+    dag: &OpDag,
+    des: &DesResult,
+    name: &str,
+) -> std::io::Result<std::path::PathBuf> {
+    crate::metrics::write_result(name, &to_chrome_trace_des(dag, des))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +183,36 @@ mod tests {
         let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
         assert_eq!(evs.len(), 3);
         assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+    }
+
+    #[test]
+    fn des_trace_has_one_lane_pair_per_device() {
+        use crate::scheduler::dag::from_schedule;
+        use crate::sim::events;
+        let s = sched();
+        let d = 3;
+        let dag = from_schedule(&s, d);
+        let des = events::execute(&dag);
+        let j = to_chrome_trace_des(&dag, &des);
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2*d thread_name metadata events + one X event per (op, device).
+        let metas = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+            .count();
+        assert_eq!(metas, 2 * d);
+        let xs: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 3 * d, "3 ops on {d} devices");
+        // Distinct tids span every device lane that has an op.
+        let tids: std::collections::BTreeSet<i64> = xs
+            .iter()
+            .map(|e| e.get("tid").unwrap().as_f64().unwrap() as i64)
+            .collect();
+        assert!(tids.len() >= d, "per-device lanes missing: {tids:?}");
     }
 
     #[test]

@@ -1,22 +1,29 @@
 //! Golden equivalence gate for the balancer refactor: the trait-based
-//! driver (`sim::simulate_policy`, reached through the deprecated
-//! `sim::Policy` shim) must reproduce the pre-refactor enum path —
-//! frozen verbatim in `sim::reference` — **bit for bit**: iteration
-//! times, breakdowns, per-block times, balance degrees, transfer
-//! volumes, forecast errors, and all planning counters, for all four
-//! original policies on fixed-seed traces.
+//! driver (`sim::simulate_policy`) must reproduce the pre-refactor enum
+//! path — frozen verbatim in `sim::reference` — **bit for bit**:
+//! iteration times, breakdowns, per-block times, balance degrees,
+//! transfer volumes, forecast errors, and all planning counters, for all
+//! four original policies on fixed-seed traces.
+//!
+//! The `sim::Policy` migration shim is retired; this test now drives the
+//! oracle directly through `reference::Policy` (the enum's final home)
+//! and builds the matching trait policy by hand — the same mapping the
+//! removed `From<Policy>` impl performed.
 //!
 //! Everything compared here is a deterministic function of the trace
 //! (modeled seconds, not wall clock), so `to_bits` equality is the right
 //! bar and holds across thread counts (`PRO_PROPHET_THREADS`).
 
+use pro_prophet::balancer::{builtin, BalancingPolicy};
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::ModelSpec;
 use pro_prophet::moe::LoadMatrix;
 use pro_prophet::planner::PlannerConfig;
 use pro_prophet::prophet::PredictorKind;
-use pro_prophet::sim::reference::{simulate_reference, single_layer_times_reference};
-use pro_prophet::sim::{simulate, single_layer_times, Policy, ProphetOptions, SimReport};
+use pro_prophet::sim::reference::{
+    simulate_reference, single_layer_times_reference, Policy,
+};
+use pro_prophet::sim::{simulate_policy, single_layer_times_policy, ProphetOptions, SimReport};
 use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
 
 /// The four original policies plus the Pro-Prophet ablation arms.
@@ -30,6 +37,17 @@ fn all_policies() -> Vec<Policy> {
         Policy::ProProphet(ProphetOptions::planner_only()),
         Policy::ProProphet(ProphetOptions::without_combination()),
     ]
+}
+
+/// The trait impl matching an oracle enum arm (the retired shim's
+/// conversion, inlined here).
+fn trait_policy(p: &Policy) -> Box<dyn BalancingPolicy> {
+    match p {
+        Policy::DeepspeedMoe => Box::new(builtin::DeepspeedMoe),
+        Policy::FasterMoe => Box::new(builtin::FasterMoe::new()),
+        Policy::TopK(k) => Box::new(builtin::TopK::new(*k)),
+        Policy::ProProphet(o) => Box::new(builtin::ProProphet::new(o.clone())),
+    }
 }
 
 fn fixed_trace(layers: usize, e: usize, d: usize, iters: usize, seed: u64) -> Trace {
@@ -89,7 +107,7 @@ fn trait_path_matches_frozen_oracle_on_paper_workload() {
     let trace = fixed_trace(4, 8, 8, 6, 42);
     for policy in all_policies() {
         let oracle = simulate_reference(&model, &cluster, &trace, &policy);
-        let new = simulate(&model, &cluster, &trace, &policy);
+        let new = simulate_policy(&model, &cluster, &trace, trait_policy(&policy));
         assert_reports_identical(&oracle, &new, &policy.name());
     }
 }
@@ -103,7 +121,7 @@ fn trait_path_matches_oracle_across_cluster_shapes() {
     let trace = fixed_trace(3, 16, 16, 4, 7);
     for policy in all_policies() {
         let oracle = simulate_reference(&model, &cluster, &trace, &policy);
-        let new = simulate(&model, &cluster, &trace, &policy);
+        let new = simulate_policy(&model, &cluster, &trace, trait_policy(&policy));
         assert_reports_identical(&oracle, &new, &policy.name());
     }
 }
@@ -135,7 +153,7 @@ fn drift_bookkeeping_matches_oracle_under_lazy_replanning() {
         };
         let policy = Policy::ProProphet(opts);
         let oracle = simulate_reference(&model, &cluster, &trace, &policy);
-        let new = simulate(&model, &cluster, &trace, &policy);
+        let new = simulate_policy(&model, &cluster, &trace, trait_policy(&policy));
         assert_reports_identical(&oracle, &new, &format!("drift/{predictor:?}"));
         assert_eq!(oracle.drift_replans, 1, "scenario sanity: one regime change");
     }
@@ -150,7 +168,8 @@ fn single_layer_times_match_oracle() {
         for layers in &trace.iterations {
             for w in layers {
                 let (oi, op) = single_layer_times_reference(&model, &cluster, w, &policy);
-                let (ni, np) = single_layer_times(&model, &cluster, w, &policy);
+                let (ni, np) =
+                    single_layer_times_policy(&model, &cluster, w, trait_policy(&policy));
                 assert_eq!(oi.to_bits(), ni.to_bits(), "{}: identity time", policy.name());
                 assert_eq!(op.to_bits(), np.to_bits(), "{}: policy time", policy.name());
             }

@@ -55,6 +55,52 @@ fn unknown_policy_fails_fast_with_known_list() {
 }
 
 #[test]
+fn simulate_straggler_flags_and_per_device_trace() {
+    let trace_path = tmp("lanes.json");
+    let out = run(&[
+        "simulate",
+        "--model",
+        "s",
+        "--cluster",
+        "hpwnv",
+        "--nodes",
+        "1",
+        "--tokens",
+        "2048",
+        "--iters",
+        "2",
+        "--policy",
+        "deepspeed",
+        "--straggler",
+        "1",
+        "--straggler-slowdown",
+        "2.5",
+        "--chrome-trace",
+        trace_path.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "simulate --straggler failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    // The per-device section appears (which device wins depends on how
+    // the slowdown interacts with the workload skew).
+    assert!(stdout.contains("straggler dev"), "{stdout}");
+    assert!(stdout.contains("per-device slowdowns"), "{stdout}");
+    assert!(stdout.contains("des_s"), "per-device DES column missing: {stdout}");
+    // The exported Chrome trace has per-device lanes.
+    let json = std::fs::read_to_string(&trace_path).unwrap();
+    assert!(json.contains("dev1 comp") && json.contains("dev1 comm"), "no device lanes");
+    let _ = std::fs::remove_file(&trace_path);
+
+    // Out-of-range straggler fails fast.
+    let bad = run(&["simulate", "--nodes", "1", "--iters", "1", "--straggler", "99"]);
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("out of range"));
+}
+
+#[test]
 fn trace_from_store_round_trips() {
     // A "recorded run": the prophet's history ring buffer persisted via
     // TraceStore (what `train --save-store` writes).

@@ -1,9 +1,20 @@
 //! Integration: config files -> experiment objects -> simulation, plus the
-//! example config shipped in examples/configs/.
+//! example configs shipped in examples/configs/.
 
 use pro_prophet::config::{toml, ExperimentConfig};
-use pro_prophet::sim::{simulate, simulate_policy, Policy, ProphetOptions};
+use pro_prophet::sim::simulate_policy;
 use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
+
+fn trace_of(exp: &ExperimentConfig, iters: usize) -> Trace {
+    let mut wcfg = WorkloadConfig::paper_default(
+        exp.model.n_layers,
+        exp.model.n_experts,
+        exp.cluster.n_devices(),
+        exp.model.tokens_per_iter * exp.model.k as u64,
+    );
+    wcfg.seed = exp.seed;
+    Trace::capture(&mut WorkloadGen::new(wcfg), iters)
+}
 
 #[test]
 fn full_experiment_from_toml_runs() {
@@ -27,20 +38,8 @@ fn full_experiment_from_toml_runs() {
     let exp = ExperimentConfig::from_table(&t).unwrap();
     assert_eq!(exp.cluster.n_devices(), 8);
 
-    let mut wcfg = WorkloadConfig::paper_default(
-        exp.model.n_layers,
-        exp.model.n_experts,
-        exp.cluster.n_devices(),
-        exp.model.tokens_per_iter * exp.model.k as u64,
-    );
-    wcfg.seed = exp.seed;
-    let trace = Trace::capture(&mut WorkloadGen::new(wcfg), exp.iterations);
-    let opts = ProphetOptions {
-        planner: exp.planner.clone(),
-        scheduler_on: true,
-        prophet: exp.prophet.clone(),
-    };
-    let r = simulate(&exp.model, &exp.cluster, &trace, &Policy::ProProphet(opts));
+    let trace = trace_of(&exp, exp.iterations);
+    let r = simulate_policy(&exp.model, &exp.cluster, &trace, exp.build_policy().unwrap());
     assert_eq!(r.iters.len(), 5);
     assert!(r.avg_iter_time() > 0.0);
 }
@@ -66,14 +65,7 @@ fn policy_table_drives_simulation_end_to_end() {
     .unwrap();
     let exp = ExperimentConfig::from_table(&t).unwrap();
     assert_eq!(exp.policy, "flexmoe");
-    let mut wcfg = WorkloadConfig::paper_default(
-        exp.model.n_layers,
-        exp.model.n_experts,
-        exp.cluster.n_devices(),
-        exp.model.tokens_per_iter * exp.model.k as u64,
-    );
-    wcfg.seed = exp.seed;
-    let trace = Trace::capture(&mut WorkloadGen::new(wcfg), exp.iterations);
+    let trace = trace_of(&exp, exp.iterations);
     let r = simulate_policy(&exp.model, &exp.cluster, &trace, exp.build_policy().unwrap());
     assert_eq!(r.policy, "FlexMoE");
     assert_eq!(r.iters.len(), 3);
@@ -90,6 +82,44 @@ fn shipped_example_config_parses() {
     let exp = ExperimentConfig::from_file(path).unwrap();
     assert!(exp.cluster.n_devices() >= 8);
     assert!(exp.iterations > 0);
+}
+
+#[test]
+fn shipped_straggler_config_drives_heterogeneous_sim() {
+    // The straggler scenario config exercises the `[cluster]` slowdown
+    // knob end to end: parse -> heterogeneous ClusterSpec -> simulation
+    // whose reported time comes from the device-level event timeline.
+    let path = std::path::Path::new("examples/configs/hpwnv16_straggler.toml");
+    if !path.exists() {
+        eprintln!("SKIP: straggler example config missing");
+        return;
+    }
+    let exp = ExperimentConfig::from_file(path).unwrap();
+    assert!(exp.cluster.is_heterogeneous(), "config must slow a device");
+    assert_eq!(exp.cluster.slowdown(5), 2.5);
+    assert_eq!(exp.cluster.slowdown(0), 1.0);
+
+    let trace = trace_of(&exp, 3);
+    let r = simulate_policy(&exp.model, &exp.cluster, &trace, exp.build_policy().unwrap());
+    assert_eq!(r.iters.len(), 3);
+    // The slowed device dominates every iteration's critical path.
+    assert_eq!(r.straggler_device(), Some(5));
+    for it in &r.iters {
+        assert_eq!(it.straggler, 5);
+        assert_eq!(it.time.to_bits(), it.des_time.to_bits(), "hetero time == DES");
+    }
+    // The same experiment on the homogeneous sibling cluster is strictly
+    // faster.
+    let mut homo = exp.clone();
+    homo.cluster.device_slowdown.clear();
+    let r_homo =
+        simulate_policy(&homo.model, &homo.cluster, &trace, homo.build_policy().unwrap());
+    assert!(
+        r.avg_iter_time() > r_homo.avg_iter_time(),
+        "straggler must cost time: {} !> {}",
+        r.avg_iter_time(),
+        r_homo.avg_iter_time()
+    );
 }
 
 #[test]

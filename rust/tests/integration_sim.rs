@@ -1,22 +1,34 @@
 //! Integration: whole-system simulation — the paper's headline claims in
 //! qualitative form (who wins, roughly by how much) across clusters,
-//! models and gate widths.
+//! models and gate widths.  Policies come from `balancer::registry` /
+//! `balancer::builtin` (the `sim::Policy` enum is retired).
 
+use pro_prophet::balancer::ProphetOptions;
+use pro_prophet::benchkit::scenario::{self, trace_for as scenario_trace_for};
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::ModelSpec;
 use pro_prophet::metrics::speedup;
-use pro_prophet::sim::{simulate, Policy, ProphetOptions};
-use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
+use pro_prophet::sim::SimReport;
+use pro_prophet::workload::Trace;
 
 fn trace_for(model: &ModelSpec, d: usize, iters: usize, seed: u64) -> Trace {
-    let mut cfg = WorkloadConfig::paper_default(
-        model.n_layers,
-        model.n_experts,
-        d,
-        model.tokens_per_iter * model.k as u64,
-    );
-    cfg.seed = seed;
-    Trace::capture(&mut WorkloadGen::new(cfg), iters)
+    scenario_trace_for(model, d, iters, seed)
+}
+
+/// Registry policy with default options (thin local names over the
+/// shared `benchkit::scenario` helpers).
+fn run(model: &ModelSpec, cluster: &ClusterSpec, trace: &Trace, name: &str) -> SimReport {
+    scenario::report_for(name, model, cluster, trace)
+}
+
+/// Pro-Prophet family with explicit ablation options.
+fn run_pp(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    trace: &Trace,
+    opts: ProphetOptions,
+) -> SimReport {
+    scenario::report_with("pro-prophet", &opts, model, cluster, trace)
 }
 
 #[test]
@@ -26,14 +38,9 @@ fn headline_speedups_on_hpwnv16() {
     let cluster = ClusterSpec::hpwnv(4);
     let model = ModelSpec::moe_gpt_m(16, 1, 16384);
     let trace = trace_for(&model, 16, 20, 7);
-    let ds = simulate(&model, &cluster, &trace, &Policy::DeepspeedMoe);
-    let fm = simulate(&model, &cluster, &trace, &Policy::FasterMoe);
-    let pp = simulate(
-        &model,
-        &cluster,
-        &trace,
-        &Policy::ProProphet(ProphetOptions::full()),
-    );
+    let ds = run(&model, &cluster, &trace, "deepspeed");
+    let fm = run(&model, &cluster, &trace, "fastermoe");
+    let pp = run_pp(&model, &cluster, &trace, ProphetOptions::full());
     let s_ds = speedup(ds.avg_iter_time(), pp.avg_iter_time());
     let s_fm = speedup(fm.avg_iter_time(), pp.avg_iter_time());
     assert!(
@@ -51,13 +58,8 @@ fn wins_hold_across_all_five_models() {
     let cluster = ClusterSpec::hpwnv(4);
     for model in ModelSpec::table3(16, 1, 16384) {
         let trace = trace_for(&model, 16, 8, 11);
-        let ds = simulate(&model, &cluster, &trace, &Policy::DeepspeedMoe);
-        let pp = simulate(
-            &model,
-            &cluster,
-            &trace,
-            &Policy::ProProphet(ProphetOptions::full()),
-        );
+        let ds = run(&model, &cluster, &trace, "deepspeed");
+        let pp = run_pp(&model, &cluster, &trace, ProphetOptions::full());
         assert!(
             pp.avg_iter_time() < ds.avg_iter_time(),
             "{}: prophet {} !< deepspeed {}",
@@ -74,13 +76,8 @@ fn wins_hold_for_topk_gates() {
     for k in [1, 2] {
         let model = ModelSpec::moe_gpt_m(16, k, 16384);
         let trace = trace_for(&model, 16, 8, 13);
-        let fm = simulate(&model, &cluster, &trace, &Policy::FasterMoe);
-        let pp = simulate(
-            &model,
-            &cluster,
-            &trace,
-            &Policy::ProProphet(ProphetOptions::full()),
-        );
+        let fm = run(&model, &cluster, &trace, "fastermoe");
+        let pp = run_pp(&model, &cluster, &trace, ProphetOptions::full());
         assert!(
             pp.avg_iter_time() <= fm.avg_iter_time() * 1.001,
             "k={k}: prophet loses to FasterMoE"
@@ -98,13 +95,8 @@ fn wins_hold_on_all_three_cluster_types() {
         let d = cluster.n_devices();
         let model = ModelSpec::moe_gpt_s(d, 1, 4096);
         let trace = trace_for(&model, d, 8, 17);
-        let ds = simulate(&model, &cluster, &trace, &Policy::DeepspeedMoe);
-        let pp = simulate(
-            &model,
-            &cluster,
-            &trace,
-            &Policy::ProProphet(ProphetOptions::full()),
-        );
+        let ds = run(&model, &cluster, &trace, "deepspeed");
+        let pp = run_pp(&model, &cluster, &trace, ProphetOptions::full());
         assert!(
             pp.avg_iter_time() < ds.avg_iter_time(),
             "{}: no win",
@@ -119,19 +111,9 @@ fn fig14_component_ordering() {
     let cluster = ClusterSpec::hpwnv(4);
     let model = ModelSpec::moe_gpt_m(16, 1, 16384);
     let trace = trace_for(&model, 16, 10, 19);
-    let base = simulate(&model, &cluster, &trace, &Policy::DeepspeedMoe);
-    let planner = simulate(
-        &model,
-        &cluster,
-        &trace,
-        &Policy::ProProphet(ProphetOptions::planner_only()),
-    );
-    let full = simulate(
-        &model,
-        &cluster,
-        &trace,
-        &Policy::ProProphet(ProphetOptions::full()),
-    );
+    let base = run(&model, &cluster, &trace, "deepspeed");
+    let planner = run_pp(&model, &cluster, &trace, ProphetOptions::planner_only());
+    let full = run_pp(&model, &cluster, &trace, ProphetOptions::full());
     assert!(planner.avg_iter_time() < base.avg_iter_time());
     assert!(full.avg_iter_time() <= planner.avg_iter_time() + 1e-12);
 }
@@ -141,14 +123,9 @@ fn fig15_planner_beats_static_topk() {
     let cluster = ClusterSpec::hpwnv(4);
     let model = ModelSpec::moe_gpt_m(16, 1, 16384);
     let trace = trace_for(&model, 16, 10, 23);
-    let pp = simulate(
-        &model,
-        &cluster,
-        &trace,
-        &Policy::ProProphet(ProphetOptions::full()),
-    );
+    let pp = run_pp(&model, &cluster, &trace, ProphetOptions::full());
     for k in [2, 3] {
-        let topk = simulate(&model, &cluster, &trace, &Policy::TopK(k));
+        let topk = run(&model, &cluster, &trace, &format!("top{k}"));
         assert!(
             pp.avg_iter_time() < topk.avg_iter_time(),
             "planner must beat top{k}: {} vs {}",
@@ -165,12 +142,7 @@ fn prophet_iteration_times_are_stable() {
     let cluster = ClusterSpec::hpwnv(4);
     let model = ModelSpec::moe_gpt_m(16, 1, 16384);
     let trace = trace_for(&model, 16, 30, 29);
-    let pp = simulate(
-        &model,
-        &cluster,
-        &trace,
-        &Policy::ProProphet(ProphetOptions::full()),
-    );
+    let pp = run_pp(&model, &cluster, &trace, ProphetOptions::full());
     let times = pp.iter_times();
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     let max = times.iter().copied().fold(0.0, f64::max);
@@ -184,7 +156,7 @@ fn table1_breakdown_reproduces_magnitudes() {
     let cluster = ClusterSpec::hpwnv(4);
     let model = ModelSpec::moe_gpt_m(16, 1, 16384);
     let trace = trace_for(&model, 16, 10, 31);
-    let fm = simulate(&model, &cluster, &trace, &Policy::FasterMoe);
+    let fm = run(&model, &cluster, &trace, "fastermoe");
     let lb = fm.lb_fraction();
     assert!((0.08..0.55).contains(&lb), "L.B. fraction {lb}");
     let place = fm.breakdown_fraction("place");

@@ -1,0 +1,227 @@
+//! Integration: the device-level event timeline (`scheduler::dag` +
+//! `sim::events`) against the frozen barrier Stage model.
+//!
+//! Gate 1 (equivalence): executing the barrier-shaped lowering of any
+//! policy's schedule with homogeneous per-device costs must reproduce
+//! `Schedule::total_time()` and `Schedule::exposed_breakdown()`
+//! **bit for bit** — the DES is a strict generalization of the Stage
+//! model, not a reinterpretation.
+//!
+//! Gate 2 (new capability): a straggler (one device slowed >= 2x via
+//! `ClusterSpec::device_slowdown`) makes the DES iteration time strictly
+//! exceed the homogeneous barrier estimate, the slowed device is
+//! identified, and the Chrome trace grows one comp+comm lane pair per
+//! device.
+
+use pro_prophet::balancer::{registry, BalancerSession, CommStyle, ProphetOptions, ScheduleKind};
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::moe::LoadMatrix;
+use pro_prophet::perfmodel::PerfModel;
+use pro_prophet::scheduler::{
+    build_blocking, build_blockwise, build_blockwise_dag, dag, BlockCosts, DeviceBlockCosts,
+    LoadBalanceOps, Schedule,
+};
+use pro_prophet::sim::{events, simulate_policy, timeline, Engine};
+use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
+
+fn fixed_trace(layers: usize, e: usize, d: usize, iters: usize, seed: u64) -> Trace {
+    let mut cfg = WorkloadConfig::paper_default(layers, e, d, 8192);
+    cfg.seed = seed;
+    Trace::capture(&mut WorkloadGen::new(cfg), iters)
+}
+
+/// Assemble one iteration's barrier schedule exactly like the simulator
+/// does (decide -> price -> build by ScheduleKind).
+fn schedule_for(
+    session: &BalancerSession,
+    eng: &Engine,
+    pm: &PerfModel,
+    layers: &[LoadMatrix],
+) -> Schedule {
+    let mut costs: Vec<BlockCosts> = Vec::with_capacity(layers.len());
+    let mut kind = ScheduleKind::NoLoadBalance;
+    for (l, w) in layers.iter().enumerate() {
+        let d = session.decide_layer(l, w, pm);
+        let coarse = d.comm_style == CommStyle::Coarse;
+        costs.push(eng.block_costs_styled(w, &d.placement, d.plan_cost, coarse));
+        kind = d.schedule_kind;
+    }
+    match kind {
+        ScheduleKind::NoLoadBalance => build_blocking(&costs, LoadBalanceOps::None),
+        ScheduleKind::Blocking => build_blocking(&costs, LoadBalanceOps::Blocking),
+        ScheduleKind::Blockwise => build_blockwise(&costs),
+    }
+}
+
+#[test]
+fn des_on_barrier_dag_matches_stage_model_for_all_policies() {
+    // The tentpole equivalence gate: for every built-in policy, on every
+    // iteration of a fixed-seed trace, DES(barrier DAG, homogeneous
+    // vectors) == Stage model, bit for bit.
+    let model = ModelSpec::moe_gpt_s(8, 1, 8192);
+    let cluster = ClusterSpec::hpwnv(2);
+    let d = cluster.n_devices();
+    let pm = PerfModel::new(&model, &cluster);
+    let eng = Engine::new(&cluster, &pm);
+    let trace = fixed_trace(4, 8, 8, 5, 42);
+    let opts = ProphetOptions::default();
+    for name in ["deepspeed", "fastermoe", "top2", "top3", "pro-prophet", "planner-only"] {
+        let mut session =
+            BalancerSession::new(registry::build(name, &opts).unwrap(), trace.n_layers);
+        for (it, layers) in trace.iterations.iter().enumerate() {
+            let schedule = schedule_for(&session, &eng, &pm, layers);
+            let des = events::execute(&dag::from_schedule(&schedule, d));
+            assert_eq!(
+                des.makespan.to_bits(),
+                schedule.total_time().to_bits(),
+                "{name} iter {it}: makespan"
+            );
+            let want = schedule.exposed_breakdown();
+            assert_eq!(
+                des.exposed.keys().collect::<Vec<_>>(),
+                want.keys().collect::<Vec<_>>(),
+                "{name} iter {it}: breakdown keys"
+            );
+            for (k, v) in &want {
+                assert_eq!(
+                    des.exposed[k].to_bits(),
+                    v.to_bits(),
+                    "{name} iter {it}: breakdown[{k}]"
+                );
+            }
+            session.observe_iteration(layers);
+        }
+    }
+}
+
+#[test]
+fn relaxed_blockwise_dag_never_slower_than_barrier_schedule() {
+    // Algorithm 2 as a true-dependency DAG drops the cross-stream
+    // barriers; with uniform costs every DAG edge is implied by a stage
+    // barrier, so the DES can only be faster (or equal).
+    let model = ModelSpec::moe_gpt_m(16, 1, 16384);
+    let cluster = ClusterSpec::hpwnv(4);
+    let pm = PerfModel::new(&model, &cluster);
+    let eng = Engine::new(&cluster, &pm);
+    let trace = fixed_trace(6, 16, 16, 2, 7);
+    let opts = ProphetOptions::default();
+    let session =
+        BalancerSession::new(registry::build("pro-prophet", &opts).unwrap(), trace.n_layers);
+    let layers = &trace.iterations[0];
+    let mut costs: Vec<BlockCosts> = Vec::new();
+    for (l, w) in layers.iter().enumerate() {
+        let d = session.decide_layer(l, w, &pm);
+        costs.push(eng.block_costs_styled(w, &d.placement, d.plan_cost, false));
+    }
+    let schedule = build_blockwise(&costs);
+    let dev_costs: Vec<DeviceBlockCosts> = costs
+        .iter()
+        .map(|c| DeviceBlockCosts::uniform(c, cluster.n_devices()))
+        .collect();
+    let relaxed = build_blockwise_dag(&dev_costs, Default::default());
+    relaxed.validate().unwrap();
+    let des = events::execute(&relaxed);
+    assert!(
+        des.makespan <= schedule.total_time() + 1e-9,
+        "relaxed DAG {} slower than barrier {}",
+        des.makespan,
+        schedule.total_time()
+    );
+    assert!(des.makespan > 0.0);
+}
+
+#[test]
+fn straggler_strictly_slower_than_homogeneous_estimate() {
+    // Acceptance gate: one device slowed >= 2x makes the DES iteration
+    // time strictly exceed the homogeneous barrier estimate, on every
+    // iteration, and the slowed device is identified as the straggler.
+    //
+    // A perfectly uniform workload pins the comparison: with identical
+    // per-device loads the device-level timeline has no per-device slack
+    // to exploit, so the homogeneous DES equals the barrier estimate and
+    // the straggler's inflation is the ONLY difference.
+    let model = ModelSpec::moe_gpt_m(16, 1, 16384);
+    let homo = ClusterSpec::hpwnv(4);
+    let slowed_dev = 3;
+    let hetero = homo.clone().with_slowdown(slowed_dev, 2.5);
+    let uniform = LoadMatrix::from_rows(vec![vec![64; 16]; 16]);
+    let mut trace = Trace::new(6, 16, 16);
+    for _ in 0..4 {
+        trace.push(vec![uniform.clone(); 6]);
+    }
+    let opts = ProphetOptions::default();
+    let run = |cluster: &ClusterSpec| {
+        simulate_policy(
+            &model,
+            cluster,
+            &trace,
+            registry::build("deepspeed", &opts).unwrap(),
+        )
+    };
+    let r_homo = run(&homo);
+    let r_het = run(&hetero);
+    for (i, (a, b)) in r_homo.iters.iter().zip(&r_het.iters).enumerate() {
+        assert!(
+            b.time > a.time,
+            "iter {i}: straggler time {} not strictly greater than homogeneous {}",
+            b.time,
+            a.time
+        );
+        assert_eq!(b.time.to_bits(), b.des_time.to_bits(), "hetero time is the DES time");
+        assert_eq!(b.straggler, slowed_dev, "iter {i}: wrong straggler");
+        // Everyone else idles waiting on the slow device's collectives.
+        let max_other_idle = b
+            .devices
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| *d != slowed_dev)
+            .map(|(_, s)| s.idle)
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_other_idle > b.devices[slowed_dev].idle,
+            "iter {i}: fast devices should idle more than the straggler"
+        );
+    }
+    assert_eq!(r_het.straggler_device(), Some(slowed_dev));
+}
+
+#[test]
+fn straggler_chrome_trace_has_per_device_lanes() {
+    let model = ModelSpec::moe_gpt_s(8, 1, 8192);
+    let cluster = ClusterSpec::hpwnv(2).with_slowdown(6, 2.0);
+    let d = cluster.n_devices();
+    let trace = fixed_trace(3, 8, 8, 2, 5);
+    let opts = ProphetOptions::default();
+    let (op_dag, des) = pro_prophet::sim::iteration_des(
+        &model,
+        &cluster,
+        &trace,
+        registry::build("pro-prophet", &opts).unwrap(),
+        1,
+    )
+    .unwrap();
+    let j = timeline::to_chrome_trace_des(&op_dag, &des);
+    let parsed = pro_prophet::util::json::parse(&j.to_string()).unwrap();
+    let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    // One named comp+comm lane pair per device.
+    let lane_names: std::collections::BTreeSet<String> = evs
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+        .filter_map(|e| {
+            e.get("args")
+                .and_then(|a| a.get("name"))
+                .and_then(|n| n.as_str())
+                .map(str::to_string)
+        })
+        .collect();
+    assert_eq!(lane_names.len(), 2 * d);
+    assert!(lane_names.contains("dev6 comp") && lane_names.contains("dev6 comm"));
+    // Ops land on more than one device lane.
+    let tids: std::collections::BTreeSet<i64> = evs
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+        .map(|e| e.get("tid").unwrap().as_f64().unwrap() as i64)
+        .collect();
+    assert!(tids.len() > 2, "events confined to one device: {tids:?}");
+}

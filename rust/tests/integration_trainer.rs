@@ -1,11 +1,12 @@
 //! Integration: end-to-end trainer through the AOT artifacts (tiny preset)
 //! and the trainer -> planner/simulator hand-off.
 
+use pro_prophet::balancer::{registry, ProphetOptions};
 use pro_prophet::config::TrainingConfig;
 use pro_prophet::cluster::ClusterSpec;
 use pro_prophet::config::ModelSpec;
 use pro_prophet::runtime;
-use pro_prophet::sim::{simulate, Policy, ProphetOptions};
+use pro_prophet::sim::simulate_policy;
 use pro_prophet::trainer::Trainer;
 
 fn available() -> bool {
@@ -121,12 +122,18 @@ fn loads_are_conserved_and_feed_the_simulator() {
         (man.tokens_per_step * man.k) as u64 * SCALE,
     );
     let cluster = ClusterSpec::hpwnv(1);
-    let ds = simulate(&model, &cluster, &trace, &Policy::DeepspeedMoe);
-    let pp = simulate(
+    let opts = ProphetOptions::full();
+    let ds = simulate_policy(
         &model,
         &cluster,
         &trace,
-        &Policy::ProProphet(ProphetOptions::full()),
+        registry::build("deepspeed", &opts).unwrap(),
+    );
+    let pp = simulate_policy(
+        &model,
+        &cluster,
+        &trace,
+        registry::build("pro-prophet", &opts).unwrap(),
     );
     assert!(ds.avg_iter_time() > 0.0);
     // The tiny preset's real routing is nearly balanced (64 tokens over 4

@@ -11,8 +11,12 @@ use pro_prophet::perfmodel::PerfModel;
 use pro_prophet::planner::{
     greedy_search, greedy_search_reference, locality, policies, PlannerConfig,
 };
-use pro_prophet::scheduler::{build_blocking, build_blockwise, BlockCosts, LoadBalanceOps};
-use pro_prophet::sim::Engine;
+use pro_prophet::scheduler::blockwise::SplitMode;
+use pro_prophet::scheduler::{
+    build_blocking, build_blockwise, build_blockwise_dag, dag, BlockCosts, DeviceBlockCosts,
+    LoadBalanceOps, Stream,
+};
+use pro_prophet::sim::{events, Engine};
 use pro_prophet::util::prop::{self, Cases};
 use pro_prophet::util::rng::Rng;
 use pro_prophet::workload::Trace;
@@ -326,6 +330,149 @@ fn prop_blockwise_bounded_by_blocking_and_lower_bound() {
                 .sum()
         };
         assert!((vol(&blocking) - vol(&overlapped)).abs() < 1e-9);
+    });
+}
+
+fn random_block_costs(rng: &mut Rng) -> BlockCosts {
+    BlockCosts {
+        a2a: rng.f64() * 0.01,
+        fec: rng.f64() * 0.01,
+        bec: rng.f64() * 0.02,
+        fnec: rng.f64() * 0.01,
+        bnec: rng.f64() * 0.02,
+        trans: rng.f64() * 0.02,
+        agg: rng.f64() * 0.02,
+        plan: rng.f64() * 0.001,
+    }
+}
+
+fn random_device_costs(rng: &mut Rng, d: usize) -> DeviceBlockCosts {
+    let v = |rng: &mut Rng, scale: f64| -> Vec<f64> {
+        (0..d).map(|_| rng.f64() * scale).collect()
+    };
+    DeviceBlockCosts {
+        a2a: v(rng, 0.01),
+        fec: v(rng, 0.01),
+        bec: v(rng, 0.02),
+        fnec: v(rng, 0.01),
+        bnec: v(rng, 0.02),
+        trans: v(rng, 0.02),
+        agg: v(rng, 0.02),
+        plan: v(rng, 0.001),
+    }
+}
+
+#[test]
+fn prop_blockwise_dag_acyclic_and_causal() {
+    // Generated Algorithm-2 DAGs are acyclic (validate() proves dep
+    // edges only point backwards) and the executed timeline is causal:
+    // no op starts before its dependencies finish — device-locally for
+    // compute, across ALL devices for collectives.
+    Cases::new(64).run(|rng| {
+        let d = 2 + rng.below(7);
+        let n_blocks = 1 + rng.below(6);
+        let blocks: Vec<DeviceBlockCosts> =
+            (0..n_blocks).map(|_| random_device_costs(rng, d)).collect();
+        let mode = [SplitMode::Split, SplitMode::ExpertOnly, SplitMode::NonExpertOnly]
+            [rng.below(3)];
+        let des_dag = build_blockwise_dag(&blocks, mode);
+        des_dag.validate().unwrap();
+        let des = events::execute(&des_dag);
+        for (i, node) in des_dag.nodes().iter().enumerate() {
+            for dev in 0..d {
+                assert!(
+                    (des.finish[i][dev] - des.start[i][dev] - node.dur[dev]).abs() < 1e-12,
+                    "node {i} duration accounting"
+                );
+                for &dep in &node.deps {
+                    match node.op.stream() {
+                        Stream::Comp => assert!(
+                            des.start[i][dev] >= des.finish[dep][dev] - 1e-12,
+                            "comp node {i} starts before dep {dep} on device {dev}"
+                        ),
+                        Stream::Comm => {
+                            for dv in 0..d {
+                                assert!(
+                                    des.start[i][dev] >= des.finish[dep][dv] - 1e-12,
+                                    "collective {i} starts before dep {dep} on device {dv}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Critical-path attribution is complete: exposed seconds sum to
+        // the makespan.
+        let sum: f64 = des.exposed.values().sum();
+        assert!(
+            (sum - des.makespan).abs() < 1e-9 * des.makespan.max(1e-9),
+            "exposed {sum} vs makespan {}",
+            des.makespan
+        );
+        let per_block: f64 = des.per_block_exposed.iter().sum();
+        assert!((per_block - des.makespan).abs() < 1e-9 * des.makespan.max(1e-9));
+    });
+}
+
+#[test]
+fn prop_barrier_lowering_reproduces_stage_model_bitwise() {
+    // Lowering any builder schedule to a barrier-shaped DAG with uniform
+    // per-device durations and executing it reproduces total_time() and
+    // exposed_breakdown() bit for bit — the DES-vs-Stage equivalence
+    // oracle, over random costs and both builders.
+    Cases::new(64).run(|rng| {
+        let n_blocks = 1 + rng.below(10);
+        let blocks: Vec<BlockCosts> = (0..n_blocks).map(|_| random_block_costs(rng)).collect();
+        let d = 2 + rng.below(8);
+        for sched in [
+            build_blocking(&blocks, LoadBalanceOps::None),
+            build_blocking(&blocks, LoadBalanceOps::Blocking),
+            build_blockwise(&blocks),
+        ] {
+            let des = events::execute(&dag::from_schedule(&sched, d));
+            assert_eq!(
+                des.makespan.to_bits(),
+                sched.total_time().to_bits(),
+                "makespan != total_time"
+            );
+            let want = sched.exposed_breakdown();
+            assert_eq!(
+                des.exposed.keys().collect::<Vec<_>>(),
+                want.keys().collect::<Vec<_>>(),
+                "breakdown key sets differ"
+            );
+            for (k, v) in &want {
+                assert_eq!(des.exposed[k].to_bits(), v.to_bits(), "breakdown[{k}]");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_relaxed_dag_bounded_by_barrier_and_compute() {
+    // With uniform per-device costs the Algorithm-2 dependency DAG is
+    // never slower than the barrier blockwise schedule (every DAG edge
+    // is implied by a stage barrier) and never faster than the pure
+    // compute + A2A lower bound.
+    Cases::new(64).run(|rng| {
+        let n_blocks = 1 + rng.below(8);
+        let d = 2 + rng.below(6);
+        let blocks: Vec<BlockCosts> = (0..n_blocks).map(|_| random_block_costs(rng)).collect();
+        let dev: Vec<DeviceBlockCosts> =
+            blocks.iter().map(|c| DeviceBlockCosts::uniform(c, d)).collect();
+        let barrier = build_blockwise(&blocks).total_time();
+        let des = events::execute(&build_blockwise_dag(&dev, SplitMode::Split));
+        assert!(
+            des.makespan <= barrier + 1e-9,
+            "relaxed DAG {} slower than barrier {barrier}",
+            des.makespan
+        );
+        let lower: f64 = blocks
+            .iter()
+            .map(|c| 4.0 * c.a2a + c.fec + c.bec + c.fnec + c.bnec)
+            .sum();
+        assert!(des.makespan >= lower - 1e-9, "DES {} under bound {lower}", des.makespan);
     });
 }
 
