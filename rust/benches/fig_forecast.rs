@@ -63,8 +63,8 @@ fn main() {
                     replan_interval,
                     ..Default::default()
                 },
-                scheduler_on: true,
                 prophet: ProphetConfig { predictor: kind, ..Default::default() },
+                ..Default::default()
             };
             let r = scenario::report_with("pro-prophet", &opts, &model, &cluster, &trace);
             let fcast = r.mean_forecast_error();

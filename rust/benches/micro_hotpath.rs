@@ -88,6 +88,14 @@ fn main() {
         let relaxed = build_blockwise_dag(&dev_costs, Default::default());
         std::hint::black_box(events::execute(&relaxed));
     }));
+    // The planner's whole-iteration relaxed estimate must stay much
+    // cheaper than executing the DAG it bounds.
+    record(bench_fn("relaxed_makespan_bound 24 blocks x 16 dev", 30.0, || {
+        std::hint::black_box(pro_prophet::scheduler::relaxed_makespan_bound(
+            &dev_costs,
+            Default::default(),
+        ));
+    }));
 
     // Whole simulated iteration (12-layer model, 16 devices).
     let model = ModelSpec::moe_gpt_m(16, 1, 16384);
@@ -98,6 +106,14 @@ fn main() {
     );
     record(bench_fn("simulate 1 iter x 12 layers (prophet)", 120.0, || {
         std::hint::black_box(scenario::report_for("pro-prophet", &model, &cluster, &trace));
+    }));
+    record(bench_fn("simulate 1 iter x 12 layers (prophet-dag)", 120.0, || {
+        std::hint::black_box(scenario::report_for(
+            "pro-prophet-dag",
+            &model,
+            &cluster,
+            &trace,
+        ));
     }));
 
     let path = write_result("micro_hotpath", &Json::Arr(results)).unwrap();

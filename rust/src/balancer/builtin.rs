@@ -132,7 +132,9 @@ impl ProProphet {
 
 impl BalancingPolicy for ProProphet {
     fn name(&self) -> String {
-        if self.opts.scheduler_on && self.opts.planner.use_overlap_model {
+        if self.opts.scheduler_on && self.opts.relaxed_dag {
+            "Pro-Prophet(dag)".into()
+        } else if self.opts.scheduler_on && self.opts.planner.use_overlap_model {
             "Pro-Prophet".into()
         } else if self.opts.scheduler_on {
             "Pro-Prophet(no-comb)".into()
@@ -166,10 +168,12 @@ impl BalancingPolicy for ProProphet {
             placement,
             plan_cost,
             comm_style: CommStyle::Pipelined,
-            schedule_kind: if self.opts.scheduler_on {
-                ScheduleKind::Blockwise
-            } else {
+            schedule_kind: if !self.opts.scheduler_on {
                 ScheduleKind::Blocking
+            } else if self.opts.relaxed_dag {
+                ScheduleKind::DagRelaxed
+            } else {
+                ScheduleKind::Blockwise
             },
         }
     }
@@ -245,8 +249,27 @@ mod tests {
     }
 
     #[test]
+    fn pro_prophet_dag_variant_decides_dag_relaxed() {
+        let mut p = ProProphet::new(ProphetOptions::dag());
+        p.bind(1);
+        let pm = pm();
+        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm, prophet: None });
+        assert_eq!(d.schedule_kind, ScheduleKind::DagRelaxed);
+        assert_eq!(d.comm_style, CommStyle::Pipelined);
+        // Ablating the scheduler off wins over the relaxed-DAG flag.
+        let mut off = ProProphet::new(ProphetOptions {
+            scheduler_on: false,
+            ..ProphetOptions::dag()
+        });
+        off.bind(1);
+        let d = off.decide(0, &skewed_w(), &DecideCtx { pm: &pm, prophet: None });
+        assert_eq!(d.schedule_kind, ScheduleKind::Blocking);
+    }
+
+    #[test]
     fn pro_prophet_names_track_ablation() {
         assert_eq!(ProProphet::new(ProphetOptions::full()).name(), "Pro-Prophet");
+        assert_eq!(ProProphet::new(ProphetOptions::dag()).name(), "Pro-Prophet(dag)");
         assert_eq!(
             ProProphet::new(ProphetOptions::without_combination()).name(),
             "Pro-Prophet(no-comb)"

@@ -115,7 +115,21 @@ impl BalancingPolicy for FlexMoe {
             placement,
             plan_cost,
             comm_style: CommStyle::Pipelined,
-            schedule_kind: ScheduleKind::Blocking,
+            // On homogeneous clusters FlexMoE keeps the frozen Blocking
+            // timeline (it has no overlap scheduler of its own).  On a
+            // straggler cluster it upgrades to the relaxed-DAG execution
+            // mode: dynamic re-placement systems (FlexMoE, LAER-MoE)
+            // claim their wins in exactly this regime by letting the
+            // runtime schedule around the slow device, and DagRelaxed is
+            // the execution mode that models that — dependency-driven
+            // issue instead of stage barriers.  (The straggler itself is
+            // visible either way: heterogeneous runs are DES-priced
+            // since PR 4; this changes how the iteration is ASSEMBLED.)
+            schedule_kind: if ctx.pm.is_heterogeneous() {
+                ScheduleKind::DagRelaxed
+            } else {
+                ScheduleKind::Blocking
+            },
         }
     }
 
@@ -271,6 +285,19 @@ mod tests {
         assert!(after < before, "balance degree {after} !< {before}");
         assert_eq!(p.counters().plans_run, 1);
         assert_eq!(p.counters().plans_reused, 1);
+    }
+
+    #[test]
+    fn straggler_switches_flexmoe_to_dag_relaxed() {
+        let mut p = FlexMoe::default();
+        p.bind(1);
+        let cluster = ClusterSpec::hpwnv(1).with_slowdown(2, 2.0);
+        let pm_het = PerfModel::new(&ModelSpec::moe_gpt_s(4, 1, 4096), &cluster);
+        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm_het, prophet: None });
+        assert_eq!(d.schedule_kind, ScheduleKind::DagRelaxed);
+        // Homogeneous clusters keep the frozen Blocking pricing.
+        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm(), prophet: None });
+        assert_eq!(d.schedule_kind, ScheduleKind::Blocking);
     }
 
     #[test]

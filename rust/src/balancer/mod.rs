@@ -94,8 +94,52 @@ pub enum ScheduleKind {
     NoLoadBalance,
     /// Blocking timeline including the policy's LB ops.
     Blocking,
-    /// Pro-Prophet's block-wise overlap schedule (paper §V, Algorithm 2).
+    /// Pro-Prophet's block-wise overlap schedule (paper §V, Algorithm 2),
+    /// priced on the frozen barrier Stage model.
     Blockwise,
+    /// Algorithm 2 as a true-dependency DAG
+    /// ([`crate::scheduler::build_blockwise_dag`]): no cross-stream stage
+    /// barriers, per-device operator durations, priced by the per-device
+    /// discrete-event executor ([`crate::sim::events`]) every iteration.
+    /// Never slower than [`ScheduleKind::Blockwise`] under the engine's
+    /// cost vectors (property-tested), and the only kind whose reported
+    /// time sees per-device slack on homogeneous clusters too.
+    DagRelaxed,
+}
+
+impl ScheduleKind {
+    /// Canonical config/CLI spellings, in enum order.
+    pub const NAMES: [&'static str; 4] =
+        ["no_load_balance", "blocking", "blockwise", "dag_relaxed"];
+
+    /// The spellings the `[policy] schedule` / `--schedule` overrides
+    /// accept — `no_load_balance` parses but is rejected there (it is
+    /// the Deepspeed-MoE policy, not a Pro-Prophet scheduling mode), so
+    /// error messages must not advertise it.
+    pub const OVERRIDE_NAMES: [&'static str; 3] = ["blocking", "blockwise", "dag_relaxed"];
+
+    /// Canonical name (round-trips through [`ScheduleKind::from_name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::NoLoadBalance => "no_load_balance",
+            ScheduleKind::Blocking => "blocking",
+            ScheduleKind::Blockwise => "blockwise",
+            ScheduleKind::DagRelaxed => "dag_relaxed",
+        }
+    }
+
+    /// Parse a config/CLI spelling (`[policy] schedule = "..."`,
+    /// `simulate --schedule ...`).  Accepts `-` for `_` and the short
+    /// `dag` alias; None for unknown strings.
+    pub fn from_name(name: &str) -> Option<ScheduleKind> {
+        match name {
+            "no_load_balance" | "no-load-balance" => Some(ScheduleKind::NoLoadBalance),
+            "blocking" => Some(ScheduleKind::Blocking),
+            "blockwise" => Some(ScheduleKind::Blockwise),
+            "dag_relaxed" | "dag-relaxed" | "dag" => Some(ScheduleKind::DagRelaxed),
+            _ => None,
+        }
+    }
 }
 
 /// One layer's placement decision for the upcoming iteration — the unit
@@ -199,6 +243,10 @@ pub struct ProphetOptions {
     pub planner: PlannerConfig,
     /// Block-wise overlap scheduling (§V) on/off.
     pub scheduler_on: bool,
+    /// With the scheduler on, assemble iterations as the relaxed
+    /// true-dependency DAG ([`ScheduleKind::DagRelaxed`]) instead of the
+    /// barrier-stage form ([`ScheduleKind::Blockwise`]).
+    pub relaxed_dag: bool,
     /// Forecasting subsystem knobs (predictor selection, drift detection).
     pub prophet: ProphetConfig,
 }
@@ -208,6 +256,7 @@ impl Default for ProphetOptions {
         ProphetOptions {
             planner: PlannerConfig::default(),
             scheduler_on: true,
+            relaxed_dag: false,
             prophet: ProphetConfig::default(),
         }
     }
@@ -237,6 +286,52 @@ impl ProphetOptions {
     pub fn full() -> Self {
         ProphetOptions::default()
     }
+
+    /// Full system on the relaxed execution mode: Algorithm 2 as a
+    /// true-dependency DAG priced by the per-device DES, with the
+    /// slack-aware planner cost model
+    /// ([`crate::perfmodel::PerfModel::layer_time_sn_relaxed`]) ranking
+    /// candidates on heterogeneous clusters.
+    pub fn dag() -> Self {
+        ProphetOptions {
+            planner: PlannerConfig { slack_aware: true, ..Default::default() },
+            relaxed_dag: true,
+            ..Default::default()
+        }
+    }
+
+    /// Apply an explicit schedule-kind override (the `[policy] schedule`
+    /// TOML key / `simulate --schedule` flag — ONE shared mapping so the
+    /// two surfaces cannot drift): `dag_relaxed` and `blockwise` force
+    /// the scheduler on (relaxed vs barrier assembly; `dag_relaxed`
+    /// additionally arms the planner's slack-aware cost model),
+    /// `blocking`/`no_load_balance` force it off.  Callers should reject
+    /// `no_load_balance` beforehand (it is a policy choice — Deepspeed-
+    /// MoE — not a Pro-Prophet scheduling mode); it is mapped like
+    /// `blocking` here only so the function is total.
+    pub fn apply_schedule(&mut self, kind: ScheduleKind) {
+        match kind {
+            ScheduleKind::DagRelaxed => {
+                self.scheduler_on = true;
+                self.relaxed_dag = true;
+                self.planner.slack_aware = true;
+            }
+            // Barrier kinds strip the relaxed knobs INCLUDING the slack
+            // cost model: a dag-mode options object downgraded to a
+            // barrier kind must price like the frozen Pro-Prophet, not
+            // keep ranking candidates with the relaxed estimate.
+            ScheduleKind::Blockwise => {
+                self.scheduler_on = true;
+                self.relaxed_dag = false;
+                self.planner.slack_aware = false;
+            }
+            ScheduleKind::Blocking | ScheduleKind::NoLoadBalance => {
+                self.scheduler_on = false;
+                self.relaxed_dag = false;
+                self.planner.slack_aware = false;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -261,9 +356,55 @@ mod tests {
     fn prophet_options_presets() {
         let full = ProphetOptions::full();
         assert!(full.scheduler_on && full.planner.use_overlap_model);
+        assert!(!full.relaxed_dag, "barrier pricing stays the default");
         let po = ProphetOptions::planner_only();
         assert!(!po.scheduler_on && !po.planner.use_overlap_model);
         let nc = ProphetOptions::without_combination();
         assert!(nc.scheduler_on && !nc.planner.use_overlap_model);
+        let dag = ProphetOptions::dag();
+        assert!(dag.scheduler_on && dag.relaxed_dag && dag.planner.slack_aware);
+    }
+
+    #[test]
+    fn apply_schedule_maps_every_kind() {
+        let mut o = ProphetOptions::default();
+        o.apply_schedule(ScheduleKind::DagRelaxed);
+        assert!(o.scheduler_on && o.relaxed_dag && o.planner.slack_aware);
+        // Downgrading to a barrier kind strips ALL relaxed knobs — the
+        // slack cost model must not survive the switch.
+        o.apply_schedule(ScheduleKind::Blockwise);
+        assert!(o.scheduler_on && !o.relaxed_dag && !o.planner.slack_aware);
+        o.apply_schedule(ScheduleKind::Blocking);
+        assert!(!o.scheduler_on && !o.relaxed_dag && !o.planner.slack_aware);
+        let mut o = ProphetOptions::dag();
+        o.apply_schedule(ScheduleKind::NoLoadBalance);
+        assert!(!o.scheduler_on && !o.relaxed_dag && !o.planner.slack_aware);
+    }
+
+    #[test]
+    fn schedule_kind_names_round_trip() {
+        for kind in [
+            ScheduleKind::NoLoadBalance,
+            ScheduleKind::Blocking,
+            ScheduleKind::Blockwise,
+            ScheduleKind::DagRelaxed,
+        ] {
+            assert_eq!(ScheduleKind::from_name(kind.name()), Some(kind));
+            assert!(ScheduleKind::NAMES.contains(&kind.name()));
+        }
+        assert_eq!(ScheduleKind::from_name("dag"), Some(ScheduleKind::DagRelaxed));
+        assert_eq!(
+            ScheduleKind::from_name("dag-relaxed"),
+            Some(ScheduleKind::DagRelaxed)
+        );
+        assert_eq!(ScheduleKind::from_name("barrier"), None);
+        assert_eq!(ScheduleKind::from_name(""), None);
+        // Every override spelling is a real kind, and the rejected
+        // no_load_balance is exactly the one left out.
+        for name in ScheduleKind::OVERRIDE_NAMES {
+            assert!(ScheduleKind::NAMES.contains(&name));
+            assert!(ScheduleKind::from_name(name).is_some());
+        }
+        assert!(!ScheduleKind::OVERRIDE_NAMES.contains(&"no_load_balance"));
     }
 }

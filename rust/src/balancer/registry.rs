@@ -7,7 +7,7 @@
 //! object parameterizes any policy uniformly.  `top<k>` names are parsed
 //! generically (`top2`, `top3`, `top7`, ...).
 
-use super::{builtin, flexmoe, BalancingPolicy, ProphetOptions};
+use super::{builtin, flexmoe, BalancingPolicy, ProphetOptions, ScheduleKind};
 use crate::planner::PlannerConfig;
 
 /// One registered policy.
@@ -67,6 +67,18 @@ pub const ENTRIES: &[PolicyEntry] = &[
         build: |opts| Box::new(builtin::ProProphet::new(opts.clone())),
     },
     PolicyEntry {
+        name: "pro-prophet-dag",
+        aliases: &["prophet-dag", "dag"],
+        summary: "Pro-Prophet on the relaxed true-dependency DAG (per-device DES pricing, slack-aware planner)",
+        build: |opts| {
+            // Same mapping as `[policy] schedule = "dag_relaxed"` / the
+            // CLI `--schedule` flag — one definition of "dag mode".
+            let mut o = opts.clone();
+            o.apply_schedule(ScheduleKind::DagRelaxed);
+            Box::new(builtin::ProProphet::new(o))
+        },
+    },
+    PolicyEntry {
         name: "planner-only",
         aliases: &[],
         summary: "Pro-Prophet planner with the scheduler ablated (Fig 14 arm)",
@@ -74,9 +86,14 @@ pub const ENTRIES: &[PolicyEntry] = &[
             Box::new(builtin::ProProphet::new(ProphetOptions {
                 planner: PlannerConfig {
                     use_overlap_model: false,
+                    // The ablation arm prices with the blocking Eq 6; the
+                    // overlap-shaped slack estimate must not leak in via a
+                    // `schedule = "dag_relaxed"` options object.
+                    slack_aware: false,
                     ..opts.planner.clone()
                 },
                 scheduler_on: false,
+                relaxed_dag: false,
                 prophet: opts.prophet.clone(),
             }))
         },
@@ -168,6 +185,23 @@ mod tests {
     fn planner_only_entry_ablates_scheduler() {
         let p = build("planner-only", &ProphetOptions::default()).unwrap();
         assert_eq!(p.name(), "Pro-Prophet(planner)");
+        // The ablation arm strips BOTH relaxed knobs from incoming
+        // options (e.g. a `schedule = "dag_relaxed"` experiment asking
+        // for the planner-only baseline): blocking Eq-6 pricing must not
+        // silently become the overlap-shaped slack estimate.
+        let p = build("planner-only", &ProphetOptions::dag()).unwrap();
+        assert_eq!(p.name(), "Pro-Prophet(planner)");
+    }
+
+    #[test]
+    fn dag_entry_and_aliases_build_the_relaxed_variant() {
+        let opts = ProphetOptions::default();
+        for name in ["pro-prophet-dag", "prophet-dag", "dag"] {
+            let p = build(name, &opts).unwrap_or_else(|| panic!("{name:?} missing"));
+            assert_eq!(p.name(), "Pro-Prophet(dag)", "{name}");
+        }
+        assert!(is_known("pro-prophet-dag") && is_known("dag"));
+        assert!(describe().contains("pro-prophet-dag"));
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 pub mod toml;
 
-use crate::balancer::{registry, BalancingPolicy, ProphetOptions};
+use crate::balancer::{registry, BalancingPolicy, ProphetOptions, ScheduleKind};
 use crate::cluster::ClusterSpec;
 use crate::planner::PlannerConfig;
 use crate::prophet::{PredictorKind, ProphetConfig};
@@ -179,6 +179,14 @@ pub struct ExperimentConfig {
     /// Block-wise overlap scheduling on/off (`[policy] scheduler = ...`,
     /// consumed by the Pro-Prophet family).
     pub scheduler_on: bool,
+    /// Explicit schedule-kind override (`[policy] schedule = "..."`,
+    /// e.g. `"dag_relaxed"`).  None = the policy's own default.  When
+    /// present it wins over `scheduler` for the Pro-Prophet family via
+    /// [`ProphetOptions::apply_schedule`]: `dag_relaxed`/`blockwise`
+    /// force the scheduler on (relaxed vs barrier assembly), `blocking`
+    /// forces it off.  `no_load_balance` is rejected at parse time (it
+    /// is the Deepspeed-MoE policy, not a scheduling mode).
+    pub schedule: Option<ScheduleKind>,
     pub planner: PlannerConfig,
     /// Forecasting subsystem knobs (`[prophet]` table).
     pub prophet: ProphetConfig,
@@ -281,11 +289,38 @@ impl ExperimentConfig {
                 registry::names().join(", ")
             ));
         }
+        let schedule = match t.get("policy.schedule") {
+            None => None,
+            Some(v) => {
+                let name = v
+                    .as_str()
+                    .ok_or_else(|| "policy.schedule must be a string".to_string())?;
+                let kind = ScheduleKind::from_name(name).ok_or_else(|| {
+                    format!(
+                        "unknown policy.schedule {name:?} (known: {})",
+                        ScheduleKind::OVERRIDE_NAMES.join(", ")
+                    )
+                })?;
+                if kind == ScheduleKind::NoLoadBalance {
+                    // Not a Pro-Prophet scheduling mode: pretending to
+                    // honor it would silently price the Blocking-with-LB
+                    // timeline instead of the no-LB one.
+                    return Err(
+                        "policy.schedule = \"no_load_balance\" is the no-balancing \
+                         timeline itself — select it with [policy] name = \"deepspeed\" \
+                         (use \"blocking\" to ablate the scheduler)"
+                            .into(),
+                    );
+                }
+                Some(kind)
+            }
+        };
         Ok(ExperimentConfig {
             model,
             cluster,
             policy,
             scheduler_on: t.bool_or("policy.scheduler", true),
+            schedule,
             planner,
             prophet,
             iterations: t.usize_or("iterations", 100),
@@ -298,13 +333,21 @@ impl ExperimentConfig {
     }
 
     /// The experiment's planner/scheduler/prophet knobs as the options
-    /// object every registry constructor takes.
+    /// object every registry constructor takes.  An explicit `[policy]
+    /// schedule` override wins over the `scheduler` boolean; the
+    /// `dag_relaxed` kind additionally arms the planner's slack-aware
+    /// cost model.
     pub fn prophet_options(&self) -> ProphetOptions {
-        ProphetOptions {
+        let mut opts = ProphetOptions {
             planner: self.planner.clone(),
             scheduler_on: self.scheduler_on,
+            relaxed_dag: false,
             prophet: self.prophet.clone(),
+        };
+        if let Some(kind) = self.schedule {
+            opts.apply_schedule(kind);
         }
+        opts
     }
 
     /// Construct the configured balancing policy from the registry.
@@ -423,6 +466,47 @@ mod tests {
         let bad = toml::parse("[policy]\nname = \"magic\"").unwrap();
         let err = ExperimentConfig::from_table(&bad).unwrap_err();
         assert!(err.contains("magic") && err.contains("pro-prophet"), "{err}");
+    }
+
+    #[test]
+    fn policy_schedule_key_round_trips() {
+        // dag_relaxed: selects the relaxed execution mode and arms the
+        // slack-aware planner, whatever `scheduler` says.
+        let t = toml::parse("[policy]\nschedule = \"dag_relaxed\"\nscheduler = false").unwrap();
+        let e = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(e.schedule, Some(ScheduleKind::DagRelaxed));
+        assert_eq!(e.schedule.unwrap().name(), "dag_relaxed", "TOML round trip");
+        let opts = e.prophet_options();
+        assert!(opts.relaxed_dag && opts.scheduler_on && opts.planner.slack_aware);
+        assert_eq!(e.build_policy().unwrap().name(), "Pro-Prophet(dag)");
+        // blocking turns the scheduler off; blockwise turns it on.
+        let t = toml::parse("[policy]\nschedule = \"blocking\"").unwrap();
+        let opts = ExperimentConfig::from_table(&t).unwrap().prophet_options();
+        assert!(!opts.scheduler_on && !opts.relaxed_dag);
+        let t = toml::parse("[policy]\nschedule = \"blockwise\"\nscheduler = false").unwrap();
+        let opts = ExperimentConfig::from_table(&t).unwrap().prophet_options();
+        assert!(opts.scheduler_on && !opts.relaxed_dag);
+        // Absent key: policy default, no override recorded.
+        let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(d.schedule, None);
+        assert!(!d.prophet_options().relaxed_dag);
+    }
+
+    #[test]
+    fn policy_schedule_rejects_unknown_kinds_helpfully() {
+        let t = toml::parse("[policy]\nschedule = \"warp_speed\"").unwrap();
+        let err = ExperimentConfig::from_table(&t).unwrap_err();
+        assert!(err.contains("warp_speed"), "{err}");
+        assert!(err.contains("dag_relaxed") && err.contains("blockwise"), "{err}");
+        // Non-string values are rejected too.
+        let t = toml::parse("[policy]\nschedule = 3").unwrap();
+        assert!(ExperimentConfig::from_table(&t).unwrap_err().contains("string"));
+        // no_load_balance is a policy (Deepspeed-MoE), not a Pro-Prophet
+        // scheduling mode: honoring it silently would price the wrong
+        // timeline, so it errors with a pointer.
+        let t = toml::parse("[policy]\nschedule = \"no_load_balance\"").unwrap();
+        let err = ExperimentConfig::from_table(&t).unwrap_err();
+        assert!(err.contains("deepspeed"), "{err}");
     }
 
     #[test]

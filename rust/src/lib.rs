@@ -36,9 +36,12 @@
 //!   frozen barrier `Schedule` and on the device-level event timeline
 //!   (`sim::events`: one comp+comm stream pair per device, per-device
 //!   exposed/idle breakdowns, straggler identification, heterogeneous
-//!   clusters via `ClusterSpec::device_slowdown`).  `sim::reference`
-//!   freezes the pre-refactor path (and the closed `Policy` enum) as the
-//!   golden-equivalence oracle.
+//!   clusters via `ClusterSpec::device_slowdown`).  Policies that return
+//!   `balancer::ScheduleKind::DagRelaxed` execute the true-dependency
+//!   Algorithm-2 DAG on the DES instead of the barrier lowering, every
+//!   iteration, with the slack-aware planner cost model ranking their
+//!   placements.  `sim::reference` freezes the pre-refactor path (and
+//!   the closed `Policy` enum) as the golden-equivalence oracle.
 //! * [`runtime`] + [`trainer`] + [`coordinator`] — the execution stack:
 //!   PJRT loading of the AOT'd JAX/Pallas artifacts, the end-to-end
 //!   training loop, and a threaded expert-parallel coordinator with

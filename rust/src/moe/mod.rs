@@ -39,7 +39,7 @@ struct SumCache {
 
 /// Tokens routed from each source device to each expert in one MoE layer:
 /// `w[d][e]` = tokens resident on device `d` whose gate picked expert `e`.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct LoadMatrix {
     n_devices: usize,
     n_experts: usize,
@@ -47,6 +47,28 @@ pub struct LoadMatrix {
     /// Column-sum cache; MUST be invalidated by every mutation (`set`,
     /// `add`) or stale sums leak into planning decisions.
     sums: std::sync::OnceLock<SumCache>,
+    /// Test hook: full routing sweeps executed over THIS instance (each
+    /// `route`/`traffic`/`route_full` call is one sweep).  The simulator
+    /// is pinned to exactly one identity sweep + one placement sweep per
+    /// (iteration, layer) for every [`crate::balancer::ScheduleKind`] —
+    /// see `one_routing_pass_per_layer_for_every_schedule_kind` in
+    /// rust/tests/integration_sim.rs.  Clones start at zero.
+    routing_passes: std::sync::atomic::AtomicUsize,
+}
+
+/// Manual impl: the derived form went away when the routing-pass counter
+/// arrived (atomics are not `Clone`).  The sum cache is carried over when
+/// valid; the counter restarts — it counts passes over one instance.
+impl Clone for LoadMatrix {
+    fn clone(&self) -> Self {
+        LoadMatrix {
+            n_devices: self.n_devices,
+            n_experts: self.n_experts,
+            w: self.w.clone(),
+            sums: self.sums.clone(),
+            routing_passes: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
 }
 
 /// Equality is defined by shape and contents only — the sum cache is a
@@ -66,6 +88,7 @@ impl LoadMatrix {
             n_experts,
             w: vec![0; n_devices * n_experts],
             sums: std::sync::OnceLock::new(),
+            routing_passes: std::sync::atomic::AtomicUsize::new(0),
         }
     }
 
@@ -77,7 +100,19 @@ impl LoadMatrix {
             assert_eq!(r.len(), n_experts, "ragged load matrix");
             w.extend_from_slice(r);
         }
-        LoadMatrix { n_devices, n_experts, w, sums: std::sync::OnceLock::new() }
+        LoadMatrix {
+            n_devices,
+            n_experts,
+            w,
+            sums: std::sync::OnceLock::new(),
+            routing_passes: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    /// Test hook: routing sweeps (`route`/`traffic`/`route_full`)
+    /// executed over this instance since construction (or clone).
+    pub fn routing_passes(&self) -> usize {
+        self.routing_passes.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     pub fn n_devices(&self) -> usize {
@@ -189,6 +224,7 @@ impl LoadMatrix {
         placement: &Placement,
         want_traffic: bool,
     ) -> (RoutedLoad, Option<Vec<Vec<u64>>>) {
+        self.routing_passes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         assert_eq!(placement.n_experts(), self.n_experts);
         assert_eq!(placement.n_devices(), self.n_devices);
         let mut h = vec![0u64; self.n_devices];
@@ -390,6 +426,26 @@ mod tests {
         w.add(2, 2, 5);
         assert_eq!(w.distribution_slice(), &[5, 11, 7]);
         assert_eq!(w.total_tokens(), 23);
+    }
+
+    #[test]
+    fn routing_pass_counter_counts_sweeps() {
+        let w = fig6();
+        assert_eq!(w.routing_passes(), 0);
+        let p = Placement::identity(3, 3);
+        let _ = w.route(&p);
+        assert_eq!(w.routing_passes(), 1);
+        let _ = w.traffic(&p);
+        assert_eq!(w.routing_passes(), 2);
+        let _ = w.route_full(&p);
+        assert_eq!(w.routing_passes(), 3);
+        let _ = w.route_identity();
+        assert_eq!(w.routing_passes(), 4);
+        // Clones count their own passes from zero.
+        let c = w.clone();
+        assert_eq!(c.routing_passes(), 0);
+        let _ = c.route(&p);
+        assert_eq!((c.routing_passes(), w.routing_passes()), (1, 4));
     }
 
     #[test]

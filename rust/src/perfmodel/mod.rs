@@ -46,6 +46,12 @@ pub struct PerfModel {
     /// to baselines that search on the critical path; measured values can
     /// be plugged in via [`PerfModel::with_plan_time`].
     pub t_plan: f64,
+    /// Per-device compute slowdown factors, mirrored from
+    /// [`ClusterSpec::device_slowdown`] (empty = homogeneous).  The
+    /// Eq 1–6/8 estimates deliberately ignore them (frozen semantics);
+    /// only the slack-aware relaxed estimate
+    /// ([`PerfModel::layer_time_sn_relaxed`]) reads them.
+    pub device_slowdown: Vec<f64>,
 }
 
 impl PerfModel {
@@ -71,12 +77,24 @@ impl PerfModel {
             t_fnec,
             t_bnec,
             t_plan,
+            device_slowdown: cluster.device_slowdown.clone(),
         }
     }
 
     pub fn with_plan_time(mut self, t_plan: f64) -> Self {
         self.t_plan = t_plan;
         self
+    }
+
+    /// Whether any device deviates from the homogeneous baseline
+    /// (mirrors [`ClusterSpec::is_heterogeneous`]).
+    pub fn is_heterogeneous(&self) -> bool {
+        self.device_slowdown.iter().any(|&s| s != 1.0)
+    }
+
+    /// Worst per-device compute slowdown (1.0 when homogeneous).
+    pub fn max_slowdown(&self) -> f64 {
+        self.device_slowdown.iter().copied().fold(1.0, f64::max)
     }
 
     // --- primitive costs ---------------------------------------------------
@@ -191,6 +209,40 @@ impl PerfModel {
         } else {
             a2a + self.t_trans_sn(s, n) + self.t_agg_sn(s, n)
         }
+    }
+
+    /// Slack-aware per-candidate estimate for
+    /// [`crate::balancer::ScheduleKind::DagRelaxed`] policies: the Eq-8
+    /// overlapped form with the expert-compute terms scaled by the
+    /// cluster's worst [`PerfModel::device_slowdown`] factor — the
+    /// critical path of the relaxed DAG runs through the slowest device's
+    /// expert compute, which both costs more (the `3·t_fec` term) and
+    /// hides more transfer (the subtracted FEC/BEC windows).  The static
+    /// non-MoE windows (`t_fnec`/`t_bnec`, §V-B) are deliberately NOT
+    /// scaled: inflating them would let a transfer-dominated candidate's
+    /// estimate DROP as the straggler gets slower (the window subtraction
+    /// outgrowing the `3·t_fec` charge); with them fixed the derivative
+    /// in `slow` is `3·t_fec' − t_fec'·[trans exposed] − 2·t_fec'·[agg
+    /// exposed] >= 0`, so the estimate is monotone non-decreasing in the
+    /// slowdown (property-tested).
+    ///
+    /// On a homogeneous cluster (`max_slowdown() == 1.0`) this is
+    /// **bit-identical** to `layer_time_sn_from_maxes(.., true)` — the
+    /// slack path cannot perturb frozen planning decisions
+    /// (property-tested in `prop_slack_estimate_frozen_when_homogeneous`).
+    /// The whole-iteration upper bound the DES validates against is
+    /// [`crate::scheduler::relaxed_makespan_bound`]; this per-candidate
+    /// form is the O(1) ranking model the greedy search can afford to
+    /// call per selection step.
+    pub fn layer_time_sn_relaxed(&self, max_h: u64, max_r: u64, s: usize, n: usize) -> f64 {
+        let slow = self.max_slowdown();
+        let t_fec = max_h as f64 * slow / self.tokens_per_s;
+        let t_a2a = max_r as f64 * self.token_bytes / self.avg_bw;
+        let a2a = 4.0 * t_a2a + 3.0 * t_fec;
+        let t_bec = 2.0 * t_fec;
+        let p_trans = (self.t_trans_sn(s, n) - t_fec - self.t_fnec).max(0.0);
+        let p_agg = (self.t_agg_sn(s, n) - t_bec - self.t_bnec).max(0.0);
+        a2a + p_trans + p_agg
     }
 }
 
@@ -333,6 +385,39 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "s={s} n={n} ov={overlapped}");
             }
         }
+    }
+
+    #[test]
+    fn slack_estimate_matches_overlapped_when_homogeneous() {
+        let (_, _, pm) = setup();
+        assert!(!pm.is_heterogeneous());
+        assert_eq!(pm.max_slowdown(), 1.0);
+        for (max_h, max_r, s, n) in [(530u64, 300u64, 0usize, 0usize), (1200, 40, 2, 1), (64, 64, 3, 2)]
+        {
+            let frozen = pm.layer_time_sn_from_maxes(max_h, max_r, s, n, true);
+            let slack = pm.layer_time_sn_relaxed(max_h, max_r, s, n);
+            assert_eq!(frozen.to_bits(), slack.to_bits(), "h={max_h} r={max_r} s={s} n={n}");
+        }
+    }
+
+    #[test]
+    fn slack_estimate_sees_the_straggler() {
+        let m = ModelSpec::moe_gpt_s(4, 1, 4096);
+        let c = ClusterSpec::hpwnv(1);
+        let pm_homo = PerfModel::new(&m, &c);
+        let pm_het = PerfModel::new(&m, &c.clone().with_slowdown(2, 2.5));
+        assert!(pm_het.is_heterogeneous());
+        assert_eq!(pm_het.max_slowdown(), 2.5);
+        // The frozen estimates ignore the slowdown entirely...
+        let frozen_h = pm_het.layer_time_sn_from_maxes(500, 100, 1, 1, true);
+        let frozen_o = pm_homo.layer_time_sn_from_maxes(500, 100, 1, 1, true);
+        assert_eq!(frozen_h.to_bits(), frozen_o.to_bits());
+        // ...while the slack-aware one charges the slow device's compute.
+        let slack = pm_het.layer_time_sn_relaxed(500, 100, 1, 1);
+        assert!(
+            slack > pm_homo.layer_time_sn_relaxed(500, 100, 1, 1),
+            "slack estimate must grow with the straggler"
+        );
     }
 
     #[test]

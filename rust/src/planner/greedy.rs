@@ -104,10 +104,28 @@ pub fn greedy_search_with(
         cfg.n_exclude.min(n_devices.saturating_sub(1))
     };
 
+    // Candidate pricing: the frozen Eq 1–8 scalar model, or — for
+    // slack-aware configs on a heterogeneous cluster — the relaxed
+    // estimate that charges the straggler's compute.  The slack estimate
+    // is overlap-shaped (Eq 8 with scaled compute), so it only ever
+    // replaces the overlapped model: a blocking-Eq-6 config (planner
+    // ablation arms) keeps its pricing even when slack_aware leaks in.
+    // On homogeneous clusters the two are bit-identical, so the branch
+    // can never perturb frozen decisions (prop_greedy_matches_reference
+    // randomizes `slack_aware` to pin exactly that).
+    let slack = cfg.slack_aware && overlap && pm.is_heterogeneous();
+    let price = |max_h: u64, max_r: u64, s: usize, n: usize| -> f64 {
+        if slack {
+            pm.layer_time_sn_relaxed(max_h, max_r, s, n)
+        } else {
+            pm.layer_time_sn_from_maxes(max_h, max_r, s, n, overlap)
+        }
+    };
+
     let rs = &mut scratch.routing;
     rs.init(w);
     let mut stats = rs.evaluate();
-    let t_identity = pm.layer_time_sn_from_maxes(stats.max_h, stats.max_r, 0, 0, overlap);
+    let t_identity = price(stats.max_h, stats.max_r, 0, 0);
     let mut t_output = t_identity;
 
     scratch.used_devices.clear();
@@ -165,8 +183,7 @@ pub fn greedy_search_with(
         // Re-route and evaluate (Alg 1 lines 15-20).
         stats = rs.evaluate();
         let s = scratch.selected.len();
-        let t_changed =
-            pm.layer_time_sn_from_maxes(stats.max_h, stats.max_r, s, n_exclude, overlap);
+        let t_changed = price(stats.max_h, stats.max_r, s, n_exclude);
         evaluated += 1;
         if t_changed < t_output {
             t_output = t_changed;
@@ -466,6 +483,46 @@ mod tests {
         assert_same_result(&a1, &greedy_search(&w1, &pm(4), &cfg));
         assert_same_result(&a2, &greedy_search(&w2, &pm(8), &cfg));
         assert_same_result(&a1, &a3);
+    }
+
+    #[test]
+    fn slack_aware_is_inert_on_homogeneous_clusters() {
+        let w = LoadMatrix::from_rows(vec![
+            vec![900, 50, 30, 44],
+            vec![800, 100, 60, 64],
+            vec![850, 70, 40, 64],
+            vec![900, 60, 20, 44],
+        ]);
+        let cfg = PlannerConfig { slack_aware: true, ..Default::default() };
+        let r = greedy_search(&w, &pm(4), &cfg);
+        let reference = greedy_search_reference(&w, &pm(4), &PlannerConfig::default());
+        assert_same_result(&r, &reference);
+    }
+
+    #[test]
+    fn slack_aware_search_valid_on_straggler_cluster() {
+        let w = LoadMatrix::from_rows(vec![
+            vec![900, 50, 30, 44],
+            vec![800, 100, 60, 64],
+            vec![850, 70, 40, 64],
+            vec![900, 60, 20, 44],
+        ]);
+        let cluster = ClusterSpec::hpwnv(1).with_slowdown(0, 3.0);
+        let pm_het = PerfModel::new(&ModelSpec::moe_gpt_s(4, 1, 4096), &cluster);
+        let cfg = PlannerConfig { slack_aware: true, ..Default::default() };
+        let r = greedy_search(&w, &pm_het, &cfg);
+        assert!(r.placement.validate().is_ok());
+        assert!(r.t_est <= r.t_identity + 1e-15);
+        // The estimates come from the slack model: reproducible from the
+        // returned placement.
+        let routed = w.route(&r.placement);
+        let t = pm_het.layer_time_sn_relaxed(
+            routed.h.iter().copied().max().unwrap_or(0),
+            routed.r.iter().copied().max().unwrap_or(0),
+            r.selected.len(),
+            2, // AUTO_EXCLUDE on 4 devices
+        );
+        assert!((t - r.t_est).abs() <= 1e-9 * t.max(1.0) + 1e-12);
     }
 
     #[test]

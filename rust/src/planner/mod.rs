@@ -34,6 +34,14 @@ pub struct PlannerConfig {
     /// Evaluate candidates with the scheduler-aware Eq 8 instead of the
     /// blocking Eq 6 (the planner/scheduler combination of §V-C).
     pub use_overlap_model: bool,
+    /// Rank candidates with the slack-aware relaxed estimate
+    /// ([`crate::perfmodel::PerfModel::layer_time_sn_relaxed`]) when the
+    /// cluster is heterogeneous — the cost model of
+    /// `ScheduleKind::DagRelaxed` policies.  On homogeneous clusters the
+    /// slack estimate is bit-identical to the Eq-8 overlapped model, so
+    /// frozen planning decisions are unaffected either way; only a
+    /// straggler makes this knob change placements.
+    pub slack_aware: bool,
     /// Optional device-memory model: devices without replica headroom are
     /// excluded from placements (see moe::memory).
     pub memory: Option<crate::moe::MemoryModel>,
@@ -46,6 +54,7 @@ impl Default for PlannerConfig {
             alpha: 0.25,
             replan_interval: 1,
             use_overlap_model: true,
+            slack_aware: false,
             memory: None,
         }
     }

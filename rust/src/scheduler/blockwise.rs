@@ -418,6 +418,23 @@ pub fn build_blockwise_dag(blocks: &[DeviceBlockCosts], mode: SplitMode) -> OpDa
     dag
 }
 
+/// Sound upper bound on the relaxed-DAG makespan of one iteration —
+/// `sim::events::execute(build_blockwise_dag(blocks, mode)).makespan`
+/// can never exceed it — computed WITHOUT running the event executor:
+/// the DAG is built (O(nodes·D), no timeline state) and every node is
+/// charged its worst-device duration once ([`OpDag::serialized_bound`]).
+///
+/// This is the whole-iteration anchor of the slack-aware planner cost
+/// model: the greedy search ranks individual candidates with the O(1)
+/// [`crate::perfmodel::PerfModel::layer_time_sn_relaxed`] form, and this
+/// bound ties that model back to the DES (`prop_planner_relaxed_bound_sound`
+/// proves soundness on arbitrary per-device costs and a ≤ 2x gap on
+/// homogeneous ones — with uniform durations every node occupies every
+/// device, so `makespan >= max(comp_busy, comm_busy) >= bound / 2`).
+pub fn relaxed_makespan_bound(blocks: &[DeviceBlockCosts], mode: SplitMode) -> f64 {
+    build_blockwise_dag(blocks, mode).serialized_bound()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -533,6 +550,29 @@ mod tests {
     fn empty_schedule() {
         assert_eq!(build_blockwise(&[]).total_time(), 0.0);
         assert!(build_blockwise_dag(&[], SplitMode::Split).is_empty());
+        assert_eq!(relaxed_makespan_bound(&[], SplitMode::Split), 0.0);
+    }
+
+    #[test]
+    fn relaxed_bound_dominates_executed_dag() {
+        let blocks: Vec<DeviceBlockCosts> = (0..4)
+            .map(|i| {
+                let mut c = DeviceBlockCosts::uniform(&costs(3.0, 2.0), 3);
+                c.fec[i % 3] *= 2.0; // some per-device skew
+                c
+            })
+            .collect();
+        for mode in [SplitMode::Split, SplitMode::ExpertOnly, SplitMode::NonExpertOnly] {
+            let dag = build_blockwise_dag(&blocks, mode);
+            let des = crate::sim::events::execute(&dag);
+            let bound = relaxed_makespan_bound(&blocks, mode);
+            assert!(
+                des.makespan <= bound + 1e-9,
+                "{mode:?}: DES {} exceeds bound {bound}",
+                des.makespan
+            );
+            assert_eq!(bound, dag.serialized_bound());
+        }
     }
 
     #[test]

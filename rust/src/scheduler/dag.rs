@@ -132,6 +132,21 @@ impl OpDag {
         Ok(())
     }
 
+    /// Sum of every node's worst-device duration — a sound upper bound on
+    /// the executed makespan: the DES critical path
+    /// ([`crate::sim::events::execute`]) walks predecessors with strictly
+    /// decreasing node indices, so it visits each node at most once and
+    /// charges it at most its worst device.  The planner's relaxed cost
+    /// model ([`crate::scheduler::relaxed_makespan_bound`]) is built on
+    /// this; `prop_planner_relaxed_bound_sound` pins both directions
+    /// (sound on any costs, within 2x on homogeneous ones).
+    pub fn serialized_bound(&self) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| n.dur.iter().copied().fold(0.0f64, f64::max))
+            .sum()
+    }
+
     /// Total busy seconds per device and stream: `(comp, comm)` vectors.
     pub fn busy_per_device(&self) -> (Vec<f64>, Vec<f64>) {
         let mut comp = vec![0.0; self.n_devices];

@@ -20,8 +20,8 @@ pub mod blockwise;
 pub mod dag;
 
 pub use blockwise::{
-    build_blocking, build_blockwise, build_blockwise_dag, BlockCosts, DeviceBlockCosts,
-    LoadBalanceOps,
+    build_blocking, build_blockwise, build_blockwise_dag, relaxed_makespan_bound, BlockCosts,
+    DeviceBlockCosts, LoadBalanceOps, SplitMode,
 };
 pub use dag::{DagNode, OpDag};
 

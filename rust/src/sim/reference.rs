@@ -197,6 +197,9 @@ pub fn simulate_reference(
 
         report.iters.push(IterationResult {
             time: schedule.total_time(),
+            // The pre-refactor path priced ONLY the barrier model, so the
+            // comparison column trivially equals the time.
+            barrier_time: schedule.total_time(),
             breakdown: schedule.exposed_breakdown(),
             per_block_time: per_block,
             balance_before: bal_before,

@@ -65,6 +65,19 @@ fn assert_reports_identical(oracle: &SimReport, trait_path: &SimReport, what: &s
     for (i, (a, b)) in oracle.iters.iter().zip(&trait_path.iters).enumerate() {
         let it = format!("{what}: iter {i}");
         assert_eq!(a.time.to_bits(), b.time.to_bits(), "{it}: time");
+        // PR 5 addition: the relaxed-vs-barrier comparison column must
+        // still be the frozen barrier pricing itself for every oracle
+        // policy (the oracle only ever priced the barrier model).
+        assert_eq!(
+            a.barrier_time.to_bits(),
+            b.barrier_time.to_bits(),
+            "{it}: barrier_time"
+        );
+        assert_eq!(
+            b.barrier_time.to_bits(),
+            b.time.to_bits(),
+            "{it}: barrier_time must equal the frozen time on homogeneous clusters"
+        );
         assert_eq!(a.trans_copies, b.trans_copies, "{it}: trans_copies");
         assert_eq!(
             a.balance_before.to_bits(),

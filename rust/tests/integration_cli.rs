@@ -46,6 +46,75 @@ fn info_lists_the_policy_registry() {
 }
 
 #[test]
+fn simulate_schedule_flag_selects_the_relaxed_mode() {
+    // `--schedule dag_relaxed` flips the Pro-Prophet row into the relaxed
+    // execution mode; the table shows the new relaxed-vs-barrier column.
+    let out = run(&[
+        "simulate",
+        "--model",
+        "s",
+        "--cluster",
+        "hpwnv",
+        "--nodes",
+        "1",
+        "--tokens",
+        "2048",
+        "--iters",
+        "2",
+        "--policy",
+        "pro-prophet",
+        "--schedule",
+        "dag_relaxed",
+    ]);
+    assert!(
+        out.status.success(),
+        "simulate --schedule failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("Pro-Prophet(dag)"), "{stdout}");
+    assert!(stdout.contains("barrier_s"), "relaxed-vs-barrier column missing: {stdout}");
+
+    // Unknown kinds fail fast and list the known spellings.
+    let bad = run(&["simulate", "--nodes", "1", "--iters", "1", "--schedule", "warp"]);
+    assert!(!bad.status.success(), "unknown --schedule must be an error");
+    let stderr = String::from_utf8_lossy(&bad.stderr);
+    assert!(stderr.contains("unknown --schedule"), "{stderr}");
+    assert!(stderr.contains("dag_relaxed") && stderr.contains("blockwise"), "{stderr}");
+
+    // no_load_balance is a policy choice, not a scheduling mode: it is
+    // rejected with a pointer instead of silently pricing Blocking.
+    let bad = run(&["simulate", "--nodes", "1", "--iters", "1", "--schedule", "no_load_balance"]);
+    assert!(!bad.status.success());
+    assert!(
+        String::from_utf8_lossy(&bad.stderr).contains("deepspeed"),
+        "rejection should point at --policy deepspeed"
+    );
+}
+
+#[test]
+fn default_simulate_table_has_the_dag_row() {
+    let out = run(&[
+        "simulate",
+        "--model",
+        "s",
+        "--cluster",
+        "hpwnv",
+        "--nodes",
+        "1",
+        "--tokens",
+        "2048",
+        "--iters",
+        "2",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for row in ["Deepspeed-MoE", "FasterMoE", "FlexMoE", "Pro-Prophet", "Pro-Prophet(dag)"] {
+        assert!(stdout.contains(row), "default table misses {row:?}: {stdout}");
+    }
+}
+
+#[test]
 fn unknown_policy_fails_fast_with_known_list() {
     let out = run(&["simulate", "--policy", "warlock", "--iters", "1"]);
     assert!(!out.status.success(), "unknown policy must be an error");

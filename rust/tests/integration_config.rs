@@ -123,6 +123,40 @@ fn shipped_straggler_config_drives_heterogeneous_sim() {
 }
 
 #[test]
+fn shipped_dag_relaxed_config_simulates() {
+    // `[policy] schedule = "dag_relaxed"` end to end: parse -> relaxed
+    // ProphetOptions (slack-aware planner armed) -> a simulation whose
+    // reported time is the relaxed DES makespan, with the barrier
+    // comparison column alongside.
+    let path = std::path::Path::new("examples/configs/hpwnv16_straggler_dag_relaxed.toml");
+    if !path.exists() {
+        eprintln!("SKIP: dag_relaxed example config missing");
+        return;
+    }
+    let exp = ExperimentConfig::from_file(path).unwrap();
+    assert_eq!(
+        exp.schedule.map(|k| k.name()),
+        Some("dag_relaxed"),
+        "schedule key must round-trip"
+    );
+    let opts = exp.prophet_options();
+    assert!(opts.relaxed_dag && opts.scheduler_on && opts.planner.slack_aware);
+    assert!(exp.cluster.is_heterogeneous(), "config must slow a device");
+
+    let trace = trace_of(&exp, 3);
+    let r = simulate_policy(&exp.model, &exp.cluster, &trace, exp.build_policy().unwrap());
+    assert_eq!(r.policy, "Pro-Prophet(dag)");
+    assert_eq!(r.iters.len(), 3);
+    assert_eq!(r.straggler_device(), Some(5));
+    for it in &r.iters {
+        assert_eq!(it.time.to_bits(), it.des_time.to_bits(), "relaxed time == DES");
+        assert!(it.barrier_time > 0.0);
+        let sum: f64 = it.breakdown.values().sum();
+        assert!((sum - it.time).abs() < 1e-9 * it.time.max(1e-9));
+    }
+}
+
+#[test]
 fn custom_model_from_toml() {
     let t = toml::parse(
         r#"

@@ -32,6 +32,59 @@ fn run_pp(
 }
 
 #[test]
+fn one_routing_pass_per_layer_for_every_schedule_kind() {
+    // Pricing a layer routes its load matrix exactly twice per iteration
+    // — one identity sweep (the "before" balance degree) and ONE
+    // placement sweep via `Engine::priced_block_styled` that feeds costs,
+    // per-device vectors AND the "after" balance degree.  The DagRelaxed
+    // path must ride the same single-pass pricing instead of re-routing
+    // for its DAG assembly (the pattern this test pins out of existence).
+    // The planner itself replays deltas on `RoutingState` and never
+    // re-routes the observed matrix.
+    let model = ModelSpec::moe_gpt_s(8, 1, 8192);
+    let cluster = ClusterSpec::hpwnv(2);
+    let base = trace_for(&model, 8, 3, 37);
+    for name in ["deepspeed", "pro-prophet", "pro-prophet-dag"] {
+        // Fresh clone per policy: LoadMatrix clones restart their
+        // routing-pass counters.
+        let trace = base.clone();
+        let r = run(&model, &cluster, &trace, name);
+        assert_eq!(r.iters.len(), 3, "{name}");
+        for (i, layers) in trace.iterations.iter().enumerate() {
+            for (l, w) in layers.iter().enumerate() {
+                assert_eq!(
+                    w.routing_passes(),
+                    2,
+                    "{name}: iter {i} layer {l} must route exactly twice (identity + priced placement)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dag_relaxed_wins_extend_to_stragglers() {
+    // On a straggler cluster the relaxed mode still beats doing nothing,
+    // and its barrier comparison column records what the frozen model
+    // would have claimed.
+    let cluster = ClusterSpec::hpwnv(4).with_slowdown(3, 2.0);
+    let model = ModelSpec::moe_gpt_m(16, 1, 16384);
+    let trace = trace_for(&model, 16, 8, 41);
+    let ds = run(&model, &cluster, &trace, "deepspeed");
+    let dag = run(&model, &cluster, &trace, "pro-prophet-dag");
+    assert!(
+        dag.avg_iter_time() < ds.avg_iter_time(),
+        "relaxed prophet {} !< deepspeed {} under a straggler",
+        dag.avg_iter_time(),
+        ds.avg_iter_time()
+    );
+    assert!(dag.avg_barrier_time() > 0.0);
+    for it in &dag.iters {
+        assert_eq!(it.time.to_bits(), it.des_time.to_bits());
+    }
+}
+
+#[test]
 fn headline_speedups_on_hpwnv16() {
     // Fig 10a band: Pro-Prophet 1.3-2.7x over Deepspeed-MoE, >=1x over
     // FasterMoE, on 16 GPUs with k=1.

@@ -50,7 +50,9 @@ fn schedule_for(
     match kind {
         ScheduleKind::NoLoadBalance => build_blocking(&costs, LoadBalanceOps::None),
         ScheduleKind::Blocking => build_blocking(&costs, LoadBalanceOps::Blocking),
-        ScheduleKind::Blockwise => build_blockwise(&costs),
+        // DagRelaxed's barrier REFERENCE is the blockwise stage form (the
+        // relaxed DAG itself has no barrier schedule).
+        ScheduleKind::Blockwise | ScheduleKind::DagRelaxed => build_blockwise(&costs),
     }
 }
 
@@ -129,6 +131,84 @@ fn relaxed_blockwise_dag_never_slower_than_barrier_schedule() {
         schedule.total_time()
     );
     assert!(des.makespan > 0.0);
+}
+
+#[test]
+fn dag_relaxed_breakdown_sums_and_bounded_by_barrier() {
+    // The schedulable relaxed mode (PR 5): a DagRelaxed policy's reported
+    // time is the DES makespan of the Algorithm-2 true-dependency DAG on
+    // EVERY iteration of a homogeneous cluster, never slower than the
+    // barrier reference recorded next to it, with an exposed breakdown
+    // and per-block attribution that sum exactly to it.
+    let model = ModelSpec::moe_gpt_s(8, 1, 8192);
+    let cluster = ClusterSpec::hpwnv(2);
+    let trace = fixed_trace(4, 8, 8, 5, 42);
+    let opts = ProphetOptions::default();
+    let r = simulate_policy(
+        &model,
+        &cluster,
+        &trace,
+        registry::build("pro-prophet-dag", &opts).unwrap(),
+    );
+    assert_eq!(r.iters.len(), 5);
+    for (i, it) in r.iters.iter().enumerate() {
+        assert_eq!(it.time.to_bits(), it.des_time.to_bits(), "iter {i}: time is the DES");
+        assert!(
+            it.time <= it.barrier_time + 1e-9,
+            "iter {i}: relaxed {} slower than barrier {}",
+            it.time,
+            it.barrier_time
+        );
+        assert!(it.time > 0.0);
+        let sum: f64 = it.breakdown.values().sum();
+        assert!(
+            (sum - it.time).abs() < 1e-9 * it.time.max(1e-9),
+            "iter {i}: breakdown sums to {sum}, time {}",
+            it.time
+        );
+        let pb: f64 = it.per_block_time.iter().sum();
+        assert!((pb - it.time).abs() < 1e-9 * it.time.max(1e-9), "iter {i}: per-block sum");
+    }
+}
+
+#[test]
+fn dag_relaxed_straggler_id_stable_across_iterations() {
+    // Heterogeneous cluster + uniform load: the relaxed mode must keep a
+    // stable straggler id (the slowed device) on every iteration, and the
+    // DES-reported time must strictly exceed the homogeneous run's.
+    let model = ModelSpec::moe_gpt_m(16, 1, 16384);
+    let homo = ClusterSpec::hpwnv(4);
+    let slowed_dev = 7;
+    let hetero = homo.clone().with_slowdown(slowed_dev, 2.5);
+    let uniform = LoadMatrix::from_rows(vec![vec![64; 16]; 16]);
+    let mut trace = Trace::new(4, 16, 16);
+    for _ in 0..4 {
+        trace.push(vec![uniform.clone(); 4]);
+    }
+    let opts = ProphetOptions::default();
+    let run = |cluster: &ClusterSpec| {
+        simulate_policy(
+            &model,
+            cluster,
+            &trace,
+            registry::build("pro-prophet-dag", &opts).unwrap(),
+        )
+    };
+    let r_homo = run(&homo);
+    let r_het = run(&hetero);
+    for (i, (a, b)) in r_homo.iters.iter().zip(&r_het.iters).enumerate() {
+        assert!(
+            b.time > a.time,
+            "iter {i}: straggler run {} not slower than homogeneous {}",
+            b.time,
+            a.time
+        );
+        assert_eq!(b.straggler, slowed_dev, "iter {i}: straggler id must be stable");
+        assert_eq!(b.time.to_bits(), b.des_time.to_bits());
+        let sum: f64 = b.breakdown.values().sum();
+        assert!((sum - b.time).abs() < 1e-9 * b.time.max(1e-9), "iter {i}: breakdown");
+    }
+    assert_eq!(r_het.straggler_device(), Some(slowed_dev));
 }
 
 #[test]

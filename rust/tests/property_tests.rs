@@ -13,10 +13,10 @@ use pro_prophet::planner::{
 };
 use pro_prophet::scheduler::blockwise::SplitMode;
 use pro_prophet::scheduler::{
-    build_blocking, build_blockwise, build_blockwise_dag, dag, BlockCosts, DeviceBlockCosts,
-    LoadBalanceOps, Stream,
+    build_blocking, build_blockwise, build_blockwise_dag, dag, relaxed_makespan_bound,
+    BlockCosts, DeviceBlockCosts, LoadBalanceOps, Stream,
 };
-use pro_prophet::sim::{events, Engine};
+use pro_prophet::sim::{dag_from_schedule_with_costs, events, Engine};
 use pro_prophet::util::prop::{self, Cases};
 use pro_prophet::util::rng::Rng;
 use pro_prophet::workload::Trace;
@@ -168,6 +168,10 @@ fn prop_greedy_matches_reference() {
                 rng.below(w.n_devices())
             },
             use_overlap_model: rng.below(2) == 0,
+            // On homogeneous clusters the slack-aware relaxed estimate is
+            // bit-identical to the Eq-8 model, so randomizing this flag
+            // must never diverge from the frozen reference.
+            slack_aware: rng.below(2) == 0,
             ..Default::default()
         };
         let new = greedy_search(&w, &pm, &cfg);
@@ -473,6 +477,160 @@ fn prop_relaxed_dag_bounded_by_barrier_and_compute() {
             .map(|c| 4.0 * c.a2a + c.fec + c.bec + c.fnec + c.bnec)
             .sum();
         assert!(des.makespan >= lower - 1e-9, "DES {} under bound {lower}", des.makespan);
+    });
+}
+
+/// `device_slowdown`-shaped heterogeneous costs: compute vectors scaled
+/// per device, communication uniform (a slow GPU's NIC is not slower —
+/// the engine's `*_per_device` semantics).
+fn slowdown_scaled_costs(base: &BlockCosts, slow: &[f64]) -> DeviceBlockCosts {
+    DeviceBlockCosts {
+        a2a: vec![base.a2a; slow.len()],
+        fec: slow.iter().map(|s| base.fec * s).collect(),
+        bec: slow.iter().map(|s| base.bec * s).collect(),
+        fnec: slow.iter().map(|s| base.fnec * s).collect(),
+        bnec: slow.iter().map(|s| base.bnec * s).collect(),
+        trans: vec![base.trans; slow.len()],
+        agg: vec![base.agg; slow.len()],
+        plan: vec![base.plan; slow.len()],
+    }
+}
+
+#[test]
+fn prop_schedule_kind_makespan_ordering() {
+    // The schedule-kind axis, priced on IDENTICAL cost inputs:
+    //   DagRelaxed <= Blockwise <= Blocking
+    // over random block costs AND random heterogeneous `device_slowdown`
+    // vectors (factors >= 1 — stragglers; compute scales, communication
+    // does not, mirroring the engine).  All three kinds run on the
+    // device-level DES exactly as `sim::simulate_policy` prices them:
+    // the barrier kinds through the shape-preserving lowering
+    // (`dag_from_schedule_with_costs`), DagRelaxed through the
+    // Algorithm-2 true-dependency DAG.
+    Cases::default().run(|rng| {
+        let d = 2 + rng.below(7);
+        let slow: Vec<f64> = (0..d)
+            .map(|_| if rng.below(3) == 0 { 1.0 + rng.f64() * 3.0 } else { 1.0 })
+            .collect();
+        let n_layers = 1 + rng.below(6);
+        let scalars: Vec<BlockCosts> =
+            (0..n_layers).map(|_| random_block_costs(rng)).collect();
+        let devs: Vec<DeviceBlockCosts> =
+            scalars.iter().map(|c| slowdown_scaled_costs(c, &slow)).collect();
+        let run_barrier = |schedule: &pro_prophet::scheduler::Schedule| -> f64 {
+            events::execute(&dag_from_schedule_with_costs(schedule, &scalars, &devs, d))
+                .makespan
+        };
+        let t_blocking = run_barrier(&build_blocking(&scalars, LoadBalanceOps::Blocking));
+        let t_blockwise = run_barrier(&build_blockwise(&scalars));
+        let t_relaxed =
+            events::execute(&build_blockwise_dag(&devs, SplitMode::Split)).makespan;
+        assert!(
+            t_relaxed <= t_blockwise + 1e-9,
+            "DagRelaxed {t_relaxed} slower than Blockwise {t_blockwise} (slow {slow:?})"
+        );
+        assert!(
+            t_blockwise <= t_blocking + 1e-9,
+            "Blockwise {t_blockwise} slower than Blocking {t_blocking} (slow {slow:?})"
+        );
+        // The relaxed timeline is still a real schedule: bounded below by
+        // the compute + A2A critical path of the SLOWEST device.
+        let lower: f64 = scalars
+            .iter()
+            .map(|c| {
+                let worst = slow.iter().copied().fold(1.0f64, f64::max);
+                4.0 * c.a2a + (c.fec + c.bec + c.fnec + c.bnec) * worst
+            })
+            .sum();
+        assert!(
+            t_relaxed >= lower - 1e-9,
+            "DagRelaxed {t_relaxed} under the straggler lower bound {lower}"
+        );
+    });
+}
+
+#[test]
+fn prop_planner_relaxed_bound_sound_and_tight_when_homogeneous() {
+    // The planner's whole-iteration relaxed estimate
+    // (`relaxed_makespan_bound`) is a SOUND upper bound of the executed
+    // relaxed DAG on arbitrary per-device costs, and within a factor of
+    // 2 on homogeneous (uniform-vector) clusters: with uniform durations
+    // every node occupies every device's stream, so the makespan is at
+    // least max(comp busy, comm busy) >= bound / 2.
+    Cases::default().run(|rng| {
+        let d = 2 + rng.below(7);
+        let n_blocks = 1 + rng.below(6);
+        let mode = [SplitMode::Split, SplitMode::ExpertOnly, SplitMode::NonExpertOnly]
+            [rng.below(3)];
+        // Arbitrary heterogeneous vectors: soundness only.
+        let blocks: Vec<DeviceBlockCosts> =
+            (0..n_blocks).map(|_| random_device_costs(rng, d)).collect();
+        let des = events::execute(&build_blockwise_dag(&blocks, mode));
+        let bound = relaxed_makespan_bound(&blocks, mode);
+        assert!(
+            des.makespan <= bound + 1e-9,
+            "DES {} exceeds the planner bound {bound}",
+            des.makespan
+        );
+        // Homogeneous vectors: soundness AND the 2x calibration band.
+        let uniform: Vec<DeviceBlockCosts> = (0..n_blocks)
+            .map(|_| DeviceBlockCosts::uniform(&random_block_costs(rng), d))
+            .collect();
+        let des_u = events::execute(&build_blockwise_dag(&uniform, mode));
+        let bound_u = relaxed_makespan_bound(&uniform, mode);
+        assert!(des_u.makespan <= bound_u + 1e-9);
+        assert!(
+            bound_u <= 2.0 * des_u.makespan + 1e-9,
+            "bound {bound_u} looser than 2x the DES {}",
+            des_u.makespan
+        );
+    });
+}
+
+#[test]
+fn prop_slack_estimate_frozen_when_homogeneous() {
+    // The slack-aware per-candidate estimate is bit-identical to the
+    // frozen Eq-8 overlapped model on homogeneous clusters (so DagRelaxed
+    // planning cannot perturb frozen decisions there), and charges
+    // strictly more compute once a straggler exists (s = 0: no transfer
+    // overflow terms to trade against).
+    Cases::default().run(|rng| {
+        let d = [4usize, 8, 16][rng.below(3)];
+        let pm = pm_for(d);
+        let max_h = rng.below(50_000) as u64;
+        let max_r = rng.below(50_000) as u64;
+        let s = rng.below(d + 1);
+        let n = rng.below(d);
+        let frozen = pm.layer_time_sn_from_maxes(max_h, max_r, s, n, true);
+        let slack = pm.layer_time_sn_relaxed(max_h, max_r, s, n);
+        assert_eq!(
+            frozen.to_bits(),
+            slack.to_bits(),
+            "homogeneous slack estimate diverged: {frozen} vs {slack}"
+        );
+        // One straggler: the pure-compute estimate (s = 0) must grow.
+        let factor = 1.5 + rng.f64() * 2.5;
+        let cluster = ClusterSpec::hpwnv(d.div_ceil(4)).with_slowdown(rng.below(d), factor);
+        let pm_het = PerfModel::new(
+            &ModelSpec::moe_gpt_s(d, 1, 4096 * d as u64),
+            &cluster,
+        );
+        assert_eq!(pm_het.max_slowdown(), factor);
+        // Monotone in the slowdown for EVERY (s, n): the static non-MoE
+        // windows are not scaled, so the window subtraction can never
+        // outgrow the 3*t_fec charge (see layer_time_sn_relaxed docs).
+        assert!(
+            pm_het.layer_time_sn_relaxed(max_h, max_r, s, n)
+                >= pm.layer_time_sn_relaxed(max_h, max_r, s, n) - 1e-12,
+            "straggler lowered the slack estimate at s={s} n={n}"
+        );
+        if max_h > 0 {
+            assert!(
+                pm_het.layer_time_sn_relaxed(max_h, max_r, 0, 0)
+                    > pm.layer_time_sn_relaxed(max_h, max_r, 0, 0),
+                "straggler must raise the pure-compute slack estimate"
+            );
+        }
     });
 }
 
