@@ -1,0 +1,109 @@
+//! DES throughput: the device-level discrete-event simulator's
+//! events/sec and iterations/sec at cluster scale (D = 64, 256, 1024),
+//! timed THROUGH the telemetry hub — the same `des.lower`/`des.execute`
+//! spans and `des.events` counter the `--metrics` sink records, so the
+//! bench doubles as an end-to-end check that hub span timings carry real
+//! signal.
+//!
+//! Results go to the human-readable lines below, bench_results/des.json,
+//! and the machine-readable BENCH_des.json at the repo root (uploaded by
+//! CI next to BENCH_plan.json; consumed by EXPERIMENTS.md §Perf trend
+//! tooling).
+
+use pro_prophet::benchkit;
+use pro_prophet::metrics::write_result;
+use pro_prophet::obs::{Labels, Recorder, Span, TelemetryHub};
+use pro_prophet::scheduler::{
+    build_blockwise, build_blockwise_dag, dag, BlockCosts, DeviceBlockCosts,
+};
+use pro_prophet::sim::events;
+use pro_prophet::util::json::{self, Json};
+
+const BLOCKS: usize = 12;
+
+fn block_costs() -> Vec<BlockCosts> {
+    vec![
+        BlockCosts {
+            a2a: 1e-3,
+            fec: 2e-3,
+            bec: 4e-3,
+            fnec: 1e-3,
+            bnec: 2e-3,
+            trans: 1.5e-3,
+            agg: 1.5e-3,
+            plan: 3e-4,
+        };
+        BLOCKS
+    ]
+}
+
+/// One measured configuration: `reps` lower+execute passes on `d`
+/// devices, spans and counters recorded into a fresh hub.
+fn measure(d: usize, reps: usize, relaxed: bool) -> Json {
+    let costs = block_costs();
+    let hub = TelemetryHub::new();
+    for i in 0..reps {
+        hub.iteration_start(i);
+        let op_dag = {
+            let _sp = Span::enter(&hub, "des.lower", Labels::None);
+            if relaxed {
+                let dev: Vec<DeviceBlockCosts> =
+                    costs.iter().map(|c| DeviceBlockCosts::uniform(c, d)).collect();
+                build_blockwise_dag(&dev, Default::default())
+            } else {
+                dag::from_schedule(&build_blockwise(&costs), d)
+            }
+        };
+        let des = {
+            let _sp = Span::enter(&hub, "des.execute", Labels::None);
+            events::execute(&op_dag)
+        };
+        std::hint::black_box(des.makespan);
+        hub.counter("des.events", Labels::None, (op_dag.len() * d) as u64);
+        hub.iteration_end();
+    }
+    let lower = hub.span_agg("des.lower", Labels::None).expect("lower span recorded");
+    let execute = hub.span_agg("des.execute", Labels::None).expect("execute span recorded");
+    let events = hub.counter_total("des.events", Labels::None);
+    let events_per_sec = events as f64 / execute.total.max(1e-12);
+    let iters_per_sec = reps as f64 / (lower.total + execute.total).max(1e-12);
+    let kind = if relaxed { "relaxed" } else { "barrier" };
+    println!(
+        "des {kind:<8} D={d:<5} {reps:>3} reps  {events:>9} events  \
+         {events_per_sec:>12.0} events/s  {iters_per_sec:>8.1} iters/s  \
+         (lower {:.2} ms, execute {:.2} ms per iter)",
+        lower.mean() * 1e3,
+        execute.mean() * 1e3,
+    );
+    json::obj(vec![
+        ("kind", json::s(kind)),
+        ("devices", json::num(d as f64)),
+        ("blocks", json::num(BLOCKS as f64)),
+        ("reps", json::num(reps as f64)),
+        ("events", json::num(events as f64)),
+        ("events_per_sec", json::num(events_per_sec)),
+        ("iters_per_sec", json::num(iters_per_sec)),
+        ("lower_mean_s", json::num(lower.mean())),
+        ("execute_mean_s", json::num(execute.mean())),
+    ])
+}
+
+fn main() {
+    benchkit::header("des", "device-level DES events/sec via hub span timings");
+    let mut rows: Vec<Json> = Vec::new();
+    for (d, reps) in [(64usize, 40usize), (256, 12), (1024, 4)] {
+        rows.push(measure(d, reps, false));
+        rows.push(measure(d, reps, true));
+    }
+    let doc = json::obj(vec![
+        ("bench", json::s("des")),
+        ("unit", json::s("events_per_sec")),
+        ("blocks", json::num(BLOCKS as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = write_result("des", &doc).unwrap();
+    println!("-> {}", path.display());
+    // Machine-readable trajectory seed at the repo root.
+    std::fs::write("BENCH_des.json", doc.to_string()).unwrap();
+    println!("-> BENCH_des.json");
+}

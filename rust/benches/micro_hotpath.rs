@@ -116,6 +116,25 @@ fn main() {
         ));
     }));
 
+    // Telemetry overhead: a disarmed span through the no-op recorder
+    // must be ~free (no Instant::now, no allocation) — this is the "no
+    // measurable recorder overhead with telemetry off" guarantee — and
+    // even the live hub path stays far below the work it wraps.
+    {
+        use pro_prophet::obs::{self, Labels, Recorder, Span, TelemetryHub};
+        record(bench_fn("span noop (telemetry off)", 30.0, || {
+            let sp = Span::enter(obs::noop(), "bench.span", Labels::None);
+            std::hint::black_box(&sp);
+        }));
+        let hub = TelemetryHub::new();
+        hub.iteration_start(0);
+        record(bench_fn("span hub (telemetry on)", 30.0, || {
+            let sp = Span::enter(&hub, "bench.span", Labels::None);
+            std::hint::black_box(&sp);
+        }));
+        hub.iteration_end();
+    }
+
     let path = write_result("micro_hotpath", &Json::Arr(results)).unwrap();
     println!("-> {}", path.display());
 }

@@ -13,6 +13,7 @@ use super::{
     ProphetOptions, ScheduleKind,
 };
 use crate::moe::{LoadMatrix, Placement};
+use crate::obs::{Labels, Span};
 use crate::planner::{policies, Planner};
 use crate::prophet::ProphetConfig;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -159,11 +160,35 @@ impl BalancingPolicy for ProProphet {
             .expect("ProProphet::decide before bind()")
             .lock()
             .expect("planner lock poisoned");
-        let forecast = ctx.prophet.and_then(|p| p.forecast_matrix(layer));
+        let forecast = {
+            let _sp = Span::enter(ctx.rec, "prophet.forecast", Labels::None);
+            ctx.prophet.and_then(|p| p.forecast_matrix(layer))
+        };
         let w_plan: &LoadMatrix = forecast.as_ref().unwrap_or(w);
         let before = planner.plans_run;
+        let candidates_before = planner.candidates_evaluated;
+        let search_seconds_before = planner.search_seconds;
         let placement = planner.plan(w_plan, ctx.pm);
         let plan_cost = if planner.plans_run > before { ctx.pm.t_plan } else { 0.0 };
+        if ctx.rec.enabled() {
+            if planner.plans_run > before {
+                // The planner already times its own searches; forward the
+                // exact increment as a greedy-search span sample.
+                ctx.rec.observe(
+                    "plan.greedy_search",
+                    Labels::None,
+                    planner.search_seconds - search_seconds_before,
+                );
+                ctx.rec.counter("plan.searches", Labels::None, 1);
+                ctx.rec.counter(
+                    "plan.candidates",
+                    Labels::None,
+                    (planner.candidates_evaluated - candidates_before) as u64,
+                );
+            } else {
+                ctx.rec.counter("plan.cache_hits", Labels::None, 1);
+            }
+        }
         Decision {
             placement,
             plan_cost,
@@ -216,7 +241,7 @@ mod tests {
         let mut p = DeepspeedMoe;
         p.bind(1);
         let pm = pm();
-        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm, prophet: None });
+        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm, prophet: None, rec: crate::obs::noop() });
         assert!(d.placement.is_identity());
         assert_eq!(d.plan_cost, 0.0);
         assert_eq!(d.schedule_kind, ScheduleKind::NoLoadBalance);
@@ -230,7 +255,7 @@ mod tests {
         let pm = pm();
         let w = skewed_w();
         for _ in 0..3 {
-            let d = p.decide(0, &w, &DecideCtx { pm: &pm, prophet: None });
+            let d = p.decide(0, &w, &DecideCtx { pm: &pm, prophet: None, rec: crate::obs::noop() });
             assert_eq!(d.plan_cost, pm.t_plan);
             assert_eq!(d.comm_style, CommStyle::Coarse);
         }
@@ -243,7 +268,7 @@ mod tests {
         p.bind(1);
         let pm = pm();
         let w = skewed_w();
-        let d = p.decide(0, &w, &DecideCtx { pm: &pm, prophet: None });
+        let d = p.decide(0, &w, &DecideCtx { pm: &pm, prophet: None, rec: crate::obs::noop() });
         assert_eq!(*d.placement, policies::top_k_to_all(&w, 2));
         assert_eq!(p.name(), "top2");
     }
@@ -253,7 +278,7 @@ mod tests {
         let mut p = ProProphet::new(ProphetOptions::dag());
         p.bind(1);
         let pm = pm();
-        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm, prophet: None });
+        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm, prophet: None, rec: crate::obs::noop() });
         assert_eq!(d.schedule_kind, ScheduleKind::DagRelaxed);
         assert_eq!(d.comm_style, CommStyle::Pipelined);
         // Ablating the scheduler off wins over the relaxed-DAG flag.
@@ -262,7 +287,7 @@ mod tests {
             ..ProphetOptions::dag()
         });
         off.bind(1);
-        let d = off.decide(0, &skewed_w(), &DecideCtx { pm: &pm, prophet: None });
+        let d = off.decide(0, &skewed_w(), &DecideCtx { pm: &pm, prophet: None, rec: crate::obs::noop() });
         assert_eq!(d.schedule_kind, ScheduleKind::Blocking);
     }
 
@@ -292,7 +317,7 @@ mod tests {
         p.bind(1);
         let pm = pm();
         let w = skewed_w();
-        let ctx = DecideCtx { pm: &pm, prophet: None };
+        let ctx = DecideCtx { pm: &pm, prophet: None, rec: crate::obs::noop() };
         let d1 = p.decide(0, &w, &ctx);
         assert_eq!(d1.plan_cost, pm.t_plan, "first decision runs the search");
         let d2 = p.decide(0, &w, &ctx);

@@ -255,7 +255,7 @@ mod tests {
         let mut p = FlexMoe::default();
         p.bind(1);
         let pm = pm();
-        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm, prophet: None });
+        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm, prophet: None, rec: crate::obs::noop() });
         assert!(d.placement.is_identity());
         assert_eq!(d.plan_cost, 0.0);
         assert_eq!(d.schedule_kind, ScheduleKind::Blocking);
@@ -267,7 +267,7 @@ mod tests {
         p.bind(1);
         let pm = pm();
         let w = skewed_w();
-        let ctx = DecideCtx { pm: &pm, prophet: None };
+        let ctx = DecideCtx { pm: &pm, prophet: None, rec: crate::obs::noop() };
         p.decide(0, &w, &ctx);
         p.observe(0, &w, &LayerFeedback::default());
         let d = p.decide(0, &w, &ctx);
@@ -293,10 +293,10 @@ mod tests {
         p.bind(1);
         let cluster = ClusterSpec::hpwnv(1).with_slowdown(2, 2.0);
         let pm_het = PerfModel::new(&ModelSpec::moe_gpt_s(4, 1, 4096), &cluster);
-        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm_het, prophet: None });
+        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm_het, prophet: None, rec: crate::obs::noop() });
         assert_eq!(d.schedule_kind, ScheduleKind::DagRelaxed);
         // Homogeneous clusters keep the frozen Blocking pricing.
-        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm(), prophet: None });
+        let d = p.decide(0, &skewed_w(), &DecideCtx { pm: &pm(), prophet: None, rec: crate::obs::noop() });
         assert_eq!(d.schedule_kind, ScheduleKind::Blocking);
     }
 
@@ -307,7 +307,7 @@ mod tests {
         let w = LoadMatrix::from_rows(vec![vec![256; 4]; 4]);
         p.observe(0, &w, &LayerFeedback::default());
         let pm = pm();
-        let d = p.decide(0, &w, &DecideCtx { pm: &pm, prophet: None });
+        let d = p.decide(0, &w, &DecideCtx { pm: &pm, prophet: None, rec: crate::obs::noop() });
         assert!(d.placement.is_identity());
         assert_eq!(d.plan_cost, 0.0);
     }
@@ -317,7 +317,7 @@ mod tests {
         let mut p = FlexMoe::new(FlexMoeConfig { migration_budget: 8, ..Default::default() });
         p.bind(1);
         let pm = pm();
-        let ctx = DecideCtx { pm: &pm, prophet: None };
+        let ctx = DecideCtx { pm: &pm, prophet: None, rec: crate::obs::noop() };
         let hot = skewed_w();
         p.decide(0, &hot, &ctx);
         p.observe(0, &hot, &LayerFeedback::default());
@@ -339,7 +339,7 @@ mod tests {
         let w = skewed_w();
         p.observe(0, &w, &LayerFeedback::default());
         let pm = pm();
-        let d = p.decide(0, &w, &DecideCtx { pm: &pm, prophet: None });
+        let d = p.decide(0, &w, &DecideCtx { pm: &pm, prophet: None, rec: crate::obs::noop() });
         assert_eq!(
             d.placement.transfer_copies(),
             1,

@@ -174,6 +174,11 @@ pub struct DecideCtx<'a> {
     /// The session's shared forecasting subsystem — present iff the
     /// policy asked for one via [`BalancingPolicy::prophet_config`].
     pub prophet: Option<&'a Prophet>,
+    /// The session's telemetry sink ([`crate::obs::noop`] by default —
+    /// disabled, zero-cost).  Policies time their phases through it
+    /// (`prophet.forecast`, `plan.greedy_search`) and count searches;
+    /// `decide` runs on scoped threads, so the recorder is shared.
+    pub rec: &'a dyn crate::obs::Recorder,
 }
 
 /// Post-iteration verdict for one layer, delivered with the observed

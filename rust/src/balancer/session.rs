@@ -11,9 +11,11 @@
 
 use super::{BalancingPolicy, DecideCtx, Decision, LayerFeedback, PolicyCounters};
 use crate::moe::LoadMatrix;
+use crate::obs::{self, Labels, Recorder, Span};
 use crate::perfmodel::PerfModel;
 use crate::prophet::Prophet;
 use crate::util::threads;
+use std::sync::Arc;
 
 /// What one iteration's observations told the session, aggregated over
 /// layers (in layer order).
@@ -43,16 +45,37 @@ pub struct BalancerSession {
     prophet: Option<Prophet>,
     n_layers: usize,
     iterations_observed: usize,
+    rec: Arc<dyn Recorder>,
 }
 
 impl BalancerSession {
     /// Bind `policy` to a run over `n_layers` MoE layers; builds the
-    /// shared prophet when the policy forecasts.
-    pub fn new(mut policy: Box<dyn BalancingPolicy>, n_layers: usize) -> Self {
+    /// shared prophet when the policy forecasts.  Telemetry stays off
+    /// (the zero-cost no-op recorder); see
+    /// [`BalancerSession::with_recorder`].
+    pub fn new(policy: Box<dyn BalancingPolicy>, n_layers: usize) -> Self {
+        Self::with_recorder(policy, n_layers, obs::noop_arc())
+    }
+
+    /// Like [`BalancerSession::new`] with a live telemetry sink: decide
+    /// and observe phases are span-timed (`balancer.decide`,
+    /// `balancer.observe`, `prophet.observe`), drift firings counted,
+    /// and forecast error gauged; the same recorder is served to
+    /// policies via [`DecideCtx::rec`].
+    pub fn with_recorder(
+        mut policy: Box<dyn BalancingPolicy>,
+        n_layers: usize,
+        rec: Arc<dyn Recorder>,
+    ) -> Self {
         assert!(n_layers >= 1, "session needs at least one layer");
         policy.bind(n_layers);
         let prophet = policy.prophet_config().map(|cfg| Prophet::new(cfg, n_layers));
-        BalancerSession { policy, prophet, n_layers, iterations_observed: 0 }
+        BalancerSession { policy, prophet, n_layers, iterations_observed: 0, rec }
+    }
+
+    /// The session's telemetry sink (the no-op recorder when off).
+    pub fn recorder(&self) -> &Arc<dyn Recorder> {
+        &self.rec
     }
 
     pub fn policy_name(&self) -> String {
@@ -84,7 +107,8 @@ impl BalancerSession {
     /// this into their own [`crate::util::threads::par_map`] closure).
     pub fn decide_layer(&self, layer: usize, w: &LoadMatrix, pm: &PerfModel) -> Decision {
         assert!(layer < self.n_layers, "layer {layer} out of range");
-        let ctx = DecideCtx { pm, prophet: self.prophet.as_ref() };
+        let _sp = Span::enter(&*self.rec, "balancer.decide", Labels::None);
+        let ctx = DecideCtx { pm, prophet: self.prophet.as_ref(), rec: &*self.rec };
         self.policy.decide(layer, w, &ctx)
     }
 
@@ -102,10 +126,12 @@ impl BalancerSession {
     /// reacts by invalidating caches, adjusting placements, ...).
     pub fn observe_iteration(&mut self, layers: &[LoadMatrix]) -> IterationFeedback {
         assert_eq!(layers.len(), self.n_layers, "layer count mismatch");
+        let _sp = Span::enter(&*self.rec, "balancer.observe", Labels::None);
         let mut fb = IterationFeedback::default();
         for (l, w) in layers.iter().enumerate() {
             let layer_fb = match self.prophet.as_mut() {
                 Some(prophet) => {
+                    let _psp = Span::enter(&*self.rec, "prophet.observe", Labels::None);
                     let obs = prophet.observe_layer(l, w);
                     LayerFeedback { drift: obs.drift, forecast_error: obs.forecast_error }
                 }
@@ -120,6 +146,12 @@ impl BalancerSession {
             self.policy.observe(l, w, &layer_fb);
         }
         self.iterations_observed += 1;
+        if self.rec.enabled() {
+            self.rec.counter("prophet.drift_layers", Labels::None, fb.drift_layers as u64);
+            if let Some(e) = fb.mean_forecast_error() {
+                self.rec.gauge("prophet.forecast_error_l1", Labels::None, e);
+            }
+        }
         fb
     }
 }

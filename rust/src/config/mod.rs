@@ -9,6 +9,7 @@ pub mod toml;
 
 use crate::balancer::{registry, BalancingPolicy, ProphetOptions, ScheduleKind};
 use crate::cluster::ClusterSpec;
+use crate::obs::ObsConfig;
 use crate::planner::PlannerConfig;
 use crate::prophet::{PredictorKind, ProphetConfig};
 
@@ -150,6 +151,12 @@ pub struct TrainingConfig {
     /// here after the run — replayable via `pro-prophet trace
     /// --from-store` and the simulator.
     pub store_path: Option<String>,
+    /// Write per-step structured metrics (schema-versioned JSONL) here
+    /// (`--metrics`); None = telemetry off, zero-cost no-op recorder.
+    pub metrics_path: Option<String>,
+    /// Cap on retained per-step metric records (the whole-run aggregates
+    /// still see every step; drops are reported, never silent).
+    pub metrics_max_events: usize,
 }
 
 impl Default for TrainingConfig {
@@ -163,6 +170,8 @@ impl Default for TrainingConfig {
             analyze_balance: true,
             report_path: None,
             store_path: None,
+            metrics_path: None,
+            metrics_max_events: crate::obs::DEFAULT_MAX_EVENTS,
         }
     }
 }
@@ -190,6 +199,9 @@ pub struct ExperimentConfig {
     pub planner: PlannerConfig,
     /// Forecasting subsystem knobs (`[prophet]` table).
     pub prophet: ProphetConfig,
+    /// Telemetry sink knobs (`[obs]` table: `metrics`, `max_events`);
+    /// CLI `--metrics`/`--max-events` override these.
+    pub obs: ObsConfig,
     pub iterations: usize,
     pub seed: u64,
 }
@@ -315,6 +327,24 @@ impl ExperimentConfig {
                 Some(kind)
             }
         };
+        let mut obs = ObsConfig::default();
+        if let Some(v) = t.get("obs.metrics") {
+            let path = v
+                .as_str()
+                .ok_or_else(|| "obs.metrics must be a string path".to_string())?;
+            obs.metrics_path = Some(path.to_string());
+        }
+        if let Some(v) = t.get("obs.max_events") {
+            let n = v
+                .as_usize()
+                .ok_or_else(|| "obs.max_events must be a non-negative integer".to_string())?;
+            if n == 0 {
+                return Err("obs.max_events must be >= 1 (use a large value, not 0, \
+                            to keep everything)"
+                    .into());
+            }
+            obs.max_events = n;
+        }
         Ok(ExperimentConfig {
             model,
             cluster,
@@ -323,6 +353,7 @@ impl ExperimentConfig {
             schedule,
             planner,
             prophet,
+            obs,
             iterations: t.usize_or("iterations", 100),
             seed: t.usize_or("seed", 42) as u64,
         })
@@ -545,6 +576,24 @@ mod tests {
                 .unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn obs_table_parses() {
+        let t = toml::parse("[obs]\nmetrics = \"run.jsonl\"\nmax_events = 500").unwrap();
+        let e = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(e.obs.metrics_path.as_deref(), Some("run.jsonl"));
+        assert_eq!(e.obs.max_events, 500);
+        // Defaults: telemetry off, standard cap.
+        let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
+        assert!(d.obs.metrics_path.is_none());
+        assert_eq!(d.obs.max_events, crate::obs::DEFAULT_MAX_EVENTS);
+        // max_events = 0 is rejected (it would mean "record nothing").
+        let bad = toml::parse("[obs]\nmax_events = 0").unwrap();
+        assert!(ExperimentConfig::from_table(&bad).unwrap_err().contains("max_events"));
+        // Non-string metrics path is rejected.
+        let bad = toml::parse("[obs]\nmetrics = 3").unwrap();
+        assert!(ExperimentConfig::from_table(&bad).unwrap_err().contains("string"));
     }
 
     #[test]

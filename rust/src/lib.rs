@@ -46,6 +46,13 @@
 //!   PJRT loading of the AOT'd JAX/Pallas artifacts, the end-to-end
 //!   training loop, and a threaded expert-parallel coordinator with
 //!   virtual devices.
+//! * [`obs`] — the telemetry layer the statistics flow through: a
+//!   dependency-free `Recorder` trait (counters / gauges / RAII spans)
+//!   with a zero-cost no-op default, the `TelemetryHub` aggregating
+//!   per-iteration and whole-run metrics for the five host-side phases
+//!   (prophet forecast, greedy search, balancer decide/observe, DES
+//!   lower/execute, trainer step), a bounded schema-versioned JSONL
+//!   sink (`--metrics`), and the `report` CLI renderer/differ.
 //! * [`cluster`], [`moe`], [`workload`], [`perfmodel`], [`metrics`],
 //!   [`config`], [`util`], [`benchkit`] — substrates.
 //!
@@ -60,6 +67,7 @@ pub mod config;
 pub mod coordinator;
 pub mod metrics;
 pub mod moe;
+pub mod obs;
 pub mod perfmodel;
 pub mod planner;
 pub mod prophet;

@@ -165,9 +165,14 @@ impl TableReport {
 }
 
 /// Write a result JSON under bench_results/ (creating the directory).
+/// `PRO_PROPHET_RESULT_DIR` overrides the directory so CI and scripts
+/// collect every result in one place regardless of invocation CWD.
 pub fn write_result(name: &str, value: &Json) -> std::io::Result<std::path::PathBuf> {
-    let dir = Path::new("bench_results");
-    std::fs::create_dir_all(dir)?;
+    let dir = std::env::var_os("PRO_PROPHET_RESULT_DIR")
+        .filter(|v| !v.is_empty())
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| Path::new("bench_results").to_path_buf());
+    std::fs::create_dir_all(&dir)?;
     let path = dir.join(format!("{name}.json"));
     std::fs::write(&path, value.to_string())?;
     Ok(path)

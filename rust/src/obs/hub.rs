@@ -1,0 +1,437 @@
+//! `TelemetryHub`: the enabled [`Recorder`] — per-iteration scopes,
+//! whole-run aggregates, and the bounded schema-versioned JSONL sink.
+
+use super::{Labels, Recorder, DEFAULT_MAX_EVENTS, SCHEMA};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Metric identity on the recording path: static name + packed labels.
+/// Rendering to `name{k=v}` strings happens only at sink time.
+type Key = (&'static str, Labels);
+
+/// Streaming aggregate for span samples and gauges.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Agg {
+    pub count: u64,
+    pub total: f64,
+    pub min: f64,
+    pub max: f64,
+    pub last: f64,
+}
+
+impl Agg {
+    fn push(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            if v < self.min {
+                self.min = v;
+            }
+            if v > self.max {
+                self.max = v;
+            }
+        }
+        self.count += 1;
+        self.total += v;
+        self.last = v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total / self.count as f64
+        }
+    }
+}
+
+/// One metric scope (whole-run or a single iteration).
+#[derive(Default)]
+struct Scope {
+    counters: BTreeMap<Key, u64>,
+    gauges: BTreeMap<Key, Agg>,
+    spans: BTreeMap<Key, Agg>,
+}
+
+struct HubState {
+    /// Run-header fields (`set_meta`), written once on the "run" line.
+    meta: BTreeMap<String, Json>,
+    /// Fields stamped into every subsequent iteration record
+    /// (`set_context`) — e.g. which policy a multi-policy run is on.
+    context: BTreeMap<String, Json>,
+    run: Scope,
+    iter: Scope,
+    iter_index: Option<usize>,
+    records: Vec<Json>,
+    iterations_seen: usize,
+    dropped: usize,
+    dropped_first: Option<usize>,
+    dropped_last: Option<usize>,
+}
+
+/// What the sink kept and what it shed; `drop_message` is the exact
+/// line producers print so caps are never silent.
+#[derive(Clone, Debug)]
+pub struct SinkStats {
+    pub lines: usize,
+    pub iterations: usize,
+    pub recorded: usize,
+    pub dropped: usize,
+    pub dropped_first: Option<usize>,
+    pub dropped_last: Option<usize>,
+    pub max_events: usize,
+}
+
+impl SinkStats {
+    pub fn drop_message(&self) -> Option<String> {
+        if self.dropped == 0 {
+            return None;
+        }
+        Some(format!(
+            "metrics sink: dropped {} of {} iteration records (iterations {}..={}) over the max-events cap {}",
+            self.dropped,
+            self.iterations,
+            self.dropped_first.unwrap_or(0),
+            self.dropped_last.unwrap_or(0),
+            self.max_events
+        ))
+    }
+}
+
+/// The enabled recorder. Interior mutability via one `Mutex` — every
+/// instrumented phase is host-side and coarse enough that contention is
+/// negligible, and `&self` methods keep the `Recorder` trait object
+/// shareable across the decide fan-out threads.
+pub struct TelemetryHub {
+    state: Mutex<HubState>,
+    max_events: usize,
+}
+
+impl Default for TelemetryHub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TelemetryHub {
+    pub fn new() -> Self {
+        Self::with_max_events(DEFAULT_MAX_EVENTS)
+    }
+
+    /// `max_events` bounds retained per-iteration records (>= 1).
+    pub fn with_max_events(max_events: usize) -> Self {
+        TelemetryHub {
+            state: Mutex::new(HubState {
+                meta: BTreeMap::new(),
+                context: BTreeMap::new(),
+                run: Scope::default(),
+                iter: Scope::default(),
+                iter_index: None,
+                records: Vec::new(),
+                iterations_seen: 0,
+                dropped: 0,
+                dropped_first: None,
+                dropped_last: None,
+            }),
+            max_events: max_events.max(1),
+        }
+    }
+
+    pub fn max_events(&self) -> usize {
+        self.max_events
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HubState> {
+        self.state.lock().expect("telemetry hub lock poisoned")
+    }
+
+    /// Set a run-header field (model, cluster, seed, ...).
+    pub fn set_meta(&self, key: &str, value: Json) {
+        self.lock().meta.insert(key.to_string(), value);
+    }
+
+    /// Set a field stamped into every iteration record from now on.
+    pub fn set_context(&self, key: &str, value: Json) {
+        self.lock().context.insert(key.to_string(), value);
+    }
+
+    pub fn counter_total(&self, name: &'static str, labels: Labels) -> u64 {
+        self.lock().run.counters.get(&(name, labels)).copied().unwrap_or(0)
+    }
+
+    pub fn span_agg(&self, name: &'static str, labels: Labels) -> Option<Agg> {
+        self.lock().run.spans.get(&(name, labels)).copied()
+    }
+
+    pub fn gauge_agg(&self, name: &'static str, labels: Labels) -> Option<Agg> {
+        self.lock().run.gauges.get(&(name, labels)).copied()
+    }
+
+    pub fn iterations_seen(&self) -> usize {
+        self.lock().iterations_seen
+    }
+
+    pub fn iterations_recorded(&self) -> usize {
+        self.lock().records.len()
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.lock().dropped
+    }
+
+    pub fn stats(&self) -> SinkStats {
+        let st = self.lock();
+        SinkStats {
+            // run header + iteration records + summary
+            lines: st.records.len() + 2,
+            iterations: st.iterations_seen,
+            recorded: st.records.len(),
+            dropped: st.dropped,
+            dropped_first: st.dropped_first,
+            dropped_last: st.dropped_last,
+            max_events: self.max_events,
+        }
+    }
+
+    /// Render the whole sink: header line, iteration records, summary.
+    pub fn to_jsonl(&self) -> String {
+        let st = self.lock();
+        let mut out = String::new();
+
+        let mut header: BTreeMap<String, Json> = BTreeMap::new();
+        header.insert("schema".into(), json::s(SCHEMA));
+        header.insert("kind".into(), json::s("run"));
+        header.insert("version".into(), json::s(crate::VERSION));
+        for (k, v) in &st.meta {
+            header.insert(k.clone(), v.clone());
+        }
+        out.push_str(&Json::Obj(header).to_string());
+        out.push('\n');
+
+        for rec in &st.records {
+            out.push_str(&rec.to_string());
+            out.push('\n');
+        }
+
+        let mut summary: BTreeMap<String, Json> = BTreeMap::new();
+        summary.insert("schema".into(), json::s(SCHEMA));
+        summary.insert("kind".into(), json::s("summary"));
+        summary.insert("iterations".into(), json::num(st.iterations_seen as f64));
+        summary.insert("recorded".into(), json::num(st.records.len() as f64));
+        summary.insert("dropped".into(), json::num(st.dropped as f64));
+        if let (Some(a), Some(b)) = (st.dropped_first, st.dropped_last) {
+            summary.insert("dropped_first".into(), json::num(a as f64));
+            summary.insert("dropped_last".into(), json::num(b as f64));
+        }
+        if !st.run.counters.is_empty() {
+            summary.insert("counters".into(), counters_json(&st.run.counters));
+        }
+        if !st.run.gauges.is_empty() {
+            summary.insert("gauges".into(), aggs_json(&st.run.gauges, false));
+        }
+        if !st.run.spans.is_empty() {
+            summary.insert("spans".into(), aggs_json(&st.run.spans, true));
+        }
+        out.push_str(&Json::Obj(summary).to_string());
+        out.push('\n');
+        out
+    }
+
+    pub fn write_jsonl(&self, path: &Path) -> io::Result<SinkStats> {
+        std::fs::write(path, self.to_jsonl())?;
+        Ok(self.stats())
+    }
+}
+
+fn key_name(key: &Key) -> String {
+    format!("{}{}", key.0, key.1.suffix())
+}
+
+fn counters_json(m: &BTreeMap<Key, u64>) -> Json {
+    Json::Obj(m.iter().map(|(k, v)| (key_name(k), json::num(*v as f64))).collect())
+}
+
+/// Gauges in iteration records are scalars (the last value set); in
+/// aggregate position both gauges and spans render their full `Agg`.
+/// Span fields carry an `_s` suffix: the unit is always seconds.
+fn aggs_json(m: &BTreeMap<Key, Agg>, spans: bool) -> Json {
+    let (total, mean, min, max) = if spans {
+        ("total_s", "mean_s", "min_s", "max_s")
+    } else {
+        ("total", "mean", "min", "max")
+    };
+    Json::Obj(
+        m.iter()
+            .map(|(k, a)| {
+                let mut o: BTreeMap<String, Json> = BTreeMap::new();
+                o.insert("count".into(), json::num(a.count as f64));
+                o.insert(total.into(), json::num(a.total));
+                o.insert(mean.into(), json::num(a.mean()));
+                o.insert(min.into(), json::num(a.min));
+                o.insert(max.into(), json::num(a.max));
+                if !spans {
+                    o.insert("last".into(), json::num(a.last));
+                }
+                (key_name(k), Json::Obj(o))
+            })
+            .collect(),
+    )
+}
+
+fn gauges_scalar_json(m: &BTreeMap<Key, Agg>) -> Json {
+    Json::Obj(m.iter().map(|(k, a)| (key_name(k), json::num(a.last))).collect())
+}
+
+impl Recorder for TelemetryHub {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn counter(&self, name: &'static str, labels: Labels, delta: u64) {
+        let mut st = self.lock();
+        *st.run.counters.entry((name, labels)).or_insert(0) += delta;
+        if st.iter_index.is_some() {
+            *st.iter.counters.entry((name, labels)).or_insert(0) += delta;
+        }
+    }
+
+    fn gauge(&self, name: &'static str, labels: Labels, value: f64) {
+        let mut st = self.lock();
+        st.run.gauges.entry((name, labels)).or_default().push(value);
+        if st.iter_index.is_some() {
+            st.iter.gauges.entry((name, labels)).or_default().push(value);
+        }
+    }
+
+    fn observe(&self, name: &'static str, labels: Labels, seconds: f64) {
+        let mut st = self.lock();
+        st.run.spans.entry((name, labels)).or_default().push(seconds);
+        if st.iter_index.is_some() {
+            st.iter.spans.entry((name, labels)).or_default().push(seconds);
+        }
+    }
+
+    fn iteration_start(&self, index: usize) {
+        let mut st = self.lock();
+        st.iter = Scope::default();
+        st.iter_index = Some(index);
+    }
+
+    fn iteration_end(&self) {
+        let mut st = self.lock();
+        let Some(idx) = st.iter_index.take() else { return };
+        st.iterations_seen += 1;
+        let scope = std::mem::take(&mut st.iter);
+        if st.records.len() >= self.max_events {
+            st.dropped += 1;
+            if st.dropped_first.is_none() {
+                st.dropped_first = Some(idx);
+            }
+            st.dropped_last = Some(idx);
+            return;
+        }
+        let mut rec: BTreeMap<String, Json> = BTreeMap::new();
+        rec.insert("schema".into(), json::s(SCHEMA));
+        rec.insert("kind".into(), json::s("iteration"));
+        rec.insert("iter".into(), json::num(idx as f64));
+        for (k, v) in &st.context {
+            rec.insert(k.clone(), v.clone());
+        }
+        if !scope.counters.is_empty() {
+            rec.insert("counters".into(), counters_json(&scope.counters));
+        }
+        if !scope.gauges.is_empty() {
+            rec.insert("gauges".into(), gauges_scalar_json(&scope.gauges));
+        }
+        if !scope.spans.is_empty() {
+            rec.insert("spans".into(), aggs_json(&scope.spans, true));
+        }
+        st.records.push(Json::Obj(rec));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agg_tracks_min_max_mean_last() {
+        let mut a = Agg::default();
+        for v in [3.0, 1.0, 2.0] {
+            a.push(v);
+        }
+        assert_eq!(a.count, 3);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 3.0);
+        assert_eq!(a.last, 2.0);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_accumulate_per_run_and_per_iteration() {
+        let hub = TelemetryHub::new();
+        hub.counter("x", Labels::None, 2); // outside any iteration
+        hub.iteration_start(0);
+        hub.counter("x", Labels::None, 3);
+        hub.iteration_end();
+        assert_eq!(hub.counter_total("x", Labels::None), 5);
+        let text = hub.to_jsonl();
+        let iter_line = text.lines().nth(1).unwrap();
+        let v = json::parse(iter_line).unwrap();
+        // Only the in-iteration delta lands in the iteration record.
+        assert_eq!(v.get("counters").unwrap().get("x").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn labels_split_metric_identity() {
+        let hub = TelemetryHub::new();
+        hub.gauge("idle", Labels::one("dev", 0), 1.0);
+        hub.gauge("idle", Labels::one("dev", 1), 9.0);
+        assert_eq!(hub.gauge_agg("idle", Labels::one("dev", 1)).unwrap().last, 9.0);
+        let text = hub.to_jsonl();
+        assert!(text.contains("idle{dev=0}") && text.contains("idle{dev=1}"), "{text}");
+    }
+
+    #[test]
+    fn sink_caps_and_accounts_for_drops() {
+        let hub = TelemetryHub::with_max_events(2);
+        for i in 0..5 {
+            hub.iteration_start(i);
+            hub.counter("n", Labels::None, 1);
+            hub.iteration_end();
+        }
+        let stats = hub.stats();
+        assert_eq!(stats.iterations, 5);
+        assert_eq!(stats.recorded, 2);
+        assert_eq!(stats.dropped, 3);
+        assert_eq!(stats.dropped_first, Some(2));
+        assert_eq!(stats.dropped_last, Some(4));
+        let msg = stats.drop_message().expect("drops must be reported");
+        assert!(msg.contains("3 of 5") && msg.contains("2..=4"), "{msg}");
+        // Aggregates still see every iteration.
+        assert_eq!(hub.counter_total("n", Labels::None), 5);
+        // Lines: header + 2 records + summary.
+        assert_eq!(hub.to_jsonl().lines().count(), 4);
+    }
+
+    #[test]
+    fn every_line_is_schema_stamped_json() {
+        let hub = TelemetryHub::new();
+        hub.set_meta("mode", json::s("test"));
+        hub.set_context("policy", json::s("pro-prophet"));
+        hub.iteration_start(0);
+        hub.observe("phase", Labels::None, 0.25);
+        hub.iteration_end();
+        for line in hub.to_jsonl().lines() {
+            let v = json::parse(line).expect("valid JSON");
+            assert_eq!(v.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        }
+        let text = hub.to_jsonl();
+        assert!(text.contains("\"policy\":\"pro-prophet\""), "{text}");
+        assert!(text.contains("\"mode\":\"test\""), "{text}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Telemetry: structured per-iteration metrics for the host-side phases.
+//!
+//! Pro-Prophet's premise is that *recorded* statistics drive planning, so
+//! the simulator/trainer record their own runtime statistics the same way:
+//! a dependency-free [`Recorder`] trait (counters / gauges / span samples),
+//! a [`TelemetryHub`] implementation that aggregates per iteration and
+//! whole-run, and a schema-versioned JSONL sink rendered by the `report`
+//! CLI subcommand.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero cost when off.** The default recorder is [`NoopRecorder`];
+//!    [`Span::enter`] never reads the clock unless `enabled()` is true, no
+//!    method allocates, and instrumented hot paths stay bit-identical to
+//!    the uninstrumented ones (pinned by `integration_obs.rs` against the
+//!    frozen oracles).
+//! 2. **Static metric identity.** Metric names are `&'static str` and
+//!    labels are the alloc-free [`Labels`] enum, so recording a sample is
+//!    a mutex lock plus a `BTreeMap` update — no formatting on the hot
+//!    path. Names are only rendered (`name{k=v}`) when the sink is
+//!    written.
+//! 3. **Bounded sinks, no silent caps.** The hub keeps at most
+//!    `max_events` per-iteration records; anything beyond is counted and
+//!    reported (dropped count + iteration range) in both the JSONL
+//!    summary line and [`SinkStats::drop_message`].
+//!
+//! The JSONL contract (schema [`SCHEMA`]): line 1 is a `kind = "run"`
+//! header, then one `kind = "iteration"` record per retained iteration,
+//! then a final `kind = "summary"` line with whole-run aggregates. See
+//! EXPERIMENTS.md §Observability for the metric catalog.
+
+mod hub;
+pub mod report;
+
+pub use hub::{Agg, SinkStats, TelemetryHub};
+
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// Schema identifier stamped on every JSONL line. Bump the `/vN` suffix
+/// on any breaking change to the record shapes; `report` refuses files
+/// it cannot read rather than mis-rendering them.
+pub const SCHEMA: &str = "pro-prophet-metrics/v1";
+
+/// Default cap on retained per-iteration records (and Chrome-trace op
+/// events) — large enough for any current experiment, small enough that
+/// a runaway loop cannot fill a disk.
+pub const DEFAULT_MAX_EVENTS: usize = 100_000;
+
+/// `[obs]` table of an experiment config: where the metrics JSONL goes
+/// and how many per-iteration records the sink retains.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Metrics JSONL path; `None` leaves telemetry off (the default).
+    pub metrics_path: Option<String>,
+    /// Sink retention cap (see [`DEFAULT_MAX_EVENTS`]).
+    pub max_events: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { metrics_path: None, max_events: DEFAULT_MAX_EVENTS }
+    }
+}
+
+/// Alloc-free metric labels. At most two key/value pairs — enough for
+/// `{dev=5}` / `{layer=3,dev=5}` style dimensions without touching the
+/// heap on the recording path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Labels {
+    None,
+    One(&'static str, i64),
+    Two((&'static str, i64), (&'static str, i64)),
+}
+
+impl Labels {
+    pub fn one(key: &'static str, value: i64) -> Labels {
+        Labels::One(key, value)
+    }
+
+    /// Rendered suffix for sink keys: `""`, `"{k=v}"`, or `"{a=1,b=2}"`.
+    pub fn suffix(&self) -> String {
+        match self {
+            Labels::None => String::new(),
+            Labels::One(k, v) => format!("{{{k}={v}}}"),
+            Labels::Two((k1, v1), (k2, v2)) => format!("{{{k1}={v1},{k2}={v2}}}"),
+        }
+    }
+}
+
+/// Metric sink interface. All methods default to no-ops so `dyn
+/// Recorder` call sites cost one virtual call when telemetry is off;
+/// implementations must be `Send + Sync` because `BalancerSession`
+/// fans `decide` out over scoped threads.
+pub trait Recorder: Send + Sync {
+    /// `false` (the default) lets callers skip sample *construction* —
+    /// most importantly the `Instant::now()` pair inside [`Span`].
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    /// Monotonic count (events processed, plans run, tokens seen).
+    fn counter(&self, _name: &'static str, _labels: Labels, _delta: u64) {}
+
+    /// Point-in-time value (balance degree, loss, makespan seconds).
+    fn gauge(&self, _name: &'static str, _labels: Labels, _value: f64) {}
+
+    /// One duration/histogram sample in seconds ([`Span`] calls this).
+    fn observe(&self, _name: &'static str, _labels: Labels, _seconds: f64) {}
+
+    /// Open the per-iteration scope `index` (0-based sim iteration or
+    /// 1-based train step — the producer picks the numbering).
+    fn iteration_start(&self, _index: usize) {}
+
+    /// Close the current per-iteration scope and flush it to the sink.
+    fn iteration_end(&self) {}
+}
+
+/// RAII span: times a region and records it via [`Recorder::observe`]
+/// on drop. When the recorder is disabled the guard holds nothing and
+/// never reads the clock.
+#[must_use = "a span measures until it is dropped; binding to _ drops immediately"]
+pub struct Span<'a> {
+    armed: Option<(&'a dyn Recorder, &'static str, Labels, Instant)>,
+}
+
+impl<'a> Span<'a> {
+    pub fn enter(rec: &'a dyn Recorder, name: &'static str, labels: Labels) -> Span<'a> {
+        let armed =
+            if rec.enabled() { Some((rec, name, labels, Instant::now())) } else { None };
+        Span { armed }
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some((rec, name, labels, t0)) = self.armed.take() {
+            rec.observe(name, labels, t0.elapsed().as_secs_f64());
+        }
+    }
+}
+
+/// The disabled recorder: every method is the trait default no-op.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopRecorder;
+
+impl Recorder for NoopRecorder {}
+
+static NOOP: NoopRecorder = NoopRecorder;
+
+/// Borrowed disabled recorder for `DecideCtx`-style plumbing.
+pub fn noop() -> &'static dyn Recorder {
+    &NOOP
+}
+
+/// Shared disabled recorder for owner structs (`BalancerSession`,
+/// `Trainer`); allocated once per process.
+pub fn noop_arc() -> Arc<dyn Recorder> {
+    static CELL: OnceLock<Arc<NoopRecorder>> = OnceLock::new();
+    CELL.get_or_init(|| Arc::new(NoopRecorder)).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_render_stable_suffixes() {
+        assert_eq!(Labels::None.suffix(), "");
+        assert_eq!(Labels::one("dev", 5).suffix(), "{dev=5}");
+        assert_eq!(Labels::Two(("layer", 3), ("dev", 5)).suffix(), "{layer=3,dev=5}");
+    }
+
+    #[test]
+    fn noop_recorder_is_disabled_and_inert() {
+        let rec = noop();
+        assert!(!rec.enabled());
+        rec.counter("x", Labels::None, 1);
+        rec.gauge("x", Labels::None, 1.0);
+        rec.observe("x", Labels::None, 1.0);
+        rec.iteration_start(0);
+        rec.iteration_end();
+        // A span over a disabled recorder never arms.
+        let sp = Span::enter(rec, "x", Labels::None);
+        assert!(sp.armed.is_none());
+    }
+
+    #[test]
+    fn span_records_into_an_enabled_recorder() {
+        let hub = TelemetryHub::new();
+        {
+            let _sp = Span::enter(&hub, "unit.span", Labels::None);
+        }
+        let agg = hub.span_agg("unit.span", Labels::None).expect("span recorded");
+        assert_eq!(agg.count, 1);
+        assert!(agg.total >= 0.0);
+    }
+
+    #[test]
+    fn noop_arc_is_shared() {
+        let a = noop_arc();
+        let b = noop_arc();
+        assert!(!a.enabled() && !b.enabled());
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,444 @@
+//! Read side of the metrics contract: parse a metrics JSONL back into a
+//! [`MetricsDoc`] and render it with the repo's `TableReport`, including
+//! A/B deltas between two runs (`report --metrics A --baseline B`).
+
+use super::SCHEMA;
+use crate::metrics::TableReport;
+use crate::util::json::{self, Json};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Span aggregate as read from a metrics file (all fields in seconds
+/// except `count`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpanAgg {
+    pub count: f64,
+    pub total_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+/// Gauge aggregate as read from a metrics file.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GaugeAgg {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub last: f64,
+}
+
+/// A parsed metrics JSONL: run header fields plus whole-run aggregates.
+/// Aggregates come from the trailing summary line when present, and are
+/// re-folded from the iteration records otherwise (truncated files from
+/// killed runs still render).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsDoc {
+    pub schema: String,
+    pub meta: BTreeMap<String, Json>,
+    /// Iterations the producer saw (including dropped records).
+    pub iterations: usize,
+    /// Iteration records present in the file.
+    pub recorded: usize,
+    pub dropped: usize,
+    pub counters: BTreeMap<String, f64>,
+    pub gauges: BTreeMap<String, GaugeAgg>,
+    pub spans: BTreeMap<String, SpanAgg>,
+}
+
+impl MetricsDoc {
+    /// Every metric name in the document (for unknown-metric errors).
+    pub fn metric_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        names.extend(self.spans.keys().cloned());
+        names.extend(self.counters.keys().cloned());
+        names.extend(self.gauges.keys().cloned());
+        names
+    }
+}
+
+fn f(v: Option<&Json>) -> f64 {
+    v.and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+fn read_span_agg(v: &Json) -> SpanAgg {
+    SpanAgg {
+        count: f(v.get("count")),
+        total_s: f(v.get("total_s")),
+        mean_s: f(v.get("mean_s")),
+        min_s: f(v.get("min_s")),
+        max_s: f(v.get("max_s")),
+    }
+}
+
+fn read_gauge_agg(v: &Json) -> GaugeAgg {
+    GaugeAgg {
+        mean: f(v.get("mean")),
+        min: f(v.get("min")),
+        max: f(v.get("max")),
+        last: f(v.get("last")),
+    }
+}
+
+/// Parse one metrics JSONL document. Errors carry 1-based line numbers;
+/// a schema mismatch is an error, not a warning — mis-rendering a file
+/// from a different build is worse than refusing it.
+pub fn parse_jsonl(text: &str) -> Result<MetricsDoc, String> {
+    let mut doc = MetricsDoc { schema: SCHEMA.to_string(), ..Default::default() };
+    let mut saw_header = false;
+    let mut saw_summary = false;
+    // Kept for re-folding when the summary line is missing.
+    let mut iter_records: Vec<Json> = Vec::new();
+
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ln = i + 1;
+        let v = json::parse(line).map_err(|e| format!("line {ln}: not valid JSON ({e})"))?;
+        let schema = v
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("line {ln}: missing \"schema\" field"))?;
+        if schema != SCHEMA {
+            return Err(format!(
+                "line {ln}: unsupported schema {schema:?} (this build reads {SCHEMA:?})"
+            ));
+        }
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("line {ln}: missing \"kind\" field"))?;
+        match kind {
+            "run" => {
+                saw_header = true;
+                if let Some(obj) = v.as_obj() {
+                    for (k, val) in obj {
+                        if k != "schema" && k != "kind" {
+                            doc.meta.insert(k.clone(), val.clone());
+                        }
+                    }
+                }
+            }
+            "iteration" => {
+                doc.recorded += 1;
+                iter_records.push(v);
+            }
+            "summary" => {
+                saw_summary = true;
+                doc.iterations = f(v.get("iterations")) as usize;
+                doc.dropped = f(v.get("dropped")) as usize;
+                if let Some(obj) = v.get("counters").and_then(Json::as_obj) {
+                    for (k, val) in obj {
+                        doc.counters.insert(k.clone(), f(Some(val)));
+                    }
+                }
+                if let Some(obj) = v.get("gauges").and_then(Json::as_obj) {
+                    for (k, val) in obj {
+                        doc.gauges.insert(k.clone(), read_gauge_agg(val));
+                    }
+                }
+                if let Some(obj) = v.get("spans").and_then(Json::as_obj) {
+                    for (k, val) in obj {
+                        doc.spans.insert(k.clone(), read_span_agg(val));
+                    }
+                }
+            }
+            // Unknown kinds from a newer minor revision are skipped.
+            _ => {}
+        }
+    }
+
+    if !saw_header {
+        return Err(format!(
+            "no run header line (kind=\"run\", schema {SCHEMA:?}) — not a pro-prophet metrics JSONL"
+        ));
+    }
+    if !saw_summary {
+        doc.iterations = doc.recorded;
+        fold_iterations(&mut doc, &iter_records);
+    }
+    Ok(doc)
+}
+
+/// Rebuild whole-run aggregates from per-iteration records (summary
+/// line missing, e.g. a run killed mid-flight).
+fn fold_iterations(doc: &mut MetricsDoc, records: &[Json]) {
+    for rec in records {
+        if let Some(obj) = rec.get("counters").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                *doc.counters.entry(k.clone()).or_insert(0.0) += f(Some(v));
+            }
+        }
+        if let Some(obj) = rec.get("gauges").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                let x = f(Some(v));
+                let g = doc.gauges.entry(k.clone()).or_insert(GaugeAgg {
+                    mean: 0.0,
+                    min: x,
+                    max: x,
+                    last: x,
+                });
+                g.min = g.min.min(x);
+                g.max = g.max.max(x);
+                g.last = x;
+                // mean field abused as a running sum; normalized below.
+                g.mean += x;
+            }
+        }
+        if let Some(obj) = rec.get("spans").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                let s = read_span_agg(v);
+                let agg = doc.spans.entry(k.clone()).or_insert(SpanAgg {
+                    count: 0.0,
+                    total_s: 0.0,
+                    mean_s: 0.0,
+                    min_s: s.min_s,
+                    max_s: s.max_s,
+                });
+                agg.count += s.count;
+                agg.total_s += s.total_s;
+                agg.min_s = agg.min_s.min(s.min_s);
+                agg.max_s = agg.max_s.max(s.max_s);
+            }
+        }
+    }
+    let n = doc.recorded.max(1) as f64;
+    for g in doc.gauges.values_mut() {
+        g.mean /= n;
+    }
+    for s in doc.spans.values_mut() {
+        if s.count > 0.0 {
+            s.mean_s = s.total_s / s.count;
+        }
+    }
+}
+
+/// Substring-filter all three metric families; an empty intersection is
+/// the unknown-metric error (which lists what the file does contain).
+#[allow(clippy::type_complexity)]
+fn filtered(
+    doc: &MetricsDoc,
+    filter: Option<&str>,
+) -> Result<
+    (BTreeMap<String, SpanAgg>, BTreeMap<String, f64>, BTreeMap<String, GaugeAgg>),
+    String,
+> {
+    let keep = |k: &str| filter.map(|q| k.contains(q)).unwrap_or(true);
+    let spans: BTreeMap<String, SpanAgg> =
+        doc.spans.iter().filter(|(k, _)| keep(k)).map(|(k, v)| (k.clone(), *v)).collect();
+    let counters: BTreeMap<String, f64> =
+        doc.counters.iter().filter(|(k, _)| keep(k)).map(|(k, v)| (k.clone(), *v)).collect();
+    let gauges: BTreeMap<String, GaugeAgg> =
+        doc.gauges.iter().filter(|(k, _)| keep(k)).map(|(k, v)| (k.clone(), *v)).collect();
+    if let Some(q) = filter {
+        if spans.is_empty() && counters.is_empty() && gauges.is_empty() {
+            return Err(unknown_metric(q, doc));
+        }
+    }
+    Ok((spans, counters, gauges))
+}
+
+fn unknown_metric(q: &str, doc: &MetricsDoc) -> String {
+    let names = doc.metric_names();
+    if names.is_empty() {
+        format!("unknown metric {q:?}: the file records no metrics")
+    } else {
+        format!("unknown metric {q:?} (file has: {})", names.join(", "))
+    }
+}
+
+fn header_line(doc: &MetricsDoc) -> String {
+    let mut line = format!(
+        "metrics: schema {}, {} iterations ({} recorded, {} dropped)",
+        doc.schema, doc.iterations, doc.recorded, doc.dropped
+    );
+    for (k, v) in &doc.meta {
+        let val = match v {
+            Json::Str(s) => s.clone(),
+            other => other.to_string(),
+        };
+        line.push_str(&format!("  {k}={val}"));
+    }
+    line.push('\n');
+    line
+}
+
+/// Render one metrics document as `TableReport` tables (span timings,
+/// counters, gauges), optionally filtered to metrics containing
+/// `filter`. Span columns are scaled to milliseconds so the table's
+/// three decimals keep microsecond resolution; the JSONL itself always
+/// carries seconds.
+pub fn render(doc: &MetricsDoc, filter: Option<&str>) -> Result<String, String> {
+    let (spans, counters, gauges) = filtered(doc, filter)?;
+    let mut out = header_line(doc);
+
+    if !spans.is_empty() {
+        let mut t = TableReport::new(
+            "span timings (milliseconds)",
+            &["count", "total_ms", "mean_ms", "min_ms", "max_ms"],
+        );
+        for (name, s) in &spans {
+            t.row(
+                name,
+                vec![s.count, s.total_s * 1e3, s.mean_s * 1e3, s.min_s * 1e3, s.max_s * 1e3],
+            );
+        }
+        out.push_str(&t.render());
+    }
+    if !counters.is_empty() {
+        let mut t = TableReport::new("counters", &["total", "per_iter"]);
+        let n = doc.iterations.max(1) as f64;
+        for (name, total) in &counters {
+            t.row(name, vec![*total, total / n]);
+        }
+        out.push_str(&t.render());
+    }
+    if !gauges.is_empty() {
+        let mut t = TableReport::new("gauges", &["mean", "min", "max", "last"]);
+        for (name, g) in &gauges {
+            t.row(name, vec![g.mean, g.min, g.max, g.last]);
+        }
+        out.push_str(&t.render());
+    }
+    Ok(out)
+}
+
+/// One comparable scalar per metric: spans compare total milliseconds,
+/// counters their totals, gauges their means.
+fn scalar_view(doc: &MetricsDoc) -> BTreeMap<String, f64> {
+    let mut m = BTreeMap::new();
+    for (k, s) in &doc.spans {
+        m.insert(format!("{k}.total_ms"), s.total_s * 1e3);
+    }
+    for (k, v) in &doc.counters {
+        m.insert(k.clone(), *v);
+    }
+    for (k, g) in &doc.gauges {
+        m.insert(format!("{k}.mean"), g.mean);
+    }
+    m
+}
+
+/// A/B diff: one row per metric present in either run, with delta
+/// (a - b) and ratio (a / b) columns.
+pub fn render_diff(a: &MetricsDoc, b: &MetricsDoc, filter: Option<&str>) -> Result<String, String> {
+    let va = scalar_view(a);
+    let vb = scalar_view(b);
+    let keys: BTreeSet<String> = va
+        .keys()
+        .chain(vb.keys())
+        .filter(|k| filter.map(|q| k.contains(q)).unwrap_or(true))
+        .cloned()
+        .collect();
+    if keys.is_empty() {
+        if let Some(q) = filter {
+            return Err(unknown_metric(q, if va.len() >= vb.len() { a } else { b }));
+        }
+        return Err("neither run records any metrics".to_string());
+    }
+    let mut out = String::from("A = --metrics run, B = --baseline run\n");
+    let mut t = TableReport::new("A/B metric deltas", &["a", "b", "delta", "ratio"]);
+    for k in &keys {
+        let x = va.get(k).copied().unwrap_or(f64::NAN);
+        let y = vb.get(k).copied().unwrap_or(f64::NAN);
+        let ratio = if y == 0.0 { f64::NAN } else { x / y };
+        t.row(k, vec![x, y, x - y, ratio]);
+    }
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Labels, Recorder, TelemetryHub};
+
+    fn sample_hub() -> TelemetryHub {
+        let hub = TelemetryHub::new();
+        hub.set_meta("mode", json::s("test"));
+        for i in 0..3 {
+            hub.iteration_start(i);
+            hub.counter("des.events", Labels::None, 100);
+            hub.gauge("balance", Labels::None, 0.5 + i as f64 * 0.1);
+            hub.observe("des.execute", Labels::None, 0.002);
+            hub.iteration_end();
+        }
+        hub
+    }
+
+    #[test]
+    fn round_trip_matches_hub_aggregates() {
+        let hub = sample_hub();
+        let doc = parse_jsonl(&hub.to_jsonl()).unwrap();
+        assert_eq!(doc.iterations, 3);
+        assert_eq!(doc.recorded, 3);
+        assert_eq!(doc.dropped, 0);
+        assert_eq!(doc.counters.get("des.events"), Some(&300.0));
+        let s = doc.spans.get("des.execute").unwrap();
+        assert_eq!(s.count, 3.0);
+        assert!((s.total_s - 0.006).abs() < 1e-9);
+        let g = doc.gauges.get("balance").unwrap();
+        assert!((g.mean - 0.6).abs() < 1e-9);
+        assert_eq!(g.last, 0.7);
+    }
+
+    #[test]
+    fn truncated_file_refolds_from_iteration_records() {
+        let hub = sample_hub();
+        let full = hub.to_jsonl();
+        // Drop the trailing summary line, as a killed run would.
+        let truncated: String =
+            full.lines().take(full.lines().count() - 1).map(|l| format!("{l}\n")).collect();
+        let doc = parse_jsonl(&truncated).unwrap();
+        assert_eq!(doc.iterations, 3);
+        assert_eq!(doc.counters.get("des.events"), Some(&300.0));
+        let s = doc.spans.get("des.execute").unwrap();
+        assert_eq!(s.count, 3.0);
+        assert!((s.mean_s - 0.002).abs() < 1e-9);
+        let g = doc.gauges.get("balance").unwrap();
+        assert!((g.mean - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = parse_jsonl("not json\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let hub = sample_hub();
+        let mut text = hub.to_jsonl();
+        text.push_str("{\"schema\":\"other/v9\",\"kind\":\"run\"}\n");
+        let err = parse_jsonl(&text).unwrap_err();
+        assert!(err.contains("unsupported schema") && err.contains("other/v9"), "{err}");
+        let err = parse_jsonl("").unwrap_err();
+        assert!(err.contains("no run header"), "{err}");
+    }
+
+    #[test]
+    fn render_filters_and_rejects_unknown_metrics() {
+        let doc = parse_jsonl(&sample_hub().to_jsonl()).unwrap();
+        let all = render(&doc, None).unwrap();
+        assert!(all.contains("des.execute") && all.contains("des.events"), "{all}");
+        assert!(all.contains("span timings"), "{all}");
+        let only = render(&doc, Some("des.")).unwrap();
+        assert!(only.contains("des.execute") && !only.contains("gauges"), "{only}");
+        let err = render(&doc, Some("warpdrive")).unwrap_err();
+        assert!(err.contains("unknown metric") && err.contains("des.events"), "{err}");
+    }
+
+    #[test]
+    fn diff_reports_deltas_per_metric() {
+        let a = parse_jsonl(&sample_hub().to_jsonl()).unwrap();
+        let hub_b = TelemetryHub::new();
+        hub_b.iteration_start(0);
+        hub_b.counter("des.events", Labels::None, 100);
+        hub_b.iteration_end();
+        let b = parse_jsonl(&hub_b.to_jsonl()).unwrap();
+        let out = render_diff(&a, &b, None).unwrap();
+        assert!(out.contains("des.events"), "{out}");
+        assert!(out.contains("delta"), "{out}");
+        // a-only metric still shows up.
+        assert!(out.contains("balance.mean"), "{out}");
+        let err = render_diff(&a, &b, Some("nope")).unwrap_err();
+        assert!(err.contains("unknown metric"), "{err}");
+    }
+}

@@ -80,6 +80,9 @@ pub struct Planner {
     drift: Option<DriftDetector>,
     /// Wall-clock seconds spent inside greedy_search (the real Plan cost).
     pub search_seconds: f64,
+    /// Candidate placements the greedy search evaluated, summed over
+    /// every search (the telemetry layer reports candidates/search).
+    pub candidates_evaluated: usize,
     /// Reusable search buffers (incremental routing state, BottomK
     /// ordering): steady-state planning allocates nothing.
     scratch: SearchScratch,
@@ -97,6 +100,7 @@ impl Planner {
             planned_dist: None,
             drift: None,
             search_seconds: 0.0,
+            candidates_evaluated: 0,
             scratch: SearchScratch::new(),
         }
     }
@@ -117,6 +121,7 @@ impl Planner {
         let start = std::time::Instant::now();
         let result = greedy_search_with(w, pm, &self.cfg, &mut self.scratch);
         self.search_seconds += start.elapsed().as_secs_f64();
+        self.candidates_evaluated += result.evaluated;
         self.plans_run += 1;
         self.iters_since_plan = 1;
         let placement = Arc::new(result.placement);

@@ -52,6 +52,7 @@ use crate::cluster::ClusterSpec;
 use crate::config::ModelSpec;
 use crate::metrics::balance_degree;
 use crate::moe::{LoadMatrix, Placement};
+use crate::obs::{self, Labels, Recorder, Span};
 use crate::perfmodel::PerfModel;
 use crate::scheduler::{
     build_blocking, build_blockwise, build_blockwise_dag, dag, BlockCosts, DeviceBlockCosts,
@@ -358,6 +359,7 @@ fn price_iteration(
     pm: &PerfModel,
     session: &BalancerSession,
     layers: &[LoadMatrix],
+    rec: &dyn Recorder,
 ) -> (PricedIteration, OpDag) {
     let n_layers = layers.len();
     let n_devices = eng.cluster.n_devices();
@@ -404,13 +406,24 @@ fn price_iteration(
     // DagRelaxed executes Algorithm 2 as the true-dependency DAG — no
     // cross-stream barriers, per-device Fig-9c splits — every iteration,
     // homogeneous and heterogeneous alike.
-    let op_dag = if kind == ScheduleKind::DagRelaxed {
-        build_blockwise_dag(&dev_costs, SplitMode::Split)
-    } else {
-        dag_from_schedule_with_costs(&schedule, &costs, &dev_costs, n_devices)
+    let op_dag = {
+        let _sp = Span::enter(rec, "des.lower", Labels::None);
+        if kind == ScheduleKind::DagRelaxed {
+            build_blockwise_dag(&dev_costs, SplitMode::Split)
+        } else {
+            dag_from_schedule_with_costs(&schedule, &costs, &dev_costs, n_devices)
+        }
     };
     debug_assert!(op_dag.validate().is_ok());
-    let des = events::execute(&op_dag);
+    let des = {
+        let _sp = Span::enter(rec, "des.execute", Labels::None);
+        events::execute(&op_dag)
+    };
+    if rec.enabled() {
+        // The DES walks every (op, device) pair once.
+        rec.counter("des.events", Labels::None, (op_dag.len() * n_devices) as u64);
+        rec.gauge("des.makespan_s", Labels::None, des.makespan);
+    }
 
     (
         PricedIteration { schedule, des, kind, bal_before, bal_after, trans_copies },
@@ -432,6 +445,21 @@ pub fn simulate_policy(
     trace: &Trace,
     policy: Box<dyn BalancingPolicy>,
 ) -> SimReport {
+    simulate_policy_with(model, cluster, trace, policy, obs::noop_arc())
+}
+
+/// [`simulate_policy`] with a live telemetry sink: every iteration opens
+/// a recorder scope, the decide/observe/DES phases are span-timed, and
+/// per-device busy/idle/exposed seconds plus the straggler id are
+/// gauged.  With the no-op recorder this is exactly [`simulate_policy`]
+/// — same results bit-for-bit (pinned by `integration_obs.rs`).
+pub fn simulate_policy_with(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    trace: &Trace,
+    policy: Box<dyn BalancingPolicy>,
+    rec: std::sync::Arc<dyn Recorder>,
+) -> SimReport {
     let pm = PerfModel::new(model, cluster);
     let eng = Engine::new(cluster, &pm);
     let n_layers = trace.n_layers;
@@ -439,11 +467,13 @@ pub fn simulate_policy(
         return SimReport { policy: policy.name(), ..Default::default() };
     }
     let heterogeneous = cluster.is_heterogeneous();
-    let mut session = BalancerSession::new(policy, n_layers);
+    let mut session = BalancerSession::with_recorder(policy, n_layers, rec.clone());
     let mut report = SimReport { policy: session.policy_name(), ..Default::default() };
 
-    for layers in trace.iterations.iter() {
-        let (priced, _dag) = price_iteration(&eng, &pm, &session, layers);
+    for (iter_index, layers) in trace.iterations.iter().enumerate() {
+        rec.iteration_start(iter_index);
+        let sp_iter = Span::enter(&*rec, "sim.iteration", Labels::None);
+        let (priced, _dag) = price_iteration(&eng, &pm, &session, layers, &*rec);
 
         // Phase 2 (sequential): the session's observe→score→drift→
         // invalidate loop over the actual gating results.
@@ -475,6 +505,21 @@ pub fn simulate_policy(
             )
         };
 
+        if rec.enabled() {
+            rec.gauge("sim.iter_time_s", Labels::None, time);
+            rec.gauge("sim.barrier_time_s", Labels::None, priced.schedule.total_time());
+            rec.gauge("sim.balance_before", Labels::None, priced.bal_before);
+            rec.gauge("sim.balance_after", Labels::None, priced.bal_after);
+            rec.gauge("des.straggler_device", Labels::None, priced.des.straggler as f64);
+            for (d, stats) in priced.des.devices.iter().enumerate() {
+                let dev = Labels::one("dev", d as i64);
+                rec.gauge("des.device_busy_comp_s", dev, stats.busy_comp);
+                rec.gauge("des.device_busy_comm_s", dev, stats.busy_comm);
+                rec.gauge("des.device_exposed_comm_s", dev, stats.exposed_comm);
+                rec.gauge("des.device_idle_s", dev, stats.idle);
+            }
+        }
+
         report.iters.push(IterationResult {
             time,
             barrier_time: priced.schedule.total_time(),
@@ -488,6 +533,8 @@ pub fn simulate_policy(
             devices: priced.des.devices,
             straggler: priced.des.straggler,
         });
+        drop(sp_iter);
+        rec.iteration_end();
     }
 
     let counters = session.counters();
@@ -514,7 +561,7 @@ pub fn iteration_des(
     let eng = Engine::new(cluster, &pm);
     let mut session = BalancerSession::new(policy, trace.n_layers);
     for (i, layers) in trace.iterations.iter().enumerate() {
-        let (priced, op_dag) = price_iteration(&eng, &pm, &session, layers);
+        let (priced, op_dag) = price_iteration(&eng, &pm, &session, layers, obs::noop());
         if i == index {
             return Some((op_dag, priced.des));
         }

@@ -96,6 +96,45 @@ fn des_tid(dev: usize, stream: Stream) -> f64 {
 /// lane pair per device (named via thread_name metadata), ops placed at
 /// their simulated start times.
 pub fn to_chrome_trace_des(dag: &OpDag, des: &DesResult) -> Json {
+    to_chrome_trace_des_bounded(dag, des, None, None).0
+}
+
+/// Per-iteration scalars rendered as Chrome counter tracks ("C" events)
+/// alongside the per-device lanes, so one trace file carries both the
+/// timeline and the balance story.
+#[derive(Clone, Debug)]
+pub struct CounterTracks {
+    /// Balance degree before placement (plotted at t = 0).
+    pub balance_before: f64,
+    /// Balance degree after placement (plotted at the makespan).
+    pub balance_after: f64,
+    /// Critical-path device id.
+    pub straggler: usize,
+    /// Per-device exposed communication seconds.
+    pub exposed_comm: Vec<f64>,
+}
+
+/// What a bounded DES export kept (metadata and counter events are
+/// never capped — only the per-(op, device) X events are).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DesTraceStats {
+    /// X events the DAG would emit uncapped.
+    pub total_ops: usize,
+    pub emitted_ops: usize,
+    pub dropped_ops: usize,
+}
+
+/// [`to_chrome_trace_des`] with optional counter tracks and an op-event
+/// cap.  Dropped events are *counted*, never silent: callers print
+/// [`DesTraceStats`] when `dropped_ops > 0`.
+pub fn to_chrome_trace_des_bounded(
+    dag: &OpDag,
+    des: &DesResult,
+    counters: Option<&CounterTracks>,
+    max_events: Option<usize>,
+) -> (Json, DesTraceStats) {
+    let cap = max_events.unwrap_or(usize::MAX);
+    let mut stats = DesTraceStats::default();
     let mut events: Vec<Json> = Vec::new();
     // Lane names: "dev3 comp" / "dev3 comm".
     for dev in 0..dag.n_devices {
@@ -117,6 +156,11 @@ pub fn to_chrome_trace_des(dag: &OpDag, des: &DesResult) -> Json {
             if node.dur[dev] <= 0.0 {
                 continue;
             }
+            stats.total_ops += 1;
+            if stats.emitted_ops >= cap {
+                continue;
+            }
+            stats.emitted_ops += 1;
             events.push(json::obj(vec![
                 ("name", json::s(&format!("{:?}", node.op))),
                 ("ph", json::s("X")),
@@ -127,10 +171,46 @@ pub fn to_chrome_trace_des(dag: &OpDag, des: &DesResult) -> Json {
             ]));
         }
     }
-    json::obj(vec![
-        ("traceEvents", Json::Arr(events)),
-        ("displayTimeUnit", json::s("ms")),
-    ])
+    stats.dropped_ops = stats.total_ops - stats.emitted_ops;
+    if let Some(c) = counters {
+        let end_us = des.makespan * 1e6;
+        for (ts, value) in [(0.0, c.balance_before), (end_us, c.balance_after)] {
+            events.push(json::obj(vec![
+                ("name", json::s("balance_degree")),
+                ("ph", json::s("C")),
+                ("pid", json::num(1.0)),
+                ("ts", json::num(ts)),
+                ("args", json::obj(vec![("balance", json::num(value))])),
+            ]));
+        }
+        events.push(json::obj(vec![
+            ("name", json::s("straggler")),
+            ("ph", json::s("C")),
+            ("pid", json::num(1.0)),
+            ("ts", json::num(0.0)),
+            ("args", json::obj(vec![("device", json::num(c.straggler as f64))])),
+        ]));
+        let devs: std::collections::BTreeMap<String, Json> = c
+            .exposed_comm
+            .iter()
+            .enumerate()
+            .map(|(d, &v)| (format!("dev{d}"), json::num(v)))
+            .collect();
+        events.push(json::obj(vec![
+            ("name", json::s("exposed_comm_s")),
+            ("ph", json::s("C")),
+            ("pid", json::num(1.0)),
+            ("ts", json::num(end_us)),
+            ("args", Json::Obj(devs)),
+        ]));
+    }
+    (
+        json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", json::s("ms")),
+        ]),
+        stats,
+    )
 }
 
 /// Write an executed DAG's per-device trace next to other results.
@@ -213,6 +293,63 @@ mod tests {
             .map(|e| e.get("tid").unwrap().as_f64().unwrap() as i64)
             .collect();
         assert!(tids.len() >= d, "per-device lanes missing: {tids:?}");
+    }
+
+    #[test]
+    fn des_trace_counter_tracks_and_cap() {
+        use crate::scheduler::dag::from_schedule;
+        use crate::sim::events;
+        let s = sched();
+        let d = 3;
+        let dag = from_schedule(&s, d);
+        let des = events::execute(&dag);
+        let tracks = CounterTracks {
+            balance_before: 0.4,
+            balance_after: 0.9,
+            straggler: 2,
+            exposed_comm: vec![0.1, 0.2, 0.3],
+        };
+        let (j, stats) = to_chrome_trace_des_bounded(&dag, &des, Some(&tracks), None);
+        assert_eq!(stats.total_ops, 3 * d);
+        assert_eq!(stats.emitted_ops, 3 * d);
+        assert_eq!(stats.dropped_ops, 0);
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let cs: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("C"))
+            .collect();
+        // 2 balance_degree samples + straggler + exposed_comm_s.
+        assert_eq!(cs.len(), 4);
+        let names: std::collections::BTreeSet<&str> =
+            cs.iter().filter_map(|e| e.get("name").unwrap().as_str()).collect();
+        assert!(names.contains("balance_degree"));
+        assert!(names.contains("straggler"));
+        assert!(names.contains("exposed_comm_s"));
+        let exposed = cs
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("exposed_comm_s"))
+            .unwrap();
+        let args = exposed.get("args").unwrap();
+        assert_eq!(args.get("dev2").unwrap().as_f64(), Some(0.3));
+
+        // Cap at 4 X events: metadata and counters survive, ops drop.
+        let (jc, capped) = to_chrome_trace_des_bounded(&dag, &des, Some(&tracks), Some(4));
+        assert_eq!(capped.total_ops, 3 * d);
+        assert_eq!(capped.emitted_ops, 4);
+        assert_eq!(capped.dropped_ops, 3 * d - 4);
+        let parsed = crate::util::json::parse(&jc.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let xs = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .count();
+        assert_eq!(xs, 4);
+        let metas = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+            .count();
+        assert_eq!(metas, 2 * d);
     }
 
     #[test]

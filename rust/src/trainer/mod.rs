@@ -13,12 +13,14 @@
 use crate::balancer::{registry, BalancerSession, ProphetOptions};
 use crate::config::TrainingConfig;
 use crate::moe::LoadMatrix;
+use crate::obs::{self, Labels, Recorder, SinkStats, Span, TelemetryHub};
 use crate::prophet::Prophet;
 use crate::runtime::{self, Artifact, Manifest, Runtime};
 use crate::util::json::{self, Json};
 use crate::workload::corpus::Corpus;
 use crate::workload::Trace;
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// Result of one training step.
 #[derive(Clone, Debug)]
@@ -142,6 +144,11 @@ pub struct Trainer {
     /// over the manifest's expert-parallel virtual devices); owns the
     /// shared forecasting subsystem.
     session: BalancerSession,
+    /// Telemetry sink when [`TrainingConfig::metrics_path`] is set; None
+    /// keeps the zero-cost no-op recorder on every hot path.
+    hub: Option<Arc<TelemetryHub>>,
+    /// The recorder handed to the session (the hub above, or the no-op).
+    rec: Arc<dyn Recorder>,
 }
 
 impl Trainer {
@@ -166,8 +173,33 @@ impl Trainer {
         let corpus = Corpus::new(manifest.vocab, 4, cfg.seed);
         let policy = registry::build("pro-prophet", &ProphetOptions::default())
             .expect("pro-prophet is always registered");
-        let session = BalancerSession::new(policy, manifest.n_layers.max(1));
-        Ok(Trainer { manifest, cfg, train_step, state, corpus, step: 0, session })
+        let hub = cfg.metrics_path.as_ref().map(|_| {
+            let h = Arc::new(TelemetryHub::with_max_events(cfg.metrics_max_events));
+            h.set_meta("tool", json::s("train"));
+            h.set_meta("preset", json::s(&cfg.preset));
+            h.set_meta("seed", json::num(cfg.seed as f64));
+            h
+        });
+        let rec: Arc<dyn Recorder> = match &hub {
+            Some(h) => h.clone(),
+            None => obs::noop_arc(),
+        };
+        let session =
+            BalancerSession::with_recorder(policy, manifest.n_layers.max(1), rec.clone());
+        Ok(Trainer { manifest, cfg, train_step, state, corpus, step: 0, session, hub, rec })
+    }
+
+    /// Flush recorded metrics to [`TrainingConfig::metrics_path`].
+    /// `Ok(None)` when telemetry is off.
+    pub fn write_metrics(&self) -> Result<Option<(std::path::PathBuf, SinkStats)>> {
+        match (&self.hub, &self.cfg.metrics_path) {
+            (Some(hub), Some(path)) => {
+                let p = std::path::PathBuf::from(path);
+                let stats = hub.write_jsonl(&p)?;
+                Ok(Some((p, stats)))
+            }
+            _ => Ok(None),
+        }
     }
 
     pub fn step_count(&self) -> usize {
@@ -188,6 +220,22 @@ impl Trainer {
 
     /// Execute one fused train step.
     pub fn step(&mut self) -> Result<StepResult> {
+        let rec = self.rec.clone();
+        rec.iteration_start(self.step);
+        let sp = Span::enter(&*rec, "train.step", Labels::None);
+        let result = self.step_inner();
+        drop(sp);
+        if rec.enabled() {
+            if let Ok(r) = &result {
+                rec.gauge("train.loss", Labels::None, r.loss as f64);
+                rec.gauge("train.step_s", Labels::None, r.seconds);
+            }
+        }
+        rec.iteration_end();
+        result
+    }
+
+    fn step_inner(&mut self) -> Result<StepResult> {
         let man = &self.manifest;
         let start = std::time::Instant::now();
         self.step += 1;

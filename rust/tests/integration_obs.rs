@@ -1,0 +1,345 @@
+//! Integration: the telemetry layer end to end — no-op equivalence
+//! (telemetry off changes nothing, bit for bit), hub-instrumented runs
+//! (telemetry on STILL changes nothing, and records real data), the
+//! schema-versioned JSONL sink with bounded retention, the
+//! `PRO_PROPHET_RESULT_DIR` override, and the `report`/`--metrics` CLI
+//! surface over a shipped example config.
+
+use pro_prophet::balancer::{registry, ProphetOptions};
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::config::ModelSpec;
+use pro_prophet::obs::{self, report, Labels, Recorder, TelemetryHub};
+use pro_prophet::sim::{simulate_policy, simulate_policy_with, SimReport};
+use pro_prophet::util::json;
+use pro_prophet::workload::{Trace, WorkloadConfig, WorkloadGen};
+use std::path::PathBuf;
+use std::process::{Command, Output};
+use std::sync::Arc;
+
+fn run(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_pro-prophet"))
+        .args(args)
+        .output()
+        .expect("failed to spawn pro-prophet binary")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pro_prophet_obs_{}_{name}", std::process::id()))
+}
+
+fn scenario(iters: usize) -> (ModelSpec, ClusterSpec, Trace) {
+    let cluster = ClusterSpec::hpwnv(2); // 8 devices
+    let d = cluster.n_devices();
+    let model = ModelSpec::moe_gpt_s(d, 1, 4096);
+    let mut wcfg = WorkloadConfig::paper_default(model.n_layers, d, d, 4096);
+    wcfg.seed = 7;
+    let trace = Trace::capture(&mut WorkloadGen::new(wcfg), iters);
+    (model, cluster, trace)
+}
+
+fn prophet_report(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    trace: &Trace,
+    rec: Option<Arc<dyn Recorder>>,
+) -> SimReport {
+    let policy = registry::build("pro-prophet", &ProphetOptions::default()).unwrap();
+    match rec {
+        Some(r) => simulate_policy_with(model, cluster, trace, policy, r),
+        None => simulate_policy(model, cluster, trace, policy),
+    }
+}
+
+fn assert_reports_bitwise(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.policy, b.policy);
+    assert_eq!(a.plans_run, b.plans_run);
+    assert_eq!(a.plans_reused, b.plans_reused);
+    assert_eq!(a.drift_replans, b.drift_replans);
+    assert_eq!(a.iters.len(), b.iters.len());
+    for (i, (x, y)) in a.iters.iter().zip(&b.iters).enumerate() {
+        assert_eq!(x.time.to_bits(), y.time.to_bits(), "iter {i}: time");
+        assert_eq!(
+            x.barrier_time.to_bits(),
+            y.barrier_time.to_bits(),
+            "iter {i}: barrier_time"
+        );
+        assert_eq!(x.des_time.to_bits(), y.des_time.to_bits(), "iter {i}: des_time");
+        assert_eq!(
+            x.balance_after.to_bits(),
+            y.balance_after.to_bits(),
+            "iter {i}: balance_after"
+        );
+        assert_eq!(x.trans_copies, y.trans_copies, "iter {i}: trans_copies");
+        assert_eq!(x.straggler, y.straggler, "iter {i}: straggler");
+    }
+}
+
+#[test]
+fn schema_version_is_pinned() {
+    // The schema string IS the compatibility contract between producers
+    // (TelemetryHub::to_jsonl) and consumers (report::parse_jsonl, any
+    // external tooling).  Changing it is a breaking change: bump the
+    // version suffix AND teach parse_jsonl the old one if needed.
+    assert_eq!(obs::SCHEMA, "pro-prophet-metrics/v1");
+}
+
+#[test]
+fn telemetry_off_is_bit_identical() {
+    // simulate_policy is simulate_policy_with(noop): same object graph,
+    // same result bits — the golden-equivalence suite rides on this.
+    let (model, cluster, trace) = scenario(4);
+    let plain = prophet_report(&model, &cluster, &trace, None);
+    let noop = prophet_report(&model, &cluster, &trace, Some(obs::noop_arc()));
+    assert_reports_bitwise(&plain, &noop);
+}
+
+#[test]
+fn telemetry_on_records_without_perturbing() {
+    let (model, cluster, trace) = scenario(4);
+    let plain = prophet_report(&model, &cluster, &trace, None);
+    let hub = Arc::new(TelemetryHub::new());
+    let live = prophet_report(&model, &cluster, &trace, Some(hub.clone()));
+    // Recording must not move a single bit of the simulation.
+    assert_reports_bitwise(&plain, &live);
+    // ...and must actually have recorded the run.
+    assert_eq!(hub.iterations_seen(), 4);
+    assert!(hub.counter_total("des.events", Labels::None) > 0);
+    assert!(hub.counter_total("plan.searches", Labels::None) > 0);
+    for span in ["sim.iteration", "balancer.decide", "des.execute", "prophet.forecast"] {
+        let agg = hub.span_agg(span, Labels::None);
+        assert!(agg.is_some(), "span {span} missing");
+        assert!(agg.unwrap().count > 0, "span {span} empty");
+    }
+    let straggler = hub.gauge_agg("des.straggler_device", Labels::None).unwrap();
+    assert!(straggler.last >= 0.0);
+    // Per-device gauges carry one labeled series per device.
+    for dev in 0..cluster.n_devices() {
+        assert!(
+            hub.gauge_agg("des.device_idle_s", Labels::one("dev", dev as i64)).is_some(),
+            "no idle gauge for dev {dev}"
+        );
+    }
+}
+
+#[test]
+fn jsonl_file_round_trip() {
+    let (model, cluster, trace) = scenario(3);
+    let hub = Arc::new(TelemetryHub::new());
+    hub.set_meta("tool", json::s("test"));
+    prophet_report(&model, &cluster, &trace, Some(hub.clone()));
+    let path = tmp("round_trip.jsonl");
+    let stats = hub.write_jsonl(&path).unwrap();
+    assert_eq!(stats.iterations, 3);
+    assert_eq!(stats.recorded, 3);
+    assert_eq!(stats.dropped, 0);
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    // Every line is standalone JSON carrying the schema tag.
+    for (i, line) in text.lines().enumerate() {
+        let v = json::parse(line).unwrap_or_else(|e| panic!("line {}: {e}", i + 1));
+        assert_eq!(v.get("schema").and_then(json::Json::as_str), Some(obs::SCHEMA));
+    }
+    let doc = report::parse_jsonl(&text).unwrap();
+    assert_eq!(doc.iterations, 3);
+    assert_eq!(doc.recorded, 3);
+    assert_eq!(
+        doc.counters.get("des.events").copied(),
+        Some(hub.counter_total("des.events", Labels::None) as f64)
+    );
+    assert!(doc.spans.contains_key("des.execute"));
+    assert!(doc.meta.contains_key("tool"));
+}
+
+#[test]
+fn bounded_sink_reports_exact_drops() {
+    let (model, cluster, trace) = scenario(5);
+    let hub = Arc::new(TelemetryHub::with_max_events(2));
+    prophet_report(&model, &cluster, &trace, Some(hub.clone()));
+    let stats = hub.stats();
+    assert_eq!(stats.iterations, 5);
+    assert_eq!(stats.recorded, 2);
+    assert_eq!(stats.dropped, 3);
+    let msg = stats.drop_message().expect("drops must be reported");
+    assert!(msg.contains("dropped 3 of 5"), "{msg}");
+    // Whole-run aggregates still saw every iteration.
+    let agg = hub.span_agg("sim.iteration", Labels::None).unwrap();
+    assert_eq!(agg.count, 5);
+    // The parsed doc reflects the cap too.
+    let doc = report::parse_jsonl(&hub.to_jsonl()).unwrap();
+    assert_eq!(doc.recorded, 2);
+    assert_eq!(doc.dropped, 3);
+}
+
+#[test]
+fn result_dir_env_override_is_honored() {
+    // metrics::write_result normally writes under bench_results/; the
+    // PRO_PROPHET_RESULT_DIR override redirects it (used by CI to stage
+    // artifacts without cd'ing around).
+    let dir = tmp("result_dir");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::env::set_var("PRO_PROPHET_RESULT_DIR", &dir);
+    let path = pro_prophet::metrics::write_result(
+        "obs_env_override",
+        &json::obj(vec![("ok", json::num(1.0))]),
+    )
+    .unwrap();
+    std::env::remove_var("PRO_PROPHET_RESULT_DIR");
+    assert_eq!(path.parent(), Some(dir.as_path()), "wrote to {}", path.display());
+    assert!(path.exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// --- CLI surface -------------------------------------------------------------
+
+#[test]
+fn cli_simulate_metrics_then_report_and_diff() {
+    let metrics = tmp("cli_run.jsonl");
+    let metrics_s = metrics.to_str().unwrap();
+    let out = run(&[
+        "simulate", "--model", "s", "--nodes", "1", "--tokens", "2048", "--iters", "3",
+        "--policy", "pro-prophet", "--metrics", metrics_s,
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("metrics:"), "{stdout}");
+    let doc = report::parse_jsonl(&std::fs::read_to_string(&metrics).unwrap()).unwrap();
+    assert_eq!(doc.recorded, 3);
+    assert!(doc.spans.contains_key("plan.greedy_search"), "{:?}", doc.metric_names());
+    assert_eq!(doc.meta.get("tool").and_then(json::Json::as_str), Some("simulate"));
+    assert_eq!(doc.meta.get("policy").and_then(json::Json::as_str), Some("pro-prophet"));
+
+    // Render it.
+    let rep = run(&["report", "--metrics", metrics_s]);
+    assert!(rep.status.success(), "{}", String::from_utf8_lossy(&rep.stderr));
+    let rendered = String::from_utf8_lossy(&rep.stdout);
+    assert!(rendered.contains("span timings"), "{rendered}");
+    assert!(rendered.contains("des.execute"), "{rendered}");
+    assert!(rendered.contains("counters"), "{rendered}");
+
+    // Substring filter narrows the tables; unknown metrics error.
+    let filt = run(&["report", "--metrics", metrics_s, "--metric", "des."]);
+    assert!(filt.status.success());
+    let filtered = String::from_utf8_lossy(&filt.stdout);
+    assert!(filtered.contains("des.execute") && !filtered.contains("plan.greedy_search"));
+    let unknown = run(&["report", "--metrics", metrics_s, "--metric", "warpdrive"]);
+    assert!(!unknown.status.success());
+    assert!(
+        String::from_utf8_lossy(&unknown.stderr).contains("unknown metric"),
+        "{}",
+        String::from_utf8_lossy(&unknown.stderr)
+    );
+
+    // A/B diff against a second (straggler) run.
+    let base = tmp("cli_base.jsonl");
+    let base_s = base.to_str().unwrap();
+    let out2 = run(&[
+        "simulate", "--model", "s", "--nodes", "1", "--tokens", "2048", "--iters", "3",
+        "--policy", "pro-prophet", "--straggler", "1", "--metrics", base_s,
+    ]);
+    assert!(out2.status.success(), "{}", String::from_utf8_lossy(&out2.stderr));
+    let diff = run(&["report", "--metrics", metrics_s, "--baseline", base_s]);
+    assert!(diff.status.success(), "{}", String::from_utf8_lossy(&diff.stderr));
+    let diffed = String::from_utf8_lossy(&diff.stdout);
+    assert!(diffed.contains("A/B metric deltas"), "{diffed}");
+    assert!(diffed.contains("des.makespan_s.mean"), "{diffed}");
+    std::fs::remove_file(&metrics).ok();
+    std::fs::remove_file(&base).ok();
+}
+
+#[test]
+fn cli_report_rejects_malformed_files() {
+    let bad = tmp("malformed.jsonl");
+    std::fs::write(&bad, "this is not json\n").unwrap();
+    let out = run(&["report", "--metrics", bad.to_str().unwrap()]);
+    assert!(!out.status.success(), "malformed file must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("line 1"), "{stderr}");
+    std::fs::remove_file(&bad).ok();
+
+    // Missing --metrics is a usage error, not a panic.
+    let none = run(&["report"]);
+    assert!(!none.status.success());
+    assert!(String::from_utf8_lossy(&none.stderr).contains("--metrics"));
+}
+
+#[test]
+fn cli_metrics_max_events_caps_and_reports() {
+    let metrics = tmp("cli_capped.jsonl");
+    let metrics_s = metrics.to_str().unwrap();
+    let out = run(&[
+        "simulate", "--model", "s", "--nodes", "1", "--tokens", "2048", "--iters", "5",
+        "--policy", "deepspeed", "--metrics", metrics_s, "--max-events", "2",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("dropped 3 of 5"), "{stdout}");
+    let doc = report::parse_jsonl(&std::fs::read_to_string(&metrics).unwrap()).unwrap();
+    assert_eq!(doc.recorded, 2);
+    assert_eq!(doc.dropped, 3);
+    assert_eq!(doc.iterations, 5);
+    std::fs::remove_file(&metrics).ok();
+
+    // --max-events 0 is rejected up front.
+    let zero = run(&["simulate", "--nodes", "1", "--iters", "1", "--max-events", "0"]);
+    assert!(!zero.status.success());
+    assert!(String::from_utf8_lossy(&zero.stderr).contains("max-events"));
+}
+
+#[test]
+fn cli_chrome_trace_carries_counter_tracks() {
+    let trace_path = tmp("chrome.json");
+    let out = run(&[
+        "simulate", "--model", "s", "--nodes", "1", "--tokens", "2048", "--iters", "2",
+        "--policy", "pro-prophet", "--chrome-trace", trace_path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let parsed = json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    std::fs::remove_file(&trace_path).ok();
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    let counter_names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(json::Json::as_str) == Some("C"))
+        .filter_map(|e| e.get("name").and_then(json::Json::as_str))
+        .collect();
+    assert!(counter_names.contains(&"balance_degree"), "{counter_names:?}");
+    assert!(counter_names.contains(&"straggler"), "{counter_names:?}");
+    assert!(counter_names.contains(&"exposed_comm_s"), "{counter_names:?}");
+}
+
+#[test]
+fn cli_config_straggler_run_records_per_device_story() {
+    // The acceptance scenario: the shipped straggler config through
+    // `simulate --config ... --metrics`, rendered by `report`.  Device 5
+    // runs 2.5x slow; the metrics must carry the span-timed hot paths
+    // AND the per-device straggler stats.
+    let metrics = tmp("straggler.jsonl");
+    let metrics_s = metrics.to_str().unwrap();
+    let out = run(&[
+        "simulate", "--config", "examples/configs/hpwnv16_straggler.toml",
+        "--iters", "3", "--metrics", metrics_s,
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = report::parse_jsonl(&std::fs::read_to_string(&metrics).unwrap()).unwrap();
+    assert_eq!(doc.recorded, 3);
+    // Span-timed phases: forecast, search, DES.
+    for span in ["prophet.forecast", "plan.greedy_search", "des.lower", "des.execute"] {
+        assert!(doc.spans.contains_key(span), "span {span} missing: {:?}", doc.metric_names());
+    }
+    // The DES pinpoints the configured straggler...
+    let straggler = doc.gauges.get("des.straggler_device").unwrap();
+    assert_eq!(straggler.last, 5.0, "{straggler:?}");
+    // ...and carries per-device busy/idle series for all 16 devices.
+    for dev in 0..16 {
+        assert!(
+            doc.gauges.contains_key(&format!("des.device_idle_s{{dev={dev}}}")),
+            "idle gauge for dev {dev} missing"
+        );
+    }
+    assert!(doc.gauges.contains_key("des.device_busy_comp_s{dev=5}"));
+    // report renders it without complaint.
+    let rep = run(&["report", "--metrics", metrics_s, "--metric", "des.device_idle_s"]);
+    assert!(rep.status.success(), "{}", String::from_utf8_lossy(&rep.stderr));
+    let rendered = String::from_utf8_lossy(&rep.stdout);
+    assert!(rendered.contains("des.device_idle_s{dev=5}"), "{rendered}");
+    std::fs::remove_file(&metrics).ok();
+}
