@@ -219,6 +219,18 @@ impl BalancingPolicy for ProProphet {
         }
         c
     }
+
+    fn set_device_mask(&mut self, down: &[bool]) {
+        // Mask future searches off the down devices and drop every cached
+        // placement: the next decide replans under the new health state
+        // (recovery passes an all-false mask, so placements re-expand).
+        let mask = if down.iter().any(|&d| d) { Some(down.to_vec()) } else { None };
+        for planner in &self.planners {
+            let mut p = planner.lock().expect("planner lock poisoned");
+            p.cfg.device_mask = mask.clone();
+            p.invalidate();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -303,6 +315,39 @@ mod tests {
             ProProphet::new(ProphetOptions::planner_only()).name(),
             "Pro-Prophet(planner)"
         );
+    }
+
+    #[test]
+    fn pro_prophet_device_mask_replans_off_down_devices() {
+        let mut p = ProProphet::new(ProphetOptions {
+            planner: crate::planner::PlannerConfig {
+                replan_interval: 100,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        p.bind(1);
+        let pm = pm();
+        let w = skewed_w();
+        let ctx = DecideCtx { pm: &pm, prophet: None, rec: crate::obs::noop() };
+        let d1 = p.decide(0, &w, &ctx);
+        assert_eq!(d1.plan_cost, pm.t_plan);
+        // Device 2 goes down: the cache is dropped and the replacement
+        // search never widens a replica set onto device 2.
+        p.set_device_mask(&[false, false, true, false]);
+        let d2 = p.decide(0, &w, &ctx);
+        assert_eq!(d2.plan_cost, pm.t_plan, "health transition forces a replan");
+        for e in 0..4 {
+            for dev in d2.placement.replicas(e).iter() {
+                assert!(dev != 2 || d2.placement.home(e) == 2);
+            }
+        }
+        // Recovery drops the mask and replans again, identically to a
+        // never-faulted planner.
+        p.set_device_mask(&[false; 4]);
+        let d3 = p.decide(0, &w, &ctx);
+        assert_eq!(d3.plan_cost, pm.t_plan);
+        assert_eq!(*d3.placement, *d1.placement);
     }
 
     #[test]

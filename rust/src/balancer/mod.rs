@@ -236,6 +236,17 @@ pub trait BalancingPolicy: Send + Sync {
     fn counters(&self) -> PolicyCounters {
         PolicyCounters::default()
     }
+
+    /// Device-health update from the session (`down[d]` == device `d` is
+    /// out of service; an all-false or empty slice means fully healthy).
+    /// Called only on transitions.  Policies that cache placements or
+    /// search should invalidate the cache and exclude the down devices
+    /// from future searches (see [`builtin::ProProphet`]); the default
+    /// ignores health — the session's failover guard still keeps every
+    /// decision off down devices.
+    fn set_device_mask(&mut self, down: &[bool]) {
+        let _ = down;
+    }
 }
 
 /// Options of the Pro-Prophet policy family (planner knobs, §V scheduler

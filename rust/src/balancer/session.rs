@@ -10,12 +10,13 @@
 //! actual gating results.
 
 use super::{BalancingPolicy, DecideCtx, Decision, LayerFeedback, PolicyCounters};
-use crate::moe::LoadMatrix;
+use crate::moe::{LoadMatrix, Placement};
 use crate::obs::{self, Labels, Recorder, Span};
 use crate::perfmodel::PerfModel;
 use crate::prophet::Prophet;
 use crate::util::threads;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// What one iteration's observations told the session, aggregated over
 /// layers (in layer order).
@@ -46,6 +47,20 @@ pub struct BalancerSession {
     n_layers: usize,
     iterations_observed: usize,
     rec: Arc<dyn Recorder>,
+    /// Device-health mask (`down[d]` == out of service); empty until the
+    /// first [`BalancerSession::set_device_health`] call — the healthy
+    /// fast path never allocates or checks placements.
+    down: Vec<bool>,
+    /// Per-layer last placement decided while fully healthy: the
+    /// fallback when a policy's decision cannot be repaired under the
+    /// mask.  Behind per-layer locks because `decide_layer` takes
+    /// `&self` from the scoped-thread fan-out (uncontended — one thread
+    /// per layer).
+    last_good: Vec<Mutex<Option<Arc<Placement>>>>,
+    /// Health transitions that forced a policy replan.
+    health_replans: usize,
+    failover_placements: AtomicUsize,
+    fallback_placements: AtomicUsize,
 }
 
 impl BalancerSession {
@@ -70,7 +85,18 @@ impl BalancerSession {
         assert!(n_layers >= 1, "session needs at least one layer");
         policy.bind(n_layers);
         let prophet = policy.prophet_config().map(|cfg| Prophet::new(cfg, n_layers));
-        BalancerSession { policy, prophet, n_layers, iterations_observed: 0, rec }
+        BalancerSession {
+            policy,
+            prophet,
+            n_layers,
+            iterations_observed: 0,
+            rec,
+            down: Vec::new(),
+            last_good: (0..n_layers).map(|_| Mutex::new(None)).collect(),
+            health_replans: 0,
+            failover_placements: AtomicUsize::new(0),
+            fallback_placements: AtomicUsize::new(0),
+        }
     }
 
     /// The session's telemetry sink (the no-op recorder when off).
@@ -102,14 +128,115 @@ impl BalancerSession {
         self.policy.counters()
     }
 
+    /// The health monitor's input: update the device-health mask
+    /// (`down[d]` == device `d` is out of service).  On any transition —
+    /// a device going down OR recovering — the policy is notified via
+    /// [`BalancingPolicy::set_device_mask`] so cached placements replan
+    /// under the new health state.  Returns whether a transition
+    /// occurred.
+    pub fn set_device_health(&mut self, down: &[bool]) -> bool {
+        let n = down.len().max(self.down.len());
+        let changed = (0..n).any(|d| {
+            self.down.get(d).copied().unwrap_or(false) != down.get(d).copied().unwrap_or(false)
+        });
+        self.down = down.to_vec();
+        if !changed {
+            return false;
+        }
+        self.health_replans += 1;
+        self.policy.set_device_mask(down);
+        if self.rec.enabled() {
+            self.rec.counter("balancer.health_replans", Labels::None, 1);
+            self.rec.gauge(
+                "balancer.devices_down",
+                Labels::None,
+                down.iter().filter(|&&d| d).count() as f64,
+            );
+        }
+        true
+    }
+
+    /// The current device-health mask (empty = never faulted).
+    pub fn device_health(&self) -> &[bool] {
+        &self.down
+    }
+
+    /// Health transitions that forced a policy replan.
+    pub fn health_replans(&self) -> usize {
+        self.health_replans
+    }
+
+    /// Decisions repaired by stripping/failing replicas off down devices.
+    pub fn failover_placements(&self) -> usize {
+        self.failover_placements.load(Ordering::Relaxed)
+    }
+
+    /// Decisions replaced wholesale by the last-known-good fallback.
+    pub fn fallback_placements(&self) -> usize {
+        self.fallback_placements.load(Ordering::Relaxed)
+    }
+
     /// Decide one layer's placement.  `&self`: safe to call from a
     /// per-layer thread fan-out (drivers that also price per layer fold
     /// this into their own [`crate::util::threads::par_map`] closure).
+    ///
+    /// While any device is down, the decision passes through the health
+    /// guard: replicas on down devices are failed over to live ones and
+    /// an irreparable placement is replaced by the last known-good one —
+    /// a `DeviceDown` event can never surface a placement that assigns
+    /// experts to the downed device, and never a panic.
     pub fn decide_layer(&self, layer: usize, w: &LoadMatrix, pm: &PerfModel) -> Decision {
         assert!(layer < self.n_layers, "layer {layer} out of range");
         let _sp = Span::enter(&*self.rec, "balancer.decide", Labels::None);
         let ctx = DecideCtx { pm, prophet: self.prophet.as_ref(), rec: &*self.rec };
-        self.policy.decide(layer, w, &ctx)
+        let d = self.policy.decide(layer, w, &ctx);
+        if self.down.iter().any(|&dn| dn) {
+            self.enforce_health(layer, d)
+        } else {
+            *self.last_good[layer].lock().expect("last-good lock poisoned") =
+                Some(Arc::clone(&d.placement));
+            d
+        }
+    }
+
+    /// Repair `d` against the current down set; see
+    /// [`BalancerSession::decide_layer`].  Never panics.
+    fn enforce_health(&self, layer: usize, mut d: Decision) -> Decision {
+        let down = &self.down;
+        let touches_down = (0..d.placement.n_experts()).any(|e| {
+            d.placement.replicas(e).iter().any(|dev| down.get(dev).copied().unwrap_or(false))
+        });
+        if touches_down {
+            let mut p = (*d.placement).clone();
+            p.fail_over(down);
+            d.placement = Arc::new(p);
+            self.failover_placements.fetch_add(1, Ordering::Relaxed);
+            if self.rec.enabled() {
+                self.rec.counter("balancer.failover_placements", Labels::None, 1);
+            }
+        }
+        if d.placement.validate_with_down(down).is_err() {
+            // The policy produced something unusable under the mask
+            // (e.g. a budget-truncated or stale search): last-known-good
+            // fallback, counter-tracked, never a panic.
+            self.fallback_placements.fetch_add(1, Ordering::Relaxed);
+            if self.rec.enabled() {
+                self.rec.counter("balancer.fallback_placements", Labels::None, 1);
+            }
+            let last = self.last_good[layer].lock().expect("last-good lock poisoned").clone();
+            let mut p = match last {
+                Some(lg) => (*lg).clone(),
+                None => Placement::identity(d.placement.n_experts(), d.placement.n_devices()),
+            };
+            p.fail_over(down);
+            if p.validate_with_down(down).is_err() {
+                let mut id = Placement::identity(p.n_experts(), p.n_devices());
+                id.fail_over(down);
+                p = id;
+            }
+            d.placement = Arc::new(p);
+        }
+        d
     }
 
     /// Decide all layers of one iteration, fanned out over scoped threads
@@ -163,6 +290,7 @@ impl std::fmt::Debug for BalancerSession {
             .field("n_layers", &self.n_layers)
             .field("forecasting", &self.prophet.is_some())
             .field("iterations_observed", &self.iterations_observed)
+            .field("devices_down", &self.down.iter().filter(|&&d| d).count())
             .finish()
     }
 }
@@ -225,5 +353,85 @@ mod tests {
         let s = BalancerSession::new(Box::new(builtin::DeepspeedMoe), 2);
         let w = LoadMatrix::zeros(4, 4);
         s.decide_layer(2, &w, &pm());
+    }
+
+    #[test]
+    fn device_down_never_places_experts_on_downed_device() {
+        let pm = pm();
+        let mut gen = WorkloadGen::new(WorkloadConfig::paper_default(2, 8, 8, 8192));
+        let layers = gen.next_iteration();
+        // FasterMoE shadows heavy experts to ALL devices — the harshest
+        // case for the guard.
+        let mut s = BalancerSession::new(Box::new(builtin::FasterMoe::new()), 2);
+        let down_dev = 3;
+        let mut down = vec![false; 8];
+        down[down_dev] = true;
+        assert!(s.set_device_health(&down));
+        assert!(!s.set_device_health(&down), "no transition, no replan");
+        assert_eq!(s.health_replans(), 1);
+        for d in s.decide_iteration(&layers, &pm) {
+            assert!(d.placement.validate_with_down(&down).is_ok());
+            for e in 0..d.placement.n_experts() {
+                assert!(!d.placement.replicas(e).contains(down_dev));
+            }
+        }
+        assert!(s.failover_placements() > 0);
+        // Recovery: decisions return to the unguarded bit-exact form.
+        assert!(s.set_device_health(&[false; 8]));
+        assert_eq!(s.health_replans(), 2);
+        let healthy = BalancerSession::new(Box::new(builtin::FasterMoe::new()), 2);
+        for (l, d) in s.decide_iteration(&layers, &pm).iter().enumerate() {
+            assert_eq!(*d.placement, *healthy.decide_layer(l, &layers[l], &pm).placement);
+        }
+    }
+
+    #[test]
+    fn fallback_serves_last_known_good_placement() {
+        // A policy that drops home replicas (every expert lives on
+        // devices {0, 7} only): once device 0 is down, the failover
+        // strip leaves live homes missing — irreparable by failover, so
+        // the session must fall back, not panic.
+        struct Stubborn;
+        impl BalancingPolicy for Stubborn {
+            fn name(&self) -> String {
+                "stubborn".into()
+            }
+            fn bind(&mut self, _n_layers: usize) {}
+            fn decide(&self, _layer: usize, w: &LoadMatrix, _ctx: &DecideCtx<'_>) -> Decision {
+                let mut p = Placement::identity(w.n_experts(), w.n_devices());
+                let last = w.n_devices() - 1;
+                for e in 0..w.n_experts() {
+                    p.set_replicas(e, [0usize, last]);
+                }
+                Decision {
+                    placement: Arc::new(p),
+                    plan_cost: 0.0,
+                    comm_style: crate::balancer::CommStyle::Pipelined,
+                    schedule_kind: crate::balancer::ScheduleKind::Blocking,
+                }
+            }
+        }
+        let pm = pm();
+        let w = LoadMatrix::from_rows(vec![vec![100; 8]; 8]);
+        let mut s = BalancerSession::new(Box::new(Stubborn), 1);
+        // Healthy decide seeds last-known-good.
+        let healthy = s.decide_layer(0, &w, &pm);
+        assert!(healthy.placement.replicas(1).contains(0));
+        // Device 0 goes down: failover strips the only replica of every
+        // expert, so the guard falls back (here: last-good, failed over).
+        let mut down = vec![false; 8];
+        down[0] = true;
+        s.set_device_health(&down);
+        let d = s.decide_layer(0, &w, &pm);
+        assert!(d.placement.validate_with_down(&down).is_ok());
+        assert_eq!(s.fallback_placements(), 1);
+        assert!(s.failover_placements() >= 1);
+        // A fresh session with no last-good history degrades to the
+        // failed-over identity — still valid, still no panic.
+        let mut fresh = BalancerSession::new(Box::new(Stubborn), 1);
+        fresh.set_device_health(&down);
+        let d = fresh.decide_layer(0, &w, &pm);
+        assert!(d.placement.validate_with_down(&down).is_ok());
+        assert_eq!(fresh.fallback_placements(), 1);
     }
 }

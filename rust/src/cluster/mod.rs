@@ -102,25 +102,66 @@ impl ClusterSpec {
 
     /// Builder: slow `device` down by `factor` (>= 1.0 models a
     /// straggler; < 1.0 a faster-than-baseline device).
-    pub fn with_slowdown(mut self, device: usize, factor: f64) -> Self {
-        assert!(device < self.n_devices(), "device {device} out of range");
-        assert!(factor.is_finite() && factor > 0.0, "bad slowdown factor {factor}");
-        if self.device_slowdown.is_empty() {
-            self.device_slowdown = vec![1.0; self.n_devices()];
+    pub fn with_slowdown(self, device: usize, factor: f64) -> Self {
+        match self.try_with_slowdown(device, factor) {
+            Ok(c) => c,
+            Err(e) => panic!("{e}"),
         }
-        self.device_slowdown[device] = factor;
-        self
     }
 
     /// Builder: set the full per-device slowdown vector at once.
-    pub fn with_slowdowns(mut self, factors: Vec<f64>) -> Self {
-        assert_eq!(factors.len(), self.n_devices(), "slowdown vector length");
-        assert!(
-            factors.iter().all(|f| f.is_finite() && *f > 0.0),
-            "bad slowdown factors {factors:?}"
-        );
+    pub fn with_slowdowns(self, factors: Vec<f64>) -> Self {
+        match self.try_with_slowdowns(factors) {
+            Ok(c) => c,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible [`Self::with_slowdown`]: rejects out-of-range devices
+    /// and non-positive / non-finite factors with a clear error instead
+    /// of deferring validation to the TOML layer.
+    pub fn try_with_slowdown(mut self, device: usize, factor: f64) -> Result<Self, String> {
+        let d = self.n_devices();
+        if device >= d {
+            return Err(format!(
+                "cluster {}: slowdown device {device} out of range (cluster has {d} devices)",
+                self.name
+            ));
+        }
+        if !(factor.is_finite() && factor > 0.0) {
+            return Err(format!(
+                "cluster {}: slowdown factor {factor} for device {device} \
+                 must be finite and > 0",
+                self.name
+            ));
+        }
+        if self.device_slowdown.is_empty() {
+            self.device_slowdown = vec![1.0; d];
+        }
+        self.device_slowdown[device] = factor;
+        Ok(self)
+    }
+
+    /// Fallible [`Self::with_slowdowns`]: rejects a vector whose length
+    /// is not exactly `n_devices()` or that carries non-positive /
+    /// non-finite factors.
+    pub fn try_with_slowdowns(mut self, factors: Vec<f64>) -> Result<Self, String> {
+        let d = self.n_devices();
+        if factors.len() != d {
+            return Err(format!(
+                "cluster {}: slowdown vector has {} entries, cluster has {d} devices",
+                self.name,
+                factors.len()
+            ));
+        }
+        if let Some(f) = factors.iter().find(|f| !(f.is_finite() && **f > 0.0)) {
+            return Err(format!(
+                "cluster {}: slowdown factor {f} must be finite and > 0",
+                self.name
+            ));
+        }
         self.device_slowdown = factors;
-        self
+        Ok(self)
     }
 
     // --- topology queries ---------------------------------------------------
@@ -268,6 +309,27 @@ mod tests {
     #[should_panic]
     fn slowdown_out_of_range_rejected() {
         let _ = ClusterSpec::hpwnv(1).with_slowdown(4, 2.0);
+    }
+
+    #[test]
+    fn try_slowdown_reports_clear_errors() {
+        let err = ClusterSpec::hpwnv(1).try_with_slowdown(4, 2.0).unwrap_err();
+        assert!(err.contains("out of range") && err.contains("4 devices"), "{err}");
+        for bad in [0.0, -1.5, f64::NAN, f64::INFINITY] {
+            let err = ClusterSpec::hpwnv(1).try_with_slowdown(0, bad).unwrap_err();
+            assert!(err.contains("finite and > 0"), "{bad}: {err}");
+        }
+        let err = ClusterSpec::hpwnv(1).try_with_slowdowns(vec![1.0; 3]).unwrap_err();
+        assert!(err.contains("3 entries") && err.contains("4 devices"), "{err}");
+        let err = ClusterSpec::hpwnv(1)
+            .try_with_slowdowns(vec![1.0, 1.0, 0.0, 1.0])
+            .unwrap_err();
+        assert!(err.contains("finite and > 0"), "{err}");
+        // Happy path matches the panicking builders.
+        let a = ClusterSpec::hpwnv(1).try_with_slowdown(2, 2.5).unwrap();
+        assert_eq!(a, ClusterSpec::hpwnv(1).with_slowdown(2, 2.5));
+        let b = ClusterSpec::hpwnv(1).try_with_slowdowns(vec![1.0, 2.0, 1.0, 1.0]).unwrap();
+        assert_eq!(b.slowdown(1), 2.0);
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod toml;
 
 use crate::balancer::{registry, BalancingPolicy, ProphetOptions, ScheduleKind};
 use crate::cluster::ClusterSpec;
+use crate::faults::FaultTimeline;
 use crate::obs::ObsConfig;
 use crate::planner::PlannerConfig;
 use crate::prophet::{PredictorKind, ProphetConfig};
@@ -151,6 +152,11 @@ pub struct TrainingConfig {
     /// here after the run — replayable via `pro-prophet trace
     /// --from-store` and the simulator.
     pub store_path: Option<String>,
+    /// Warm-start the forecasting subsystem by replaying a previously
+    /// saved prophet history (the `store_path` of an earlier run)
+    /// through the session before step 1 — history, drift state and
+    /// forecast scoring resume where the last run stopped.
+    pub resume_store: Option<String>,
     /// Write per-step structured metrics (schema-versioned JSONL) here
     /// (`--metrics`); None = telemetry off, zero-cost no-op recorder.
     pub metrics_path: Option<String>,
@@ -170,6 +176,7 @@ impl Default for TrainingConfig {
             analyze_balance: true,
             report_path: None,
             store_path: None,
+            resume_store: None,
             metrics_path: None,
             metrics_max_events: crate::obs::DEFAULT_MAX_EVENTS,
         }
@@ -202,6 +209,16 @@ pub struct ExperimentConfig {
     /// Telemetry sink knobs (`[obs]` table: `metrics`, `max_events`);
     /// CLI `--metrics`/`--max-events` override these.
     pub obs: ObsConfig,
+    /// Explicit fault events (`[faults] events = [...]`, round-trippable
+    /// [`crate::faults::FaultEvent`] specs validated against the
+    /// cluster).  Empty = fault-free, bit-identical to a build without
+    /// the subsystem.
+    pub faults: FaultTimeline,
+    /// Seed for a synthetic timeline (`[faults] seed = N`) — mutually
+    /// exclusive with explicit events; resolved by
+    /// [`ExperimentConfig::fault_timeline`] once the iteration horizon
+    /// is known.
+    pub fault_seed: Option<u64>,
     pub iterations: usize,
     pub seed: u64,
 }
@@ -345,6 +362,42 @@ impl ExperimentConfig {
             }
             obs.max_events = n;
         }
+        let faults = match t.get("faults.events") {
+            None => FaultTimeline::empty(),
+            Some(v) => {
+                let vals = match v {
+                    toml::Value::Arr(vals) => vals,
+                    _ => return Err("faults.events must be an array of event specs".into()),
+                };
+                let specs: Vec<&str> = vals
+                    .iter()
+                    .map(|x| {
+                        x.as_str().ok_or_else(|| {
+                            "faults.events entries must be strings \
+                             (e.g. \"down dev=3 start=10\")"
+                                .to_string()
+                        })
+                    })
+                    .collect::<Result<_, _>>()?;
+                FaultTimeline::parse_specs(&specs, cluster.n_devices())
+                    .map_err(|e| format!("faults.events: {e}"))?
+            }
+        };
+        let fault_seed = match t.get("faults.seed") {
+            None => None,
+            Some(v) => Some(
+                v.as_usize()
+                    .ok_or_else(|| "faults.seed must be a non-negative integer".to_string())?
+                    as u64,
+            ),
+        };
+        if fault_seed.is_some() && !faults.is_empty() {
+            return Err(
+                "faults.seed and faults.events are mutually exclusive \
+                 (the seed generates a timeline)"
+                    .into(),
+            );
+        }
         Ok(ExperimentConfig {
             model,
             cluster,
@@ -354,9 +407,21 @@ impl ExperimentConfig {
             planner,
             prophet,
             obs,
+            faults,
+            fault_seed,
             iterations: t.usize_or("iterations", 100),
             seed: t.usize_or("seed", 42) as u64,
         })
+    }
+
+    /// Resolve the experiment's fault timeline once the iteration
+    /// horizon is known: explicit `[faults] events`, a seeded synthetic
+    /// one sized to `horizon`, or empty.
+    pub fn fault_timeline(&self, horizon: usize) -> FaultTimeline {
+        match self.fault_seed {
+            Some(seed) => FaultTimeline::generate(seed, self.cluster.n_devices(), horizon),
+            None => self.faults.clone(),
+        }
     }
 
     pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
@@ -594,6 +659,47 @@ mod tests {
         // Non-string metrics path is rejected.
         let bad = toml::parse("[obs]\nmetrics = 3").unwrap();
         assert!(ExperimentConfig::from_table(&bad).unwrap_err().contains("string"));
+    }
+
+    #[test]
+    fn faults_table_parses_and_validates() {
+        let t = toml::parse(
+            "[cluster]\nnodes = 1\n[faults]\nevents = [\"transient dev=1 factor=2.5 start=3 dur=4\", \"down dev=2 start=5\"]",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(e.faults.events().len(), 2);
+        assert_eq!(e.fault_timeline(10).specs()[1], "down dev=2 start=5");
+        assert!(e.fault_seed.is_none());
+        // Seeded synthetic timeline: resolved lazily, deterministic.
+        let t = toml::parse("[faults]\nseed = 7").unwrap();
+        let e = ExperimentConfig::from_table(&t).unwrap();
+        assert!(e.faults.is_empty());
+        let tl = e.fault_timeline(50);
+        assert!(!tl.is_empty());
+        assert_eq!(tl, e.fault_timeline(50), "seeded generation must be deterministic");
+        // Defaults: no faults at all.
+        let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
+        assert!(d.faults.is_empty() && d.fault_seed.is_none());
+        assert!(d.fault_timeline(100).is_empty());
+        // Errors: device out of range for the cluster, bad spec, both
+        // sources at once, wrong value shapes.
+        let bad = toml::parse("[cluster]\nnodes = 1\n[faults]\nevents = [\"down dev=9 start=0\"]")
+            .unwrap();
+        let err = ExperimentConfig::from_table(&bad).unwrap_err();
+        assert!(err.contains("faults.events"), "{err}");
+        let bad = toml::parse("[faults]\nevents = [\"explode dev=0 start=0\"]").unwrap();
+        assert!(ExperimentConfig::from_table(&bad).unwrap_err().contains("explode"));
+        let bad =
+            toml::parse("[faults]\nseed = 3\nevents = [\"down dev=0 start=1\"]").unwrap();
+        let err = ExperimentConfig::from_table(&bad).unwrap_err();
+        assert!(err.contains("mutually exclusive"), "{err}");
+        let bad = toml::parse("[faults]\nevents = \"down dev=0 start=1\"").unwrap();
+        assert!(ExperimentConfig::from_table(&bad).unwrap_err().contains("array"));
+        let bad = toml::parse("[faults]\nevents = [3]").unwrap();
+        assert!(ExperimentConfig::from_table(&bad).unwrap_err().contains("strings"));
+        let bad = toml::parse("[faults]\nseed = \"lucky\"").unwrap();
+        assert!(ExperimentConfig::from_table(&bad).unwrap_err().contains("integer"));
     }
 
     #[test]

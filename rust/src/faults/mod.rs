@@ -1,0 +1,608 @@
+//! Deterministic fault injection for the simulator (ROADMAP Next-direction 1).
+//!
+//! A [`FaultTimeline`] is a validated set of [`FaultEvent`]s against a
+//! fixed-size device fleet.  Per iteration it yields either `None` —
+//! no fault is active, the caller MUST take its ordinary static-slowdown
+//! path so fault-free runs stay bit-identical to a build without this
+//! module — or a [`FaultView`]: the *effective* per-device slowdown
+//! vector (the cluster's static `device_slowdown` composed
+//! multiplicatively with every active fault) plus the down-device set.
+//!
+//! Event vocabulary (one comma-free spec line per event, so the flat
+//! TOML layer's comma-split arrays can carry them):
+//!
+//! * `transient dev=D factor=F start=S dur=N` — device `D` computes
+//!   `F`x slower for iterations `[S, S+N)`, then recovers.
+//! * `degrade dev=D factor=F start=S` — permanent `F`x slowdown from
+//!   iteration `S` on (thermal damage, a lost NVLink lane).
+//! * `down dev=D start=S` — device `D` performs no work from `S` until
+//!   a matching `recover`; its effective slowdown is
+//!   [`DOWN_SLOWDOWN`] (0.0) and the balancer must fail its experts
+//!   over to live devices.
+//! * `recover dev=D start=S` — device `D` rejoins at iteration `S`
+//!   (ties with a same-start `down` resolve to recovered).
+//!
+//! Determinism contract: a timeline is a pure function of its event
+//! list; [`FaultTimeline::generate`] derives the list from a seed via
+//! the repo's portable xoshiro PRNG, so `--fault-seed N` reproduces the
+//! same faults on every run, machine, and resume.
+
+use crate::cluster::ClusterSpec;
+use crate::perfmodel::PerfModel;
+use crate::util::rng::Rng;
+
+/// Effective slowdown assigned to a down device: it performs no work
+/// (its compute lanes price to zero); failover replicas on live devices
+/// carry its load.  Deliberately NOT a valid static slowdown factor —
+/// only fault views produce it, and only the DES pricing path sees it.
+pub const DOWN_SLOWDOWN: f64 = 0.0;
+
+/// One injected fault.  Iteration indices are 0-based and absolute
+/// (an event outlasting the trace simply stays active to the end).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// Device computes `factor`x slower for `[start_iter, start_iter + duration)`.
+    TransientSlowdown { device: usize, factor: f64, start_iter: usize, duration: usize },
+    /// Device computes `factor`x slower from `start_iter` forever.
+    PersistentDegrade { device: usize, factor: f64, start_iter: usize },
+    /// Device performs no work from `start_iter` until a later `DeviceRecover`.
+    DeviceDown { device: usize, start_iter: usize },
+    /// Device rejoins at `start_iter`.
+    DeviceRecover { device: usize, start_iter: usize },
+}
+
+fn req<T>(v: Option<T>, spec: &str, key: &str) -> Result<T, String> {
+    v.ok_or_else(|| format!("fault spec `{spec}`: missing `{key}=`"))
+}
+
+impl FaultEvent {
+    /// Device the event targets.
+    pub fn device(&self) -> usize {
+        match *self {
+            FaultEvent::TransientSlowdown { device, .. }
+            | FaultEvent::PersistentDegrade { device, .. }
+            | FaultEvent::DeviceDown { device, .. }
+            | FaultEvent::DeviceRecover { device, .. } => device,
+        }
+    }
+
+    /// Iteration the event first takes effect.
+    pub fn start_iter(&self) -> usize {
+        match *self {
+            FaultEvent::TransientSlowdown { start_iter, .. }
+            | FaultEvent::PersistentDegrade { start_iter, .. }
+            | FaultEvent::DeviceDown { start_iter, .. }
+            | FaultEvent::DeviceRecover { start_iter, .. } => start_iter,
+        }
+    }
+
+    /// Parse one spec line (see the module docs for the vocabulary).
+    pub fn parse(spec: &str) -> Result<FaultEvent, String> {
+        let mut toks = spec.split_whitespace();
+        let kind = toks.next().ok_or_else(|| "empty fault spec".to_string())?;
+        let (mut dev, mut factor, mut start, mut dur) = (None, None, None, None);
+        for tok in toks {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec `{spec}`: expected key=value, got `{tok}`"))?;
+            match k {
+                "dev" => {
+                    dev = Some(v.parse::<usize>().map_err(|_| {
+                        format!("fault spec `{spec}`: bad device id `{v}`")
+                    })?)
+                }
+                "factor" => {
+                    factor = Some(v.parse::<f64>().map_err(|_| {
+                        format!("fault spec `{spec}`: bad factor `{v}`")
+                    })?)
+                }
+                "start" => {
+                    start = Some(v.parse::<usize>().map_err(|_| {
+                        format!("fault spec `{spec}`: bad start iteration `{v}`")
+                    })?)
+                }
+                "dur" => {
+                    dur = Some(v.parse::<usize>().map_err(|_| {
+                        format!("fault spec `{spec}`: bad duration `{v}`")
+                    })?)
+                }
+                other => {
+                    return Err(format!(
+                        "fault spec `{spec}`: unknown key `{other}` (expected dev/factor/start/dur)"
+                    ))
+                }
+            }
+        }
+        match kind {
+            "transient" => Ok(FaultEvent::TransientSlowdown {
+                device: req(dev, spec, "dev")?,
+                factor: req(factor, spec, "factor")?,
+                start_iter: req(start, spec, "start")?,
+                duration: req(dur, spec, "dur")?,
+            }),
+            "degrade" => Ok(FaultEvent::PersistentDegrade {
+                device: req(dev, spec, "dev")?,
+                factor: req(factor, spec, "factor")?,
+                start_iter: req(start, spec, "start")?,
+            }),
+            "down" => Ok(FaultEvent::DeviceDown {
+                device: req(dev, spec, "dev")?,
+                start_iter: req(start, spec, "start")?,
+            }),
+            "recover" => Ok(FaultEvent::DeviceRecover {
+                device: req(dev, spec, "dev")?,
+                start_iter: req(start, spec, "start")?,
+            }),
+            other => Err(format!(
+                "fault spec `{spec}`: unknown event kind `{other}` \
+                 (expected transient/degrade/down/recover)"
+            )),
+        }
+    }
+
+    /// Canonical spec line; `FaultEvent::parse(e.to_spec())` round-trips
+    /// bit-exactly (factors print shortest-roundtrip).
+    pub fn to_spec(&self) -> String {
+        match *self {
+            FaultEvent::TransientSlowdown { device, factor, start_iter, duration } => {
+                format!("transient dev={device} factor={factor} start={start_iter} dur={duration}")
+            }
+            FaultEvent::PersistentDegrade { device, factor, start_iter } => {
+                format!("degrade dev={device} factor={factor} start={start_iter}")
+            }
+            FaultEvent::DeviceDown { device, start_iter } => {
+                format!("down dev={device} start={start_iter}")
+            }
+            FaultEvent::DeviceRecover { device, start_iter } => {
+                format!("recover dev={device} start={start_iter}")
+            }
+        }
+    }
+}
+
+/// Whether a slowdown-type event scales compute at `iter` (down/recover
+/// are a per-device state machine, handled by [`FaultTimeline::down_at`]).
+fn slowdown_active(e: &FaultEvent, iter: usize) -> bool {
+    match *e {
+        FaultEvent::TransientSlowdown { start_iter, duration, .. } => {
+            start_iter <= iter && iter < start_iter + duration
+        }
+        FaultEvent::PersistentDegrade { start_iter, .. } => iter >= start_iter,
+        FaultEvent::DeviceDown { .. } | FaultEvent::DeviceRecover { .. } => false,
+    }
+}
+
+/// The per-iteration product of a [`FaultTimeline`]: what the cluster
+/// *effectively* looks like while faults are active.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultView {
+    /// Effective per-device slowdown, INCLUDING the cluster's static
+    /// vector; down devices are [`DOWN_SLOWDOWN`].
+    pub slowdown: Vec<f64>,
+    /// `down[d]` — device `d` performs no work this iteration.
+    pub down: Vec<bool>,
+}
+
+impl FaultView {
+    pub fn n_down(&self) -> usize {
+        self.down.iter().filter(|&&d| d).count()
+    }
+
+    pub fn all_down(&self) -> bool {
+        !self.down.is_empty() && self.down.iter().all(|&d| d)
+    }
+
+    /// The cluster as the DES should price it this iteration.  Writes
+    /// the slowdown field directly: `with_slowdowns` (correctly)
+    /// rejects the 0.0 a down device carries.
+    pub fn effective_cluster(&self, base: &ClusterSpec) -> ClusterSpec {
+        let mut c = base.clone();
+        c.device_slowdown = self.slowdown.clone();
+        c
+    }
+
+    /// The planner cost model under this view (slack-aware pricing sees
+    /// the faulted slowdowns; the frozen Eq 1–6 scalar estimates ignore
+    /// the vector either way).
+    pub fn effective_perf_model(&self, base: &PerfModel) -> PerfModel {
+        let mut pm = base.clone();
+        pm.device_slowdown = self.slowdown.clone();
+        pm
+    }
+}
+
+/// A validated, immutable fault schedule over a fixed device fleet.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultTimeline {
+    events: Vec<FaultEvent>,
+    n_devices: usize,
+}
+
+impl FaultTimeline {
+    /// The no-fault timeline; `effective()` is `None` at every iteration.
+    pub fn empty() -> Self {
+        FaultTimeline::default()
+    }
+
+    /// Validate `events` against an `n_devices`-device fleet.
+    pub fn new(events: Vec<FaultEvent>, n_devices: usize) -> Result<Self, String> {
+        if !events.is_empty() && n_devices == 0 {
+            return Err("fault timeline: events on a zero-device cluster".into());
+        }
+        for e in &events {
+            let spec = e.to_spec();
+            if e.device() >= n_devices {
+                return Err(format!(
+                    "fault `{spec}`: device {} out of range (cluster has {n_devices})",
+                    e.device()
+                ));
+            }
+            match *e {
+                FaultEvent::TransientSlowdown { factor, duration, .. } => {
+                    if !(factor.is_finite() && factor > 0.0) {
+                        return Err(format!("fault `{spec}`: factor must be finite and > 0"));
+                    }
+                    if duration == 0 {
+                        return Err(format!("fault `{spec}`: duration must be >= 1"));
+                    }
+                }
+                FaultEvent::PersistentDegrade { factor, .. } => {
+                    if !(factor.is_finite() && factor > 0.0) {
+                        return Err(format!("fault `{spec}`: factor must be finite and > 0"));
+                    }
+                }
+                FaultEvent::DeviceDown { .. } | FaultEvent::DeviceRecover { .. } => {}
+            }
+        }
+        Ok(FaultTimeline { events, n_devices })
+    }
+
+    /// Parse one spec line per entry (see [`FaultEvent::parse`]).
+    pub fn parse_specs<S: AsRef<str>>(specs: &[S], n_devices: usize) -> Result<Self, String> {
+        let events = specs
+            .iter()
+            .map(|s| FaultEvent::parse(s.as_ref()))
+            .collect::<Result<Vec<_>, _>>()?;
+        Self::new(events, n_devices)
+    }
+
+    /// Parse a fault file: one spec per line, `#` comments and blank
+    /// lines skipped.
+    pub fn parse_text(text: &str, n_devices: usize) -> Result<Self, String> {
+        let specs: Vec<&str> = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .collect();
+        Self::parse_specs(&specs, n_devices)
+    }
+
+    /// Derive a small random-but-reproducible timeline from a seed.
+    /// Device 0 is never taken down (a seeded timeline always leaves at
+    /// least one live device) and every generated event validates.
+    pub fn generate(seed: u64, n_devices: usize, horizon: usize) -> Self {
+        assert!(n_devices >= 1, "generate needs at least one device");
+        let h = horizon.max(2);
+        let mut rng = Rng::new(seed);
+        let n_events = 1 + rng.below(3);
+        let mut events = Vec::new();
+        for _ in 0..n_events {
+            let device = rng.below(n_devices);
+            let start_iter = rng.below(h);
+            match rng.below(4) {
+                0 | 1 => {
+                    let factor = 1.5 + 2.0 * rng.f64();
+                    let duration = 1 + rng.below((h / 2).max(1));
+                    events.push(FaultEvent::TransientSlowdown { device, factor, start_iter, duration });
+                }
+                2 => {
+                    let factor = 1.25 + rng.f64();
+                    events.push(FaultEvent::PersistentDegrade { device, factor, start_iter });
+                }
+                _ if n_devices >= 2 => {
+                    let device = 1 + rng.below(n_devices - 1);
+                    events.push(FaultEvent::DeviceDown { device, start_iter });
+                    let recover_at = start_iter + 1 + rng.below((h / 2).max(1));
+                    events.push(FaultEvent::DeviceRecover { device, start_iter: recover_at });
+                }
+                _ => {
+                    let factor = 1.5 + 2.0 * rng.f64();
+                    events.push(FaultEvent::TransientSlowdown { device, factor, start_iter, duration: 1 });
+                }
+            }
+        }
+        Self::new(events, n_devices).expect("generated timeline validates by construction")
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Canonical spec lines (checkpoint embedding / compat checks).
+    pub fn specs(&self) -> Vec<String> {
+        self.events.iter().map(FaultEvent::to_spec).collect()
+    }
+
+    /// Down-device mask at `iter`: for each device, the latest
+    /// `down`/`recover` event at or before `iter` wins; a same-start
+    /// tie resolves to recovered.
+    pub fn down_at(&self, iter: usize) -> Vec<bool> {
+        let mut stamp: Vec<Option<(usize, bool)>> = vec![None; self.n_devices];
+        for e in &self.events {
+            let (d, s, is_down) = match *e {
+                FaultEvent::DeviceDown { device, start_iter } => (device, start_iter, true),
+                FaultEvent::DeviceRecover { device, start_iter } => (device, start_iter, false),
+                _ => continue,
+            };
+            if s > iter {
+                continue;
+            }
+            let take = match stamp[d] {
+                None => true,
+                // Later start wins; on a tie, prefer recovered (replace
+                // an equal-start down, never an equal-start recover).
+                Some((prev_s, prev_down)) => s > prev_s || (s == prev_s && prev_down),
+            };
+            if take {
+                stamp[d] = Some((s, is_down));
+            }
+        }
+        stamp.iter().map(|s| matches!(s, Some((_, true)))).collect()
+    }
+
+    /// The effective cluster view at `iter`, or `None` when no fault is
+    /// active — callers MUST treat `None` as "take the ordinary static
+    /// path" so fault-free iterations stay bit-identical.
+    pub fn effective(&self, iter: usize, base: &ClusterSpec) -> Option<FaultView> {
+        if self.events.is_empty() {
+            return None;
+        }
+        debug_assert_eq!(base.n_devices(), self.n_devices, "timeline/cluster fleet mismatch");
+        let down = self.down_at(iter);
+        let mut any = down.iter().any(|&d| d);
+        let mut slowdown: Vec<f64> = (0..self.n_devices).map(|d| base.slowdown(d)).collect();
+        for e in &self.events {
+            if slowdown_active(e, iter) {
+                any = true;
+                if let FaultEvent::TransientSlowdown { device, factor, .. }
+                | FaultEvent::PersistentDegrade { device, factor, .. } = *e
+                {
+                    slowdown[device] *= factor;
+                }
+            }
+        }
+        if !any {
+            return None;
+        }
+        for (d, &dn) in down.iter().enumerate() {
+            if dn {
+                slowdown[d] = DOWN_SLOWDOWN;
+            }
+        }
+        Some(FaultView { slowdown, down })
+    }
+
+    /// (activations, recoveries) crossing the `iter-1 → iter` boundary:
+    /// slowdown events entering/leaving their active window plus
+    /// devices going down / coming back.
+    pub fn transitions(&self, iter: usize) -> (usize, usize) {
+        let mut act = 0;
+        let mut rec = 0;
+        for e in &self.events {
+            let now = slowdown_active(e, iter);
+            let was = iter > 0 && slowdown_active(e, iter - 1);
+            if now && !was {
+                act += 1;
+            }
+            if !now && was {
+                rec += 1;
+            }
+        }
+        let now = self.down_at(iter);
+        let was = if iter == 0 { vec![false; self.n_devices] } else { self.down_at(iter - 1) };
+        for d in 0..self.n_devices {
+            if now[d] && !was[d] {
+                act += 1;
+            }
+            if !now[d] && was[d] {
+                rec += 1;
+            }
+        }
+        (act, rec)
+    }
+
+    /// Human-readable description of everything active at `iter`
+    /// (Chrome-trace instant events, logs).
+    pub fn active_specs(&self, iter: usize) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .events
+            .iter()
+            .filter(|e| slowdown_active(e, iter))
+            .map(FaultEvent::to_spec)
+            .collect();
+        for (d, dn) in self.down_at(iter).into_iter().enumerate() {
+            if dn {
+                out.push(format!("down dev={d}"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::hpwnv(1) // 4 devices
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        let specs = [
+            "transient dev=2 factor=2.5 start=10 dur=5",
+            "degrade dev=1 factor=1.5 start=20",
+            "down dev=3 start=30",
+            "recover dev=3 start=40",
+        ];
+        for s in specs {
+            let e = FaultEvent::parse(s).unwrap();
+            assert_eq!(e.to_spec(), s);
+            assert_eq!(FaultEvent::parse(&e.to_spec()).unwrap(), e);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for (spec, needle) in [
+            ("meteor dev=0 start=1", "unknown event kind"),
+            ("transient dev=0 factor=2.0 start=1", "missing `dur="),
+            ("down start=1", "missing `dev="),
+            ("down dev=0 start=1 blah", "key=value"),
+            ("transient dev=x factor=2.0 start=1 dur=1", "bad device id"),
+            ("degrade dev=0 factor=fast start=1", "bad factor"),
+            ("down dev=0 start=1 color=red", "unknown key"),
+        ] {
+            let err = FaultEvent::parse(spec).unwrap_err();
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_events() {
+        let mk = |spec: &str| {
+            FaultTimeline::parse_specs(&[spec], 4).unwrap_err()
+        };
+        assert!(mk("down dev=4 start=0").contains("out of range"));
+        assert!(mk("transient dev=0 factor=0 start=0 dur=1").contains("finite and > 0"));
+        assert!(mk("transient dev=0 factor=-2 start=0 dur=1").contains("finite and > 0"));
+        assert!(mk("transient dev=0 factor=2 start=0 dur=0").contains("duration"));
+        assert!(mk("degrade dev=0 factor=inf start=0").contains("finite and > 0"));
+    }
+
+    #[test]
+    fn empty_timeline_is_always_inactive() {
+        let t = FaultTimeline::empty();
+        let c = cluster();
+        assert!(t.is_empty());
+        for iter in 0..64 {
+            assert_eq!(t.effective(iter, &c), None);
+            assert_eq!(t.transitions(iter), (0, 0));
+        }
+    }
+
+    #[test]
+    fn transient_window_is_half_open() {
+        let t = FaultTimeline::parse_specs(&["transient dev=2 factor=3 start=4 dur=2"], 4).unwrap();
+        let c = cluster();
+        assert!(t.effective(3, &c).is_none());
+        let v4 = t.effective(4, &c).unwrap();
+        assert_eq!(v4.slowdown, vec![1.0, 1.0, 3.0, 1.0]);
+        assert!(!v4.down.iter().any(|&d| d));
+        assert!(t.effective(5, &c).is_some());
+        assert!(t.effective(6, &c).is_none());
+        assert_eq!(t.transitions(4), (1, 0));
+        assert_eq!(t.transitions(5), (0, 0));
+        assert_eq!(t.transitions(6), (0, 1));
+    }
+
+    #[test]
+    fn degrade_is_permanent_and_composes() {
+        // Two degrades on the same device multiply, on top of the
+        // cluster's static straggler factor.
+        let t = FaultTimeline::parse_specs(
+            &["degrade dev=1 factor=2 start=1", "degrade dev=1 factor=1.5 start=3"],
+            4,
+        )
+        .unwrap();
+        let c = cluster().with_slowdown(1, 2.0);
+        assert!(t.effective(0, &c).is_none());
+        assert_eq!(t.effective(1, &c).unwrap().slowdown[1], 4.0);
+        assert_eq!(t.effective(100, &c).unwrap().slowdown[1], 6.0);
+        // Static factors on OTHER devices pass through untouched.
+        assert_eq!(t.effective(100, &c).unwrap().slowdown[0], 1.0);
+    }
+
+    #[test]
+    fn down_recover_state_machine() {
+        let t = FaultTimeline::parse_specs(&["down dev=3 start=2", "recover dev=3 start=5"], 4)
+            .unwrap();
+        let c = cluster();
+        assert!(t.effective(1, &c).is_none());
+        for iter in 2..5 {
+            let v = t.effective(iter, &c).unwrap();
+            assert!(v.down[3], "iter {iter}");
+            assert_eq!(v.slowdown[3], DOWN_SLOWDOWN);
+            assert_eq!(v.n_down(), 1);
+            assert!(!v.all_down());
+        }
+        // Recovered: back to the base vector, so no view at all.
+        assert!(t.effective(5, &c).is_none());
+        assert_eq!(t.transitions(2), (1, 0));
+        assert_eq!(t.transitions(5), (0, 1));
+    }
+
+    #[test]
+    fn same_start_recover_wins_tie() {
+        let t = FaultTimeline::parse_specs(&["down dev=0 start=3", "recover dev=0 start=3"], 4)
+            .unwrap();
+        assert_eq!(t.down_at(3), vec![false, false, false, false]);
+    }
+
+    #[test]
+    fn effective_cluster_and_pm_swap_only_slowdowns() {
+        let t = FaultTimeline::parse_specs(&["down dev=1 start=0"], 4).unwrap();
+        let c = cluster();
+        let v = t.effective(0, &c).unwrap();
+        let ec = v.effective_cluster(&c);
+        assert_eq!(ec.device_slowdown, vec![1.0, 0.0, 1.0, 1.0]);
+        assert!(ec.is_heterogeneous());
+        assert_eq!(ec.n_devices(), c.n_devices());
+        assert_eq!(ec.avg_bandwidth(), c.avg_bandwidth());
+        let pm = PerfModel::new(&crate::config::ModelSpec::moe_gpt_s(8, 1, 8192), &c);
+        let epm = v.effective_perf_model(&pm);
+        assert_eq!(epm.device_slowdown, ec.device_slowdown);
+        assert_eq!(epm.tokens_per_s, pm.tokens_per_s);
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_valid() {
+        let a = FaultTimeline::generate(42, 8, 16);
+        let b = FaultTimeline::generate(42, 8, 16);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        // Round-trip through specs reproduces the timeline bit-exactly.
+        let back = FaultTimeline::parse_specs(&a.specs(), 8).unwrap();
+        assert_eq!(back, a);
+        assert_ne!(FaultTimeline::generate(43, 8, 16), a);
+        // Seeded timelines never down device 0.
+        for seed in 0..32 {
+            let t = FaultTimeline::generate(seed, 4, 12);
+            for iter in 0..24 {
+                assert!(!t.down_at(iter)[0], "seed {seed} iter {iter}");
+            }
+        }
+    }
+
+    #[test]
+    fn active_specs_lists_whats_live() {
+        let t = FaultTimeline::parse_specs(
+            &["transient dev=2 factor=2 start=1 dur=2", "down dev=3 start=1"],
+            4,
+        )
+        .unwrap();
+        let live = t.active_specs(1);
+        assert_eq!(live.len(), 2);
+        assert!(live.iter().any(|s| s.starts_with("transient dev=2")));
+        assert!(live.iter().any(|s| s == "down dev=3"));
+        assert!(t.active_specs(0).is_empty());
+    }
+}

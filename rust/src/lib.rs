@@ -46,6 +46,14 @@
 //!   PJRT loading of the AOT'd JAX/Pallas artifacts, the end-to-end
 //!   training loop, and a threaded expert-parallel coordinator with
 //!   virtual devices.
+//! * [`faults`] — deterministic fault injection: a seeded
+//!   `FaultTimeline` (transient slowdowns, persistent degrades, device
+//!   down/recover) yielding per-iteration effective slowdown vectors
+//!   and down-device sets that replace the static
+//!   `ClusterSpec::device_slowdown` as the DES pricing input; the
+//!   balancer session reacts with health-driven replans, device-masked
+//!   searches, replica failover, and a last-known-good fallback, and
+//!   `sim::checkpoint` makes interrupted runs resume bit-identically.
 //! * [`obs`] — the telemetry layer the statistics flow through: a
 //!   dependency-free `Recorder` trait (counters / gauges / RAII spans)
 //!   with a zero-cost no-op default, the `TelemetryHub` aggregating
@@ -65,6 +73,7 @@ pub mod benchkit;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod faults;
 pub mod metrics;
 pub mod moe;
 pub mod obs;

@@ -125,6 +125,56 @@ impl Placement {
         }
         Ok(())
     }
+
+    /// Validity under a device-health mask (`down[d]` == device `d` is
+    /// out of service): every expert keeps at least one replica, none
+    /// of them on a down device.  The home-replica invariant is
+    /// intentionally relaxed — an expert whose home is down lives on a
+    /// failover replica until the device recovers.
+    pub fn validate_with_down(&self, down: &[bool]) -> Result<(), String> {
+        for e in 0..self.n_experts() {
+            if self.replicas[e].is_empty() {
+                return Err(format!("expert {e} has no replicas"));
+            }
+            if let Some(d) = self.replicas[e].iter().find(|&d| down.get(d).copied().unwrap_or(false)) {
+                return Err(format!("expert {e} has a replica on down device {d}"));
+            }
+            if !down.get(self.home(e)).copied().unwrap_or(false)
+                && !self.replicas[e].contains(self.home(e))
+            {
+                return Err(format!("expert {e} lost its home replica"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Fail experts over off down devices, in place: every replica on a
+    /// down device is dropped, and an expert stranded with no replicas
+    /// gets one on the first live device scanning cyclically from its
+    /// home (deterministic, so resumed runs fail over identically).
+    /// With every device down there is nowhere to go — the stranded
+    /// expert keeps an empty set and `validate_with_down` reports it
+    /// (callers reject all-down fault views before pricing).
+    pub fn fail_over(&mut self, down: &[bool]) {
+        let d = self.n_devices;
+        for e in 0..self.n_experts() {
+            for dev in 0..d {
+                if down.get(dev).copied().unwrap_or(false) {
+                    self.replicas[e].remove(dev);
+                }
+            }
+            if self.replicas[e].is_empty() {
+                let home = self.home(e);
+                for step in 0..d {
+                    let dev = (home + step) % d;
+                    if !down.get(dev).copied().unwrap_or(false) {
+                        self.replicas[e].insert(dev);
+                        break;
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +223,48 @@ mod tests {
         // Restoring the identity singleton round-trips.
         p.set_replicas(1, [1usize]);
         assert!(p.is_identity());
+    }
+
+    #[test]
+    fn fail_over_strips_down_devices() {
+        let mut p = Placement::identity(8, 4);
+        p.replicate_to_all(0);
+        p.replicate_to_all(5);
+        let down = [false, true, false, false];
+        p.fail_over(&down);
+        assert!(p.validate_with_down(&down).is_ok());
+        // Replicated experts just lose the down member.
+        assert_eq!(p.replicas(0).iter().collect::<Vec<_>>(), vec![0, 2, 3]);
+        // Experts homed on the down device fail over to the next live
+        // device, scanning cyclically from home.
+        assert_eq!(p.replicas(1).iter().collect::<Vec<_>>(), vec![2]);
+        assert_eq!(p.replicas(5).iter().collect::<Vec<_>>(), vec![0, 2, 3]);
+        // Untouched experts keep their homes; plain validate now fails
+        // only for the failed-over experts' missing homes.
+        assert_eq!(p.replicas(2).iter().collect::<Vec<_>>(), vec![2]);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn fail_over_wraps_past_trailing_down_devices() {
+        let mut p = Placement::identity(4, 4);
+        let down = [false, false, true, true];
+        p.fail_over(&down);
+        assert!(p.validate_with_down(&down).is_ok());
+        assert_eq!(p.replicas(2).iter().collect::<Vec<_>>(), vec![0]);
+        assert_eq!(p.replicas(3).iter().collect::<Vec<_>>(), vec![0]);
+        // All-down leaves stranded experts empty and detectable.
+        let mut q = Placement::identity(2, 2);
+        q.fail_over(&[true, true]);
+        assert!(q.validate_with_down(&[true, true]).is_err());
+    }
+
+    #[test]
+    fn masked_validate_flags_down_replicas() {
+        let p = Placement::identity(4, 4);
+        assert!(p.validate_with_down(&[false; 4]).is_ok());
+        let err = p.validate_with_down(&[false, true, false, false]).unwrap_err();
+        assert!(err.contains("down device 1"), "{err}");
     }
 
     #[test]

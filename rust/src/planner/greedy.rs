@@ -177,6 +177,15 @@ pub fn greedy_search_with(
                 }
             }
         }
+        // Device-health mask: never widen a replica set onto a down
+        // device (the session's failover handles pre-existing homes).
+        if let Some(mask) = &cfg.device_mask {
+            for (d, &dn) in mask.iter().enumerate() {
+                if dn && !scratch.nb.contains(&d) {
+                    scratch.nb.push(d);
+                }
+            }
+        }
         rs.apply_replicate_except(w, expert, &scratch.nb);
         scratch.selected.push(expert);
 
@@ -190,6 +199,11 @@ pub fn greedy_search_with(
             cnt = s;
         }
         if s == n_experts {
+            break;
+        }
+        // Step budget exhausted: degrade gracefully to the best prefix
+        // found so far instead of running Algorithm 1 to termination.
+        if cfg.step_budget.is_some_and(|b| evaluated >= b) {
             break;
         }
     }
@@ -523,6 +537,59 @@ mod tests {
             2, // AUTO_EXCLUDE on 4 devices
         );
         assert!((t - r.t_est).abs() <= 1e-9 * t.max(1.0) + 1e-12);
+    }
+
+    #[test]
+    fn device_mask_blocks_new_replicas_on_down_devices() {
+        let w = LoadMatrix::from_rows(vec![
+            vec![900, 50, 30, 44],
+            vec![800, 100, 60, 64],
+            vec![850, 70, 40, 64],
+            vec![900, 60, 20, 44],
+        ]);
+        let mask = vec![false, true, false, true];
+        let cfg = PlannerConfig {
+            device_mask: Some(mask.clone()),
+            ..Default::default()
+        };
+        let r = greedy_search(&w, &pm(4), &cfg);
+        assert!(r.placement.validate().is_ok());
+        for e in 0..4 {
+            for d in r.placement.replicas(e).iter() {
+                // A down device may only appear as the expert's own home
+                // (failover is the session's job); never as a new replica.
+                assert!(!mask[d] || d == r.placement.home(e), "expert {e} replica on down {d}");
+            }
+        }
+        // A default (None) mask stays bit-identical to the reference.
+        let plain = greedy_search(&w, &pm(4), &PlannerConfig::default());
+        assert_same_result(&plain, &greedy_search_reference(&w, &pm(4), &PlannerConfig::default()));
+    }
+
+    #[test]
+    fn step_budget_truncates_deterministically() {
+        let mut w = LoadMatrix::zeros(8, 8);
+        for d in 0..8 {
+            for e in 0..8 {
+                w.set(d, e, if e < 2 { 800 } else { 40 });
+            }
+        }
+        let unbounded = greedy_search(&w, &pm(8), &PlannerConfig::default());
+        assert!(unbounded.evaluated >= 2, "test needs a multi-step search");
+        let cfg = PlannerConfig { step_budget: Some(1), ..Default::default() };
+        let budgeted = greedy_search(&w, &pm(8), &cfg);
+        assert_eq!(budgeted.evaluated, 1);
+        assert!(budgeted.placement.validate().is_ok());
+        assert!(budgeted.t_est <= budgeted.t_identity + 1e-15);
+        // Deterministic: same budget, same result.
+        let again = greedy_search(&w, &pm(8), &cfg);
+        assert_same_result(&budgeted, &again);
+        // A budget at least as large as the unbounded search is inert.
+        let loose = PlannerConfig {
+            step_budget: Some(unbounded.evaluated),
+            ..Default::default()
+        };
+        assert_same_result(&unbounded, &greedy_search(&w, &pm(8), &loose));
     }
 
     #[test]

@@ -45,6 +45,17 @@ pub struct PlannerConfig {
     /// Optional device-memory model: devices without replica headroom are
     /// excluded from placements (see moe::memory).
     pub memory: Option<crate::moe::MemoryModel>,
+    /// Device-health mask (`true` = down): the search never places NEW
+    /// replicas on masked devices.  Home replicas of experts homed on a
+    /// down device are the balancer session's failover problem — the
+    /// search only ever widens replica sets.  `None` (default) leaves
+    /// the search bit-identical to a maskless build.
+    pub device_mask: Option<Vec<bool>>,
+    /// Deterministic step budget: stop the greedy loop after evaluating
+    /// this many candidate placements, returning the best prefix found
+    /// so far (graceful degradation under a replan deadline).  `None`
+    /// (default) keeps Algorithm 1's own termination — bit-identical.
+    pub step_budget: Option<usize>,
 }
 
 impl Default for PlannerConfig {
@@ -56,6 +67,8 @@ impl Default for PlannerConfig {
             use_overlap_model: true,
             slack_aware: false,
             memory: None,
+            device_mask: None,
+            step_budget: None,
         }
     }
 }

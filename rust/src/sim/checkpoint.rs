@@ -1,0 +1,477 @@
+//! Checkpoint/resume for the simulator: snapshot completed iterations to
+//! disk, kill the run, and resume to a [`SimReport`] bit-identical to the
+//! uninterrupted one.
+//!
+//! The snapshot stores only *results* (the finished [`IterationResult`]s)
+//! plus enough identity to refuse a mismatched resume — policy name, a
+//! trace signature, and the fault-timeline specs.  Session state
+//! (prophet histories, planner caches, drift detectors, health masks) is
+//! deliberately NOT serialized: it is a pure function of the
+//! decide→observe call sequence, so the simulator replays that sequence
+//! from the (deterministic) trace instead — see
+//! `sim::simulate_policy_faulted`.  That keeps the format small, stable
+//! and honest: anything the replay cannot reconstruct bit-for-bit would
+//! be a determinism bug the resume test suite is designed to catch.
+//!
+//! Numbers survive the JSON round trip bit-exactly: the writer emits
+//! integral values as integers and everything else via shortest-roundtrip
+//! formatting, and the parser goes through `str::parse::<f64>` (the one
+//! exception, `-0.0`, cannot occur in the strictly non-negative fields
+//! stored here).  Saves are atomic (write to a temp file, then rename) so
+//! a kill mid-save leaves the previous snapshot intact.
+
+use crate::sim::{IterationResult, SimReport};
+use crate::sim::events::DeviceStats;
+use crate::util::json::{self, Json};
+use crate::workload::Trace;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Schema tag of `checkpoint.json`.
+pub const SCHEMA: &str = "pro-prophet-checkpoint/v1";
+/// Schema tag of a serialized [`SimReport`] (`--report-json`).
+pub const REPORT_SCHEMA: &str = "pro-prophet-simreport/v1";
+
+/// Map a breakdown key back to the scheduler's `'static` vocabulary
+/// ([`crate::scheduler::Op::breakdown_key`]).
+fn breakdown_key(name: &str) -> Result<&'static str, String> {
+    for k in ["search", "place", "reduce", "a2a", "expert_comp", "non_moe_comp"] {
+        if k == name {
+            return Ok(k);
+        }
+    }
+    Err(format!("checkpoint: unknown breakdown key `{name}`"))
+}
+
+fn get<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("checkpoint: missing `{key}`"))
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64, String> {
+    get(j, key)?
+        .as_f64()
+        .ok_or_else(|| format!("checkpoint: `{key}` is not a number"))
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize, String> {
+    get(j, key)?
+        .as_usize()
+        .ok_or_else(|| format!("checkpoint: `{key}` is not a number"))
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
+    get(j, key)?
+        .as_str()
+        .ok_or_else(|| format!("checkpoint: `{key}` is not a string"))
+}
+
+fn get_arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json], String> {
+    get(j, key)?
+        .as_arr()
+        .ok_or_else(|| format!("checkpoint: `{key}` is not an array"))
+}
+
+/// One [`IterationResult`] as JSON (round-trips bit-exactly).
+pub fn iteration_to_json(it: &IterationResult) -> Json {
+    let breakdown = Json::Obj(
+        it.breakdown
+            .iter()
+            .map(|(k, v)| (k.to_string(), json::num(*v)))
+            .collect(),
+    );
+    let devices = json::arr(
+        it.devices
+            .iter()
+            .map(|d| {
+                json::obj(vec![
+                    ("busy_comp", json::num(d.busy_comp)),
+                    ("busy_comm", json::num(d.busy_comm)),
+                    ("exposed_comm", json::num(d.exposed_comm)),
+                    ("idle", json::num(d.idle)),
+                    ("finish", json::num(d.finish)),
+                ])
+            })
+            .collect(),
+    );
+    json::obj(vec![
+        ("time", json::num(it.time)),
+        ("barrier_time", json::num(it.barrier_time)),
+        ("des_time", json::num(it.des_time)),
+        ("breakdown", breakdown),
+        ("per_block_time", json::num_arr(&it.per_block_time)),
+        ("balance_before", json::num(it.balance_before)),
+        ("balance_after", json::num(it.balance_after)),
+        ("trans_copies", json::num(it.trans_copies as f64)),
+        (
+            "forecast_error",
+            it.forecast_error.map_or(Json::Null, json::num),
+        ),
+        ("straggler", json::num(it.straggler as f64)),
+        ("devices", devices),
+    ])
+}
+
+/// Parse one [`IterationResult`] back (inverse of [`iteration_to_json`]).
+pub fn iteration_from_json(j: &Json) -> Result<IterationResult, String> {
+    let mut breakdown: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let bd = get(j, "breakdown")?
+        .as_obj()
+        .ok_or("checkpoint: `breakdown` is not an object")?;
+    for (k, v) in bd {
+        let val = v
+            .as_f64()
+            .ok_or_else(|| format!("checkpoint: breakdown `{k}` is not a number"))?;
+        breakdown.insert(breakdown_key(k)?, val);
+    }
+    let per_block_time = get_arr(j, "per_block_time")?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .ok_or("checkpoint: `per_block_time` entry is not a number".to_string())
+        })
+        .collect::<Result<Vec<f64>, String>>()?;
+    let mut devices = Vec::new();
+    for d in get_arr(j, "devices")? {
+        devices.push(DeviceStats {
+            busy_comp: get_f64(d, "busy_comp")?,
+            busy_comm: get_f64(d, "busy_comm")?,
+            exposed_comm: get_f64(d, "exposed_comm")?,
+            idle: get_f64(d, "idle")?,
+            finish: get_f64(d, "finish")?,
+        });
+    }
+    let forecast_error = match get(j, "forecast_error")? {
+        Json::Null => None,
+        v => Some(
+            v.as_f64()
+                .ok_or("checkpoint: `forecast_error` is not a number")?,
+        ),
+    };
+    Ok(IterationResult {
+        time: get_f64(j, "time")?,
+        barrier_time: get_f64(j, "barrier_time")?,
+        breakdown,
+        per_block_time,
+        balance_before: get_f64(j, "balance_before")?,
+        balance_after: get_f64(j, "balance_after")?,
+        trans_copies: get_f64(j, "trans_copies")? as u64,
+        forecast_error,
+        des_time: get_f64(j, "des_time")?,
+        devices,
+        straggler: get_usize(j, "straggler")?,
+    })
+}
+
+/// Serialize a whole [`SimReport`] (`simulate --report-json`): the
+/// resume-bit-identity contract is "both runs serialize to the same
+/// bytes under this formatter".
+pub fn report_to_json(r: &SimReport) -> Json {
+    json::obj(vec![
+        ("schema", json::s(REPORT_SCHEMA)),
+        ("policy", json::s(&r.policy)),
+        ("plans_run", json::num(r.plans_run as f64)),
+        ("plans_reused", json::num(r.plans_reused as f64)),
+        ("drift_replans", json::num(r.drift_replans as f64)),
+        (
+            "iters",
+            json::arr(r.iters.iter().map(iteration_to_json).collect()),
+        ),
+    ])
+}
+
+/// FNV-1a 64 over the trace's canonical serialization — cheap, stable,
+/// dependency-free identity for "is this the same trace?".
+pub fn trace_hash(trace: &Trace) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in trace.serialize().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// A simulator snapshot: everything needed to resume and to refuse a
+/// mismatched resume.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Policy display name the run was started with.
+    pub policy: String,
+    /// First iteration the resumed run must execute live.
+    pub next_iter: usize,
+    /// Trace identity: (layers, devices, experts, iterations, hash).
+    pub trace_shape: (usize, usize, usize, usize),
+    pub trace_hash: String,
+    /// Fault timeline as round-trippable specs
+    /// ([`crate::faults::FaultTimeline::specs`]).
+    pub fault_specs: Vec<String>,
+    /// Completed iterations, verbatim.
+    pub iters: Vec<IterationResult>,
+}
+
+impl Checkpoint {
+    /// The snapshot file inside a checkpoint directory.
+    pub fn file(dir: &Path) -> PathBuf {
+        dir.join("checkpoint.json")
+    }
+
+    /// Build a snapshot of a partially completed run.
+    pub fn of(policy: &str, trace: &Trace, fault_specs: Vec<String>, iters: &[IterationResult]) -> Checkpoint {
+        Checkpoint {
+            policy: policy.to_string(),
+            next_iter: iters.len(),
+            trace_shape: (trace.n_layers, trace.n_devices, trace.n_experts, trace.len()),
+            trace_hash: trace_hash(trace),
+            fault_specs,
+            iters: iters.to_vec(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema", json::s(SCHEMA)),
+            ("policy", json::s(&self.policy)),
+            ("next_iter", json::num(self.next_iter as f64)),
+            (
+                "trace",
+                json::obj(vec![
+                    ("layers", json::num(self.trace_shape.0 as f64)),
+                    ("devices", json::num(self.trace_shape.1 as f64)),
+                    ("experts", json::num(self.trace_shape.2 as f64)),
+                    ("iters", json::num(self.trace_shape.3 as f64)),
+                    ("hash", json::s(&self.trace_hash)),
+                ]),
+            ),
+            (
+                "faults",
+                json::arr(self.fault_specs.iter().map(|s| json::s(s)).collect()),
+            ),
+            (
+                "iters",
+                json::arr(self.iters.iter().map(iteration_to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Checkpoint, String> {
+        let schema = get_str(j, "schema")?;
+        if schema != SCHEMA {
+            return Err(format!(
+                "checkpoint: schema `{schema}`, this build reads `{SCHEMA}`"
+            ));
+        }
+        let trace = get(j, "trace")?;
+        let mut fault_specs = Vec::new();
+        for s in get_arr(j, "faults")? {
+            fault_specs.push(
+                s.as_str()
+                    .ok_or("checkpoint: `faults` entry is not a string")?
+                    .to_string(),
+            );
+        }
+        let mut iters = Vec::new();
+        for it in get_arr(j, "iters")? {
+            iters.push(iteration_from_json(it)?);
+        }
+        let ck = Checkpoint {
+            policy: get_str(j, "policy")?.to_string(),
+            next_iter: get_usize(j, "next_iter")?,
+            trace_shape: (
+                get_usize(trace, "layers")?,
+                get_usize(trace, "devices")?,
+                get_usize(trace, "experts")?,
+                get_usize(trace, "iters")?,
+            ),
+            trace_hash: get_str(trace, "hash")?.to_string(),
+            fault_specs,
+            iters,
+        };
+        if ck.iters.len() != ck.next_iter {
+            return Err(format!(
+                "checkpoint: next_iter {} but {} stored iterations",
+                ck.next_iter,
+                ck.iters.len()
+            ));
+        }
+        Ok(ck)
+    }
+
+    /// Write `checkpoint.json` atomically (temp file + rename): a kill
+    /// mid-save leaves the previous snapshot intact.
+    pub fn save(&self, dir: &Path) -> Result<(), String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("checkpoint: cannot create {}: {e}", dir.display()))?;
+        let tmp = dir.join("checkpoint.json.tmp");
+        let path = Self::file(dir);
+        std::fs::write(&tmp, self.to_json().to_string())
+            .map_err(|e| format!("checkpoint: cannot write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("checkpoint: cannot rename into {}: {e}", path.display()))
+    }
+
+    /// Load `checkpoint.json` from a checkpoint directory.
+    pub fn load(dir: &Path) -> Result<Checkpoint, String> {
+        let path = Self::file(dir);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("checkpoint: cannot read {}: {e}", path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    /// Refuse to resume a run that is not the one this snapshot came
+    /// from: policy, trace identity and fault timeline must all match.
+    pub fn check_compatible(
+        &self,
+        policy: &str,
+        trace: &Trace,
+        fault_specs: &[String],
+    ) -> Result<(), String> {
+        if self.policy != policy {
+            return Err(format!(
+                "checkpoint was taken with policy `{}`, resuming with `{policy}`",
+                self.policy
+            ));
+        }
+        let shape = (trace.n_layers, trace.n_devices, trace.n_experts, trace.len());
+        if self.trace_shape != shape || self.trace_hash != trace_hash(trace) {
+            return Err(format!(
+                "checkpoint was taken on a different trace \
+                 (snapshot {:?}/{}, run {:?}/{})",
+                self.trace_shape,
+                self.trace_hash,
+                shape,
+                trace_hash(trace)
+            ));
+        }
+        if self.fault_specs != fault_specs {
+            return Err(format!(
+                "checkpoint was taken with faults {:?}, resuming with {:?}",
+                self.fault_specs, fault_specs
+            ));
+        }
+        if self.next_iter > trace.len() {
+            return Err(format!(
+                "checkpoint is {} iterations in, trace has {}",
+                self.next_iter,
+                trace.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_iteration() -> IterationResult {
+        let mut breakdown = BTreeMap::new();
+        breakdown.insert("a2a", 0.1 + 0.2); // deliberately non-representable
+        breakdown.insert("expert_comp", 1.0 / 3.0);
+        IterationResult {
+            time: 0.123_456_789_012_345_6,
+            barrier_time: 0.2,
+            breakdown,
+            per_block_time: vec![0.1, 1.0 / 7.0],
+            balance_before: 3.5,
+            balance_after: 1.25,
+            trans_copies: 42,
+            forecast_error: Some(0.062_5),
+            des_time: 0.111_111_111_111_111_1,
+            devices: vec![
+                DeviceStats {
+                    busy_comp: 1.0 / 9.0,
+                    busy_comm: 0.25,
+                    exposed_comm: 0.125,
+                    idle: 0.0,
+                    finish: 0.123,
+                },
+                DeviceStats::default(),
+            ],
+            straggler: 1,
+        }
+    }
+
+    #[test]
+    fn iteration_json_round_trip_is_bit_exact() {
+        let it = sample_iteration();
+        let text = iteration_to_json(&it).to_string();
+        let back = iteration_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.time.to_bits(), it.time.to_bits());
+        assert_eq!(back.barrier_time.to_bits(), it.barrier_time.to_bits());
+        assert_eq!(back.des_time.to_bits(), it.des_time.to_bits());
+        assert_eq!(back.breakdown, it.breakdown);
+        assert_eq!(back.per_block_time, it.per_block_time);
+        assert_eq!(back.balance_before.to_bits(), it.balance_before.to_bits());
+        assert_eq!(back.trans_copies, it.trans_copies);
+        assert_eq!(back.forecast_error, it.forecast_error);
+        assert_eq!(back.devices, it.devices);
+        assert_eq!(back.straggler, it.straggler);
+        // None forecast round-trips as null.
+        let mut it2 = sample_iteration();
+        it2.forecast_error = None;
+        let text2 = iteration_to_json(&it2).to_string();
+        let back2 = iteration_from_json(&json::parse(&text2).unwrap()).unwrap();
+        assert_eq!(back2.forecast_error, None);
+    }
+
+    #[test]
+    fn checkpoint_save_load_round_trip() {
+        let trace = {
+            let mut t = Trace::new(1, 4, 4);
+            t.push(vec![crate::moe::LoadMatrix::from_rows(vec![
+                vec![10, 20, 30, 40];
+                4
+            ])]);
+            t.push(vec![crate::moe::LoadMatrix::from_rows(vec![
+                vec![40, 30, 20, 10];
+                4
+            ])]);
+            t
+        };
+        let specs = vec!["down dev=1 start=1".to_string()];
+        let ck = Checkpoint::of("Pro-Prophet", &trace, specs.clone(), &[sample_iteration()]);
+        let dir = std::env::temp_dir().join(format!(
+            "pro_prophet_ckpt_test_{}",
+            std::process::id()
+        ));
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.policy, "Pro-Prophet");
+        assert_eq!(back.next_iter, 1);
+        assert_eq!(back.trace_shape, (1, 4, 4, 2));
+        assert_eq!(back.trace_hash, trace_hash(&trace));
+        assert_eq!(back.fault_specs, specs);
+        assert_eq!(back.iters.len(), 1);
+        assert_eq!(back.iters[0].time.to_bits(), sample_iteration().time.to_bits());
+
+        // Compatibility gate: right run passes, wrong ones are named.
+        back.check_compatible("Pro-Prophet", &trace, &specs).unwrap();
+        let err = back.check_compatible("deepspeed", &trace, &specs).unwrap_err();
+        assert!(err.contains("policy"), "{err}");
+        let err = back.check_compatible("Pro-Prophet", &trace, &[]).unwrap_err();
+        assert!(err.contains("faults"), "{err}");
+        let mut other = Trace::new(1, 4, 4);
+        other.push(vec![crate::moe::LoadMatrix::from_rows(vec![
+            vec![1, 1, 1, 1];
+            4
+        ])]);
+        let err = back.check_compatible("Pro-Prophet", &other, &specs).unwrap_err();
+        assert!(err.contains("different trace"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_schema_and_keys_are_rejected() {
+        let err = Checkpoint::from_json(&json::obj(vec![(
+            "schema",
+            json::s("pro-prophet-checkpoint/v999"),
+        )]))
+        .unwrap_err();
+        assert!(err.contains("schema"), "{err}");
+        let bad = r#"{"breakdown": {"warp_drive": 1.0}, "per_block_time": [],
+                      "devices": [], "forecast_error": null, "time": 1.0,
+                      "barrier_time": 1.0, "des_time": 1.0, "balance_before": 0.0,
+                      "balance_after": 0.0, "trans_copies": 0, "straggler": 0}"#;
+        let err = iteration_from_json(&json::parse(bad).unwrap()).unwrap_err();
+        assert!(err.contains("warp_drive"), "{err}");
+    }
+}

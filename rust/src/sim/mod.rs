@@ -37,6 +37,7 @@
 //! retired; its last copy lives in [`reference`] as input vocabulary for
 //! the frozen pre-refactor oracle.
 
+pub mod checkpoint;
 pub mod engine;
 pub mod events;
 pub mod reference;
@@ -50,6 +51,7 @@ use crate::balancer::{
 };
 use crate::cluster::ClusterSpec;
 use crate::config::ModelSpec;
+use crate::faults::{FaultTimeline, FaultView};
 use crate::metrics::balance_degree;
 use crate::moe::{LoadMatrix, Placement};
 use crate::obs::{self, Labels, Recorder, Span};
@@ -61,6 +63,7 @@ use crate::scheduler::{
 use crate::util::threads;
 use crate::workload::Trace;
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 /// Re-exported from [`crate::balancer`] (its canonical home) so existing
 /// `sim::ProphetOptions` imports keep working.
@@ -267,6 +270,42 @@ impl SimReport {
     }
 }
 
+/// Checkpoint knobs for [`simulate_policy_faulted`].
+#[derive(Clone, Debug)]
+pub struct CheckpointConfig {
+    /// Directory holding `checkpoint.json` (created if missing).
+    pub dir: PathBuf,
+    /// Snapshot every this many completed iterations (clamped to >= 1).
+    /// The final iteration is never snapshotted — a finished run has
+    /// nothing to resume.
+    pub every: usize,
+    /// Load an existing snapshot and continue from it instead of
+    /// starting cold.
+    pub resume: bool,
+}
+
+impl CheckpointConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        CheckpointConfig { dir: dir.into(), every: 1, resume: false }
+    }
+}
+
+/// Extended options for [`simulate_policy_faulted`].  `Default` is the
+/// plain run: no faults, no checkpointing, full trace — bit-identical to
+/// [`simulate_policy_with`] (which is now a thin wrapper over it).
+#[derive(Clone, Debug, Default)]
+pub struct SimOptions {
+    /// Fault events injected into the run
+    /// ([`FaultTimeline::empty`] = none).
+    pub faults: FaultTimeline,
+    /// Periodic snapshots + resume (see [`CheckpointConfig`]).
+    pub checkpoint: Option<CheckpointConfig>,
+    /// Stop after this many completed iterations — the "kill" half of
+    /// the kill-and-resume contract, deterministic enough to test.  The
+    /// partial report is returned as-is.
+    pub stop_after: Option<usize>,
+}
+
 /// Per-layer decide + price outcome (the parallel phase's unit of work).
 struct LayerOutcome {
     costs: BlockCosts,
@@ -460,31 +499,185 @@ pub fn simulate_policy_with(
     policy: Box<dyn BalancingPolicy>,
     rec: std::sync::Arc<dyn Recorder>,
 ) -> SimReport {
+    simulate_policy_faulted(model, cluster, trace, policy, rec, &SimOptions::default())
+        .expect("default SimOptions cannot fail")
+}
+
+/// Resolve one iteration's fault view and feed the down set to the
+/// session (health transitions force masked replans / failover).  `None`
+/// when no fault is active — the iteration prices exactly like a
+/// fault-free run.  Errs when every device is down: no survivor can run
+/// the model, and pretending otherwise would report a zero-cost
+/// iteration.
+fn fault_view_for(
+    session: &mut BalancerSession,
+    faults: &FaultTimeline,
+    cluster: &ClusterSpec,
+    iter_index: usize,
+    rec: Option<&dyn Recorder>,
+) -> Result<Option<FaultView>, String> {
+    if faults.is_empty() {
+        return Ok(None);
+    }
+    let view = faults.effective(iter_index, cluster);
+    let down = view
+        .as_ref()
+        .map(|v| v.down.clone())
+        .unwrap_or_else(|| vec![false; cluster.n_devices()]);
+    session.set_device_health(&down);
+    if let Some(v) = &view {
+        if v.all_down() {
+            return Err(format!(
+                "every device is down at iteration {iter_index}; nothing left to run on"
+            ));
+        }
+    }
+    if let Some(rec) = rec {
+        if rec.enabled() {
+            let (activated, recovered) = faults.transitions(iter_index);
+            if activated > 0 {
+                rec.counter("fault.activations", Labels::None, activated as u64);
+            }
+            if recovered > 0 {
+                rec.counter("fault.recoveries", Labels::None, recovered as u64);
+            }
+            rec.gauge(
+                "fault.devices_down",
+                Labels::None,
+                down.iter().filter(|&&d| d).count() as f64,
+            );
+        }
+    }
+    Ok(view)
+}
+
+/// Rebuild one already-completed iteration's effect on the session
+/// without pricing it.  The decide→observe call sequence (with the same
+/// fault views and health transitions as the original run) is the
+/// session's entire state input — prophet histories, planner caches,
+/// drift detectors and plan counters are pure functions of it — so
+/// replaying it reconstructs the session bit-for-bit while skipping the
+/// expensive routing/DES work.  This is what makes the checkpoint format
+/// results-only (see [`checkpoint`]).
+fn replay_iteration(
+    session: &mut BalancerSession,
+    pm: &PerfModel,
+    cluster: &ClusterSpec,
+    faults: &FaultTimeline,
+    iter_index: usize,
+    layers: &[LoadMatrix],
+) {
+    let view = fault_view_for(session, faults, cluster, iter_index, None)
+        .expect("replay cannot reach an all-down iteration: the original run refused to complete it");
+    match &view {
+        Some(v) => {
+            let eff_pm = v.effective_perf_model(pm);
+            for (l, w) in layers.iter().enumerate() {
+                let _ = session.decide_layer(l, w, &eff_pm);
+            }
+        }
+        None => {
+            for (l, w) in layers.iter().enumerate() {
+                let _ = session.decide_layer(l, w, pm);
+            }
+        }
+    }
+    session.observe_iteration(layers);
+}
+
+/// [`simulate_policy_with`] plus the robustness axes: a seeded
+/// [`FaultTimeline`] priced into every affected iteration, graceful
+/// degradation through the session's health monitor, and periodic
+/// checkpoints with bit-identical resume.
+///
+/// * An empty timeline and default options take exactly the frozen code
+///   path — bit-identical to [`simulate_policy_with`] (pinned by
+///   `rust/tests/integration_faults.rs`).
+/// * A fault-active iteration is priced by the device-level DES on a
+///   temporary fault-effective engine (slowdowns composed onto the
+///   cluster's static vector; a down device has slowdown 0 and
+///   contributes no work) — the barrier model cannot see per-device
+///   state, exactly like the static-straggler case.
+/// * `Err` is reserved for unusable inputs: a timeline sized for a
+///   different cluster, every device down at once, or checkpoint I/O
+///   failures.  Degraded-but-runnable states (devices down, stranded
+///   experts) are handled by failover/fallback inside the session and
+///   never error.
+pub fn simulate_policy_faulted(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    trace: &Trace,
+    policy: Box<dyn BalancingPolicy>,
+    rec: std::sync::Arc<dyn Recorder>,
+    opts: &SimOptions,
+) -> Result<SimReport, String> {
+    let faults = &opts.faults;
+    if !faults.is_empty() && faults.n_devices() != cluster.n_devices() {
+        return Err(format!(
+            "fault timeline is for {} devices, cluster has {}",
+            faults.n_devices(),
+            cluster.n_devices()
+        ));
+    }
     let pm = PerfModel::new(model, cluster);
     let eng = Engine::new(cluster, &pm);
     let n_layers = trace.n_layers;
     if n_layers == 0 {
-        return SimReport { policy: policy.name(), ..Default::default() };
+        return Ok(SimReport { policy: policy.name(), ..Default::default() });
     }
     let heterogeneous = cluster.is_heterogeneous();
     let mut session = BalancerSession::with_recorder(policy, n_layers, rec.clone());
     let mut report = SimReport { policy: session.policy_name(), ..Default::default() };
 
-    for (iter_index, layers) in trace.iterations.iter().enumerate() {
+    // Resume: restore the completed iterations' results verbatim, then
+    // replay their decide/observe sequence to rebuild the session.
+    let mut start = 0usize;
+    if let Some(ck) = &opts.checkpoint {
+        if ck.resume {
+            let snap = checkpoint::Checkpoint::load(&ck.dir)?;
+            snap.check_compatible(&report.policy, trace, &faults.specs())?;
+            for (iter_index, layers) in
+                trace.iterations.iter().enumerate().take(snap.next_iter)
+            {
+                replay_iteration(&mut session, &pm, cluster, faults, iter_index, layers);
+            }
+            report.iters = snap.iters;
+            start = snap.next_iter;
+        }
+    }
+
+    for (iter_index, layers) in trace.iterations.iter().enumerate().skip(start) {
         rec.iteration_start(iter_index);
         let sp_iter = Span::enter(&*rec, "sim.iteration", Labels::None);
-        let (priced, _dag) = price_iteration(&eng, &pm, &session, layers, &*rec);
+
+        let view = fault_view_for(&mut session, faults, cluster, iter_index, Some(&*rec))?;
+        let fault_active = view.is_some();
+        let (priced, _dag) = match &view {
+            Some(v) => {
+                // Price on a temporary fault-effective engine: per-device
+                // compute costs scale by the composed slowdown vector, a
+                // down device (slowdown 0) contributes no work and the
+                // failover replicas carry its load.
+                let eff_cluster = v.effective_cluster(cluster);
+                let eff_pm = v.effective_perf_model(&pm);
+                let eff_eng = Engine::new(&eff_cluster, &eff_pm);
+                price_iteration(&eff_eng, &eff_pm, &session, layers, &*rec)
+            }
+            None => price_iteration(&eng, &pm, &session, layers, &*rec),
+        };
 
         // Phase 2 (sequential): the session's observe→score→drift→
         // invalidate loop over the actual gating results.
         let fb = session.observe_iteration(layers);
 
         let (time, breakdown, per_block_time) = if heterogeneous
+            || fault_active
             || priced.kind == ScheduleKind::DagRelaxed
         {
-            // The barrier model cannot see per-device slowdowns, and a
-            // DagRelaxed decision asks for DES pricing unconditionally;
-            // report the device-level critical path in both cases.
+            // The barrier model cannot see per-device slowdowns —
+            // static (heterogeneous cluster) or injected (active
+            // fault) — and a DagRelaxed decision asks for DES pricing
+            // unconditionally; report the device-level critical path.
             let mut pb = priced.des.per_block_exposed.clone();
             pb.resize(n_layers, 0.0);
             (priced.des.makespan, priced.des.exposed.clone(), pb)
@@ -533,15 +726,33 @@ pub fn simulate_policy_with(
             devices: priced.des.devices,
             straggler: priced.des.straggler,
         });
+
+        // Snapshot on the period boundary and right before a graceful
+        // stop; a finished run has nothing to resume, so the last
+        // iteration is never snapshotted.
+        let done = iter_index + 1;
+        let stopping = opts.stop_after.is_some_and(|s| done >= s) && done < trace.len();
+        if let Some(ck) = &opts.checkpoint {
+            if done < trace.len() && (done % ck.every.max(1) == 0 || stopping) {
+                checkpoint::Checkpoint::of(&report.policy, trace, faults.specs(), &report.iters)
+                    .save(&ck.dir)?;
+                if rec.enabled() {
+                    rec.counter("sim.checkpoints_written", Labels::None, 1);
+                }
+            }
+        }
         drop(sp_iter);
         rec.iteration_end();
+        if stopping {
+            break;
+        }
     }
 
     let counters = session.counters();
     report.plans_run = counters.plans_run;
     report.plans_reused = counters.plans_reused;
     report.drift_replans = counters.drift_replans;
-    report
+    Ok(report)
 }
 
 /// Replay `trace` under `policy` up to iteration `index` and return that
@@ -554,18 +765,47 @@ pub fn iteration_des(
     policy: Box<dyn BalancingPolicy>,
     index: usize,
 ) -> Option<(OpDag, DesResult)> {
+    iteration_des_faulted(model, cluster, trace, policy, &FaultTimeline::empty(), index)
+}
+
+/// [`iteration_des`] under a fault timeline: iterations before `index`
+/// replay decide/observe with the same fault views the full simulation
+/// would see, and the exported iteration is priced on the fault-effective
+/// engine — so a Chrome trace of a faulted run shows the distorted
+/// timeline, not the healthy one.  None when the trace is too short or
+/// every device is down at `index`.
+pub fn iteration_des_faulted(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    trace: &Trace,
+    policy: Box<dyn BalancingPolicy>,
+    faults: &FaultTimeline,
+    index: usize,
+) -> Option<(OpDag, DesResult)> {
     if trace.n_layers == 0 || index >= trace.len() {
+        return None;
+    }
+    if !faults.is_empty() && faults.n_devices() != cluster.n_devices() {
         return None;
     }
     let pm = PerfModel::new(model, cluster);
     let eng = Engine::new(cluster, &pm);
     let mut session = BalancerSession::new(policy, trace.n_layers);
     for (i, layers) in trace.iterations.iter().enumerate() {
-        let (priced, op_dag) = price_iteration(&eng, &pm, &session, layers, obs::noop());
         if i == index {
+            let view = fault_view_for(&mut session, faults, cluster, i, None).ok()?;
+            let (priced, op_dag) = match &view {
+                Some(v) => {
+                    let eff_cluster = v.effective_cluster(cluster);
+                    let eff_pm = v.effective_perf_model(&pm);
+                    let eff_eng = Engine::new(&eff_cluster, &eff_pm);
+                    price_iteration(&eff_eng, &eff_pm, &session, layers, obs::noop())
+                }
+                None => price_iteration(&eng, &pm, &session, layers, obs::noop()),
+            };
             return Some((op_dag, priced.des));
         }
-        session.observe_iteration(layers);
+        replay_iteration(&mut session, &pm, cluster, faults, i, layers);
     }
     None
 }
@@ -946,5 +1186,165 @@ mod tests {
             t.len()
         )
         .is_none());
+    }
+
+    /// Run a policy through the faulted entry point with explicit opts.
+    fn run_faulted(
+        m: &ModelSpec,
+        c: &ClusterSpec,
+        t: &Trace,
+        name: &str,
+        opts: &SimOptions,
+    ) -> Result<SimReport, String> {
+        simulate_policy_faulted(
+            m,
+            c,
+            t,
+            registry::build(name, &ProphetOptions::default()).unwrap(),
+            obs::noop_arc(),
+            opts,
+        )
+    }
+
+    #[test]
+    fn faulted_default_options_bit_identical() {
+        // The no-fault equivalence pin at the unit level (the integration
+        // suite re-pins it across every registry policy): default
+        // SimOptions must take exactly the frozen code path.
+        let (m, c, t) = setup();
+        for name in ["deepspeed", "fastermoe", "pro-prophet", "pro-prophet-dag"] {
+            let frozen = run(&m, &c, &t, name);
+            let faulted = run_faulted(&m, &c, &t, name, &SimOptions::default()).unwrap();
+            assert_eq!(frozen.iters.len(), faulted.iters.len(), "{name}");
+            assert_eq!(frozen.plans_run, faulted.plans_run, "{name}");
+            for (i, (a, b)) in frozen.iters.iter().zip(&faulted.iters).enumerate() {
+                assert_eq!(a.time.to_bits(), b.time.to_bits(), "{name} iter {i}");
+                assert_eq!(a.des_time.to_bits(), b.des_time.to_bits(), "{name} iter {i}");
+                assert_eq!(a.barrier_time.to_bits(), b.barrier_time.to_bits(), "{name} iter {i}");
+                assert_eq!(a.straggler, b.straggler, "{name} iter {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn transient_fault_prices_des_inside_its_window() {
+        // A transient 8x slowdown on device 3, iterations [2, 4): inside
+        // the window the reported time IS the DES makespan and device 3
+        // is the straggler; outside it the run is bit-identical to the
+        // fault-free one (deepspeed decides independently of the perf
+        // model, so no decision state can leak across the window).
+        let (m, c, t) = setup();
+        let baseline = run(&m, &c, &t, "deepspeed");
+        let faults = FaultTimeline::parse_specs(
+            &["transient dev=3 factor=8 start=2 dur=2"],
+            c.n_devices(),
+        )
+        .unwrap();
+        let opts = SimOptions { faults, ..Default::default() };
+        let r = run_faulted(&m, &c, &t, "deepspeed", &opts).unwrap();
+        assert_eq!(r.iters.len(), 6);
+        for i in [0usize, 1, 4, 5] {
+            assert_eq!(
+                r.iters[i].time.to_bits(),
+                baseline.iters[i].time.to_bits(),
+                "iter {i}: inactive fault must not change pricing"
+            );
+            assert_eq!(r.iters[i].straggler, baseline.iters[i].straggler, "iter {i}");
+        }
+        for i in [2usize, 3] {
+            let it = &r.iters[i];
+            assert_eq!(
+                it.time.to_bits(),
+                it.des_time.to_bits(),
+                "iter {i}: fault-active iterations are DES-priced"
+            );
+            assert_eq!(it.straggler, 3, "iter {i}: slowed device must straggle");
+            assert!(
+                it.time > baseline.iters[i].time,
+                "iter {i}: an 8x compute straggler must cost time"
+            );
+        }
+    }
+
+    #[test]
+    fn fault_timeline_for_wrong_cluster_is_rejected() {
+        let (m, c, t) = setup();
+        let faults = FaultTimeline::parse_specs(&["down dev=1 start=0"], 4).unwrap();
+        let opts = SimOptions { faults, ..Default::default() };
+        let err = run_faulted(&m, &c, &t, "deepspeed", &opts).unwrap_err();
+        assert!(err.contains("devices"), "{err}");
+        // All devices down: unusable, named by iteration.
+        let all_down: Vec<String> = (0..c.n_devices())
+            .map(|d| format!("down dev={d} start=1"))
+            .collect();
+        let faults = FaultTimeline::parse_specs(&all_down, c.n_devices()).unwrap();
+        let opts = SimOptions { faults, ..Default::default() };
+        let err = run_faulted(&m, &c, &t, "deepspeed", &opts).unwrap_err();
+        assert!(err.contains("iteration 1"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        // Kill-and-resume at the unit level, with the most stateful
+        // policy (prophet histories + planner caches + drift detectors):
+        // stop after 3 of 6 iterations, resume from the snapshot, and
+        // require the final report bit-for-bit equal to straight-through.
+        let (m, c, t) = setup();
+        let full = run_pp(&m, &c, &t, ProphetOptions::full());
+        let dir = std::env::temp_dir().join(format!(
+            "pro_prophet_sim_resume_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let ck = CheckpointConfig { dir: dir.clone(), every: 2, resume: false };
+        let opts = SimOptions {
+            checkpoint: Some(ck.clone()),
+            stop_after: Some(3),
+            ..Default::default()
+        };
+        let partial = simulate_policy_faulted(
+            &m,
+            &c,
+            &t,
+            Box::new(builtin::ProProphet::new(ProphetOptions::full())),
+            obs::noop_arc(),
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(partial.iters.len(), 3, "stop_after must stop the run");
+        let opts = SimOptions {
+            checkpoint: Some(CheckpointConfig { resume: true, ..ck }),
+            ..Default::default()
+        };
+        let resumed = simulate_policy_faulted(
+            &m,
+            &c,
+            &t,
+            Box::new(builtin::ProProphet::new(ProphetOptions::full())),
+            obs::noop_arc(),
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(resumed.iters.len(), full.iters.len());
+        assert_eq!(resumed.plans_run, full.plans_run);
+        assert_eq!(resumed.plans_reused, full.plans_reused);
+        assert_eq!(resumed.drift_replans, full.drift_replans);
+        for (i, (a, b)) in full.iters.iter().zip(&resumed.iters).enumerate() {
+            assert_eq!(a.time.to_bits(), b.time.to_bits(), "iter {i}");
+            assert_eq!(a.barrier_time.to_bits(), b.barrier_time.to_bits(), "iter {i}");
+            assert_eq!(a.des_time.to_bits(), b.des_time.to_bits(), "iter {i}");
+            assert_eq!(a.balance_before.to_bits(), b.balance_before.to_bits(), "iter {i}");
+            assert_eq!(a.forecast_error, b.forecast_error, "iter {i}");
+            assert_eq!(a.breakdown, b.breakdown, "iter {i}");
+            assert_eq!(a.devices, b.devices, "iter {i}");
+            assert_eq!(a.straggler, b.straggler, "iter {i}");
+        }
+        // And the serialized reports — the contract the CLI smoke
+        // diffs — are byte-identical.
+        assert_eq!(
+            checkpoint::report_to_json(&full).to_string(),
+            checkpoint::report_to_json(&resumed).to_string()
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -133,6 +133,21 @@ pub fn to_chrome_trace_des_bounded(
     counters: Option<&CounterTracks>,
     max_events: Option<usize>,
 ) -> (Json, DesTraceStats) {
+    to_chrome_trace_des_bounded_with_instants(dag, des, counters, &[], max_events)
+}
+
+/// [`to_chrome_trace_des_bounded`] plus global instant events ("i"
+/// phase): (label, seconds) markers rendered as vertical lines across
+/// every lane — used for active fault-timeline events, so a slowed or
+/// downed device is annotated right on the timeline it distorts.
+/// Instants are never capped (like metadata and counters).
+pub fn to_chrome_trace_des_bounded_with_instants(
+    dag: &OpDag,
+    des: &DesResult,
+    counters: Option<&CounterTracks>,
+    instants: &[(String, f64)],
+    max_events: Option<usize>,
+) -> (Json, DesTraceStats) {
     let cap = max_events.unwrap_or(usize::MAX);
     let mut stats = DesTraceStats::default();
     let mut events: Vec<Json> = Vec::new();
@@ -202,6 +217,16 @@ pub fn to_chrome_trace_des_bounded(
             ("pid", json::num(1.0)),
             ("ts", json::num(end_us)),
             ("args", Json::Obj(devs)),
+        ]));
+    }
+    for (label, ts) in instants {
+        events.push(json::obj(vec![
+            ("name", json::s(label)),
+            ("ph", json::s("i")),
+            ("s", json::s("g")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(0.0)),
+            ("ts", json::num(ts * 1e6)),
         ]));
     }
     (
@@ -350,6 +375,40 @@ mod tests {
             .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
             .count();
         assert_eq!(metas, 2 * d);
+    }
+
+    #[test]
+    fn des_trace_instant_events_mark_faults() {
+        use crate::scheduler::dag::from_schedule;
+        use crate::sim::events;
+        let dag = from_schedule(&sched(), 2);
+        let des = events::execute(&dag);
+        let instants = vec![
+            ("fault: down dev=1".to_string(), 0.0),
+            ("fault: transient dev=0 factor=2 start=1 dur=2".to_string(), 0.5),
+        ];
+        // A tiny op cap must not touch instants (only X events).
+        let (j, _) =
+            to_chrome_trace_des_bounded_with_instants(&dag, &des, None, &instants, Some(1));
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let is: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("i"))
+            .collect();
+        assert_eq!(is.len(), 2);
+        assert_eq!(is[0].get("name").unwrap().as_str(), Some("fault: down dev=1"));
+        assert_eq!(is[1].get("ts").unwrap().as_f64(), Some(0.5e6));
+        // The plain bounded export emits none.
+        let (j, _) = to_chrome_trace_des_bounded(&dag, &des, None, None);
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert!(parsed
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .all(|e| e.get("ph").unwrap().as_str() != Some("i")));
     }
 
     #[test]

@@ -184,8 +184,32 @@ impl Trainer {
             Some(h) => h.clone(),
             None => obs::noop_arc(),
         };
-        let session =
+        let mut session =
             BalancerSession::with_recorder(policy, manifest.n_layers.max(1), rec.clone());
+        // Warm-start the forecasting subsystem from a previously saved
+        // prophet history (`store_path` of an earlier run): replay each
+        // recorded iteration through the session's observe loop so
+        // history, drift state and forecast scoring resume where the
+        // last run stopped, instead of cold-starting the prophet.
+        if let Some(path) = &cfg.resume_store {
+            let recorded = Trace::load(std::path::Path::new(path))
+                .map_err(|e| anyhow!("resume store: {e}"))?;
+            if recorded.n_layers != manifest.n_layers.max(1)
+                || recorded.n_experts != manifest.n_experts
+            {
+                return Err(anyhow!(
+                    "resume store {path:?} records {} layers x {} experts, but preset {:?} trains {} layers x {} experts",
+                    recorded.n_layers,
+                    recorded.n_experts,
+                    cfg.preset,
+                    manifest.n_layers.max(1),
+                    manifest.n_experts
+                ));
+            }
+            for layers in &recorded.iterations {
+                session.observe_iteration(layers);
+            }
+        }
         Ok(Trainer { manifest, cfg, train_step, state, corpus, step: 0, session, hub, rec })
     }
 

@@ -217,6 +217,171 @@ fn trace_from_store_round_trips() {
 }
 
 #[test]
+fn simulate_fault_flags_happy_and_error_paths() {
+    // --faults FILE: one event spec per line, comments allowed.
+    let faults_path = tmp("faults.txt");
+    std::fs::write(
+        &faults_path,
+        "# device 2 thermally throttles for two iterations\n\
+         transient dev=2 factor=2.5 start=1 dur=2\n",
+    )
+    .unwrap();
+    let base = [
+        "simulate", "--model", "s", "--cluster", "hpwnv", "--nodes", "1", "--tokens",
+        "2048", "--iters", "4", "--policy", "deepspeed",
+    ];
+    let mut with_file = base.to_vec();
+    with_file.extend(["--faults", faults_path.to_str().unwrap()]);
+    let out = run(&with_file);
+    assert!(
+        out.status.success(),
+        "simulate --faults failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("[simulate] faults:"), "{stdout}");
+    assert!(stdout.contains("transient dev=2"), "{stdout}");
+
+    // --fault-seed S: a synthetic timeline sized to the run.
+    let mut with_seed = base.to_vec();
+    with_seed.extend(["--fault-seed", "7"]);
+    let out = run(&with_seed);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("[simulate] faults:"),
+        "seeded timeline must be announced"
+    );
+
+    // The two sources are mutually exclusive.
+    let mut both = with_file.clone();
+    both.extend(["--fault-seed", "7"]);
+    let out = run(&both);
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("mutually exclusive"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // A malformed spec names the file and the offending event.
+    let bad_path = tmp("faults_bad.txt");
+    std::fs::write(&bad_path, "explode dev=1 start=0\n").unwrap();
+    let mut bad = base.to_vec();
+    bad.extend(["--faults", bad_path.to_str().unwrap()]);
+    let out = run(&bad);
+    assert!(!out.status.success(), "malformed fault spec must be an error");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--faults"), "{stderr}");
+
+    // Non-integer seeds fail fast.
+    let mut lucky = base.to_vec();
+    lucky.extend(["--fault-seed", "lucky"]);
+    let out = run(&lucky);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--fault-seed"));
+
+    let _ = std::fs::remove_file(&faults_path);
+    let _ = std::fs::remove_file(&bad_path);
+}
+
+#[test]
+fn simulate_checkpoint_kill_and_resume_reproduces_the_report() {
+    let dir = tmp("ckpt_dir");
+    let _ = std::fs::remove_dir_all(&dir);
+    let a_json = tmp("ckpt_a.json");
+    let b_json = tmp("ckpt_b.json");
+    let c_json = tmp("ckpt_c.json");
+    let base = [
+        "simulate", "--model", "s", "--cluster", "hpwnv", "--nodes", "1", "--tokens",
+        "2048", "--iters", "4", "--policy", "pro-prophet", "--fault-seed", "3",
+    ];
+
+    // The "killed" run: stop after 2 of 4 iterations, checkpointing.
+    let mut killed = base.to_vec();
+    killed.extend([
+        "--stop-after", "2",
+        "--checkpoint", dir.to_str().unwrap(),
+        "--checkpoint-every", "1",
+        "--report-json", a_json.to_str().unwrap(),
+    ]);
+    let out = run(&killed);
+    assert!(
+        out.status.success(),
+        "checkpointed run failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("[simulate] report"),
+        "--report-json must be announced"
+    );
+    assert!(dir.join("checkpoint.json").exists(), "checkpoint file missing");
+
+    // Resume to completion, and run straight through for comparison.
+    let mut resumed = base.to_vec();
+    resumed.extend([
+        "--checkpoint", dir.to_str().unwrap(),
+        "--resume",
+        "--report-json", b_json.to_str().unwrap(),
+    ]);
+    let out = run(&resumed);
+    assert!(
+        out.status.success(),
+        "resumed run failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let mut straight = base.to_vec();
+    straight.extend(["--report-json", c_json.to_str().unwrap()]);
+    let out = run(&straight);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let b = std::fs::read_to_string(&b_json).unwrap();
+    let c = std::fs::read_to_string(&c_json).unwrap();
+    assert_eq!(b, c, "resumed SimReport must be byte-identical to the straight run");
+    assert_ne!(
+        std::fs::read_to_string(&a_json).unwrap(),
+        c,
+        "the truncated run must differ from the full one"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+    for p in [&a_json, &b_json, &c_json] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn simulate_checkpoint_flag_validation() {
+    // --resume without --checkpoint is meaningless.
+    let out = run(&["simulate", "--nodes", "1", "--iters", "2", "--resume"]);
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("requires --checkpoint"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // --checkpoint-every 0 would never write anything.
+    let out = run(&[
+        "simulate", "--nodes", "1", "--iters", "2", "--policy", "deepspeed",
+        "--checkpoint", "/tmp/never", "--checkpoint-every", "0",
+    ]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains(">= 1"));
+
+    // Single-run flags demand a single --policy (the default table runs
+    // five).
+    let out = run(&[
+        "simulate", "--nodes", "1", "--iters", "2", "--report-json", "/tmp/never.json",
+    ]);
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("single run"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
 fn trace_from_store_rejects_missing_or_empty() {
     let out = run(&[
         "trace",

@@ -157,6 +157,70 @@ fn shipped_dag_relaxed_config_simulates() {
 }
 
 #[test]
+fn shipped_transient_faults_config_simulates_end_to_end() {
+    // The fault-injection scenario config exercises the `[faults]` table
+    // end to end: parse -> deterministic FaultTimeline -> a simulation
+    // where fault windows are DES-priced and fault-free iterations stay
+    // on the frozen path.
+    use pro_prophet::sim::{simulate_policy_faulted, SimOptions};
+    let path = std::path::Path::new("examples/configs/hpwnv16_transient_faults.toml");
+    if !path.exists() {
+        eprintln!("SKIP: transient-faults example config missing");
+        return;
+    }
+    let exp = ExperimentConfig::from_file(path).unwrap();
+    let faults = exp.fault_timeline(exp.iterations);
+    assert!(!faults.is_empty(), "config must inject faults");
+    assert_eq!(faults.n_devices(), exp.cluster.n_devices());
+    assert!(
+        !exp.cluster.is_heterogeneous(),
+        "faults, not a static straggler, drive this scenario"
+    );
+
+    let iters = 4;
+    let trace = trace_of(&exp, iters);
+    let opts = SimOptions { faults: exp.fault_timeline(iters), ..Default::default() };
+    let r = simulate_policy_faulted(
+        &exp.model,
+        &exp.cluster,
+        &trace,
+        exp.build_policy().unwrap(),
+        pro_prophet::obs::noop_arc(),
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(r.iters.len(), iters);
+
+    // The baseline run without the timeline: iterations before the first
+    // fault activates must stay bit-identical to the fault-free path.
+    let base = simulate_policy(&exp.model, &exp.cluster, &trace, exp.build_policy().unwrap());
+    let mut windowed = 0;
+    for i in 0..iters {
+        if opts.faults.active_specs(i).is_empty() {
+            if windowed == 0 {
+                assert_eq!(
+                    base.iters[i].time.to_bits(),
+                    r.iters[i].time.to_bits(),
+                    "iter {i}: before the first fault the frozen path must hold"
+                );
+            }
+            continue;
+        }
+        windowed += 1;
+        assert_eq!(
+            r.iters[i].time.to_bits(),
+            r.iters[i].des_time.to_bits(),
+            "iter {i}: fault window must be DES-priced"
+        );
+        assert!(
+            r.iters[i].time.is_finite() && r.iters[i].time > 0.0,
+            "iter {i}: fault-window time must stay positive"
+        );
+    }
+    assert!(windowed > 0, "a fault must be active within the first {iters} iterations");
+}
+
+#[test]
 fn custom_model_from_toml() {
     let t = toml::parse(
         r#"

@@ -713,3 +713,130 @@ fn prop_perfmodel_monotone_in_load() {
         assert!((pm.t_fec(&h3) - 3.0 * pm.t_fec(&h)).abs() < 1e-12);
     });
 }
+
+/// Random trace of `iters` iterations on a d-device, d-expert shape.
+fn random_trace(rng: &mut Rng, layers: usize, d: usize, iters: usize) -> Trace {
+    let mut trace = Trace::new(layers, d, d);
+    for _ in 0..iters {
+        let ms: Vec<LoadMatrix> = (0..layers)
+            .map(|_| {
+                let per_device = 512 + rng.below(4096) as u64;
+                let skew = 0.15 + rng.f64();
+                let rows: Vec<Vec<u64>> = (0..d)
+                    .map(|_| prop::random_histogram(rng, d, per_device, skew))
+                    .collect();
+                LoadMatrix::from_rows(rows)
+            })
+            .collect();
+        trace.push(ms);
+    }
+    trace
+}
+
+#[test]
+fn prop_des_makespan_monotone_in_device_slowdown() {
+    // Slowing any single device further can never make the device-level
+    // event timeline finish earlier: the operator DAG and its device
+    // assignment are fixed (deepspeed decides independently of pricing),
+    // so the makespan is monotone in per-op durations.
+    Cases::new(16).run(|rng| {
+        let d = [4usize, 8][rng.below(2)];
+        let layers = 1 + rng.below(2);
+        let trace = random_trace(rng, layers, d, 2 + rng.below(2));
+        let model = ModelSpec::moe_gpt_s(d, 1, 4096 * d as u64);
+        let dev = rng.below(d);
+        let base = 1.0 + rng.f64() * 2.0;
+        let worse = base * (1.25 + rng.f64());
+        let run = |factor: f64| {
+            let cluster = ClusterSpec::hpwnv(d.div_ceil(4)).with_slowdown(dev, factor);
+            pro_prophet::sim::simulate_policy(
+                &model,
+                &cluster,
+                &trace,
+                Box::new(pro_prophet::balancer::builtin::DeepspeedMoe),
+            )
+        };
+        let ra = run(base);
+        let rb = run(worse);
+        for (i, (a, b)) in ra.iters.iter().zip(&rb.iters).enumerate() {
+            assert!(
+                b.des_time >= a.des_time - 1e-12,
+                "iter {i}: DES makespan decreased when device {dev} slowed \
+                 {base} -> {worse}: {} -> {}",
+                a.des_time,
+                b.des_time
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_transient_straggler_tracked_only_inside_its_window() {
+    // A transient slowdown injected on device `dev` must surface as
+    // `IterationResult::straggler == dev` exactly while the fault is
+    // active; every iteration outside the window stays bit-identical to
+    // the no-fault run (same straggler, same time).  Near-uniform loads
+    // plus a large factor make the injected device's dominance certain.
+    use pro_prophet::faults::FaultTimeline;
+    use pro_prophet::sim::{simulate_policy_faulted, SimOptions};
+    Cases::new(12).run(|rng| {
+        let d = [4usize, 8][rng.below(2)];
+        let iters = 5 + rng.below(3);
+        let mut trace = Trace::new(1, d, d);
+        for _ in 0..iters {
+            let rows: Vec<Vec<u64>> =
+                (0..d).map(|_| (0..d).map(|_| 400 + rng.below(100) as u64).collect()).collect();
+            trace.push(vec![LoadMatrix::from_rows(rows)]);
+        }
+        let model = ModelSpec::moe_gpt_s(d, 1, 4096 * d as u64);
+        let cluster = ClusterSpec::hpwnv(d.div_ceil(4));
+        let dev = rng.below(d);
+        let start = 1 + rng.below(3);
+        let dur = 1 + rng.below(3);
+        let factor = 8.0 + rng.f64() * 8.0;
+        let spec = format!("transient dev={dev} factor={factor} start={start} dur={dur}");
+        let faults = FaultTimeline::parse_specs(&[spec], d).unwrap();
+
+        let baseline = pro_prophet::sim::simulate_policy(
+            &model,
+            &cluster,
+            &trace,
+            Box::new(pro_prophet::balancer::builtin::DeepspeedMoe),
+        );
+        let faulted = simulate_policy_faulted(
+            &model,
+            &cluster,
+            &trace,
+            Box::new(pro_prophet::balancer::builtin::DeepspeedMoe),
+            pro_prophet::obs::noop_arc(),
+            &SimOptions { faults, ..Default::default() },
+        )
+        .unwrap();
+
+        for i in 0..trace.len() {
+            let (a, b) = (&baseline.iters[i], &faulted.iters[i]);
+            if (start..start + dur).contains(&i) {
+                assert_eq!(
+                    b.straggler, dev,
+                    "iter {i}: straggler must be the injected device {dev}"
+                );
+                assert_eq!(
+                    b.time.to_bits(),
+                    b.des_time.to_bits(),
+                    "iter {i}: fault window must be DES-priced"
+                );
+                assert!(
+                    b.time >= a.time,
+                    "iter {i}: slowing a device cannot speed the iteration up"
+                );
+            } else {
+                assert_eq!(
+                    a.time.to_bits(),
+                    b.time.to_bits(),
+                    "iter {i}: outside the window must match the no-fault run"
+                );
+                assert_eq!(a.straggler, b.straggler, "iter {i}: straggler outside window");
+            }
+        }
+    });
+}
