@@ -1,0 +1,105 @@
+//! Fleet throughput: whole coordinator ticks/sec — admission, per-tenant
+//! trace generation, DES pricing over each leased sub-cluster, and the
+//! rebalancer — at 1, 4 and 16 concurrent tenants sharing HPWNV-16 (64
+//! devices).  The tenant count sweeps the leasing axis while the device
+//! total stays fixed, so the numbers separate coordinator overhead from
+//! pricing cost (16 tenants price sixteen 4-device DES runs per tick;
+//! one tenant prices a single 64-device run).
+//!
+//! Results go to the human-readable lines below, bench_results/fleet.json,
+//! and the machine-readable BENCH_fleet.json at the repo root (uploaded
+//! by CI next to BENCH_des.json).
+
+use pro_prophet::balancer::ProphetOptions;
+use pro_prophet::benchkit;
+use pro_prophet::cluster::ClusterSpec;
+use pro_prophet::faults::FaultTimeline;
+use pro_prophet::fleet::{AdmissionPolicy, Fleet, FleetConfig, JobSpec};
+use pro_prophet::metrics::write_result;
+use pro_prophet::obs;
+use pro_prophet::util::json::{self, Json};
+
+const TICKS: usize = 8;
+
+/// `jobs` training tenants splitting the 16 nodes evenly, every tenant
+/// busy for the whole horizon (iters > ticks: nobody completes, the
+/// steady-state cost is what gets timed).
+fn config(jobs: usize) -> FleetConfig {
+    let nodes_each = 16 / jobs;
+    let specs: Vec<JobSpec> = (0..jobs)
+        .map(|i| {
+            JobSpec::parse(&format!(
+                "train name=j{i} nodes={nodes_each} model=s tokens=8192 \
+                 iters={} policy=pro-prophet seed={}",
+                TICKS + 1,
+                11 + i as u64,
+            ))
+            .expect("bench job spec must parse")
+        })
+        .collect();
+    FleetConfig {
+        ticks: TICKS,
+        tick_s: 0.25,
+        max_concurrent: jobs,
+        admission: AdmissionPolicy::Fifo,
+        rebalance_interval: 4,
+        migration_budget: 1,
+        jobs: specs,
+    }
+}
+
+fn measure(jobs: usize, cluster: &ClusterSpec) -> Json {
+    let cfg = config(jobs);
+    let popts = ProphetOptions::default();
+    let faults = FaultTimeline::empty();
+    // Warm-up run outside the clock (trace capture allocs, first plans).
+    let warm = Fleet::run(&cfg, cluster, &popts, &faults, obs::noop_arc())
+        .expect("bench fleet must run");
+    assert_eq!(warm.jobs.len(), jobs);
+
+    let start = std::time::Instant::now();
+    let report = Fleet::run(&cfg, cluster, &popts, &faults, obs::noop_arc())
+        .expect("bench fleet must run");
+    let elapsed = start.elapsed().as_secs_f64().max(1e-12);
+    std::hint::black_box(&report);
+
+    let tenant_iters: usize = report.jobs.iter().map(|j| j.iterations).sum();
+    let ticks_per_sec = TICKS as f64 / elapsed;
+    let iters_per_sec = tenant_iters as f64 / elapsed;
+    println!(
+        "fleet jobs={jobs:<3} nodes/tenant={:<3} {TICKS} ticks  \
+         {ticks_per_sec:>8.1} ticks/s  {iters_per_sec:>8.1} tenant-iters/s  \
+         ({:.2} ms/tick)",
+        16 / jobs,
+        elapsed / TICKS as f64 * 1e3,
+    );
+    json::obj(vec![
+        ("jobs", json::num(jobs as f64)),
+        ("nodes_per_tenant", json::num((16 / jobs) as f64)),
+        ("ticks", json::num(TICKS as f64)),
+        ("tenant_iters", json::num(tenant_iters as f64)),
+        ("ticks_per_sec", json::num(ticks_per_sec)),
+        ("tenant_iters_per_sec", json::num(iters_per_sec)),
+        ("utilization", json::num(report.utilization())),
+    ])
+}
+
+fn main() {
+    benchkit::header("fleet", "multi-tenant coordinator ticks/sec on HPWNV-16");
+    let cluster = ClusterSpec::hpwnv(16);
+    let mut rows: Vec<Json> = Vec::new();
+    for jobs in [1usize, 4, 16] {
+        rows.push(measure(jobs, &cluster));
+    }
+    let doc = json::obj(vec![
+        ("bench", json::s("fleet")),
+        ("unit", json::s("ticks_per_sec")),
+        ("devices", json::num(cluster.n_devices() as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = write_result("fleet", &doc).unwrap();
+    println!("-> {}", path.display());
+    // Machine-readable trajectory seed at the repo root.
+    std::fs::write("BENCH_fleet.json", doc.to_string()).unwrap();
+    println!("-> BENCH_fleet.json");
+}

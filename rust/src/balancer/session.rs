@@ -61,6 +61,9 @@ pub struct BalancerSession {
     health_replans: usize,
     failover_placements: AtomicUsize,
     fallback_placements: AtomicUsize,
+    /// Decisions that hit the all-devices-down wall
+    /// ([`crate::moe::AllDevicesDown`]): nothing to fail over to.
+    all_devices_down: AtomicUsize,
 }
 
 impl BalancerSession {
@@ -96,6 +99,7 @@ impl BalancerSession {
             health_replans: 0,
             failover_placements: AtomicUsize::new(0),
             fallback_placements: AtomicUsize::new(0),
+            all_devices_down: AtomicUsize::new(0),
         }
     }
 
@@ -176,6 +180,14 @@ impl BalancerSession {
         self.fallback_placements.load(Ordering::Relaxed)
     }
 
+    /// Decisions made while EVERY device was down — unrepairable
+    /// ([`crate::moe::AllDevicesDown`]); drivers are expected to refuse
+    /// the iteration (simulator) or park the job (fleet) instead of
+    /// pricing these.
+    pub fn all_devices_down(&self) -> usize {
+        self.all_devices_down.load(Ordering::Relaxed)
+    }
+
     /// Decide one layer's placement.  `&self`: safe to call from a
     /// per-layer thread fan-out (drivers that also price per layer fold
     /// this into their own [`crate::util::threads::par_map`] closure).
@@ -199,16 +211,46 @@ impl BalancerSession {
         }
     }
 
+    /// All-down accounting: the typed [`crate::moe::AllDevicesDown`]
+    /// refusal, surfaced as a counter (and up the stack as the
+    /// simulator's error / the fleet's "job parked" diagnostic).
+    fn note_all_devices_down(&self) {
+        self.all_devices_down.fetch_add(1, Ordering::Relaxed);
+        if self.rec.enabled() {
+            self.rec.counter("balancer.all_devices_down", Labels::None, 1);
+        }
+    }
+
+    /// Strip-and-fail-over `p` under the current mask, counting the
+    /// typed all-down refusal instead of panicking (the guard in
+    /// [`BalancerSession::enforce_health`] makes it unreachable, but the
+    /// session's no-panic contract outranks that analysis).
+    fn fail_over_counted(&self, p: &mut Placement) {
+        if p.fail_over(&self.down).is_err() {
+            self.note_all_devices_down();
+        }
+    }
+
     /// Repair `d` against the current down set; see
     /// [`BalancerSession::decide_layer`].  Never panics.
     fn enforce_health(&self, layer: usize, mut d: Decision) -> Decision {
         let down = &self.down;
+        if (0..d.placement.n_devices()).all(|dev| down.get(dev).copied().unwrap_or(false)) {
+            // Every device is down: `Placement::fail_over` would refuse
+            // with the typed `AllDevicesDown`.  Count it and hand the
+            // decision back unrepaired — no placement is valid under
+            // this mask, and drivers reject all-down states before
+            // pricing (the simulator errors out, the fleet parks the
+            // job for the tick).
+            self.note_all_devices_down();
+            return d;
+        }
         let touches_down = (0..d.placement.n_experts()).any(|e| {
             d.placement.replicas(e).iter().any(|dev| down.get(dev).copied().unwrap_or(false))
         });
         if touches_down {
             let mut p = (*d.placement).clone();
-            p.fail_over(down);
+            self.fail_over_counted(&mut p);
             d.placement = Arc::new(p);
             self.failover_placements.fetch_add(1, Ordering::Relaxed);
             if self.rec.enabled() {
@@ -228,10 +270,10 @@ impl BalancerSession {
                 Some(lg) => (*lg).clone(),
                 None => Placement::identity(d.placement.n_experts(), d.placement.n_devices()),
             };
-            p.fail_over(down);
+            self.fail_over_counted(&mut p);
             if p.validate_with_down(down).is_err() {
                 let mut id = Placement::identity(p.n_experts(), p.n_devices());
-                id.fail_over(down);
+                self.fail_over_counted(&mut id);
                 p = id;
             }
             d.placement = Arc::new(p);
@@ -383,6 +425,30 @@ mod tests {
         for (l, d) in s.decide_iteration(&layers, &pm).iter().enumerate() {
             assert_eq!(*d.placement, *healthy.decide_layer(l, &layers[l], &pm).placement);
         }
+    }
+
+    #[test]
+    fn all_devices_down_is_counted_never_a_panic() {
+        // Regression (PR 8): with EVERY device down the repair pipeline
+        // used to push decisions through `fail_over` into silently
+        // emptied replica sets; now the typed refusal is counted
+        // (`balancer.all_devices_down`) and decide still returns — the
+        // driver (sim error / fleet park) owns the refusal.
+        let pm = pm();
+        let mut gen = WorkloadGen::new(WorkloadConfig::paper_default(2, 8, 8, 8192));
+        let layers = gen.next_iteration();
+        let mut s = BalancerSession::new(Box::new(builtin::FasterMoe::new()), 2);
+        assert!(s.set_device_health(&[true; 8]));
+        assert_eq!(s.all_devices_down(), 0);
+        let decisions = s.decide_iteration(&layers, &pm);
+        assert_eq!(decisions.len(), 2);
+        assert_eq!(s.all_devices_down(), 2, "one refusal per layer decision");
+        // Recovery drains the guard: healthy decisions, no new refusals.
+        assert!(s.set_device_health(&[false; 8]));
+        for d in s.decide_iteration(&layers, &pm) {
+            assert!(d.placement.validate().is_ok());
+        }
+        assert_eq!(s.all_devices_down(), 2);
     }
 
     #[test]

@@ -221,6 +221,10 @@ pub struct ExperimentConfig {
     pub fault_seed: Option<u64>,
     pub iterations: usize,
     pub seed: u64,
+    /// Multi-job fleet simulation (`[fleet]` table: tick clock,
+    /// admission/rebalancing knobs, tenant specs).  None when the file
+    /// has no `[fleet]` table — single-job commands ignore it entirely.
+    pub fleet: Option<crate::fleet::FleetConfig>,
 }
 
 impl ExperimentConfig {
@@ -398,6 +402,7 @@ impl ExperimentConfig {
                     .into(),
             );
         }
+        let fleet = crate::fleet::FleetConfig::from_table(t, &cluster)?;
         Ok(ExperimentConfig {
             model,
             cluster,
@@ -411,6 +416,7 @@ impl ExperimentConfig {
             fault_seed,
             iterations: t.usize_or("iterations", 100),
             seed: t.usize_or("seed", 42) as u64,
+            fleet,
         })
     }
 
@@ -700,6 +706,26 @@ mod tests {
         assert!(ExperimentConfig::from_table(&bad).unwrap_err().contains("strings"));
         let bad = toml::parse("[faults]\nseed = \"lucky\"").unwrap();
         assert!(ExperimentConfig::from_table(&bad).unwrap_err().contains("integer"));
+    }
+
+    #[test]
+    fn fleet_table_parses_through_experiment_config() {
+        let t = toml::parse(
+            "[cluster]\nnodes = 2\n[fleet]\nticks = 12\ntick_s = 0.5\njobs = [\"train name=a nodes=1 iters=4\", \"infer name=b nodes=1 rate=2\"]",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_table(&t).unwrap();
+        let fleet = e.fleet.expect("[fleet] table present");
+        assert_eq!(fleet.ticks, 12);
+        assert!((fleet.tick_s - 0.5).abs() < 1e-12);
+        assert_eq!(fleet.jobs.len(), 2);
+        // No [fleet] table: None, and the rest of the config is untouched.
+        let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
+        assert!(d.fleet.is_none());
+        // Fleet validation errors surface through from_table.
+        let bad = toml::parse("[cluster]\nnodes = 2\n[fleet]\njobs = [\"train name=a nodes=9 iters=1\"]")
+            .unwrap();
+        assert!(ExperimentConfig::from_table(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,91 @@
+//! Admission control: which queued jobs enter the fleet this tick.
+//!
+//! Jobs queue from their `start` tick and are admitted only when the
+//! [`crate::fleet::lease::LeaseBook`] can grant their full node ask and
+//! the concurrent-job cap has room.  A job that cannot be admitted is
+//! **deferred** — counted as backpressure, retried every tick, never an
+//! error (the all-devices-down and cluster-full cases degrade to
+//! waiting, not crashing).
+//!
+//! Two deterministic policies order the attempt:
+//!
+//! * [`AdmissionPolicy::Fifo`] — queue order (start tick, then spec
+//!   order), with head-of-line blocking: the first job that does not fit
+//!   stops the scan, so a big job is never starved by small ones slipping
+//!   past it.
+//! * [`AdmissionPolicy::SmallestFirst`] — smallest node ask first (ties
+//!   by queue order), scanning past misfits: better packing, unbounded
+//!   starvation risk for big jobs — the classic trade-off, exposed as a
+//!   config axis.
+
+/// Order in which queued jobs attempt admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    Fifo,
+    SmallestFirst,
+}
+
+impl AdmissionPolicy {
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "fifo" => Some(AdmissionPolicy::Fifo),
+            "smallest_first" => Some(AdmissionPolicy::SmallestFirst),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Fifo => "fifo",
+            AdmissionPolicy::SmallestFirst => "smallest_first",
+        }
+    }
+
+    /// Whether a failed grant stops the scan (head-of-line blocking).
+    pub fn head_of_line_blocking(&self) -> bool {
+        matches!(self, AdmissionPolicy::Fifo)
+    }
+
+    /// Deterministic attempt order over `(queue_pos, node_ask)` pairs:
+    /// the returned indices point into `candidates`.
+    pub fn order(&self, candidates: &[(usize, usize)]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..candidates.len()).collect();
+        match self {
+            AdmissionPolicy::Fifo => idx.sort_by_key(|&i| candidates[i].0),
+            AdmissionPolicy::SmallestFirst => {
+                idx.sort_by_key(|&i| (candidates[i].1, candidates[i].0))
+            }
+        }
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for p in [AdmissionPolicy::Fifo, AdmissionPolicy::SmallestFirst] {
+            assert_eq!(AdmissionPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(AdmissionPolicy::from_name("priority"), None);
+    }
+
+    #[test]
+    fn fifo_orders_by_queue_position_and_blocks() {
+        let p = AdmissionPolicy::Fifo;
+        // (queue_pos, nodes): big job queued first stays first.
+        let c = [(2usize, 1usize), (0, 8), (1, 2)];
+        assert_eq!(p.order(&c), vec![1, 2, 0]);
+        assert!(p.head_of_line_blocking());
+    }
+
+    #[test]
+    fn smallest_first_orders_by_ask_then_position() {
+        let p = AdmissionPolicy::SmallestFirst;
+        let c = [(0usize, 4usize), (1, 1), (2, 1), (3, 2)];
+        assert_eq!(p.order(&c), vec![1, 2, 3, 0]);
+        assert!(!p.head_of_line_blocking());
+    }
+}

@@ -1,0 +1,301 @@
+//! Inference tenants: bursty request traffic over a leased slice.
+//!
+//! An inference job is an open-loop queueing system: a seeded
+//! [`ArrivalGen`] pushes requests per tick, a FIFO queue absorbs bursts,
+//! and each tick the job drains up to `batch_tokens` worth of requests
+//! into one single-layer [`LoadMatrix`] (MoE decode: every batch routes
+//! through one expert layer of the leased slice).  The batch is priced
+//! by the same DES-backed step as training iterations; per-request
+//! latency — queueing delay in ticks plus the priced service time — is
+//! scored against the SLO.
+//!
+//! The queue also produces the **replica-demand signal** the fleet's
+//! rebalancer consumes: [`InferenceState::pressure`] is queued work in
+//! units of one tick's drain capacity, so `> 1` means the job is falling
+//! behind (grow its lease) and `~0` means the lease is oversized
+//! (shrink it).
+//!
+//! Determinism: arrivals are a pure function of `(process, seed)`, the
+//! batch expert mix is drawn from the job's own PRNG stream, and the
+//! expert popularity is a pure function of `(seed, n_experts)` — so a
+//! lease resize (which changes the expert count) re-derives popularity
+//! deterministically and same-seed runs stay byte-identical.
+
+use crate::moe::LoadMatrix;
+use crate::util::rng::Rng;
+use crate::workload::arrivals::{ArrivalGen, ArrivalProcess};
+use std::collections::VecDeque;
+
+/// One queued inference request.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    /// Fleet tick the request arrived on.
+    pub arrived: usize,
+    /// Routing slots it contributes to its batch.
+    pub tokens: u64,
+}
+
+/// Queueing + latency/SLO state of one inference job.
+#[derive(Clone, Debug)]
+pub struct InferenceState {
+    arrivals: ArrivalGen,
+    queue: VecDeque<Request>,
+    rng: Rng,
+    seed: u64,
+    popularity: Vec<f64>,
+    zipf_s: f64,
+    pub tokens_per_req: u64,
+    pub batch_tokens: u64,
+    /// Latency objective in seconds.
+    pub slo_s: f64,
+    // --- accounting -----------------------------------------------------
+    pub requests_arrived: u64,
+    pub requests_completed: u64,
+    pub slo_hits: u64,
+    pub latency_sum_s: f64,
+    pub latency_max_s: f64,
+}
+
+impl InferenceState {
+    pub fn new(
+        process: ArrivalProcess,
+        seed: u64,
+        tokens_per_req: u64,
+        batch_tokens: u64,
+        slo_s: f64,
+        n_experts: usize,
+        zipf_s: f64,
+    ) -> Self {
+        let mut s = InferenceState {
+            arrivals: ArrivalGen::new(process, seed),
+            queue: VecDeque::new(),
+            rng: Rng::new(seed).split(0xF1EE7),
+            seed,
+            popularity: Vec::new(),
+            zipf_s,
+            tokens_per_req: tokens_per_req.max(1),
+            batch_tokens: batch_tokens.max(1),
+            slo_s,
+            requests_arrived: 0,
+            requests_completed: 0,
+            slo_hits: 0,
+            latency_sum_s: 0.0,
+            latency_max_s: 0.0,
+        };
+        s.reseed_popularity(n_experts);
+        s
+    }
+
+    /// Re-derive the expert popularity for a (new) expert count — a pure
+    /// function of `(seed, n_experts)`, called at admission and after
+    /// every lease resize.
+    pub fn reseed_popularity(&mut self, n_experts: usize) {
+        let mut r = Rng::new(self.seed).split(n_experts as u64);
+        let mut ranks: Vec<usize> = (0..n_experts).collect();
+        r.shuffle(&mut ranks);
+        let h: f64 = (1..=n_experts).map(|k| (k as f64).powf(-self.zipf_s)).sum();
+        let mut p = vec![0.0; n_experts];
+        for (rank_pos, &e) in ranks.iter().enumerate() {
+            p[e] = ((rank_pos + 1) as f64).powf(-self.zipf_s) / h;
+        }
+        self.popularity = p;
+    }
+
+    /// Draw this tick's arrivals into the queue; returns the count.
+    pub fn arrive(&mut self, tick: usize) -> u64 {
+        let n = self.arrivals.next_tick();
+        for _ in 0..n {
+            self.queue.push_back(Request { arrived: tick, tokens: self.tokens_per_req });
+        }
+        self.requests_arrived += n;
+        n
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn queued_tokens(&self) -> u64 {
+        self.queue.iter().map(|r| r.tokens).sum()
+    }
+
+    /// Replica-demand signal: queued work in units of one tick's drain
+    /// capacity (`batch_tokens`).  `> 1` = falling behind, `~0` = idle.
+    pub fn pressure(&self) -> f64 {
+        self.queued_tokens() as f64 / self.batch_tokens as f64
+    }
+
+    /// Pop the next batch (FIFO, up to `batch_tokens`; always at least
+    /// one request when the queue is non-empty, so an oversized request
+    /// still makes progress).  Empty vec = nothing to serve this tick.
+    pub fn take_batch(&mut self) -> Vec<Request> {
+        let mut batch = Vec::new();
+        let mut tokens = 0u64;
+        while let Some(r) = self.queue.front() {
+            if !batch.is_empty() && tokens + r.tokens > self.batch_tokens {
+                break;
+            }
+            tokens += r.tokens;
+            batch.push(self.queue.pop_front().expect("front was Some"));
+        }
+        batch
+    }
+
+    /// Route a batch onto the leased slice: tokens split evenly across
+    /// local devices (remainder to the lowest ids — the DP-shard split),
+    /// each device's share drawn multinomially from the job's expert
+    /// popularity.
+    pub fn batch_matrix(&mut self, batch: &[Request], n_devices: usize) -> LoadMatrix {
+        let n_experts = self.popularity.len();
+        let total: u64 = batch.iter().map(|r| r.tokens).sum();
+        let per = total / n_devices as u64;
+        let rem = (total % n_devices as u64) as usize;
+        let mut w = LoadMatrix::zeros(n_devices, n_experts);
+        for d in 0..n_devices {
+            let share = per + u64::from(d < rem);
+            let counts = self.rng.multinomial(share, &self.popularity);
+            for (e, &c) in counts.iter().enumerate() {
+                w.set(d, e, c);
+            }
+        }
+        w
+    }
+
+    /// Score a served batch: latency = queueing delay (whole ticks) plus
+    /// the priced service time, against the SLO.
+    pub fn complete_batch(&mut self, batch: &[Request], tick: usize, tick_s: f64, service_s: f64) {
+        for r in batch {
+            let latency = (tick - r.arrived) as f64 * tick_s + service_s;
+            self.requests_completed += 1;
+            if latency <= self.slo_s {
+                self.slo_hits += 1;
+            }
+            self.latency_sum_s += latency;
+            if latency > self.latency_max_s {
+                self.latency_max_s = latency;
+            }
+        }
+    }
+
+    /// Fraction of completed requests inside the SLO (1.0 when nothing
+    /// has completed — vacuously attained).
+    pub fn slo_attainment(&self) -> f64 {
+        if self.requests_completed == 0 {
+            1.0
+        } else {
+            self.slo_hits as f64 / self.requests_completed as f64
+        }
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.requests_completed == 0 {
+            0.0
+        } else {
+            self.latency_sum_s / self.requests_completed as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(rate: f64) -> InferenceState {
+        InferenceState::new(
+            ArrivalProcess::Poisson { rate },
+            7,
+            64,
+            256,
+            0.5,
+            8,
+            1.2,
+        )
+    }
+
+    #[test]
+    fn arrivals_queue_and_batches_drain_fifo() {
+        let mut s = state(4.0);
+        let mut arrived = 0;
+        for t in 0..8 {
+            arrived += s.arrive(t);
+        }
+        assert_eq!(arrived, s.requests_arrived);
+        assert_eq!(s.queue_depth() as u64, arrived);
+        assert_eq!(s.queued_tokens(), arrived * 64);
+        let batch = s.take_batch();
+        assert!(!batch.is_empty());
+        assert!(batch.iter().map(|r| r.tokens).sum::<u64>() <= 256);
+        // FIFO: the batch holds the oldest requests.
+        let oldest = batch.iter().map(|r| r.arrived).max().unwrap();
+        assert!(s.queue.iter().all(|r| r.arrived >= oldest));
+    }
+
+    #[test]
+    fn oversized_request_still_makes_progress() {
+        let mut s = state(0.0);
+        s.queue.push_back(Request { arrived: 0, tokens: 10_000 });
+        let batch = s.take_batch();
+        assert_eq!(batch.len(), 1, "a request larger than the batch cap still serves");
+        assert!(s.take_batch().is_empty());
+    }
+
+    #[test]
+    fn batch_matrix_conserves_tokens() {
+        let mut s = state(0.0);
+        let batch = vec![
+            Request { arrived: 0, tokens: 100 },
+            Request { arrived: 1, tokens: 55 },
+        ];
+        let w = s.batch_matrix(&batch, 4);
+        assert_eq!(w.n_devices(), 4);
+        assert_eq!(w.n_experts(), 8);
+        assert_eq!(w.total_tokens(), 155);
+    }
+
+    #[test]
+    fn popularity_is_a_pure_function_of_seed_and_width() {
+        let mut a = state(1.0);
+        let b = state(1.0);
+        assert_eq!(a.popularity, b.popularity);
+        let before = a.popularity.clone();
+        a.reseed_popularity(16);
+        assert_eq!(a.popularity.len(), 16);
+        a.reseed_popularity(8);
+        assert_eq!(a.popularity, before, "resize back re-derives identical popularity");
+        let sum: f64 = a.popularity.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_and_slo_accounting() {
+        let mut s = state(0.0);
+        let batch = vec![
+            Request { arrived: 0, tokens: 64 }, // waited 4 ticks
+            Request { arrived: 4, tokens: 64 }, // served same tick
+        ];
+        // tick_s = 0.1, service 0.05: latencies 0.45 and 0.05 vs slo 0.5.
+        s.complete_batch(&batch, 4, 0.1, 0.05);
+        assert_eq!(s.requests_completed, 2);
+        assert_eq!(s.slo_hits, 2);
+        assert!((s.slo_attainment() - 1.0).abs() < 1e-12);
+        assert!((s.mean_latency_s() - 0.25).abs() < 1e-12);
+        assert!((s.latency_max_s - 0.45).abs() < 1e-12);
+        // A slow service blows the SLO for the waiting request.
+        let late = vec![Request { arrived: 0, tokens: 64 }];
+        s.complete_batch(&late, 5, 0.1, 0.2);
+        assert_eq!(s.requests_completed, 3);
+        assert_eq!(s.slo_hits, 2);
+        assert!(s.slo_attainment() < 1.0);
+    }
+
+    #[test]
+    fn pressure_tracks_queue_vs_capacity() {
+        let mut s = state(0.0);
+        assert_eq!(s.pressure(), 0.0);
+        for _ in 0..8 {
+            s.queue.push_back(Request { arrived: 0, tokens: 64 });
+        }
+        // 512 queued tokens / 256 batch = 2 ticks behind.
+        assert!((s.pressure() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,281 @@
+//! Device leasing: the fleet's ownership ledger over whole nodes.
+//!
+//! The fleet leases **whole nodes**, never single GPUs: every cluster
+//! preset packs `gpus_per_node` devices per node and the topology model
+//! only distinguishes same-node from cross-node links, so any k-node
+//! subset of an N-node cluster is exactly the k-node cluster of the same
+//! preset.  That is what makes [`sub_cluster`] honest — a tenant priced
+//! on its leased slice sees the same bandwidths it would see on a
+//! dedicated cluster of that size.
+//!
+//! The [`LeaseBook`] is the single source of truth for who holds what:
+//! grants carve the lowest-id free nodes, shrinks return the highest-id
+//! held nodes first (so leases stay compact), and [`LeaseBook::validate`]
+//! checks the disjointness + conservation invariant the property suite
+//! leans on (no node leased twice, free + held == cluster).
+
+use crate::cluster::ClusterSpec;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Ownership ledger: which job (by id) holds which global node ids.
+#[derive(Clone, Debug)]
+pub struct LeaseBook {
+    n_nodes: usize,
+    free: BTreeSet<usize>,
+    held: BTreeMap<usize, Vec<usize>>,
+}
+
+impl LeaseBook {
+    pub fn new(n_nodes: usize) -> Self {
+        LeaseBook {
+            n_nodes,
+            free: (0..n_nodes).collect(),
+            held: BTreeMap::new(),
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn free_nodes(&self) -> usize {
+        self.free.len()
+    }
+
+    /// The sorted node ids `job` currently holds (empty slice if none).
+    pub fn lease(&self, job: usize) -> &[usize] {
+        self.held.get(&job).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Lease exactly `n` nodes to `job` (lowest free ids first).  `None`
+    /// when fewer than `n` nodes are free — the caller defers admission;
+    /// nothing is partially granted.
+    pub fn grant(&mut self, job: usize, n: usize) -> Option<Vec<usize>> {
+        assert!(
+            !self.held.contains_key(&job),
+            "job {job} already holds a lease; grow it instead"
+        );
+        if n == 0 || self.free.len() < n {
+            return None;
+        }
+        let nodes: Vec<usize> = self.free.iter().copied().take(n).collect();
+        for &g in &nodes {
+            self.free.remove(&g);
+        }
+        self.held.insert(job, nodes.clone());
+        Some(nodes)
+    }
+
+    /// Return all of `job`'s nodes to the pool; the number released.
+    pub fn release(&mut self, job: usize) -> usize {
+        let nodes = self.held.remove(&job).unwrap_or_default();
+        let n = nodes.len();
+        self.free.extend(nodes);
+        n
+    }
+
+    /// Extend `job`'s lease by up to `extra` free nodes (lowest ids
+    /// first); returns how many were actually added.
+    pub fn grow(&mut self, job: usize, extra: usize) -> usize {
+        let take = extra.min(self.free.len());
+        if take == 0 || !self.held.contains_key(&job) {
+            return 0;
+        }
+        let nodes: Vec<usize> = self.free.iter().copied().take(take).collect();
+        for &g in &nodes {
+            self.free.remove(&g);
+        }
+        let lease = self.held.get_mut(&job).expect("checked above");
+        lease.extend(nodes);
+        lease.sort_unstable();
+        take
+    }
+
+    /// Give back up to `give_back` of `job`'s nodes (highest ids first,
+    /// keeping at least one); returns how many were released.
+    pub fn shrink(&mut self, job: usize, give_back: usize) -> usize {
+        let Some(lease) = self.held.get_mut(&job) else {
+            return 0;
+        };
+        let take = give_back.min(lease.len().saturating_sub(1));
+        for _ in 0..take {
+            let g = lease.pop().expect("len > 1 checked by take bound");
+            self.free.insert(g);
+        }
+        take
+    }
+
+    /// The disjointness + conservation invariant: every node is either
+    /// free or held by exactly one job, and nothing is out of range.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut seen: BTreeSet<usize> = self.free.clone();
+        if seen.len() != self.free.len() {
+            return Err("free pool contains duplicates".into());
+        }
+        for (&job, nodes) in &self.held {
+            if nodes.is_empty() {
+                return Err(format!("job {job} holds an empty lease"));
+            }
+            for &g in nodes {
+                if g >= self.n_nodes {
+                    return Err(format!("job {job} holds out-of-range node {g}"));
+                }
+                if !seen.insert(g) {
+                    return Err(format!("node {g} is leased twice (job {job} overlaps)"));
+                }
+            }
+        }
+        if seen.len() != self.n_nodes {
+            return Err(format!(
+                "conservation violated: {} nodes accounted for, cluster has {}",
+                seen.len(),
+                self.n_nodes
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The cluster a lease's tenant actually runs on.  A full-cluster lease
+/// returns the fleet cluster **verbatim** (name included) — that is the
+/// degenerate-fleet oracle's precondition: a single job holding every
+/// node prices on bit-identical inputs to a standalone `simulate_policy`
+/// run.  A partial lease is the same preset at the leased node count,
+/// with the static per-device slowdown vector sliced to the leased
+/// nodes' devices (node `g` owns global devices `g*gpn..(g+1)*gpn`).
+pub fn sub_cluster(fleet: &ClusterSpec, lease: &[usize]) -> ClusterSpec {
+    if lease.len() == fleet.n_nodes {
+        return fleet.clone();
+    }
+    let gpn = fleet.gpus_per_node;
+    let device_slowdown = if fleet.device_slowdown.is_empty() {
+        Vec::new()
+    } else {
+        lease
+            .iter()
+            .flat_map(|&g| (g * gpn..(g + 1) * gpn).map(|d| fleet.slowdown(d)))
+            .collect()
+    };
+    ClusterSpec {
+        name: format!("{}/lease{}", fleet.name, lease.len()),
+        n_nodes: lease.len(),
+        device_slowdown,
+        ..fleet.clone()
+    }
+}
+
+/// Global device ids covered by a lease, in lease order — index `i` of
+/// the returned vector is local device `i` of the tenant's sub-cluster.
+pub fn lease_devices(fleet: &ClusterSpec, lease: &[usize]) -> Vec<usize> {
+    let gpn = fleet.gpus_per_node;
+    lease
+        .iter()
+        .flat_map(|&g| g * gpn..(g + 1) * gpn)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn grant_release_round_trip() {
+        let mut b = LeaseBook::new(4);
+        assert_eq!(b.free_nodes(), 4);
+        let l = b.grant(7, 2).unwrap();
+        assert_eq!(l, vec![0, 1], "lowest free ids first");
+        assert_eq!(b.lease(7), &[0, 1]);
+        assert_eq!(b.free_nodes(), 2);
+        b.validate().unwrap();
+        // A second tenant gets the remaining nodes; a third is refused.
+        assert_eq!(b.grant(9, 2).unwrap(), vec![2, 3]);
+        assert!(b.grant(11, 1).is_none(), "no partial grants");
+        assert_eq!(b.release(7), 2);
+        assert_eq!(b.lease(7), &[] as &[usize]);
+        // Released nodes are immediately grantable again.
+        assert_eq!(b.grant(11, 1).unwrap(), vec![0]);
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn grow_and_shrink_keep_leases_compact() {
+        let mut b = LeaseBook::new(6);
+        b.grant(0, 2).unwrap();
+        b.grant(1, 2).unwrap();
+        assert_eq!(b.grow(0, 3), 2, "grow is best-effort up to the free pool");
+        assert_eq!(b.lease(0), &[0, 1, 4, 5]);
+        // Shrink returns highest ids and never empties a lease.
+        assert_eq!(b.shrink(0, 10), 3);
+        assert_eq!(b.lease(0), &[0]);
+        assert_eq!(b.free_nodes(), 3);
+        assert_eq!(b.shrink(0, 1), 0, "last node is never given back");
+        // Grow on an unknown job is a no-op (it has no lease to extend).
+        assert_eq!(b.grow(42, 1), 0);
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn sub_cluster_full_lease_is_verbatim() {
+        let fleet = ClusterSpec::hpwnv(4);
+        let sub = sub_cluster(&fleet, &[0, 1, 2, 3]);
+        assert_eq!(sub, fleet, "full lease must clone the fleet cluster exactly");
+        assert_eq!(sub.name, fleet.name);
+    }
+
+    #[test]
+    fn sub_cluster_partial_lease_slices_slowdowns() {
+        let fleet = ClusterSpec::hpwnv(4).with_slowdown(9, 3.0); // node 2, dev 1
+        let sub = sub_cluster(&fleet, &[2, 3]);
+        assert_eq!(sub.n_nodes, 2);
+        assert_eq!(sub.n_devices(), 8);
+        assert_eq!(sub.gpus_per_node, fleet.gpus_per_node);
+        assert_eq!(sub.intra_bw, fleet.intra_bw);
+        // Global device 9 is local device 1 of the [2, 3] lease.
+        assert_eq!(sub.slowdown(1), 3.0);
+        assert!(sub.device_slowdown.iter().filter(|&&s| s != 1.0).count() == 1);
+        // Homogeneous fleet -> empty (not all-ones) local vector, so the
+        // sub-cluster stays on the frozen homogeneous pricing path.
+        let homo = sub_cluster(&ClusterSpec::hpwnv(4), &[1]);
+        assert!(homo.device_slowdown.is_empty());
+        assert!(!homo.is_heterogeneous());
+        assert_eq!(lease_devices(&fleet, &[2, 3]), vec![8, 9, 10, 11, 12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn random_ops_preserve_disjointness() {
+        // Property: any interleaving of grant/release/grow/shrink keeps
+        // the book valid — no node leased twice, conservation holds.
+        prop::Cases::new(prop::default_cases()).run(|rng| {
+            let n_nodes = 1 + rng.below(12) as usize;
+            let mut b = LeaseBook::new(n_nodes);
+            let jobs = 1 + rng.below(5) as usize;
+            for _ in 0..40 {
+                let job = rng.below(jobs as u64) as usize;
+                match rng.below(4) {
+                    0 => {
+                        if b.lease(job).is_empty() {
+                            let want = 1 + rng.below(n_nodes as u64) as usize;
+                            let granted = b.grant(job, want);
+                            if let Some(g) = &granted {
+                                assert_eq!(g.len(), want);
+                            }
+                        }
+                    }
+                    1 => {
+                        b.release(job);
+                    }
+                    2 => {
+                        b.grow(job, 1 + rng.below(3) as usize);
+                    }
+                    _ => {
+                        b.shrink(job, 1 + rng.below(3) as usize);
+                    }
+                }
+                b.validate().unwrap();
+                let held: usize = (0..jobs).map(|j| b.lease(j).len()).sum();
+                assert_eq!(held + b.free_nodes(), n_nodes);
+            }
+        });
+    }
+}

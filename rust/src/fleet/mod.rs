@@ -1,0 +1,1385 @@
+//! Fleet: multi-job cluster simulation on top of [`crate::balancer`].
+//!
+//! One [`Fleet`] run owns a [`ClusterSpec`] and time-steps a set of
+//! tenant jobs over it:
+//!
+//! * **Leasing** ([`lease`]) — each admitted job holds a disjoint slice
+//!   of whole nodes; its `BalancerSession` + prophet run entirely over
+//!   that slice, priced by the existing DES on the sliced sub-cluster.
+//! * **Admission** ([`admission`]) — jobs queue from their `start` tick
+//!   and enter when their full node ask fits; misfits are deferred
+//!   (counted backpressure), never crashed.
+//! * **Training tenants** — fixed-size jobs running a captured workload
+//!   trace, one iteration per tick, through the exact single-iteration
+//!   step the simulator uses (`sim::price_and_observe`): a one-job fleet
+//!   holding the whole cluster reproduces `simulate_policy` bit-for-bit
+//!   (the degenerate-fleet oracle).
+//! * **Inference tenants** ([`inference`]) — elastic jobs driven by
+//!   seeded Poisson / ON-OFF-bursty arrivals, batching queued requests
+//!   into single-layer iterations, scoring per-request latency against
+//!   an SLO and exposing queue pressure as the replica-demand signal.
+//! * **Rebalancing** — every `rebalance_interval` ticks the fleet
+//!   resizes inference leases toward demand (FlexMoE-style), moving at
+//!   most `migration_budget` nodes per event, in a deterministic order.
+//! * **Fleet-wide faults** — one [`FaultTimeline`] indexed by tick spans
+//!   the whole cluster; each tenant sees the slice covering its lease,
+//!   so one failing device degrades every job leasing its node.  A
+//!   tenant whose entire slice is down is **parked** for the tick
+//!   (see satellite: `Placement::fail_over` all-down is a typed error).
+//!
+//! Everything is deterministic: same config + seed produce a
+//! byte-identical [`FleetReport`] serialization.
+
+pub mod admission;
+pub mod inference;
+pub mod lease;
+
+pub use admission::AdmissionPolicy;
+pub use lease::{lease_devices, sub_cluster, LeaseBook};
+
+use crate::balancer::{BalancerSession, ProphetOptions};
+use crate::cluster::ClusterSpec;
+use crate::config::{toml, ModelSpec};
+use crate::faults::{FaultTimeline, FaultView};
+use crate::moe::LoadMatrix;
+use crate::obs::{Labels, Recorder};
+use crate::perfmodel::PerfModel;
+use crate::sim::{checkpoint, price_and_observe, Engine, SimReport};
+use crate::util::json::{self, Json};
+use crate::workload::arrivals::ArrivalProcess;
+use crate::workload::{Trace, WorkloadConfig, WorkloadGen};
+use inference::InferenceState;
+use std::sync::Arc;
+
+/// Schema tag of a serialized [`FleetReport`].
+pub const FLEET_SCHEMA: &str = "pro-prophet-fleet/v1";
+
+/// What kind of tenant a [`JobSpec`] describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    Train,
+    Infer,
+}
+
+impl JobKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::Train => "train",
+            JobKind::Infer => "infer",
+        }
+    }
+}
+
+/// One tenant, parsed from a `[fleet] jobs` spec string.
+///
+/// Spec grammar (comma-free, whitespace-separated `key=value` pairs,
+/// like fault-event specs):
+///
+/// ```text
+/// train name=alpha nodes=2 model=s k=1 tokens=8192 iters=24 policy=pro-prophet start=0 seed=11
+/// infer name=serve nodes=1 min_nodes=1 max_nodes=2 model=s rate=3 slo_ms=400
+///       burst_on=4 burst_off=6 burst_factor=4 tokens_per_req=64 batch_tokens=2048
+///       policy=pro-prophet start=0 seed=13
+/// ```
+///
+/// An inference spec without `burst_*` keys is a plain Poisson stream.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub name: String,
+    pub kind: JobKind,
+    /// Node ask at admission (train: for the whole run).
+    pub nodes: usize,
+    /// Elastic bounds (inference only; train pins both to `nodes`).
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    /// Table-III model preset name (`s|m|l|ds|dm`).
+    pub model: String,
+    pub k: usize,
+    /// Train: tokens per iteration across the lease.
+    pub tokens: u64,
+    /// Train: iterations to run before completing.
+    pub iters: usize,
+    /// Balancing-policy registry name.
+    pub policy: String,
+    /// First tick the job may be admitted.
+    pub start: usize,
+    pub seed: u64,
+    // --- inference knobs -------------------------------------------------
+    /// Mean requests per tick.
+    pub rate: f64,
+    /// ON/OFF burst cycle (both 0 = plain Poisson).
+    pub burst_on: usize,
+    pub burst_off: usize,
+    pub burst_factor: f64,
+    pub tokens_per_req: u64,
+    pub batch_tokens: u64,
+    pub slo_ms: f64,
+}
+
+impl JobSpec {
+    /// Parse one spec string (see the type docs for the grammar).
+    pub fn parse(spec: &str) -> Result<JobSpec, String> {
+        let mut words = spec.split_whitespace();
+        let kind = match words.next() {
+            Some("train") => JobKind::Train,
+            Some("infer") => JobKind::Infer,
+            Some(other) => return Err(format!("unknown job kind `{other}` in `{spec}`")),
+            None => return Err("empty job spec".into()),
+        };
+        let mut job = JobSpec {
+            name: String::new(),
+            kind,
+            nodes: 1,
+            min_nodes: 0,
+            max_nodes: 0,
+            model: "s".into(),
+            k: 1,
+            tokens: 8192,
+            iters: 16,
+            policy: "pro-prophet".into(),
+            start: 0,
+            seed: 42,
+            rate: 2.0,
+            burst_on: 0,
+            burst_off: 0,
+            burst_factor: 1.0,
+            tokens_per_req: 64,
+            batch_tokens: 2048,
+            slo_ms: 500.0,
+        };
+        for word in words {
+            let (key, value) = word
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got `{word}` in `{spec}`"))?;
+            let us = || {
+                value
+                    .parse::<usize>()
+                    .map_err(|_| format!("`{key}={value}`: not a non-negative integer"))
+            };
+            let fl = || {
+                value
+                    .parse::<f64>()
+                    .map_err(|_| format!("`{key}={value}`: not a number"))
+            };
+            match key {
+                "name" => job.name = value.to_string(),
+                "nodes" => job.nodes = us()?,
+                "min_nodes" => job.min_nodes = us()?,
+                "max_nodes" => job.max_nodes = us()?,
+                "model" => job.model = value.to_string(),
+                "k" => job.k = us()?,
+                "tokens" => job.tokens = us()? as u64,
+                "iters" => job.iters = us()?,
+                "policy" => job.policy = value.to_string(),
+                "start" => job.start = us()?,
+                "seed" => job.seed = us()? as u64,
+                "rate" => job.rate = fl()?,
+                "burst_on" => job.burst_on = us()?,
+                "burst_off" => job.burst_off = us()?,
+                "burst_factor" => job.burst_factor = fl()?,
+                "tokens_per_req" => job.tokens_per_req = us()? as u64,
+                "batch_tokens" => job.batch_tokens = us()? as u64,
+                "slo_ms" => job.slo_ms = fl()?,
+                _ => return Err(format!("unknown job key `{key}` in `{spec}`")),
+            }
+        }
+        if job.min_nodes == 0 {
+            job.min_nodes = if kind == JobKind::Infer { 1 } else { job.nodes };
+        }
+        if job.max_nodes == 0 {
+            job.max_nodes = job.nodes;
+        }
+        if kind == JobKind::Train {
+            job.min_nodes = job.nodes;
+            job.max_nodes = job.nodes;
+        }
+        Ok(job)
+    }
+
+    /// The arrival process an inference spec describes.
+    pub fn arrival_process(&self) -> ArrivalProcess {
+        if self.burst_on > 0 || self.burst_off > 0 {
+            ArrivalProcess::OnOffBursty {
+                rate: self.rate,
+                on_ticks: self.burst_on,
+                off_ticks: self.burst_off,
+                burst_factor: self.burst_factor,
+            }
+        } else {
+            ArrivalProcess::Poisson { rate: self.rate }
+        }
+    }
+
+    fn validate(&self, cluster: &ClusterSpec) -> Result<(), String> {
+        let who = format!("job `{}`", self.name);
+        if self.name.is_empty() {
+            return Err("every fleet job needs name=...".into());
+        }
+        if self.nodes == 0 {
+            return Err(format!("{who}: nodes must be >= 1"));
+        }
+        if self.nodes > cluster.n_nodes {
+            return Err(format!(
+                "{who}: asks {} nodes, cluster has {}",
+                self.nodes, cluster.n_nodes
+            ));
+        }
+        if !(self.min_nodes >= 1 && self.min_nodes <= self.nodes && self.nodes <= self.max_nodes)
+        {
+            return Err(format!(
+                "{who}: need 1 <= min_nodes ({}) <= nodes ({}) <= max_nodes ({})",
+                self.min_nodes, self.nodes, self.max_nodes
+            ));
+        }
+        if self.max_nodes > cluster.n_nodes {
+            return Err(format!(
+                "{who}: max_nodes {} exceeds the cluster's {}",
+                self.max_nodes, cluster.n_nodes
+            ));
+        }
+        if ModelSpec::by_name(&self.model, cluster.gpus_per_node, 1, 1).is_none() {
+            return Err(format!("{who}: unknown model `{}`", self.model));
+        }
+        if !crate::balancer::registry::is_known(&self.policy) {
+            return Err(format!(
+                "{who}: unknown policy `{}` (known: {})",
+                self.policy,
+                crate::balancer::registry::names().join(", ")
+            ));
+        }
+        match self.kind {
+            JobKind::Train => {
+                if self.iters == 0 {
+                    return Err(format!("{who}: iters must be >= 1"));
+                }
+                if self.tokens == 0 {
+                    return Err(format!("{who}: tokens must be >= 1"));
+                }
+            }
+            JobKind::Infer => {
+                self.arrival_process()
+                    .validate()
+                    .map_err(|e| format!("{who}: {e}"))?;
+                if self.slo_ms <= 0.0 || !self.slo_ms.is_finite() {
+                    return Err(format!("{who}: slo_ms must be finite and > 0"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The `[fleet]` table: the tick clock, admission/rebalancing knobs and
+/// the tenant list.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Fleet ticks to simulate.
+    pub ticks: usize,
+    /// Wall-clock seconds one tick represents (queueing-delay unit for
+    /// inference latency; pricing inside a tick is still the DES).
+    pub tick_s: f64,
+    /// Concurrent-tenant cap (admission backpressure axis).
+    pub max_concurrent: usize,
+    pub admission: AdmissionPolicy,
+    /// Rebalance every this many ticks (0 = never).
+    pub rebalance_interval: usize,
+    /// Max nodes moved per rebalance event.
+    pub migration_budget: usize,
+    pub jobs: Vec<JobSpec>,
+}
+
+impl FleetConfig {
+    /// Parse the `[fleet]` table out of a config file's [`toml::Table`];
+    /// `Ok(None)` when the file has no `[fleet]` table at all.
+    pub fn from_table(t: &toml::Table, cluster: &ClusterSpec) -> Result<Option<Self>, String> {
+        if !t.keys().any(|k| k == "fleet.jobs" || k.starts_with("fleet.")) {
+            return Ok(None);
+        }
+        let admission_name = t.str_or("fleet.admission", "fifo");
+        let admission = AdmissionPolicy::from_name(&admission_name).ok_or_else(|| {
+            format!("unknown fleet.admission {admission_name:?} (known: fifo, smallest_first)")
+        })?;
+        let jobs = match t.get("fleet.jobs") {
+            None => return Err("[fleet] needs jobs = [\"train ...\", \"infer ...\"]".into()),
+            Some(toml::Value::Arr(vals)) => {
+                let mut jobs = Vec::new();
+                for v in vals {
+                    let spec = v
+                        .as_str()
+                        .ok_or_else(|| "fleet.jobs entries must be strings".to_string())?;
+                    jobs.push(JobSpec::parse(spec).map_err(|e| format!("fleet.jobs: {e}"))?);
+                }
+                jobs
+            }
+            Some(_) => return Err("fleet.jobs must be an array of job specs".into()),
+        };
+        let cfg = FleetConfig {
+            ticks: t.usize_or("fleet.ticks", 32),
+            tick_s: t.f64_or("fleet.tick_s", 0.25),
+            max_concurrent: t.usize_or("fleet.max_concurrent", jobs.len().max(1)),
+            admission,
+            rebalance_interval: t.usize_or("fleet.rebalance_interval", 4),
+            migration_budget: t.usize_or("fleet.migration_budget", 1),
+            jobs,
+        };
+        cfg.validate(cluster)?;
+        Ok(Some(cfg))
+    }
+
+    pub fn validate(&self, cluster: &ClusterSpec) -> Result<(), String> {
+        if self.ticks == 0 {
+            return Err("fleet.ticks must be >= 1".into());
+        }
+        if !(self.tick_s.is_finite() && self.tick_s > 0.0) {
+            return Err(format!("fleet.tick_s must be finite and > 0, got {}", self.tick_s));
+        }
+        if self.max_concurrent == 0 {
+            return Err("fleet.max_concurrent must be >= 1".into());
+        }
+        if self.jobs.is_empty() {
+            return Err("[fleet] needs at least one job".into());
+        }
+        for job in &self.jobs {
+            job.validate(cluster)?;
+        }
+        for (i, a) in self.jobs.iter().enumerate() {
+            if self.jobs[..i].iter().any(|b| b.name == a.name) {
+                return Err(format!("duplicate fleet job name `{}`", a.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Growth/shrink thresholds of the demand-driven rebalancer: a job more
+/// than one full tick behind wants nodes; one at under a quarter tick of
+/// queued work can give one up.
+const GROW_PRESSURE: f64 = 1.0;
+const SHRINK_PRESSURE: f64 = 0.25;
+
+/// Live state of one admitted tenant.
+struct JobRuntime {
+    spec: usize,
+    admitted_tick: usize,
+    completed_tick: Option<usize>,
+    /// Sorted global node ids (mirrors the lease book).
+    lease: Vec<usize>,
+    cluster: ClusterSpec,
+    model: ModelSpec,
+    pm: PerfModel,
+    session: BalancerSession,
+    heterogeneous: bool,
+    /// Train: the captured workload, one iteration per tick.
+    trace: Option<Trace>,
+    next_iter: usize,
+    /// Inference queue/latency state.
+    infer: Option<InferenceState>,
+    /// Per-iteration results, simulator-shaped (the degenerate oracle
+    /// compares this verbatim against `simulate_policy`).
+    sim: SimReport,
+    busy_s: f64,
+    parked_ticks: usize,
+    idle_ticks: usize,
+    tokens_processed: u64,
+}
+
+impl JobRuntime {
+    /// Build a tenant's whole pricing stack over its leased slice.
+    fn new(
+        spec_idx: usize,
+        spec: &JobSpec,
+        fleet_cluster: &ClusterSpec,
+        lease: Vec<usize>,
+        popts: &ProphetOptions,
+        rec: Arc<dyn Recorder>,
+        tick: usize,
+    ) -> Result<Self, String> {
+        let cluster = sub_cluster(fleet_cluster, &lease);
+        let d = cluster.n_devices();
+        // Repo convention: experts per layer == device count.
+        let model = ModelSpec::by_name(&spec.model, d, spec.k, spec.tokens)
+            .ok_or_else(|| format!("job `{}`: unknown model `{}`", spec.name, spec.model))?;
+        let (n_layers, trace, infer) = match spec.kind {
+            JobKind::Train => {
+                let mut wcfg =
+                    WorkloadConfig::paper_default(model.n_layers, d, d, spec.tokens * spec.k as u64);
+                wcfg.seed = spec.seed;
+                let mut gen = WorkloadGen::new(wcfg);
+                (model.n_layers, Some(Trace::capture(&mut gen, spec.iters)), None)
+            }
+            JobKind::Infer => {
+                let state = InferenceState::new(
+                    spec.arrival_process(),
+                    spec.seed,
+                    spec.tokens_per_req,
+                    spec.batch_tokens,
+                    spec.slo_ms / 1000.0,
+                    d,
+                    1.2,
+                );
+                (1, None, Some(state))
+            }
+        };
+        let policy = crate::balancer::registry::build(&spec.policy, popts)
+            .ok_or_else(|| format!("job `{}`: unknown policy `{}`", spec.name, spec.policy))?;
+        let session = BalancerSession::with_recorder(policy, n_layers, rec);
+        let pm = PerfModel::new(&model, &cluster);
+        let heterogeneous = cluster.is_heterogeneous();
+        let sim = SimReport { policy: session.policy_name(), ..Default::default() };
+        Ok(JobRuntime {
+            spec: spec_idx,
+            admitted_tick: tick,
+            completed_tick: None,
+            lease,
+            cluster,
+            model,
+            pm,
+            session,
+            heterogeneous,
+            trace,
+            next_iter: 0,
+            infer,
+            sim,
+            busy_s: 0.0,
+            parked_ticks: 0,
+            idle_ticks: 0,
+            tokens_processed: 0,
+        })
+    }
+
+    /// Slice the fleet-wide fault view down to this tenant's lease,
+    /// mirroring the simulator's `fault_view_for` semantics: with a
+    /// non-empty timeline the session ALWAYS sees the (possibly
+    /// all-clear) health mask; the returned view is `Some` only when a
+    /// fault actually distorts this slice's pricing.
+    fn local_fault_view(
+        &mut self,
+        fleet_cluster: &ClusterSpec,
+        fleet_view: &Option<FaultView>,
+        timeline_active: bool,
+    ) -> Option<FaultView> {
+        if !timeline_active {
+            return None;
+        }
+        let devs = lease_devices(fleet_cluster, &self.lease);
+        let (down, slowdown): (Vec<bool>, Vec<f64>) = match fleet_view {
+            Some(v) => devs.iter().map(|&g| (v.down[g], v.slowdown[g])).unzip(),
+            None => {
+                self.session.set_device_health(&vec![false; devs.len()]);
+                return None;
+            }
+        };
+        self.session.set_device_health(&down);
+        let distorted = down.iter().any(|&d| d)
+            || slowdown
+                .iter()
+                .enumerate()
+                .any(|(i, &s)| s != self.cluster.slowdown(i));
+        if distorted {
+            Some(FaultView { slowdown, down })
+        } else {
+            None
+        }
+    }
+
+    /// Capture final policy counters into the embedded [`SimReport`].
+    fn finalize_counters(&mut self) {
+        let c = self.session.counters();
+        self.sim.plans_run = c.plans_run;
+        self.sim.plans_reused = c.plans_reused;
+        self.sim.drift_replans = c.drift_replans;
+    }
+}
+
+/// Fleet-level churn and backpressure counters.
+#[derive(Clone, Debug, Default)]
+pub struct FleetCounters {
+    pub admitted: u64,
+    pub deferred_admissions: u64,
+    pub parked_ticks: u64,
+    pub lease_grants: u64,
+    pub lease_releases: u64,
+    /// Nodes moved by the rebalancer (grow + shrink).
+    pub lease_migrations: u64,
+    /// Rebalance events that moved at least one node.
+    pub rebalances: u64,
+}
+
+/// Per-tenant slice of a [`FleetReport`].
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub name: String,
+    pub kind: JobKind,
+    pub policy: String,
+    pub admitted_tick: Option<usize>,
+    pub completed_tick: Option<usize>,
+    /// Lease size at completion (or end of run).
+    pub lease_nodes: usize,
+    pub iterations: usize,
+    pub busy_s: f64,
+    pub parked_ticks: usize,
+    pub idle_ticks: usize,
+    pub tokens_processed: u64,
+    /// Simulator-shaped per-iteration results over the leased slice.
+    pub sim: SimReport,
+    // --- inference only --------------------------------------------------
+    pub requests_arrived: u64,
+    pub requests_completed: u64,
+    pub queue_depth_end: usize,
+    pub slo_attainment: f64,
+    pub mean_latency_s: f64,
+    pub max_latency_s: f64,
+}
+
+/// Whole-run fleet outcome: per-job reports plus cluster-level
+/// utilization/churn.  Serializes deterministically ([`Self::to_json`],
+/// schema [`FLEET_SCHEMA`]) — the byte-identity contract the property
+/// suite and the CI smoke diff.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub ticks: usize,
+    pub tick_s: f64,
+    pub n_devices: usize,
+    pub counters: FleetCounters,
+    /// Sum over ticks of devices that priced work that tick.
+    pub active_device_ticks: u64,
+    pub jobs: Vec<JobReport>,
+}
+
+impl FleetReport {
+    /// Fraction of device-ticks that did useful work.
+    pub fn utilization(&self) -> f64 {
+        if self.n_devices == 0 || self.ticks == 0 {
+            return 0.0;
+        }
+        self.active_device_ticks as f64 / (self.n_devices * self.ticks) as f64
+    }
+
+    pub fn job(&self, name: &str) -> Option<&JobReport> {
+        self.jobs.iter().find(|j| j.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let jobs = self
+            .jobs
+            .iter()
+            .map(|j| {
+                json::obj(vec![
+                    ("name", json::s(&j.name)),
+                    ("kind", json::s(j.kind.name())),
+                    ("policy", json::s(&j.policy)),
+                    (
+                        "admitted_tick",
+                        j.admitted_tick.map_or(Json::Null, |t| json::num(t as f64)),
+                    ),
+                    (
+                        "completed_tick",
+                        j.completed_tick.map_or(Json::Null, |t| json::num(t as f64)),
+                    ),
+                    ("lease_nodes", json::num(j.lease_nodes as f64)),
+                    ("iterations", json::num(j.iterations as f64)),
+                    ("busy_s", json::num(j.busy_s)),
+                    ("parked_ticks", json::num(j.parked_ticks as f64)),
+                    ("idle_ticks", json::num(j.idle_ticks as f64)),
+                    ("tokens_processed", json::num(j.tokens_processed as f64)),
+                    ("requests_arrived", json::num(j.requests_arrived as f64)),
+                    ("requests_completed", json::num(j.requests_completed as f64)),
+                    ("queue_depth_end", json::num(j.queue_depth_end as f64)),
+                    ("slo_attainment", json::num(j.slo_attainment)),
+                    ("mean_latency_s", json::num(j.mean_latency_s)),
+                    ("max_latency_s", json::num(j.max_latency_s)),
+                    ("sim", checkpoint::report_to_json(&j.sim)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("schema", json::s(FLEET_SCHEMA)),
+            ("ticks", json::num(self.ticks as f64)),
+            ("tick_s", json::num(self.tick_s)),
+            ("n_devices", json::num(self.n_devices as f64)),
+            ("utilization", json::num(self.utilization())),
+            ("active_device_ticks", json::num(self.active_device_ticks as f64)),
+            ("admitted", json::num(self.counters.admitted as f64)),
+            (
+                "deferred_admissions",
+                json::num(self.counters.deferred_admissions as f64),
+            ),
+            ("parked_ticks", json::num(self.counters.parked_ticks as f64)),
+            ("lease_grants", json::num(self.counters.lease_grants as f64)),
+            ("lease_releases", json::num(self.counters.lease_releases as f64)),
+            ("lease_migrations", json::num(self.counters.lease_migrations as f64)),
+            ("rebalances", json::num(self.counters.rebalances as f64)),
+            ("jobs", json::arr(jobs)),
+        ])
+    }
+}
+
+/// The fleet coordinator.  Construct with [`Fleet::new`], step to the
+/// end with [`Fleet::run`] (or drive tick-by-tick via [`Fleet::step`]
+/// + [`Fleet::into_report`] for tests).
+pub struct Fleet<'a> {
+    cfg: &'a FleetConfig,
+    cluster: &'a ClusterSpec,
+    popts: &'a ProphetOptions,
+    faults: &'a FaultTimeline,
+    rec: Arc<dyn Recorder>,
+    book: LeaseBook,
+    /// One slot per spec: `None` until admitted; kept after completion.
+    runtimes: Vec<Option<JobRuntime>>,
+    admitted: Vec<bool>,
+    counters: FleetCounters,
+    active_device_ticks: u64,
+    tick: usize,
+}
+
+impl<'a> Fleet<'a> {
+    pub fn new(
+        cfg: &'a FleetConfig,
+        cluster: &'a ClusterSpec,
+        popts: &'a ProphetOptions,
+        faults: &'a FaultTimeline,
+        rec: Arc<dyn Recorder>,
+    ) -> Result<Self, String> {
+        cfg.validate(cluster)?;
+        if !faults.is_empty() && faults.n_devices() != cluster.n_devices() {
+            return Err(format!(
+                "fault timeline is for {} devices, fleet cluster has {}",
+                faults.n_devices(),
+                cluster.n_devices()
+            ));
+        }
+        Ok(Fleet {
+            cfg,
+            cluster,
+            popts,
+            faults,
+            rec,
+            book: LeaseBook::new(cluster.n_nodes),
+            runtimes: cfg.jobs.iter().map(|_| None).collect(),
+            admitted: vec![false; cfg.jobs.len()],
+            counters: FleetCounters::default(),
+            active_device_ticks: 0,
+            tick: 0,
+        })
+    }
+
+    /// Run the whole configured horizon and report.
+    pub fn run(
+        cfg: &FleetConfig,
+        cluster: &ClusterSpec,
+        popts: &ProphetOptions,
+        faults: &FaultTimeline,
+        rec: Arc<dyn Recorder>,
+    ) -> Result<FleetReport, String> {
+        let mut fleet = Fleet::new(cfg, cluster, popts, faults, rec)?;
+        for _ in 0..cfg.ticks {
+            fleet.step()?;
+        }
+        Ok(fleet.into_report())
+    }
+
+    /// Live leases as `(spec index, leased node ids)` pairs — the
+    /// invariant surface integration tests assert over while stepping
+    /// tick by tick (no node may appear under two jobs at once).
+    pub fn leases(&self) -> Vec<(usize, Vec<usize>)> {
+        (0..self.runtimes.len())
+            .filter(|&i| self.running(i))
+            .map(|i| (i, self.book.lease(i).to_vec()))
+            .collect()
+    }
+
+    /// Number of [`Fleet::step`] calls completed so far.
+    pub fn current_tick(&self) -> usize {
+        self.tick
+    }
+
+    fn running(&self, i: usize) -> bool {
+        self.runtimes[i]
+            .as_ref()
+            .is_some_and(|r| r.completed_tick.is_none())
+    }
+
+    fn running_count(&self) -> usize {
+        (0..self.runtimes.len()).filter(|&i| self.running(i)).count()
+    }
+
+    /// Admit queued jobs that fit, in policy order.
+    fn admit(&mut self) -> Result<(), String> {
+        // Candidates: not yet admitted, start tick reached.  Queue
+        // position = arrival order (start tick, then spec order) —
+        // stable and deterministic.
+        let mut eligible: Vec<usize> = (0..self.cfg.jobs.len())
+            .filter(|&i| !self.admitted[i] && self.cfg.jobs[i].start <= self.tick)
+            .collect();
+        eligible.sort_by_key(|&i| (self.cfg.jobs[i].start, i));
+        let candidates: Vec<(usize, usize)> = eligible
+            .iter()
+            .enumerate()
+            .map(|(pos, &i)| (pos, self.cfg.jobs[i].nodes))
+            .collect();
+        let spec_of = eligible;
+        for pos in self.cfg.admission.order(&candidates) {
+            let spec_idx = spec_of[pos];
+            let spec = &self.cfg.jobs[spec_idx];
+            let fits = self.running_count() < self.cfg.max_concurrent
+                && self.book.free_nodes() >= spec.nodes;
+            if !fits {
+                self.counters.deferred_admissions += 1;
+                if self.rec.enabled() {
+                    self.rec.counter("fleet.deferred", Labels::None, 1);
+                }
+                if self.cfg.admission.head_of_line_blocking() {
+                    break;
+                }
+                continue;
+            }
+            let lease = self
+                .book
+                .grant(spec_idx, spec.nodes)
+                .expect("free_nodes >= nodes was just checked");
+            self.counters.lease_grants += 1;
+            self.counters.admitted += 1;
+            let rt = JobRuntime::new(
+                spec_idx,
+                spec,
+                self.cluster,
+                lease,
+                self.popts,
+                self.rec.clone(),
+                self.tick,
+            )?;
+            if self.rec.enabled() {
+                self.rec.counter("fleet.admitted", Labels::None, 1);
+                self.rec.gauge(
+                    "fleet.job_lease_nodes",
+                    Labels::one("job", spec_idx as i64),
+                    rt.lease.len() as f64,
+                );
+            }
+            self.runtimes[spec_idx] = Some(rt);
+            self.admitted[spec_idx] = true;
+        }
+        debug_assert!(self.book.validate().is_ok());
+        Ok(())
+    }
+
+    /// Resize inference leases toward demand: shrink the idle, grow the
+    /// overloaded, at most `migration_budget` nodes moved per event, in
+    /// a deterministic (pressure, spec-order) order.
+    fn rebalance(&mut self) -> Result<(), String> {
+        let mut budget = self.cfg.migration_budget;
+        if budget == 0 {
+            return Ok(());
+        }
+        // (spec idx, pressure) of running inference tenants.
+        let mut infer: Vec<(usize, f64)> = Vec::new();
+        for i in 0..self.runtimes.len() {
+            if !self.running(i) {
+                continue;
+            }
+            let rt = self.runtimes[i].as_ref().expect("running implies Some");
+            if let Some(state) = &rt.infer {
+                infer.push((i, state.pressure()));
+            }
+        }
+        let mut moved = 0u64;
+        // Shrink phase first, so freed nodes are available to growers in
+        // the same event.  Lowest pressure first; ties by spec order.
+        let mut shrinkers: Vec<usize> = infer
+            .iter()
+            .filter(|&&(i, p)| {
+                p < SHRINK_PRESSURE
+                    && self.runtimes[i].as_ref().expect("running").lease.len()
+                        > self.cfg.jobs[i].min_nodes
+            })
+            .map(|&(i, _)| i)
+            .collect();
+        shrinkers.sort_by(|&a, &b| {
+            let (pa, pb) = (infer.iter().find(|x| x.0 == a).expect("member").1,
+                            infer.iter().find(|x| x.0 == b).expect("member").1);
+            pa.partial_cmp(&pb).expect("pressure is finite").then(a.cmp(&b))
+        });
+        for i in shrinkers {
+            if budget == 0 {
+                break;
+            }
+            if self.book.shrink(i, 1) == 1 {
+                budget -= 1;
+                moved += 1;
+                self.resize_job(i)?;
+            }
+        }
+        // Grow phase: highest pressure first; ties by spec order.
+        let mut growers: Vec<usize> = infer
+            .iter()
+            .filter(|&&(i, p)| {
+                p > GROW_PRESSURE
+                    && self.runtimes[i].as_ref().expect("running").lease.len()
+                        < self.cfg.jobs[i].max_nodes
+            })
+            .map(|&(i, _)| i)
+            .collect();
+        growers.sort_by(|&a, &b| {
+            let (pa, pb) = (infer.iter().find(|x| x.0 == a).expect("member").1,
+                            infer.iter().find(|x| x.0 == b).expect("member").1);
+            pb.partial_cmp(&pa).expect("pressure is finite").then(a.cmp(&b))
+        });
+        for i in growers {
+            if budget == 0 {
+                break;
+            }
+            if self.book.grow(i, 1) == 1 {
+                budget -= 1;
+                moved += 1;
+                self.resize_job(i)?;
+            }
+        }
+        if moved > 0 {
+            self.counters.lease_migrations += moved;
+            self.counters.rebalances += 1;
+            if self.rec.enabled() {
+                self.rec.counter("lease.migrations", Labels::None, moved);
+                self.rec.counter("lease.rebalances", Labels::None, 1);
+            }
+        }
+        debug_assert!(self.book.validate().is_ok());
+        Ok(())
+    }
+
+    /// Rebuild a resized tenant's pricing stack over its new lease.
+    /// Queue, arrivals and latency accounting carry over; the session
+    /// and expert popularity are re-derived for the new width (expert
+    /// count tracks device count), seeded deterministically.
+    fn resize_job(&mut self, i: usize) -> Result<(), String> {
+        let spec = &self.cfg.jobs[i];
+        let lease = self.book.lease(i).to_vec();
+        let rt = self.runtimes[i].as_mut().expect("resize of a running job");
+        rt.lease = lease;
+        rt.cluster = sub_cluster(self.cluster, &rt.lease);
+        let d = rt.cluster.n_devices();
+        rt.model = ModelSpec::by_name(&spec.model, d, spec.k, spec.tokens)
+            .ok_or_else(|| format!("job `{}`: unknown model `{}`", spec.name, spec.model))?;
+        rt.pm = PerfModel::new(&rt.model, &rt.cluster);
+        rt.heterogeneous = rt.cluster.is_heterogeneous();
+        let policy = crate::balancer::registry::build(&spec.policy, self.popts)
+            .ok_or_else(|| format!("job `{}`: unknown policy `{}`", spec.name, spec.policy))?;
+        rt.session = BalancerSession::with_recorder(policy, 1, self.rec.clone());
+        if let Some(state) = &mut rt.infer {
+            state.reseed_popularity(d);
+        }
+        if self.rec.enabled() {
+            self.rec.gauge(
+                "fleet.job_lease_nodes",
+                Labels::one("job", i as i64),
+                rt.lease.len() as f64,
+            );
+        }
+        Ok(())
+    }
+
+    /// Advance the fleet by one tick: admit, step every tenant under the
+    /// tick's fault view, then (on the interval) rebalance leases.
+    pub fn step(&mut self) -> Result<(), String> {
+        let tick = self.tick;
+        self.rec.iteration_start(tick);
+        self.admit()?;
+
+        let timeline_active = !self.faults.is_empty();
+        let fleet_view = if timeline_active {
+            self.faults.effective(tick, self.cluster)
+        } else {
+            None
+        };
+
+        let mut active_this_tick = 0u64;
+        for i in 0..self.runtimes.len() {
+            if !self.running(i) {
+                continue;
+            }
+            let rec = self.rec.clone();
+            let rt = self.runtimes[i].as_mut().expect("running implies Some");
+            let view = rt.local_fault_view(self.cluster, &fleet_view, timeline_active);
+            let all_down = view.as_ref().is_some_and(FaultView::all_down);
+
+            // Inference traffic keeps arriving whatever the slice's
+            // health — that is what makes parking/degradation visible in
+            // the queue and the SLO numbers.
+            let mut batch = Vec::new();
+            if let Some(state) = &mut rt.infer {
+                let n = state.arrive(tick);
+                if rec.enabled() {
+                    if n > 0 {
+                        rec.counter("fleet.requests_arrived", Labels::None, n);
+                    }
+                    rec.gauge(
+                        "fleet.job_queue",
+                        Labels::one("job", i as i64),
+                        state.queue_depth() as f64,
+                    );
+                }
+                if !all_down {
+                    batch = state.take_batch();
+                }
+            }
+
+            if all_down {
+                // Every device in the slice is down: nothing can run.
+                // Park the tenant for the tick — degradation, not error
+                // (satellite: all-down fail_over is a typed refusal).
+                rt.parked_ticks += 1;
+                self.counters.parked_ticks += 1;
+                if rec.enabled() {
+                    rec.counter("fleet.parked", Labels::None, 1);
+                }
+                continue;
+            }
+
+            let stepped = match rt.trace.as_ref() {
+                // --- training tenant: one trace iteration per tick ----
+                Some(trace) => {
+                    let layers = &trace.iterations[rt.next_iter];
+                    let eng = Engine::new(&rt.cluster, &rt.pm);
+                    let it = price_and_observe(
+                        &eng,
+                        rt.heterogeneous,
+                        &mut rt.session,
+                        &view,
+                        layers,
+                        &*rec,
+                    );
+                    rt.busy_s += it.time;
+                    rt.tokens_processed += layers.iter().map(LoadMatrix::total_tokens).sum::<u64>()
+                        / trace.n_layers.max(1) as u64;
+                    if rec.enabled() {
+                        rec.gauge("fleet.job_iter_time_s", Labels::one("job", i as i64), it.time);
+                    }
+                    rt.sim.iters.push(it);
+                    rt.next_iter += 1;
+                    if rt.next_iter >= trace.len() {
+                        rt.completed_tick = Some(tick);
+                        rt.finalize_counters();
+                        let released = self.book.release(i);
+                        self.counters.lease_releases += u64::from(released > 0);
+                        if rec.enabled() {
+                            rec.counter("fleet.completed", Labels::None, 1);
+                        }
+                    }
+                    true
+                }
+                // --- inference tenant: price the drained batch --------
+                None => {
+                    if batch.is_empty() {
+                        rt.idle_ticks += 1;
+                        false
+                    } else {
+                        let state = rt.infer.as_mut().expect("infer job has state");
+                        let w = state.batch_matrix(&batch, rt.cluster.n_devices());
+                        let layers = [w];
+                        let eng = Engine::new(&rt.cluster, &rt.pm);
+                        let it = price_and_observe(
+                            &eng,
+                            rt.heterogeneous,
+                            &mut rt.session,
+                            &view,
+                            &layers,
+                            &*rec,
+                        );
+                        let state = rt.infer.as_mut().expect("infer job has state");
+                        state.complete_batch(&batch, tick, self.cfg.tick_s, it.time);
+                        rt.busy_s += it.time;
+                        rt.tokens_processed += layers[0].total_tokens();
+                        if rec.enabled() {
+                            rec.counter(
+                                "fleet.requests_completed",
+                                Labels::None,
+                                batch.len() as u64,
+                            );
+                            rec.gauge(
+                                "fleet.job_iter_time_s",
+                                Labels::one("job", i as i64),
+                                it.time,
+                            );
+                            let state = rt.infer.as_ref().expect("infer job has state");
+                            rec.gauge(
+                                "fleet.job_slo_attainment",
+                                Labels::one("job", i as i64),
+                                state.slo_attainment(),
+                            );
+                            rec.gauge(
+                                "fleet.job_mean_latency_s",
+                                Labels::one("job", i as i64),
+                                state.mean_latency_s(),
+                            );
+                        }
+                        rt.sim.iters.push(it);
+                        true
+                    }
+                }
+            };
+            if stepped {
+                let rt = self.runtimes[i].as_ref().expect("still Some");
+                active_this_tick += rt.cluster.n_devices() as u64;
+            }
+        }
+        self.active_device_ticks += active_this_tick;
+        if self.rec.enabled() {
+            self.rec.gauge(
+                "fleet.utilization",
+                Labels::None,
+                active_this_tick as f64 / self.cluster.n_devices().max(1) as f64,
+            );
+        }
+
+        if self.cfg.rebalance_interval > 0
+            && tick > 0
+            && tick % self.cfg.rebalance_interval == 0
+        {
+            self.rebalance()?;
+        }
+
+        self.rec.iteration_end();
+        self.tick += 1;
+        Ok(())
+    }
+
+    /// Consume the fleet into its report (finalizing still-running
+    /// tenants' policy counters).
+    pub fn into_report(mut self) -> FleetReport {
+        let mut jobs = Vec::with_capacity(self.cfg.jobs.len());
+        for (i, spec) in self.cfg.jobs.iter().enumerate() {
+            let job = match self.runtimes[i].as_mut() {
+                None => JobReport {
+                    name: spec.name.clone(),
+                    kind: spec.kind,
+                    policy: spec.policy.clone(),
+                    admitted_tick: None,
+                    completed_tick: None,
+                    lease_nodes: 0,
+                    iterations: 0,
+                    busy_s: 0.0,
+                    parked_ticks: 0,
+                    idle_ticks: 0,
+                    tokens_processed: 0,
+                    sim: SimReport::default(),
+                    requests_arrived: 0,
+                    requests_completed: 0,
+                    queue_depth_end: 0,
+                    slo_attainment: 1.0,
+                    mean_latency_s: 0.0,
+                    max_latency_s: 0.0,
+                },
+                Some(rt) => {
+                    if rt.completed_tick.is_none() {
+                        rt.finalize_counters();
+                    }
+                    let (arrived, completed, depth, slo, mean_l, max_l) = match &rt.infer {
+                        Some(s) => (
+                            s.requests_arrived,
+                            s.requests_completed,
+                            s.queue_depth(),
+                            s.slo_attainment(),
+                            s.mean_latency_s(),
+                            s.latency_max_s,
+                        ),
+                        None => (0, 0, 0, 1.0, 0.0, 0.0),
+                    };
+                    JobReport {
+                        name: spec.name.clone(),
+                        kind: spec.kind,
+                        policy: rt.sim.policy.clone(),
+                        admitted_tick: Some(rt.admitted_tick),
+                        completed_tick: rt.completed_tick,
+                        lease_nodes: rt.lease.len(),
+                        iterations: rt.sim.iters.len(),
+                        busy_s: rt.busy_s,
+                        parked_ticks: rt.parked_ticks,
+                        idle_ticks: rt.idle_ticks,
+                        tokens_processed: rt.tokens_processed,
+                        sim: rt.sim.clone(),
+                        requests_arrived: arrived,
+                        requests_completed: completed,
+                        queue_depth_end: depth,
+                        slo_attainment: slo,
+                        mean_latency_s: mean_l,
+                        max_latency_s: max_l,
+                    }
+                }
+            };
+            jobs.push(job);
+        }
+        FleetReport {
+            ticks: self.tick,
+            tick_s: self.cfg.tick_s,
+            n_devices: self.cluster.n_devices(),
+            counters: self.counters,
+            active_device_ticks: self.active_device_ticks,
+            jobs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    fn train_spec(name: &str, nodes: usize, iters: usize, start: usize) -> String {
+        format!("train name={name} nodes={nodes} model=s tokens=8192 iters={iters} start={start} seed=11 policy=deepspeed")
+    }
+
+    fn cfg_of(jobs: Vec<String>, ticks: usize) -> FleetConfig {
+        FleetConfig {
+            ticks,
+            tick_s: 0.25,
+            max_concurrent: 4,
+            admission: AdmissionPolicy::Fifo,
+            rebalance_interval: 4,
+            migration_budget: 1,
+            jobs: jobs.iter().map(|s| JobSpec::parse(s).unwrap()).collect(),
+        }
+    }
+
+    fn run_fleet(cfg: &FleetConfig, cluster: &ClusterSpec) -> FleetReport {
+        Fleet::run(
+            cfg,
+            cluster,
+            &ProphetOptions::default(),
+            &FaultTimeline::empty(),
+            obs::noop_arc(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn job_spec_parses_and_defaults() {
+        let j = JobSpec::parse("train name=a nodes=2 model=m iters=8 seed=3").unwrap();
+        assert_eq!(j.kind, JobKind::Train);
+        assert_eq!((j.nodes, j.min_nodes, j.max_nodes), (2, 2, 2));
+        assert_eq!(j.policy, "pro-prophet");
+        let j = JobSpec::parse(
+            "infer name=s nodes=1 max_nodes=3 rate=2.5 burst_on=3 burst_off=5 burst_factor=4",
+        )
+        .unwrap();
+        assert_eq!(j.kind, JobKind::Infer);
+        assert_eq!((j.min_nodes, j.max_nodes), (1, 3));
+        assert!(matches!(j.arrival_process(), ArrivalProcess::OnOffBursty { .. }));
+        let plain = JobSpec::parse("infer name=p nodes=1 rate=1.5").unwrap();
+        assert!(matches!(plain.arrival_process(), ArrivalProcess::Poisson { rate } if rate == 1.5));
+        assert!(JobSpec::parse("sleep name=z").is_err());
+        assert!(JobSpec::parse("train name=z warp=9").is_err());
+        assert!(JobSpec::parse("train name=z nodes=x").is_err());
+    }
+
+    #[test]
+    fn fleet_config_from_table_and_validation() {
+        let t = toml::parse(
+            "[fleet]\nticks = 10\njobs = [\"train name=a nodes=1 iters=4\", \"infer name=b nodes=1 rate=1\"]",
+        )
+        .unwrap();
+        let cluster = ClusterSpec::hpwnv(2);
+        let cfg = FleetConfig::from_table(&t, &cluster).unwrap().unwrap();
+        assert_eq!(cfg.ticks, 10);
+        assert_eq!(cfg.jobs.len(), 2);
+        assert_eq!(cfg.admission, AdmissionPolicy::Fifo);
+        // No [fleet] table at all -> None, not an error.
+        let none = FleetConfig::from_table(&toml::parse("iterations = 5").unwrap(), &cluster);
+        assert!(none.unwrap().is_none());
+        // Oversized ask, duplicate names, unknown admission are rejected.
+        let bad = toml::parse("[fleet]\njobs = [\"train name=a nodes=9 iters=1\"]").unwrap();
+        assert!(FleetConfig::from_table(&bad, &cluster).is_err());
+        let dup = toml::parse(
+            "[fleet]\njobs = [\"train name=a nodes=1 iters=1\", \"train name=a nodes=1 iters=1\"]",
+        )
+        .unwrap();
+        assert!(FleetConfig::from_table(&dup, &cluster)
+            .unwrap_err()
+            .contains("duplicate"));
+        let badp = toml::parse(
+            "[fleet]\nadmission = \"bribery\"\njobs = [\"train name=a nodes=1 iters=1\"]",
+        )
+        .unwrap();
+        assert!(FleetConfig::from_table(&badp, &cluster).is_err());
+    }
+
+    #[test]
+    fn single_train_job_runs_to_completion() {
+        let cluster = ClusterSpec::hpwnv(2);
+        let cfg = cfg_of(vec![train_spec("solo", 2, 4, 0)], 8);
+        let r = run_fleet(&cfg, &cluster);
+        let j = r.job("solo").unwrap();
+        assert_eq!(j.admitted_tick, Some(0));
+        assert_eq!(j.completed_tick, Some(3), "4 iterations, one per tick");
+        assert_eq!(j.iterations, 4);
+        assert!(j.busy_s > 0.0);
+        assert_eq!(j.sim.iters.len(), 4);
+        assert_eq!(r.counters.admitted, 1);
+        assert_eq!(r.counters.lease_grants, 1);
+        assert_eq!(r.counters.lease_releases, 1);
+        // 2 nodes * 4 gpus * 4 active ticks.
+        assert_eq!(r.active_device_ticks, 32);
+        assert!(r.utilization() > 0.0 && r.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn admission_defers_until_nodes_free() {
+        // Two 2-node jobs on a 2-node cluster: the second waits for the
+        // first to finish, deferrals are counted, both complete.
+        let cluster = ClusterSpec::hpwnv(2);
+        let cfg = cfg_of(
+            vec![train_spec("first", 2, 3, 0), train_spec("second", 2, 3, 0)],
+            12,
+        );
+        let r = run_fleet(&cfg, &cluster);
+        let a = r.job("first").unwrap();
+        let b = r.job("second").unwrap();
+        assert_eq!(a.admitted_tick, Some(0));
+        assert_eq!(a.completed_tick, Some(2));
+        assert_eq!(
+            b.admitted_tick,
+            Some(3),
+            "second admits the tick after the lease frees"
+        );
+        assert_eq!(b.completed_tick, Some(5));
+        assert!(r.counters.deferred_admissions >= 3);
+        assert_eq!(r.counters.admitted, 2);
+    }
+
+    #[test]
+    fn max_concurrent_caps_admission() {
+        let cluster = ClusterSpec::hpwnv(2);
+        let mut cfg = cfg_of(
+            vec![train_spec("a", 1, 2, 0), train_spec("b", 1, 2, 0)],
+            8,
+        );
+        cfg.max_concurrent = 1;
+        let r = run_fleet(&cfg, &cluster);
+        let a = r.job("a").unwrap();
+        let b = r.job("b").unwrap();
+        assert_eq!(a.admitted_tick, Some(0));
+        assert!(b.admitted_tick.unwrap() > a.completed_tick.unwrap());
+    }
+
+    #[test]
+    fn inference_job_serves_and_reports_slo() {
+        let cluster = ClusterSpec::hpwnv(1);
+        let cfg = cfg_of(
+            vec!["infer name=serve nodes=1 rate=3 tokens_per_req=64 batch_tokens=1024 slo_ms=2000 seed=5 policy=deepspeed".into()],
+            16,
+        );
+        let r = run_fleet(&cfg, &cluster);
+        let j = r.job("serve").unwrap();
+        assert_eq!(j.kind, JobKind::Infer);
+        assert!(j.requests_arrived > 0);
+        assert!(j.requests_completed > 0);
+        assert!(j.requests_completed <= j.requests_arrived);
+        assert!(j.slo_attainment >= 0.0 && j.slo_attainment <= 1.0);
+        assert!(j.mean_latency_s >= 0.0);
+        assert!(j.max_latency_s >= j.mean_latency_s);
+        assert!(j.iterations > 0);
+        assert_eq!(j.completed_tick, None, "inference tenants run forever");
+    }
+
+    #[test]
+    fn rebalancer_grows_a_pressured_tenant() {
+        // A bursty tenant allowed up to 2 nodes on a 2-node cluster with
+        // heavy traffic: pressure builds, the rebalancer grants the free
+        // node, churn counters record it.
+        let cluster = ClusterSpec::hpwnv(2);
+        let mut cfg = cfg_of(
+            vec!["infer name=hot nodes=1 max_nodes=2 rate=60 tokens_per_req=256 batch_tokens=512 slo_ms=100 seed=5 policy=deepspeed".into()],
+            12,
+        );
+        cfg.rebalance_interval = 2;
+        let r = run_fleet(&cfg, &cluster);
+        let j = r.job("hot").unwrap();
+        assert_eq!(j.lease_nodes, 2, "demand must grow the lease");
+        assert!(r.counters.lease_migrations >= 1);
+        assert!(r.counters.rebalances >= 1);
+    }
+
+    #[test]
+    fn same_seed_reports_are_byte_identical() {
+        let cluster = ClusterSpec::hpwnv(2);
+        let cfg = cfg_of(
+            vec![
+                train_spec("t", 1, 5, 0),
+                "infer name=s nodes=1 rate=4 burst_on=3 burst_off=3 burst_factor=3 seed=9 policy=deepspeed"
+                    .into(),
+            ],
+            10,
+        );
+        let a = run_fleet(&cfg, &cluster).to_json().to_string();
+        let b = run_fleet(&cfg, &cluster).to_json().to_string();
+        assert_eq!(a, b);
+        assert!(a.contains(FLEET_SCHEMA));
+    }
+
+    #[test]
+    fn fleet_wide_fault_parks_and_recovers() {
+        // Down both devices-bearing nodes' GPUs for a window: the tenant
+        // parks (no crash), then resumes and completes after recovery.
+        let cluster = ClusterSpec::hpwnv(1);
+        let specs: Vec<String> = (0..4).map(|d| format!("down dev={d} start=2")).collect();
+        let mut all: Vec<String> = specs;
+        all.extend((0..4).map(|d| format!("recover dev={d} start=4")));
+        let faults = FaultTimeline::parse_specs(
+            &all.iter().map(String::as_str).collect::<Vec<_>>(),
+            4,
+        )
+        .unwrap();
+        let cfg = cfg_of(vec![train_spec("t", 1, 4, 0)], 10);
+        let r = Fleet::run(
+            &cfg,
+            &cluster,
+            &ProphetOptions::default(),
+            &faults,
+            obs::noop_arc(),
+        )
+        .unwrap();
+        let j = r.job("t").unwrap();
+        assert_eq!(j.parked_ticks, 2, "ticks 2 and 3 are all-down");
+        assert_eq!(j.iterations, 4, "the job still completes after recovery");
+        assert_eq!(j.completed_tick, Some(5), "2 parked ticks push completion from 3 to 5");
+        assert_eq!(r.counters.parked_ticks, 2);
+    }
+
+    #[test]
+    fn partial_fault_degrades_only_the_leasing_tenant() {
+        // Two 1-node tenants; device 5 (node 1) slowed 8x for a window.
+        // Only the tenant leasing node 1 sees DES-priced (distorted)
+        // iterations there; the node-0 tenant is untouched bit-for-bit.
+        let cluster = ClusterSpec::hpwnv(2);
+        let faults = FaultTimeline::parse_specs(
+            &["transient dev=5 factor=8 start=1 dur=2"],
+            8,
+        )
+        .unwrap();
+        let cfg = cfg_of(
+            vec![train_spec("a", 1, 4, 0), train_spec("b", 1, 4, 0)],
+            8,
+        );
+        let faulted = Fleet::run(
+            &cfg,
+            &cluster,
+            &ProphetOptions::default(),
+            &faults,
+            obs::noop_arc(),
+        )
+        .unwrap();
+        let clean = run_fleet(&cfg, &cluster);
+        // Tenant a (nodes granted lowest-first -> node 0) is unaffected.
+        let (fa, ca) = (faulted.job("a").unwrap(), clean.job("a").unwrap());
+        for (x, y) in fa.sim.iters.iter().zip(&ca.sim.iters) {
+            assert_eq!(x.time.to_bits(), y.time.to_bits());
+        }
+        // Tenant b leases node 1 (global devs 4..8); local dev 1 slows.
+        let (fb, cb) = (faulted.job("b").unwrap(), clean.job("b").unwrap());
+        assert!(fb.sim.iters[1].time > cb.sim.iters[1].time);
+        assert_eq!(fb.sim.iters[1].straggler, 1, "global dev 5 is local dev 1");
+        assert_eq!(
+            fb.sim.iters[0].time.to_bits(),
+            cb.sim.iters[0].time.to_bits(),
+            "outside the window tenant b is clean too"
+        );
+    }
+}

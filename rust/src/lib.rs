@@ -54,6 +54,16 @@
 //!   balancer session reacts with health-driven replans, device-masked
 //!   searches, replica failover, and a last-known-good fallback, and
 //!   `sim::checkpoint` makes interrupted runs resume bit-identically.
+//! * [`fleet`] — multi-job cluster simulation on top of [`balancer`]:
+//!   a coordinator leasing disjoint whole-node slices of one
+//!   `ClusterSpec` to bounded concurrent tenants (training jobs running
+//!   captured traces, inference jobs driven by seeded Poisson/bursty
+//!   arrival processes with per-request SLO accounting), FIFO /
+//!   smallest-first admission with counted backpressure, demand-driven
+//!   lease rebalancing under a migration budget, and fleet-wide
+//!   [`faults`] timelines sliced per lease — every tenant priced by the
+//!   same DES step as the single-job simulator (a one-job fleet holding
+//!   the whole cluster reproduces `simulate_policy` bit-for-bit).
 //! * [`obs`] — the telemetry layer the statistics flow through: a
 //!   dependency-free `Recorder` trait (counters / gauges / RAII spans)
 //!   with a zero-cost no-op default, the `TelemetryHub` aggregating
@@ -74,6 +84,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod faults;
+pub mod fleet;
 pub mod metrics;
 pub mod moe;
 pub mod obs;

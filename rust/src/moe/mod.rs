@@ -14,7 +14,7 @@ pub mod placement;
 pub mod routing;
 
 pub use memory::MemoryModel;
-pub use placement::Placement;
+pub use placement::{AllDevicesDown, Placement};
 pub use routing::RoutingState;
 
 /// Even integer split: the share of `total` that part `idx` of `parts`

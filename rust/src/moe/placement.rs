@@ -7,6 +7,22 @@
 //! states, which stay at home (the ZeRO-style split the paper exploits).
 
 use crate::util::bitset::BitSet;
+use std::fmt;
+
+/// Typed error of [`Placement::fail_over`]: the health mask marks every
+/// device down, so there is no live device to fail over to.  Callers must
+/// treat this as "nothing can run" (the simulator refuses the iteration,
+/// the fleet parks the job) — it is NOT a repairable placement state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AllDevicesDown;
+
+impl fmt::Display for AllDevicesDown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "every device is down: no live device to fail experts over to")
+    }
+}
+
+impl std::error::Error for AllDevicesDown {}
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Placement {
@@ -152,11 +168,16 @@ impl Placement {
     /// down device is dropped, and an expert stranded with no replicas
     /// gets one on the first live device scanning cyclically from its
     /// home (deterministic, so resumed runs fail over identically).
-    /// With every device down there is nowhere to go — the stranded
-    /// expert keeps an empty set and `validate_with_down` reports it
-    /// (callers reject all-down fault views before pricing).
-    pub fn fail_over(&mut self, down: &[bool]) {
+    /// With every device down there is nowhere to go — the placement is
+    /// left untouched and the typed [`AllDevicesDown`] error is returned
+    /// so callers surface a diagnostic instead of shipping an empty
+    /// placement (the simulator refuses all-down iterations up front;
+    /// the fleet parks the affected job for the tick).
+    pub fn fail_over(&mut self, down: &[bool]) -> Result<(), AllDevicesDown> {
         let d = self.n_devices;
+        if (0..d).all(|dev| down.get(dev).copied().unwrap_or(false)) {
+            return Err(AllDevicesDown);
+        }
         for e in 0..self.n_experts() {
             for dev in 0..d {
                 if down.get(dev).copied().unwrap_or(false) {
@@ -174,6 +195,7 @@ impl Placement {
                 }
             }
         }
+        Ok(())
     }
 }
 
@@ -231,7 +253,7 @@ mod tests {
         p.replicate_to_all(0);
         p.replicate_to_all(5);
         let down = [false, true, false, false];
-        p.fail_over(&down);
+        p.fail_over(&down).unwrap();
         assert!(p.validate_with_down(&down).is_ok());
         // Replicated experts just lose the down member.
         assert_eq!(p.replicas(0).iter().collect::<Vec<_>>(), vec![0, 2, 3]);
@@ -249,14 +271,27 @@ mod tests {
     fn fail_over_wraps_past_trailing_down_devices() {
         let mut p = Placement::identity(4, 4);
         let down = [false, false, true, true];
-        p.fail_over(&down);
+        p.fail_over(&down).unwrap();
         assert!(p.validate_with_down(&down).is_ok());
         assert_eq!(p.replicas(2).iter().collect::<Vec<_>>(), vec![0]);
         assert_eq!(p.replicas(3).iter().collect::<Vec<_>>(), vec![0]);
-        // All-down leaves stranded experts empty and detectable.
+    }
+
+    #[test]
+    fn fail_over_all_down_is_a_typed_error() {
+        // Regression (PR 8): all devices down used to strand experts
+        // with silently emptied replica sets; now it is a typed error
+        // and the placement is left untouched.
         let mut q = Placement::identity(2, 2);
-        q.fail_over(&[true, true]);
-        assert!(q.validate_with_down(&[true, true]).is_err());
+        q.replicate_to_all(0);
+        let before = q.clone();
+        assert_eq!(q.fail_over(&[true, true]), Err(AllDevicesDown));
+        assert_eq!(q, before, "a refused fail_over must not mutate");
+        assert!(AllDevicesDown.to_string().contains("every device is down"));
+        // A short mask only covers a prefix; devices past its end are up,
+        // so this is NOT the all-down case.
+        assert!(q.fail_over(&[true]).is_ok());
+        assert!(q.validate_with_down(&[true, false]).is_ok());
     }
 
     #[test]

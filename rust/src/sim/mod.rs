@@ -306,6 +306,39 @@ pub struct SimOptions {
     pub stop_after: Option<usize>,
 }
 
+impl SimOptions {
+    /// Borrowed view for [`simulate_policy_opts`] — lets one options
+    /// value drive many runs (the fleet loop, the CLI's speedup
+    /// baseline) without cloning the fault timeline per call.
+    pub fn as_ref(&self) -> SimOptionsRef<'_> {
+        SimOptionsRef {
+            faults: &self.faults,
+            checkpoint: self.checkpoint.as_ref(),
+            stop_after: self.stop_after,
+        }
+    }
+}
+
+/// Borrowing form of [`SimOptions`]: same knobs, nothing owned.  `Copy`,
+/// so call sites hand it around freely; build one via
+/// [`SimOptions::as_ref`] or field-by-field.
+#[derive(Clone, Copy, Debug)]
+pub struct SimOptionsRef<'a> {
+    /// Fault events injected into the run.
+    pub faults: &'a FaultTimeline,
+    /// Periodic snapshots + resume.
+    pub checkpoint: Option<&'a CheckpointConfig>,
+    /// Stop after this many completed iterations.
+    pub stop_after: Option<usize>,
+}
+
+impl<'a> SimOptionsRef<'a> {
+    /// Faults only — the common fleet/CLI case.
+    pub fn faults_only(faults: &'a FaultTimeline) -> Self {
+        SimOptionsRef { faults, checkpoint: None, stop_after: None }
+    }
+}
+
 /// Per-layer decide + price outcome (the parallel phase's unit of work).
 struct LayerOutcome {
     costs: BlockCosts,
@@ -509,7 +542,7 @@ pub fn simulate_policy_with(
 /// fault-free run.  Errs when every device is down: no survivor can run
 /// the model, and pretending otherwise would report a zero-cost
 /// iteration.
-fn fault_view_for(
+pub(crate) fn fault_view_for(
     session: &mut BalancerSession,
     faults: &FaultTimeline,
     cluster: &ClusterSpec,
@@ -611,7 +644,114 @@ pub fn simulate_policy_faulted(
     rec: std::sync::Arc<dyn Recorder>,
     opts: &SimOptions,
 ) -> Result<SimReport, String> {
-    let faults = &opts.faults;
+    simulate_policy_opts(model, cluster, trace, policy, rec, opts.as_ref())
+}
+
+/// Price one iteration — under an optional fault view — and feed the
+/// actual gating results back through the session.  This is the shared
+/// single-iteration step of [`simulate_policy_opts`] and the fleet loop
+/// ([`crate::fleet`]): extracting it (rather than duplicating it) is
+/// what makes a degenerate one-job fleet bit-identical to
+/// [`simulate_policy`] (the degenerate-fleet oracle in
+/// `rust/tests/integration_fleet.rs`).
+pub(crate) fn price_and_observe(
+    eng: &Engine,
+    heterogeneous: bool,
+    session: &mut BalancerSession,
+    view: &Option<FaultView>,
+    layers: &[LoadMatrix],
+    rec: &dyn Recorder,
+) -> IterationResult {
+    let n_layers = layers.len();
+    let fault_active = view.is_some();
+    let (priced, _dag) = match view {
+        Some(v) => {
+            // Price on a temporary fault-effective engine: per-device
+            // compute costs scale by the composed slowdown vector, a
+            // down device (slowdown 0) contributes no work and the
+            // failover replicas carry its load.
+            let eff_cluster = v.effective_cluster(eng.cluster);
+            let eff_pm = v.effective_perf_model(eng.pm);
+            let eff_eng = Engine::new(&eff_cluster, &eff_pm);
+            price_iteration(&eff_eng, &eff_pm, session, layers, rec)
+        }
+        None => price_iteration(eng, eng.pm, session, layers, rec),
+    };
+
+    // Phase 2 (sequential): the session's observe→score→drift→
+    // invalidate loop over the actual gating results.
+    let fb = session.observe_iteration(layers);
+
+    let (time, breakdown, per_block_time) = if heterogeneous
+        || fault_active
+        || priced.kind == ScheduleKind::DagRelaxed
+    {
+        // The barrier model cannot see per-device slowdowns —
+        // static (heterogeneous cluster) or injected (active
+        // fault) — and a DagRelaxed decision asks for DES pricing
+        // unconditionally; report the device-level critical path.
+        let mut pb = priced.des.per_block_exposed.clone();
+        pb.resize(n_layers, 0.0);
+        (priced.des.makespan, priced.des.exposed.clone(), pb)
+    } else {
+        // Frozen barrier pricing: per-block exposed time assigns each
+        // stage to the block of its first op.
+        let mut per_block = vec![0.0; n_layers];
+        for stage in &priced.schedule.stages {
+            if let Some(op) = stage.comp.first().or(stage.comm.first()) {
+                let b = op.op.block().min(n_layers - 1);
+                per_block[b] += stage.time();
+            }
+        }
+        (
+            priced.schedule.total_time(),
+            priced.schedule.exposed_breakdown(),
+            per_block,
+        )
+    };
+
+    if rec.enabled() {
+        rec.gauge("sim.iter_time_s", Labels::None, time);
+        rec.gauge("sim.barrier_time_s", Labels::None, priced.schedule.total_time());
+        rec.gauge("sim.balance_before", Labels::None, priced.bal_before);
+        rec.gauge("sim.balance_after", Labels::None, priced.bal_after);
+        rec.gauge("des.straggler_device", Labels::None, priced.des.straggler as f64);
+        for (d, stats) in priced.des.devices.iter().enumerate() {
+            let dev = Labels::one("dev", d as i64);
+            rec.gauge("des.device_busy_comp_s", dev, stats.busy_comp);
+            rec.gauge("des.device_busy_comm_s", dev, stats.busy_comm);
+            rec.gauge("des.device_exposed_comm_s", dev, stats.exposed_comm);
+            rec.gauge("des.device_idle_s", dev, stats.idle);
+        }
+    }
+
+    IterationResult {
+        time,
+        barrier_time: priced.schedule.total_time(),
+        breakdown,
+        per_block_time,
+        balance_before: priced.bal_before,
+        balance_after: priced.bal_after,
+        trans_copies: priced.trans_copies,
+        forecast_error: fb.mean_forecast_error(),
+        des_time: priced.des.makespan,
+        devices: priced.des.devices,
+        straggler: priced.des.straggler,
+    }
+}
+
+/// [`simulate_policy_faulted`] with borrowed options ([`SimOptionsRef`]):
+/// the core entry point.  One owned [`SimOptions`] (or a bare
+/// [`FaultTimeline`]) can drive any number of runs without cloning.
+pub fn simulate_policy_opts(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    trace: &Trace,
+    policy: Box<dyn BalancingPolicy>,
+    rec: std::sync::Arc<dyn Recorder>,
+    opts: SimOptionsRef<'_>,
+) -> Result<SimReport, String> {
+    let faults = opts.faults;
     if !faults.is_empty() && faults.n_devices() != cluster.n_devices() {
         return Err(format!(
             "fault timeline is for {} devices, cluster has {}",
@@ -632,7 +772,7 @@ pub fn simulate_policy_faulted(
     // Resume: restore the completed iterations' results verbatim, then
     // replay their decide/observe sequence to rebuild the session.
     let mut start = 0usize;
-    if let Some(ck) = &opts.checkpoint {
+    if let Some(ck) = opts.checkpoint {
         if ck.resume {
             let snap = checkpoint::Checkpoint::load(&ck.dir)?;
             snap.check_compatible(&report.policy, trace, &faults.specs())?;
@@ -651,88 +791,16 @@ pub fn simulate_policy_faulted(
         let sp_iter = Span::enter(&*rec, "sim.iteration", Labels::None);
 
         let view = fault_view_for(&mut session, faults, cluster, iter_index, Some(&*rec))?;
-        let fault_active = view.is_some();
-        let (priced, _dag) = match &view {
-            Some(v) => {
-                // Price on a temporary fault-effective engine: per-device
-                // compute costs scale by the composed slowdown vector, a
-                // down device (slowdown 0) contributes no work and the
-                // failover replicas carry its load.
-                let eff_cluster = v.effective_cluster(cluster);
-                let eff_pm = v.effective_perf_model(&pm);
-                let eff_eng = Engine::new(&eff_cluster, &eff_pm);
-                price_iteration(&eff_eng, &eff_pm, &session, layers, &*rec)
-            }
-            None => price_iteration(&eng, &pm, &session, layers, &*rec),
-        };
-
-        // Phase 2 (sequential): the session's observe→score→drift→
-        // invalidate loop over the actual gating results.
-        let fb = session.observe_iteration(layers);
-
-        let (time, breakdown, per_block_time) = if heterogeneous
-            || fault_active
-            || priced.kind == ScheduleKind::DagRelaxed
-        {
-            // The barrier model cannot see per-device slowdowns —
-            // static (heterogeneous cluster) or injected (active
-            // fault) — and a DagRelaxed decision asks for DES pricing
-            // unconditionally; report the device-level critical path.
-            let mut pb = priced.des.per_block_exposed.clone();
-            pb.resize(n_layers, 0.0);
-            (priced.des.makespan, priced.des.exposed.clone(), pb)
-        } else {
-            // Frozen barrier pricing: per-block exposed time assigns each
-            // stage to the block of its first op.
-            let mut per_block = vec![0.0; n_layers];
-            for stage in &priced.schedule.stages {
-                if let Some(op) = stage.comp.first().or(stage.comm.first()) {
-                    let b = op.op.block().min(n_layers - 1);
-                    per_block[b] += stage.time();
-                }
-            }
-            (
-                priced.schedule.total_time(),
-                priced.schedule.exposed_breakdown(),
-                per_block,
-            )
-        };
-
-        if rec.enabled() {
-            rec.gauge("sim.iter_time_s", Labels::None, time);
-            rec.gauge("sim.barrier_time_s", Labels::None, priced.schedule.total_time());
-            rec.gauge("sim.balance_before", Labels::None, priced.bal_before);
-            rec.gauge("sim.balance_after", Labels::None, priced.bal_after);
-            rec.gauge("des.straggler_device", Labels::None, priced.des.straggler as f64);
-            for (d, stats) in priced.des.devices.iter().enumerate() {
-                let dev = Labels::one("dev", d as i64);
-                rec.gauge("des.device_busy_comp_s", dev, stats.busy_comp);
-                rec.gauge("des.device_busy_comm_s", dev, stats.busy_comm);
-                rec.gauge("des.device_exposed_comm_s", dev, stats.exposed_comm);
-                rec.gauge("des.device_idle_s", dev, stats.idle);
-            }
-        }
-
-        report.iters.push(IterationResult {
-            time,
-            barrier_time: priced.schedule.total_time(),
-            breakdown,
-            per_block_time,
-            balance_before: priced.bal_before,
-            balance_after: priced.bal_after,
-            trans_copies: priced.trans_copies,
-            forecast_error: fb.mean_forecast_error(),
-            des_time: priced.des.makespan,
-            devices: priced.des.devices,
-            straggler: priced.des.straggler,
-        });
+        report
+            .iters
+            .push(price_and_observe(&eng, heterogeneous, &mut session, &view, layers, &*rec));
 
         // Snapshot on the period boundary and right before a graceful
         // stop; a finished run has nothing to resume, so the last
         // iteration is never snapshotted.
         let done = iter_index + 1;
         let stopping = opts.stop_after.is_some_and(|s| done >= s) && done < trace.len();
-        if let Some(ck) = &opts.checkpoint {
+        if let Some(ck) = opts.checkpoint {
             if done < trace.len() && (done % ck.every.max(1) == 0 || stopping) {
                 checkpoint::Checkpoint::of(&report.policy, trace, faults.specs(), &report.iters)
                     .save(&ck.dir)?;

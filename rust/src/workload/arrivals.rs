@@ -1,0 +1,255 @@
+//! Seeded arrival processes for inference traffic (fleet tenants).
+//!
+//! Two request-arrival shapes drive [`crate::fleet`]'s `InferenceJob`s:
+//!
+//! * [`ArrivalProcess::Poisson`] — a memoryless stream at a constant
+//!   mean rate (requests per fleet tick), the classic open-loop serving
+//!   load.
+//! * [`ArrivalProcess::OnOffBursty`] — a deterministic ON/OFF phase
+//!   cycle modulating a Poisson stream: `burst_factor`× the base rate
+//!   while ON, the bare base rate while OFF.  This is the bursty
+//!   diurnal/batch-upload traffic shape that makes lease rebalancing
+//!   worth having — sustained ON phases push queue depth (and the
+//!   replica-demand signal) up, OFF phases let it drain.
+//!
+//! Determinism contract: an [`ArrivalGen`] is a pure function of
+//! `(process, seed)` — same seed, same per-tick arrival counts, on every
+//! machine and every run (the repo's portable xoshiro PRNG underneath).
+//! The phase clock is the generator's own tick counter, so interleaving
+//! with other jobs cannot shift a job's burst windows.
+
+use crate::util::rng::Rng;
+
+/// The arrival-count distribution of one job's request stream.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate` requests per tick.
+    Poisson { rate: f64 },
+    /// Poisson arrivals whose rate cycles deterministically between
+    /// `rate * burst_factor` (for `on_ticks`) and `rate` (for
+    /// `off_ticks`), starting in the ON phase.
+    OnOffBursty { rate: f64, on_ticks: usize, off_ticks: usize, burst_factor: f64 },
+}
+
+impl ArrivalProcess {
+    /// Mean rate at phase-clock position `tick`.
+    pub fn rate_at(&self, tick: usize) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::OnOffBursty { rate, on_ticks, off_ticks, burst_factor } => {
+                let period = (on_ticks + off_ticks).max(1);
+                if tick % period < on_ticks {
+                    rate * burst_factor
+                } else {
+                    rate
+                }
+            }
+        }
+    }
+
+    /// Whether `tick` falls in an ON window (always true for Poisson —
+    /// a constant-rate stream is "always on").
+    pub fn is_on(&self, tick: usize) -> bool {
+        match *self {
+            ArrivalProcess::Poisson { .. } => true,
+            ArrivalProcess::OnOffBursty { on_ticks, off_ticks, .. } => {
+                tick % (on_ticks + off_ticks).max(1) < on_ticks
+            }
+        }
+    }
+
+    /// Long-run mean requests per tick (admission sizing, reports).
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::OnOffBursty { rate, on_ticks, off_ticks, burst_factor } => {
+                let period = (on_ticks + off_ticks).max(1) as f64;
+                rate * (on_ticks as f64 * burst_factor + off_ticks as f64) / period
+            }
+        }
+    }
+
+    /// Validate the knobs (rates finite and >= 0, a non-degenerate
+    /// phase cycle, burst_factor >= 1 so ON means MORE traffic).
+    pub fn validate(&self) -> Result<(), String> {
+        let rate = match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::OnOffBursty { rate, on_ticks, off_ticks, burst_factor } => {
+                if on_ticks == 0 && off_ticks == 0 {
+                    return Err("on/off cycle needs at least one tick".into());
+                }
+                if !(burst_factor.is_finite() && burst_factor >= 1.0) {
+                    return Err(format!("burst factor must be >= 1, got {burst_factor}"));
+                }
+                rate
+            }
+        };
+        if !(rate.is_finite() && rate >= 0.0) {
+            return Err(format!("arrival rate must be finite and >= 0, got {rate}"));
+        }
+        Ok(())
+    }
+}
+
+/// Stateful, seeded arrival generator: one [`ArrivalProcess`] plus its
+/// own phase clock and PRNG stream.
+#[derive(Clone, Debug)]
+pub struct ArrivalGen {
+    process: ArrivalProcess,
+    rng: Rng,
+    tick: usize,
+}
+
+impl ArrivalGen {
+    pub fn new(process: ArrivalProcess, seed: u64) -> Self {
+        ArrivalGen { process, rng: Rng::new(seed), tick: 0 }
+    }
+
+    pub fn process(&self) -> &ArrivalProcess {
+        &self.process
+    }
+
+    /// Ticks generated so far (the phase-clock position).
+    pub fn tick(&self) -> usize {
+        self.tick
+    }
+
+    /// Number of requests arriving in the next tick.
+    pub fn next_tick(&mut self) -> u64 {
+        let lambda = self.process.rate_at(self.tick);
+        self.tick += 1;
+        poisson(&mut self.rng, lambda)
+    }
+}
+
+/// One Poisson draw.  Knuth's product-of-uniforms for small λ; for large
+/// λ (where that loop degrades and floating-point underflows), the
+/// normal approximation N(λ, λ) clamped at zero — both deterministic
+/// per RNG state.
+fn poisson(rng: &mut Rng, lambda: f64) -> u64 {
+    if !(lambda > 0.0) {
+        return 0;
+    }
+    if lambda < 30.0 {
+        let limit = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.f64();
+            if p <= limit {
+                return k;
+            }
+            k += 1;
+        }
+    }
+    let draw = lambda + lambda.sqrt() * rng.normal();
+    if draw <= 0.0 {
+        0
+    } else {
+        draw.round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_deterministic_per_seed() {
+        let mut a = ArrivalGen::new(ArrivalProcess::Poisson { rate: 3.5 }, 7);
+        let mut b = ArrivalGen::new(ArrivalProcess::Poisson { rate: 3.5 }, 7);
+        let xs: Vec<u64> = (0..64).map(|_| a.next_tick()).collect();
+        let ys: Vec<u64> = (0..64).map(|_| b.next_tick()).collect();
+        assert_eq!(xs, ys);
+        let mut c = ArrivalGen::new(ArrivalProcess::Poisson { rate: 3.5 }, 8);
+        let zs: Vec<u64> = (0..64).map(|_| c.next_tick()).collect();
+        assert_ne!(xs, zs, "different seeds should differ somewhere");
+    }
+
+    #[test]
+    fn poisson_mean_tracks_rate() {
+        for rate in [0.5, 4.0, 80.0] {
+            let mut g = ArrivalGen::new(ArrivalProcess::Poisson { rate }, 42);
+            let n = 4000;
+            let total: u64 = (0..n).map(|_| g.next_tick()).collect::<Vec<_>>().iter().sum();
+            let mean = total as f64 / n as f64;
+            // Loose 3σ-ish bound: σ/√n = sqrt(rate/n).
+            let tol = 4.0 * (rate / n as f64).sqrt() + 0.02;
+            assert!(
+                (mean - rate).abs() < tol,
+                "rate {rate}: sample mean {mean} off by more than {tol}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_rate_never_arrives() {
+        let mut g = ArrivalGen::new(ArrivalProcess::Poisson { rate: 0.0 }, 1);
+        assert!((0..32).all(|_| g.next_tick() == 0));
+    }
+
+    #[test]
+    fn bursty_phases_cycle_deterministically() {
+        let p = ArrivalProcess::OnOffBursty {
+            rate: 2.0,
+            on_ticks: 3,
+            off_ticks: 5,
+            burst_factor: 4.0,
+        };
+        assert!(p.validate().is_ok());
+        for t in 0..16 {
+            assert_eq!(p.is_on(t), t % 8 < 3, "tick {t}");
+            assert_eq!(p.rate_at(t), if t % 8 < 3 { 8.0 } else { 2.0 });
+        }
+        let period_mean = (3.0 * 8.0 + 5.0 * 2.0) / 8.0;
+        assert!((p.mean_rate() - period_mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bursty_on_phase_actually_bursts() {
+        let p = ArrivalProcess::OnOffBursty {
+            rate: 2.0,
+            on_ticks: 4,
+            off_ticks: 4,
+            burst_factor: 6.0,
+        };
+        let mut g = ArrivalGen::new(p, 9);
+        let (mut on_total, mut on_n, mut off_total, mut off_n) = (0u64, 0u64, 0u64, 0u64);
+        for t in 0..4096 {
+            let x = g.next_tick();
+            if t % 8 < 4 {
+                on_total += x;
+                on_n += 1;
+            } else {
+                off_total += x;
+                off_n += 1;
+            }
+        }
+        let on_mean = on_total as f64 / on_n as f64;
+        let off_mean = off_total as f64 / off_n as f64;
+        assert!(
+            on_mean > 3.0 * off_mean,
+            "ON mean {on_mean} should dwarf OFF mean {off_mean}"
+        );
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(ArrivalProcess::Poisson { rate: -1.0 }.validate().is_err());
+        assert!(ArrivalProcess::Poisson { rate: f64::NAN }.validate().is_err());
+        let bad_cycle = ArrivalProcess::OnOffBursty {
+            rate: 1.0,
+            on_ticks: 0,
+            off_ticks: 0,
+            burst_factor: 2.0,
+        };
+        assert!(bad_cycle.validate().is_err());
+        let weak_burst = ArrivalProcess::OnOffBursty {
+            rate: 1.0,
+            on_ticks: 1,
+            off_ticks: 1,
+            burst_factor: 0.5,
+        };
+        assert!(weak_burst.validate().is_err());
+    }
+}

@@ -3,6 +3,7 @@
 //! trace record/replay and the synthetic token corpus for the end-to-end
 //! trainer.
 
+pub mod arrivals;
 pub mod corpus;
 pub mod trace;
 

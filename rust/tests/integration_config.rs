@@ -221,6 +221,45 @@ fn shipped_transient_faults_config_simulates_end_to_end() {
 }
 
 #[test]
+fn shipped_fleet_config_runs_deterministically() {
+    // The mixed-tenancy fleet scenario config end to end: parse ->
+    // `[fleet]` table -> two full fleet runs whose serialized reports
+    // are byte-identical (the contract the fleet-smoke CI job diffs).
+    use pro_prophet::faults::FaultTimeline;
+    use pro_prophet::fleet::{Fleet, JobKind};
+    let path = std::path::Path::new("examples/configs/fleet_mixed_train_infer.toml");
+    if !path.exists() {
+        eprintln!("SKIP: fleet example config missing");
+        return;
+    }
+    let exp = ExperimentConfig::from_file(path).unwrap();
+    let fleet_cfg = exp.fleet.clone().expect("config must carry a [fleet] table");
+    assert_eq!(fleet_cfg.jobs.len(), 3);
+    assert!(fleet_cfg.jobs.iter().any(|j| j.kind == JobKind::Infer));
+    let faults = exp.fault_timeline(fleet_cfg.ticks);
+    assert!(!faults.is_empty(), "config must inject the node-1 transient");
+
+    let popts = exp.prophet_options();
+    let run = |faults: &FaultTimeline| {
+        Fleet::run(&fleet_cfg, &exp.cluster, &popts, faults, pro_prophet::obs::noop_arc())
+            .expect("shipped fleet config must run")
+    };
+    let a = run(&faults);
+    let b = run(&faults);
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string(), "fleet must be deterministic");
+
+    // Scenario sanity: both training tenants finish inside the horizon,
+    // the inference tenant serves traffic and reports latency.
+    let alpha = a.job("alpha").expect("job alpha");
+    let beta = a.job("beta").expect("job beta");
+    let serve = a.job("serve").expect("job serve");
+    assert!(alpha.completed_tick.is_some() && beta.completed_tick.is_some());
+    assert!(serve.requests_completed > 0);
+    assert!(serve.mean_latency_s > 0.0);
+    assert!(a.utilization() > 0.0 && a.utilization() <= 1.0);
+}
+
+#[test]
 fn custom_model_from_toml() {
     let t = toml::parse(
         r#"
