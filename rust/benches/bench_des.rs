@@ -1,22 +1,30 @@
 //! DES throughput: the device-level discrete-event simulator's
-//! events/sec and iterations/sec at cluster scale (D = 64, 256, 1024),
-//! timed THROUGH the telemetry hub — the same `des.lower`/`des.execute`
-//! spans and `des.events` counter the `--metrics` sink records, so the
-//! bench doubles as an end-to-end check that hub span timings carry real
-//! signal.
+//! events/sec and iterations/sec at cluster scale (D = 64, 256, 1024,
+//! 4096), timed THROUGH the telemetry hub — the same
+//! `des.lower`/`des.execute` spans and `des.events` counter the
+//! `--metrics` sink records, so the bench doubles as an end-to-end check
+//! that hub span timings carry real signal.
+//!
+//! Every configuration times BOTH executors over the same DAGs — the
+//! arena/scratch hot path (`events::execute_with` with a persistent
+//! `ExecScratch`) and the frozen pre-arena oracle
+//! (`events::execute_reference`) — and gates the timing on a bitwise
+//! equivalence check between them, so the speedup column can never be
+//! reported off divergent results.
 //!
 //! Results go to the human-readable lines below, bench_results/des.json,
 //! and the machine-readable BENCH_des.json at the repo root (uploaded by
 //! CI next to BENCH_plan.json; consumed by EXPERIMENTS.md §Perf trend
-//! tooling).
+//! tooling).  Set `DES_BENCH_ONLY_D=<devices>` to run a single scale
+//! (the CI `des-scale-smoke` job runs only D=4096 under a timeout).
 
 use pro_prophet::benchkit;
 use pro_prophet::metrics::write_result;
 use pro_prophet::obs::{Labels, Recorder, Span, TelemetryHub};
 use pro_prophet::scheduler::{
-    build_blockwise, build_blockwise_dag, dag, BlockCosts, DeviceBlockCosts,
+    build_blockwise, build_blockwise_dag, dag, BlockCosts, DeviceBlockCosts, OpDag,
 };
-use pro_prophet::sim::events;
+use pro_prophet::sim::events::{self, DesResult, ExecScratch};
 use pro_prophet::util::json::{self, Json};
 
 const BLOCKS: usize = 12;
@@ -37,43 +45,86 @@ fn block_costs() -> Vec<BlockCosts> {
     ]
 }
 
-/// One measured configuration: `reps` lower+execute passes on `d`
-/// devices, spans and counters recorded into a fresh hub.
-fn measure(d: usize, reps: usize, relaxed: bool) -> Json {
+fn build(d: usize, relaxed: bool) -> OpDag {
     let costs = block_costs();
+    if relaxed {
+        let dev: Vec<DeviceBlockCosts> =
+            costs.iter().map(|c| DeviceBlockCosts::uniform(c, d)).collect();
+        build_blockwise_dag(&dev, Default::default())
+    } else {
+        dag::from_schedule(&build_blockwise(&costs), d)
+    }
+}
+
+/// Bitwise equivalence gate: the hot path must reproduce the frozen
+/// reference exactly (makespan, breakdowns, device stats, straggler)
+/// before its timings are allowed into the report.
+fn assert_equivalent(hot: &DesResult, reference: &DesResult, what: &str) {
+    assert_eq!(
+        hot.makespan.to_bits(),
+        reference.makespan.to_bits(),
+        "{what}: makespan diverged from execute_reference"
+    );
+    assert_eq!(hot.exposed, reference.exposed, "{what}: exposed breakdown diverged");
+    let hot_pb: Vec<u64> = hot.per_block_exposed.iter().map(|v| v.to_bits()).collect();
+    let ref_pb: Vec<u64> = reference.per_block_exposed.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(hot_pb, ref_pb, "{what}: per-block exposed diverged");
+    assert_eq!(hot.devices, reference.devices, "{what}: device stats diverged");
+    assert_eq!(hot.straggler, reference.straggler, "{what}: straggler diverged");
+}
+
+/// One measured configuration: `reps` lower+execute passes on `d`
+/// devices, spans and counters recorded into a fresh hub, the frozen
+/// reference executor timed over the same DAGs for the old-vs-new
+/// columns.
+fn measure(d: usize, reps: usize, relaxed: bool, scratch: &mut ExecScratch) -> Json {
+    let kind = if relaxed { "relaxed" } else { "barrier" };
+    // Equivalence gate (untimed): hot path == frozen oracle, bitwise.
+    {
+        let op_dag = build(d, relaxed);
+        let hot = events::execute_with(&op_dag, scratch);
+        let reference = events::execute_reference(&op_dag);
+        assert_equivalent(&hot, &reference, &format!("{kind} D={d}"));
+    }
+
     let hub = TelemetryHub::new();
     for i in 0..reps {
         hub.iteration_start(i);
         let op_dag = {
             let _sp = Span::enter(&hub, "des.lower", Labels::None);
-            if relaxed {
-                let dev: Vec<DeviceBlockCosts> =
-                    costs.iter().map(|c| DeviceBlockCosts::uniform(c, d)).collect();
-                build_blockwise_dag(&dev, Default::default())
-            } else {
-                dag::from_schedule(&build_blockwise(&costs), d)
-            }
+            build(d, relaxed)
         };
         let des = {
             let _sp = Span::enter(&hub, "des.execute", Labels::None);
-            events::execute(&op_dag)
+            events::execute_with(&op_dag, scratch)
         };
         std::hint::black_box(des.makespan);
+        let reference = {
+            let _sp = Span::enter(&hub, "des.execute_ref", Labels::None);
+            events::execute_reference(&op_dag)
+        };
+        std::hint::black_box(reference.makespan);
         hub.counter("des.events", Labels::None, (op_dag.len() * d) as u64);
         hub.iteration_end();
     }
     let lower = hub.span_agg("des.lower", Labels::None).expect("lower span recorded");
     let execute = hub.span_agg("des.execute", Labels::None).expect("execute span recorded");
+    let exec_ref =
+        hub.span_agg("des.execute_ref", Labels::None).expect("reference span recorded");
     let events = hub.counter_total("des.events", Labels::None);
     let events_per_sec = events as f64 / execute.total.max(1e-12);
+    let events_per_sec_ref = events as f64 / exec_ref.total.max(1e-12);
     let iters_per_sec = reps as f64 / (lower.total + execute.total).max(1e-12);
-    let kind = if relaxed { "relaxed" } else { "barrier" };
+    let iters_per_sec_ref = reps as f64 / (lower.total + exec_ref.total).max(1e-12);
+    let speedup = exec_ref.total / execute.total.max(1e-12);
     println!(
-        "des {kind:<8} D={d:<5} {reps:>3} reps  {events:>9} events  \
-         {events_per_sec:>12.0} events/s  {iters_per_sec:>8.1} iters/s  \
-         (lower {:.2} ms, execute {:.2} ms per iter)",
+        "des {kind:<8} D={d:<5} {reps:>3} reps  {events:>10} events  \
+         new {events_per_sec:>12.0} ev/s  old {events_per_sec_ref:>12.0} ev/s  \
+         x{speedup:>5.2}  {iters_per_sec:>8.1} iters/s  \
+         (lower {:.2} ms, execute {:.2} ms, reference {:.2} ms per iter)",
         lower.mean() * 1e3,
         execute.mean() * 1e3,
+        exec_ref.mean() * 1e3,
     );
     json::obj(vec![
         ("kind", json::s(kind)),
@@ -82,19 +133,33 @@ fn measure(d: usize, reps: usize, relaxed: bool) -> Json {
         ("reps", json::num(reps as f64)),
         ("events", json::num(events as f64)),
         ("events_per_sec", json::num(events_per_sec)),
+        ("events_per_sec_ref", json::num(events_per_sec_ref)),
         ("iters_per_sec", json::num(iters_per_sec)),
+        ("iters_per_sec_ref", json::num(iters_per_sec_ref)),
+        ("execute_speedup", json::num(speedup)),
         ("lower_mean_s", json::num(lower.mean())),
         ("execute_mean_s", json::num(execute.mean())),
+        ("execute_ref_mean_s", json::num(exec_ref.mean())),
     ])
 }
 
 fn main() {
-    benchkit::header("des", "device-level DES events/sec via hub span timings");
+    benchkit::header("des", "device-level DES events/sec via hub span timings (old vs new)");
+    let only_d: Option<usize> = std::env::var("DES_BENCH_ONLY_D")
+        .ok()
+        .map(|s| s.parse().expect("DES_BENCH_ONLY_D expects a device count"));
     let mut rows: Vec<Json> = Vec::new();
-    for (d, reps) in [(64usize, 40usize), (256, 12), (1024, 4)] {
-        rows.push(measure(d, reps, false));
-        rows.push(measure(d, reps, true));
+    // One scratch across every configuration: the bench exercises the
+    // same reuse pattern the simulator's PriceState does.
+    let mut scratch = ExecScratch::new();
+    for (d, reps) in [(64usize, 40usize), (256, 12), (1024, 4), (4096, 2)] {
+        if only_d.is_some_and(|only| only != d) {
+            continue;
+        }
+        rows.push(measure(d, reps, false, &mut scratch));
+        rows.push(measure(d, reps, true, &mut scratch));
     }
+    assert!(!rows.is_empty(), "DES_BENCH_ONLY_D matched no configured scale");
     let doc = json::obj(vec![
         ("bench", json::s("des")),
         ("unit", json::s("events_per_sec")),

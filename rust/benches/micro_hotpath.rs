@@ -78,15 +78,29 @@ fn main() {
     // barrier DAG on 16 devices and execute it (this pass now runs once
     // per simulated iteration), plus the relaxed Algorithm-2 DAG.
     let sched24 = build_blockwise(&costs);
+    record(bench_fn("dag build (from_schedule) 24 blocks x 16 dev", 30.0, || {
+        std::hint::black_box(dag::from_schedule(&sched24, 16));
+    }));
     record(bench_fn("dag lower+execute 24 blocks x 16 dev", 30.0, || {
         let lowered = dag::from_schedule(&sched24, 16);
         std::hint::black_box(events::execute(&lowered));
     }));
     let dev_costs: Vec<DeviceBlockCosts> =
         costs.iter().map(|c| DeviceBlockCosts::uniform(c, 16)).collect();
+    record(bench_fn("blockwise_dag build 24 blocks x 16 dev", 30.0, || {
+        std::hint::black_box(build_blockwise_dag(&dev_costs, Default::default()));
+    }));
     record(bench_fn("blockwise_dag execute 24 blocks x 16 dev", 30.0, || {
         let relaxed = build_blockwise_dag(&dev_costs, Default::default());
         std::hint::black_box(events::execute(&relaxed));
+    }));
+    // Scratch reuse: the simulator's steady-state execute (buffers
+    // carried across iterations, no per-call allocation, times not
+    // retained) vs the allocating `events::execute` above.
+    let lowered16 = dag::from_schedule(&sched24, 16);
+    let mut scratch = events::ExecScratch::new();
+    record(bench_fn("execute scratch-reuse 24 blocks x 16 dev", 30.0, || {
+        std::hint::black_box(events::execute_with(&lowered16, &mut scratch).makespan);
     }));
     // The planner's whole-iteration relaxed estimate must stay much
     // cheaper than executing the DAG it bounds.

@@ -197,6 +197,11 @@ impl BalancerSession {
     /// an irreparable placement is replaced by the last known-good one —
     /// a `DeviceDown` event can never surface a placement that assigns
     /// experts to the downed device, and never a panic.
+    ///
+    /// Drivers that cache priced iterations (`sim::PriceState`) still
+    /// call this every iteration: decide owns plan caching, drift
+    /// bookkeeping, and the `balancer.*` counters, so only the pricing
+    /// step downstream of the returned [`Decision`] may be skipped.
     pub fn decide_layer(&self, layer: usize, w: &LoadMatrix, pm: &PerfModel) -> Decision {
         assert!(layer < self.n_layers, "layer {layer} out of range");
         let _sp = Span::enter(&*self.rec, "balancer.decide", Labels::None);

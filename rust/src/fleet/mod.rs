@@ -44,7 +44,7 @@ use crate::faults::{FaultTimeline, FaultView};
 use crate::moe::LoadMatrix;
 use crate::obs::{Labels, Recorder};
 use crate::perfmodel::PerfModel;
-use crate::sim::{checkpoint, price_and_observe, Engine, SimReport};
+use crate::sim::{checkpoint, price_and_observe, Engine, PriceState, SimReport};
 use crate::util::json::{self, Json};
 use crate::workload::arrivals::ArrivalProcess;
 use crate::workload::{Trace, WorkloadConfig, WorkloadGen};
@@ -368,6 +368,9 @@ struct JobRuntime {
     model: ModelSpec,
     pm: PerfModel,
     session: BalancerSession,
+    /// Per-tenant DES scratch + incremental re-pricing cache (reset on
+    /// resize: a new lease means a new session and cluster).
+    price: PriceState,
     heterogeneous: bool,
     /// Train: the captured workload, one iteration per tick.
     trace: Option<Trace>,
@@ -435,6 +438,7 @@ impl JobRuntime {
             model,
             pm,
             session,
+            price: PriceState::new(true),
             heterogeneous,
             trace,
             next_iter: 0,
@@ -864,6 +868,7 @@ impl<'a> Fleet<'a> {
         let policy = crate::balancer::registry::build(&spec.policy, self.popts)
             .ok_or_else(|| format!("job `{}`: unknown policy `{}`", spec.name, spec.policy))?;
         rt.session = BalancerSession::with_recorder(policy, 1, self.rec.clone());
+        rt.price.reset();
         if let Some(state) = &mut rt.infer {
             state.reseed_popularity(d);
         }
@@ -946,6 +951,7 @@ impl<'a> Fleet<'a> {
                         &view,
                         layers,
                         &*rec,
+                        &mut rt.price,
                     );
                     rt.busy_s += it.time;
                     rt.tokens_processed += layers.iter().map(LoadMatrix::total_tokens).sum::<u64>()
@@ -983,6 +989,7 @@ impl<'a> Fleet<'a> {
                             &view,
                             &layers,
                             &*rec,
+                            &mut rt.price,
                         );
                         let state = rt.infer.as_mut().expect("infer job has state");
                         state.complete_batch(&batch, tick, self.cfg.tick_s, it.time);

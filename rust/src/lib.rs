@@ -26,10 +26,12 @@
 //!   early on [`prophet`] forecasts.
 //! * [`scheduler`] — the paper's §V contribution: the MoE-block scheduling
 //!   space, the block-wise overlap strategy (Algorithm 2), and
-//!   `scheduler::dag` — operator DAGs with per-device duration vectors
-//!   and explicit dependency edges (Algorithm 2 emitted dependency-first
-//!   via `build_blockwise_dag`; barrier schedules lowered via
-//!   `dag::from_schedule`).
+//!   `scheduler::dag` — operator DAGs stored structure-of-arrays: one
+//!   flat row-major duration arena, CSR dependency storage, and
+//!   compressed stage-barrier edges (a `(lo, hi)` node range per op
+//!   instead of materialised all-pairs edges; Algorithm 2 emitted
+//!   dependency-first via `build_blockwise_dag`, barrier schedules
+//!   lowered via `dag::from_schedule`).
 //! * [`sim`] — a discrete-event cluster simulator standing in for the
 //!   authors' GPU testbeds (see DESIGN.md §3): a thin driver over
 //!   [`balancer`] sessions that prices every iteration twice — on the
@@ -40,8 +42,14 @@
 //!   `balancer::ScheduleKind::DagRelaxed` execute the true-dependency
 //!   Algorithm-2 DAG on the DES instead of the barrier lowering, every
 //!   iteration, with the slack-aware planner cost model ranking their
-//!   placements.  `sim::reference` freezes the pre-refactor path (and
-//!   the closed `Policy` enum) as the golden-equivalence oracle.
+//!   placements.  The hot executor (`sim::events::execute_with`) runs
+//!   over caller-owned `ExecScratch` buffers reused across layers,
+//!   iterations, and fleet tenants; `sim::events::execute_reference`
+//!   freezes the pre-arena executor as a bit-exact oracle alongside
+//!   `sim::reference` (the pre-refactor driver + closed `Policy` enum).
+//!   When a layer's placement, cost inputs, and fault view are
+//!   unchanged between iterations the simulator skips re-pricing
+//!   entirely and reuses the priced result (`sim.des_reuse` counter).
 //! * [`runtime`] + [`trainer`] + [`coordinator`] — the execution stack:
 //!   PJRT loading of the AOT'd JAX/Pallas artifacts, the end-to-end
 //!   training loop, and a threaded expert-parallel coordinator with

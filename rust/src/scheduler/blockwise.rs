@@ -329,7 +329,7 @@ pub fn build_blockwise_dag(blocks: &[DeviceBlockCosts], mode: SplitMode) -> OpDa
     // Block 0's Trans is exposed at the start of FP (its Plan ran during
     // the previous iteration's A2A window).
     if any_pos(&blocks[0].trans) {
-        let id = dag.push(Op::Trans { block: 0, part: 0 }, blocks[0].trans.clone(), vec![]);
+        let id = dag.push_slice(Op::Trans { block: 0, part: 0 }, &blocks[0].trans, &[]);
         trans_parts[0].push(id);
     }
 
@@ -340,12 +340,12 @@ pub fn build_blockwise_dag(blocks: &[DeviceBlockCosts], mode: SplitMode) -> OpDa
         let c = &blocks[i];
         let input_dep: Vec<usize> = prev_fnec.into_iter().collect();
         if any_pos(&c.plan) {
-            dag.push(Op::Plan { block: i }, c.plan.clone(), input_dep.clone());
+            dag.push_slice(Op::Plan { block: i }, &c.plan, &input_dep);
         }
-        let a2a1 = dag.push(
+        let a2a1 = dag.push_slice(
             Op::A2a { block: i, phase: A2aPhase::FwdDispatch },
-            c.a2a.clone(),
-            input_dep,
+            &c.a2a,
+            &input_dep,
         );
         // Next block's Trans, split across this block's two comp windows
         // (issue order places part 0 in the FEC window, part 1 in FNEC's).
@@ -354,22 +354,22 @@ pub fn build_blockwise_dag(blocks: &[DeviceBlockCosts], mode: SplitMode) -> OpDa
             None => (vec![], vec![]),
         };
         if any_pos(&t_fec_part) {
-            let id = dag.push(Op::Trans { block: i + 1, part: 0 }, t_fec_part, vec![]);
+            let id = dag.push_slice(Op::Trans { block: i + 1, part: 0 }, &t_fec_part, &[]);
             trans_parts[i + 1].push(id);
         }
         let mut fec_deps = vec![a2a1];
         fec_deps.extend_from_slice(&trans_parts[i]);
-        let fec = dag.push(Op::Fec { block: i }, c.fec.clone(), fec_deps);
-        let a2a2 = dag.push(
+        let fec = dag.push_slice(Op::Fec { block: i }, &c.fec, &fec_deps);
+        let a2a2 = dag.push_slice(
             Op::A2a { block: i, phase: A2aPhase::FwdCombine },
-            c.a2a.clone(),
-            vec![fec],
+            &c.a2a,
+            &[fec],
         );
         if any_pos(&t_fnec_part) {
-            let id = dag.push(Op::Trans { block: i + 1, part: 1 }, t_fnec_part, vec![]);
+            let id = dag.push_slice(Op::Trans { block: i + 1, part: 1 }, &t_fnec_part, &[]);
             trans_parts[i + 1].push(id);
         }
-        let fnec = dag.push(Op::Fnec { block: i }, c.fnec.clone(), vec![a2a2]);
+        let fnec = dag.push_slice(Op::Fnec { block: i }, &c.fnec, &[a2a2]);
         fnec_ids.push(fnec);
         prev_fnec = Some(fnec);
     }
@@ -385,34 +385,34 @@ pub fn build_blockwise_dag(blocks: &[DeviceBlockCosts], mode: SplitMode) -> OpDa
             None => (vec![], vec![]),
         };
         if any_pos(&agg_bnec_part) {
-            dag.push(Op::Agg { block: i + 1, part: 0 }, agg_bnec_part, vec![bec_ids[i + 1]]);
+            dag.push_slice(Op::Agg { block: i + 1, part: 0 }, &agg_bnec_part, &[bec_ids[i + 1]]);
         }
         let bnec_dep = match prev_bwd_combine {
             Some(id) => vec![id],
             None => vec![fnec_ids[l - 1]], // loss boundary: end of forward
         };
-        let bnec = dag.push(Op::Bnec { block: i }, c.bnec.clone(), bnec_dep);
-        let a2a3 = dag.push(
+        let bnec = dag.push_slice(Op::Bnec { block: i }, &c.bnec, &bnec_dep);
+        let a2a3 = dag.push_slice(
             Op::A2a { block: i, phase: A2aPhase::BwdDispatch },
-            c.a2a.clone(),
-            vec![bnec],
+            &c.a2a,
+            &[bnec],
         );
         if any_pos(&agg_bec_part) {
-            dag.push(Op::Agg { block: i + 1, part: 1 }, agg_bec_part, vec![bec_ids[i + 1]]);
+            dag.push_slice(Op::Agg { block: i + 1, part: 1 }, &agg_bec_part, &[bec_ids[i + 1]]);
         }
-        let bec = dag.push(Op::Bec { block: i }, c.bec.clone(), vec![a2a3]);
+        let bec = dag.push_slice(Op::Bec { block: i }, &c.bec, &[a2a3]);
         bec_ids[i] = bec;
-        let a2a4 = dag.push(
+        let a2a4 = dag.push_slice(
             Op::A2a { block: i, phase: A2aPhase::BwdCombine },
-            c.a2a.clone(),
-            vec![bec],
+            &c.a2a,
+            &[bec],
         );
         prev_bwd_combine = Some(a2a4);
     }
 
     // Block 0's Agg has no later computation to hide under.
     if any_pos(&blocks[0].agg) {
-        dag.push(Op::Agg { block: 0, part: 0 }, blocks[0].agg.clone(), vec![bec_ids[0]]);
+        dag.push_slice(Op::Agg { block: 0, part: 0 }, &blocks[0].agg, &[bec_ids[0]]);
     }
 
     dag
@@ -594,7 +594,7 @@ mod tests {
         assert_eq!(dag.n_devices, 4);
         // Every op class present; per-block op multiset mirrors Fig 7.
         let count = |pred: &dyn Fn(&Op) -> bool| -> usize {
-            dag.nodes().iter().filter(|n| pred(&n.op)).count()
+            dag.ops().iter().filter(|o| pred(o)).count()
         };
         assert_eq!(count(&|o| matches!(o, Op::Fec { .. })), 3);
         assert_eq!(count(&|o| matches!(o, Op::Bec { .. })), 3);
@@ -603,21 +603,22 @@ mod tests {
         assert!(count(&|o| matches!(o, Op::Trans { .. })) >= 3);
         assert!(count(&|o| matches!(o, Op::Agg { .. })) >= 3);
         // FEC depends on its dispatch A2A and on this block's Trans parts.
-        for (i, n) in dag.nodes().iter().enumerate() {
-            if let Op::Fec { block } = n.op {
-                assert!(!n.deps.is_empty(), "FEC{block} has no deps");
-                assert!(n.deps.iter().all(|&dx| dx < i));
-                let has_dispatch = n.deps.iter().any(|&dx| {
+        for i in 0..dag.len() {
+            let deps: Vec<usize> = dag.deps_of(i).collect();
+            if let Op::Fec { block } = dag.op(i) {
+                assert!(!deps.is_empty(), "FEC{block} has no deps");
+                assert!(deps.iter().all(|&dx| dx < i));
+                let has_dispatch = deps.iter().any(|&dx| {
                     matches!(
-                        dag.nodes()[dx].op,
+                        dag.op(dx),
                         Op::A2a { block: b, phase: A2aPhase::FwdDispatch } if b == block
                     )
                 });
                 assert!(has_dispatch, "FEC{block} missing dispatch dep");
             }
-            if let Op::Agg { block, .. } = n.op {
-                let on_bec = n.deps.iter().any(|&dx| {
-                    matches!(dag.nodes()[dx].op, Op::Bec { block: b } if b == block)
+            if let Op::Agg { block, .. } = dag.op(i) {
+                let on_bec = deps.iter().any(|&dx| {
+                    matches!(dag.op(dx), Op::Bec { block: b } if b == block)
                 });
                 assert!(on_bec, "Agg{block} must wait for its BEC");
             }
@@ -632,11 +633,9 @@ mod tests {
             .filter(|o| o.op.is_load_balancing())
             .map(|o| o.dur)
             .sum();
-        let dag_vol: f64 = dag
-            .nodes()
-            .iter()
-            .filter(|n| n.op.is_load_balancing() && !matches!(n.op, Op::Plan { .. }))
-            .map(|n| n.dur[0])
+        let dag_vol: f64 = (0..dag.len())
+            .filter(|&i| dag.op(i).is_load_balancing() && !matches!(dag.op(i), Op::Plan { .. }))
+            .map(|i| dag.dur(i)[0])
             .sum();
         assert!((sched_vol - dag_vol).abs() < 1e-9, "{sched_vol} vs {dag_vol}");
     }

@@ -21,6 +21,25 @@
 //! Dependencies must point backwards (`dep < node index`), so a cycle is
 //! unrepresentable by construction.
 //!
+//! # Storage (arena / SoA)
+//!
+//! Per-node `Vec<f64>` durations and `Vec<usize>` dep lists do not scale
+//! to D ∈ {1k..10k} devices — 10k-device DAGs spend more time in the
+//! allocator than in the event loop.  Storage is therefore flat:
+//!
+//! * **Duration arena**: one row-major `Vec<f64>`, node `i`'s per-device
+//!   durations at `dur[i*D .. (i+1)*D]` ([`OpDag::dur`]).  The executor's
+//!   collective-start scan reduces whole rows with `f64::max`, which the
+//!   compiler autovectorizes.
+//! * **CSR dependencies**: explicit edges live in one `dep_idx` array
+//!   sliced by `dep_off` offsets — no per-node allocation.
+//! * **Compressed barrier edges**: a barrier-shaped lowering makes every
+//!   op of stage *s* depend on *every* op of stage *s-1* — O(ops²) edges
+//!   if materialized.  Since a stage's ops are contiguous in issue
+//!   order, each node instead stores one `(lo, hi)` node *range*;
+//!   [`OpDag::deps_of`] yields the range then the explicit edges, so
+//!   consumers never see the difference.
+//!
 //! Two builders produce DAGs:
 //!
 //! * [`from_schedule`] lowers a frozen [`Schedule`] into a
@@ -35,96 +54,188 @@
 
 use super::{Op, OpInstance, Schedule, Stream};
 
-/// One operator node: the op, its per-device durations, and the nodes
-/// that must finish before it may start.
-#[derive(Clone, Debug, PartialEq)]
-pub struct DagNode {
-    pub op: Op,
-    /// Seconds the op occupies its stream on each device
-    /// (length == [`OpDag::n_devices`]).
-    pub dur: Vec<f64>,
-    /// Prerequisite node indices, each strictly less than this node's own
-    /// index (issue order is a topological order).
-    pub deps: Vec<usize>,
-}
-
 /// A whole iteration as an operator dependency DAG over `n_devices`
-/// device-local stream pairs.  (No `Default`: a zero-device DAG would
-/// bypass [`OpDag::new`]'s `n_devices >= 1` invariant.)
+/// device-local stream pairs, stored structure-of-arrays (see the module
+/// docs).  (No `Default`: a zero-device DAG would bypass
+/// [`OpDag::new`]'s `n_devices >= 1` invariant.)
 #[derive(Clone, Debug, PartialEq)]
 pub struct OpDag {
     pub n_devices: usize,
-    nodes: Vec<DagNode>,
+    ops: Vec<Op>,
+    /// Row-major duration arena: node `i`, device `dev` at
+    /// `i * n_devices + dev`.
+    dur: Vec<f64>,
+    /// CSR offsets into `dep_idx`; node `i`'s explicit deps are
+    /// `dep_idx[dep_off[i] .. dep_off[i + 1]]`.
+    dep_off: Vec<u32>,
+    dep_idx: Vec<u32>,
+    /// Compressed stage-barrier edges: node `i` additionally depends on
+    /// every node in `barrier[i].0 .. barrier[i].1` (empty range = none).
+    barrier: Vec<(u32, u32)>,
 }
+
+/// Iterator over one node's dependencies: the compressed barrier range
+/// first, then the explicit CSR edges (each strictly less than the
+/// node's own index).
+#[derive(Clone, Debug)]
+pub struct Deps<'a> {
+    range: std::ops::Range<u32>,
+    explicit: std::slice::Iter<'a, u32>,
+}
+
+impl Iterator for Deps<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        match self.range.next() {
+            Some(i) => Some(i as usize),
+            None => self.explicit.next().map(|&i| i as usize),
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.range.len() + self.explicit.len();
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for Deps<'_> {}
 
 impl OpDag {
     pub fn new(n_devices: usize) -> Self {
         assert!(n_devices >= 1, "DAG needs at least one device");
-        OpDag { n_devices, nodes: Vec::new() }
+        OpDag {
+            n_devices,
+            ops: Vec::new(),
+            dur: Vec::new(),
+            dep_off: vec![0],
+            dep_idx: Vec::new(),
+            barrier: Vec::new(),
+        }
+    }
+
+    /// Core append: reserve the node's arena row, let `fill` write the
+    /// per-device durations in place, record explicit deps + barrier
+    /// range.  Returns the node index.
+    fn push_filled(
+        &mut self,
+        op: Op,
+        deps: &[usize],
+        barrier: (u32, u32),
+        fill: impl FnOnce(&mut [f64]),
+    ) -> usize {
+        let idx = self.ops.len();
+        assert!(idx < u32::MAX as usize, "DAG node count overflows u32 indexing");
+        for &d in deps {
+            assert!(d < idx, "dep {d} of node {idx} is not an earlier node");
+        }
+        debug_assert!(barrier.0 <= barrier.1 && barrier.1 as usize <= idx);
+        let d = self.n_devices;
+        self.dur.resize(self.dur.len() + d, 0.0);
+        let row = &mut self.dur[idx * d..(idx + 1) * d];
+        fill(row);
+        debug_assert!(
+            row.iter().all(|d| d.is_finite() && *d >= 0.0),
+            "non-finite or negative duration for {op:?}"
+        );
+        self.ops.push(op);
+        self.dep_idx.extend(deps.iter().map(|&d| d as u32));
+        self.dep_off.push(self.dep_idx.len() as u32);
+        self.barrier.push(barrier);
+        idx
     }
 
     /// Append a node with per-device durations; returns its index.
     pub fn push(&mut self, op: Op, dur: Vec<f64>, deps: Vec<usize>) -> usize {
+        self.push_slice(op, &dur, &deps)
+    }
+
+    /// [`push`](Self::push) without consuming the inputs — the
+    /// allocation-free form hot builders
+    /// ([`super::build_blockwise_dag`]) use: durations are copied
+    /// straight into the arena, dep indices into the CSR array.
+    pub fn push_slice(&mut self, op: Op, dur: &[f64], deps: &[usize]) -> usize {
         assert_eq!(dur.len(), self.n_devices, "duration vector length for {op:?}");
-        debug_assert!(
-            dur.iter().all(|d| d.is_finite() && *d >= 0.0),
-            "non-finite or negative duration for {op:?}"
-        );
-        let idx = self.nodes.len();
-        for &d in &deps {
-            assert!(d < idx, "dep {d} of node {idx} is not an earlier node");
-        }
-        self.nodes.push(DagNode { op, dur, deps });
-        idx
+        self.push_filled(op, deps, (0, 0), |row| row.copy_from_slice(dur))
     }
 
     /// Append a node whose duration is the same on every device.
     pub fn push_uniform(&mut self, op: Op, dur: f64, deps: Vec<usize>) -> usize {
-        let d = self.n_devices;
-        self.push(op, vec![dur; d], deps)
+        self.push_filled(op, &deps, (0, 0), |row| row.fill(dur))
     }
 
-    pub fn nodes(&self) -> &[DagNode] {
-        &self.nodes
+    /// The op of node `i`.
+    #[inline]
+    pub fn op(&self, i: usize) -> Op {
+        self.ops[i]
+    }
+
+    /// All ops in issue order.
+    pub fn ops(&self) -> &[Op] {
+        &self.ops
+    }
+
+    /// Node `i`'s per-device durations (one arena row).
+    #[inline]
+    pub fn dur(&self, i: usize) -> &[f64] {
+        &self.dur[i * self.n_devices..(i + 1) * self.n_devices]
+    }
+
+    /// Node `i`'s dependencies: barrier range first, then explicit edges.
+    #[inline]
+    pub fn deps_of(&self, i: usize) -> Deps<'_> {
+        let (lo, hi) = self.barrier[i];
+        Deps {
+            range: lo..hi,
+            explicit: self.dep_idx[self.dep_off[i] as usize..self.dep_off[i + 1] as usize]
+                .iter(),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.nodes.len()
+        self.ops.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.nodes.is_empty()
+        self.ops.is_empty()
     }
 
     /// Highest block id referenced by any node (None when empty).
     pub fn max_block(&self) -> Option<usize> {
-        self.nodes.iter().map(|n| n.op.block()).max()
+        self.ops.iter().map(|op| op.block()).max()
     }
 
-    /// Structural invariants: dependency edges point backwards (which
-    /// also proves acyclicity — issue order is a topological order),
-    /// duration vectors span every device, and all durations are finite
-    /// and non-negative.
+    /// Structural invariants: dependency edges (explicit and barrier
+    /// ranges) point backwards (which also proves acyclicity — issue
+    /// order is a topological order), the duration arena spans every
+    /// (node, device) pair, and all durations are finite and
+    /// non-negative.
     pub fn validate(&self) -> Result<(), String> {
-        for (i, n) in self.nodes.iter().enumerate() {
-            if n.dur.len() != self.n_devices {
-                return Err(format!(
-                    "node {i} ({:?}): {} durations for {} devices",
-                    n.op,
-                    n.dur.len(),
-                    self.n_devices
-                ));
-            }
-            for (dev, &d) in n.dur.iter().enumerate() {
+        if self.dur.len() != self.ops.len() * self.n_devices {
+            return Err(format!(
+                "duration arena holds {} entries for {} nodes x {} devices",
+                self.dur.len(),
+                self.ops.len(),
+                self.n_devices
+            ));
+        }
+        for (i, op) in self.ops.iter().enumerate() {
+            for (dev, &d) in self.dur(i).iter().enumerate() {
                 if !d.is_finite() || d < 0.0 {
-                    return Err(format!("node {i} ({:?}): bad duration {d} on device {dev}", n.op));
+                    return Err(format!("node {i} ({op:?}): bad duration {d} on device {dev}"));
                 }
             }
-            for &dep in &n.deps {
+            let (lo, hi) = self.barrier[i];
+            if lo > hi || hi as usize > i {
+                return Err(format!(
+                    "node {i} ({op:?}): barrier range {lo}..{hi} not earlier (cycle or forward edge)"
+                ));
+            }
+            for dep in self.deps_of(i) {
                 if dep >= i {
                     return Err(format!(
-                        "node {i} ({:?}): dep {dep} not earlier (cycle or forward edge)",
-                        n.op
+                        "node {i} ({op:?}): dep {dep} not earlier (cycle or forward edge)"
                     ));
                 }
             }
@@ -141,9 +252,9 @@ impl OpDag {
     /// this; `prop_planner_relaxed_bound_sound` pins both directions
     /// (sound on any costs, within 2x on homogeneous ones).
     pub fn serialized_bound(&self) -> f64 {
-        self.nodes
-            .iter()
-            .map(|n| n.dur.iter().copied().fold(0.0f64, f64::max))
+        self.dur
+            .chunks_exact(self.n_devices)
+            .map(|row| row.iter().copied().fold(0.0f64, f64::max))
             .sum()
     }
 
@@ -151,47 +262,63 @@ impl OpDag {
     pub fn busy_per_device(&self) -> (Vec<f64>, Vec<f64>) {
         let mut comp = vec![0.0; self.n_devices];
         let mut comm = vec![0.0; self.n_devices];
-        for n in &self.nodes {
-            let acc = match n.op.stream() {
-                Stream::Comp => &mut comp,
-                Stream::Comm => &mut comm,
+        self.busy_per_device_into(&mut comp, &mut comm);
+        (comp, comm)
+    }
+
+    /// [`busy_per_device`](Self::busy_per_device) into caller-owned
+    /// buffers (resized and zeroed here) — the allocation-free form for
+    /// per-iteration callers.
+    pub fn busy_per_device_into(&self, comp: &mut Vec<f64>, comm: &mut Vec<f64>) {
+        comp.clear();
+        comp.resize(self.n_devices, 0.0);
+        comm.clear();
+        comm.resize(self.n_devices, 0.0);
+        for (i, op) in self.ops.iter().enumerate() {
+            let acc = match op.stream() {
+                Stream::Comp => &mut *comp,
+                Stream::Comm => &mut *comm,
             };
-            for (a, &d) in acc.iter_mut().zip(&n.dur) {
+            for (a, &d) in acc.iter_mut().zip(self.dur(i)) {
                 *a += d;
             }
         }
-        (comp, comm)
     }
 }
 
 /// Lower a barrier-stage [`Schedule`] into a barrier-shaped [`OpDag`]
 /// with **uniform** per-device durations: every op of stage *s* depends
-/// on every op of stage *s-1*, and each op takes its scalar duration on
-/// all devices.  Executing the result on the DES reproduces the Stage
-/// model's `total_time()` / `exposed_breakdown()` bit-for-bit (the
-/// oracle-equivalence property; see `rust/tests/integration_timeline.rs`).
+/// on every op of stage *s-1* (stored as one compressed node range per
+/// op), and each op takes its scalar duration on all devices.  Executing
+/// the result on the DES reproduces the Stage model's `total_time()` /
+/// `exposed_breakdown()` bit-for-bit (the oracle-equivalence property;
+/// see `rust/tests/integration_timeline.rs`).
 pub fn from_schedule(schedule: &Schedule, n_devices: usize) -> OpDag {
-    from_schedule_with(schedule, n_devices, |op| vec![op.dur; n_devices])
+    from_schedule_with(schedule, n_devices, |op, row| row.fill(op.dur))
 }
 
-/// Like [`from_schedule`], but per-device durations come from `dur_of`
-/// (e.g. the engine's `*_per_device` costs, or slowdown-scaled vectors
-/// for straggler scenarios).  The barrier shape is preserved; only the
-/// durations refine.
+/// Like [`from_schedule`], but per-device durations are written by
+/// `dur_of` directly into the node's arena row (e.g. the engine's
+/// `*_per_device` costs, or slowdown-scaled vectors for straggler
+/// scenarios) — no per-op `Vec` round trip.  The barrier shape is
+/// preserved; only the durations refine.
 pub fn from_schedule_with(
     schedule: &Schedule,
     n_devices: usize,
-    mut dur_of: impl FnMut(&OpInstance) -> Vec<f64>,
+    mut dur_of: impl FnMut(&OpInstance, &mut [f64]),
 ) -> OpDag {
     let mut dag = OpDag::new(n_devices);
-    let mut prev_stage: Vec<usize> = Vec::new();
+    // The previous non-empty stage, as a contiguous node range (its ops
+    // were pushed back to back — the compressed barrier representation).
+    let mut prev: (u32, u32) = (0, 0);
     for stage in &schedule.stages {
-        let mut this_stage = Vec::with_capacity(stage.comp.len() + stage.comm.len());
+        let lo = dag.len() as u32;
         for op in stage.comp.iter().chain(&stage.comm) {
-            this_stage.push(dag.push(op.op, dur_of(op), prev_stage.clone()));
+            dag.push_filled(op.op, &[], prev, |row| dur_of(op, row));
         }
-        if !this_stage.is_empty() {
-            prev_stage = this_stage;
+        let hi = dag.len() as u32;
+        if hi > lo {
+            prev = (lo, hi);
         }
     }
     dag
@@ -206,6 +333,10 @@ mod tests {
         OpInstance::new(op, dur)
     }
 
+    fn deps(dag: &OpDag, i: usize) -> Vec<usize> {
+        dag.deps_of(i).collect()
+    }
+
     #[test]
     fn push_orders_and_validates() {
         let mut dag = OpDag::new(2);
@@ -215,9 +346,28 @@ mod tests {
         assert_eq!(dag.len(), 2);
         assert_eq!(dag.max_block(), Some(0));
         dag.validate().unwrap();
+        assert_eq!(dag.dur(0), &[1.0, 1.0]);
+        assert_eq!(dag.dur(1), &[0.5, 0.7]);
+        assert_eq!(deps(&dag, 0), Vec::<usize>::new());
+        assert_eq!(deps(&dag, 1), vec![0]);
         let (comp, comm) = dag.busy_per_device();
         assert_eq!(comp, vec![1.0, 1.0]);
         assert_eq!(comm, vec![0.5, 0.7]);
+        // The _into form reuses caller buffers bit-identically.
+        let (mut c2, mut m2) = (vec![9.0; 7], Vec::new());
+        dag.busy_per_device_into(&mut c2, &mut m2);
+        assert_eq!((c2, m2), (comp, comm));
+    }
+
+    #[test]
+    fn push_slice_matches_push() {
+        let mut a = OpDag::new(3);
+        let mut b = OpDag::new(3);
+        a.push(Op::Fec { block: 0 }, vec![1.0, 2.0, 3.0], vec![]);
+        a.push(Op::A2a { block: 0, phase: A2aPhase::FwdDispatch }, vec![0.5; 3], vec![0]);
+        b.push_slice(Op::Fec { block: 0 }, &[1.0, 2.0, 3.0], &[]);
+        b.push_slice(Op::A2a { block: 0, phase: A2aPhase::FwdDispatch }, &[0.5; 3], &[0]);
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -251,12 +401,29 @@ mod tests {
         let dag = from_schedule(&sched, 3);
         dag.validate().unwrap();
         assert_eq!(dag.len(), 3);
-        // Stage 0 ops have no deps; the stage-1 op depends on BOTH.
-        assert!(dag.nodes()[0].deps.is_empty());
-        assert!(dag.nodes()[1].deps.is_empty());
-        assert_eq!(dag.nodes()[2].deps, vec![0, 1]);
+        // Stage 0 ops have no deps; the stage-1 op depends on BOTH —
+        // delivered through the compressed barrier range, not O(ops²)
+        // explicit edges.
+        assert!(deps(&dag, 0).is_empty());
+        assert!(deps(&dag, 1).is_empty());
+        assert_eq!(deps(&dag, 2), vec![0, 1]);
         // Uniform lowering replicates the scalar duration.
-        assert_eq!(dag.nodes()[0].dur, vec![2.0; 3]);
+        assert_eq!(dag.dur(0), &[2.0; 3]);
+    }
+
+    #[test]
+    fn empty_stages_do_not_break_barrier_chain() {
+        let sched = Schedule {
+            stages: vec![
+                Stage::comp_only(vec![inst(Op::Fec { block: 0 }, 1.0)]),
+                Stage { comp: vec![], comm: vec![] },
+                Stage::comp_only(vec![inst(Op::Fnec { block: 0 }, 1.0)]),
+            ],
+        };
+        let dag = from_schedule(&sched, 2);
+        dag.validate().unwrap();
+        // The empty stage is skipped: node 1 still depends on node 0.
+        assert_eq!(deps(&dag, 1), vec![0]);
     }
 
     #[test]
@@ -264,7 +431,10 @@ mod tests {
         let sched = Schedule {
             stages: vec![Stage::comp_only(vec![inst(Op::Fec { block: 0 }, 2.0)])],
         };
-        let dag = from_schedule_with(&sched, 2, |op| vec![op.dur, 2.0 * op.dur]);
-        assert_eq!(dag.nodes()[0].dur, vec![2.0, 4.0]);
+        let dag = from_schedule_with(&sched, 2, |op, row| {
+            row[0] = op.dur;
+            row[1] = 2.0 * op.dur;
+        });
+        assert_eq!(dag.dur(0), &[2.0, 4.0]);
     }
 }

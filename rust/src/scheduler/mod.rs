@@ -23,7 +23,7 @@ pub use blockwise::{
     build_blocking, build_blockwise, build_blockwise_dag, relaxed_makespan_bound, BlockCosts,
     DeviceBlockCosts, LoadBalanceOps, SplitMode,
 };
-pub use dag::{DagNode, OpDag};
+pub use dag::OpDag;
 
 /// The phase of one of the four A2A exchanges in a block (paper Fig 7).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

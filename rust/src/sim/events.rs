@@ -29,6 +29,26 @@
 //!   durations by [`crate::scheduler::Op::breakdown_key`] yields an
 //!   exposed breakdown that sums exactly to the makespan.
 //!
+//! # Hot path: [`ExecScratch`] + [`execute_with`]
+//!
+//! The sweep is O(n·d) over SoA arena rows: a compute node's start is an
+//! elementwise `f64::max` fold of its dependencies' finish **rows** into
+//! one accumulator row, and a collective's synchronized start is a
+//! branch-light horizontal max over that row — both autovectorizable.
+//! All working memory (flat start/finish matrices, the accumulator row,
+//! per-stream predecessor ids, interval buffers, the path stack) lives in
+//! a caller-owned [`ExecScratch`] reused across layers, iterations, and
+//! fleet tenants (the discipline `planner::SearchScratch` set), so the
+//! steady state allocates nothing per call.  No predecessor matrix is
+//! stored: the critical-path walk *recomputes* each step's predecessor
+//! from the per-stream FIFO ids + dependency edges with the same
+//! tie-break — the tie-break is a strict total order, so argmax does not
+//! depend on scan order and the recomputation is exact.
+//!
+//! [`execute`] wraps `execute_with` with a fresh scratch and retains the
+//! per-(node, device) start/finish instants ([`DesTimes`]) for trace
+//! export; the hot path leaves `times` as `None`.
+//!
 //! # Oracle equivalence
 //!
 //! On a barrier-shaped DAG with uniform per-device durations
@@ -41,6 +61,14 @@
 //! ([`crate::scheduler::build_blockwise_dag`]) and slowing devices
 //! ([`crate::cluster::ClusterSpec::with_slowdown`]) are the new
 //! capabilities on top.
+//!
+//! [`execute_reference`] preserves the pre-arena executor (nested
+//! per-node vectors, stored predecessor matrix, candidate-at-a-time
+//! scans) as a **frozen oracle**: `prop_execute_matches_reference`
+//! (rust/tests/property_tests.rs) pins the restructured engine to it
+//! bit-for-bit over random DAGs × random per-device durations.  Do not
+//! "optimize" the reference; change it only in lockstep with an
+//! intentional semantic change.
 
 use crate::scheduler::dag::OpDag;
 use crate::scheduler::Stream;
@@ -63,15 +91,35 @@ pub struct DeviceStats {
     pub finish: f64,
 }
 
+/// Per-(node, device) start/finish instants of one executed DAG, stored
+/// row-major like the [`OpDag`] duration arena.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DesTimes {
+    n_devices: usize,
+    start: Vec<f64>,
+    finish: Vec<f64>,
+}
+
+impl DesTimes {
+    /// When `node` starts on `dev` (seconds).
+    #[inline]
+    pub fn start(&self, node: usize, dev: usize) -> f64 {
+        self.start[node * self.n_devices + dev]
+    }
+
+    /// When `node` finishes on `dev` (seconds).
+    #[inline]
+    pub fn finish(&self, node: usize, dev: usize) -> f64 {
+        self.finish[node * self.n_devices + dev]
+    }
+}
+
 /// Outcome of executing an [`OpDag`].
 #[derive(Clone, Debug, Default)]
 pub struct DesResult {
     /// Iteration time: the per-device critical path (latest finish over
     /// all nodes and devices).
     pub makespan: f64,
-    /// `start[node][device]` / `finish[node][device]` in seconds.
-    pub start: Vec<Vec<f64>>,
-    pub finish: Vec<Vec<f64>>,
     /// Exposed seconds per breakdown category, from critical-path
     /// attribution; values sum to `makespan`.
     pub exposed: BTreeMap<&'static str, f64>,
@@ -84,6 +132,30 @@ pub struct DesResult {
     /// longest (ties -> lowest id) — the one the others idle-wait on at
     /// collectives.
     pub straggler: usize,
+    /// Per-(node, device) start/finish instants.  `Some` from
+    /// [`execute`] / [`execute_reference`] (trace export needs them);
+    /// `None` from the hot [`execute_with`] path, whose scratch keeps
+    /// the matrices for reuse instead.
+    pub times: Option<DesTimes>,
+}
+
+impl DesResult {
+    /// When `node` starts on `dev`.  Panics if times were not retained
+    /// (use [`execute`], not [`execute_with`], when you need them).
+    pub fn start(&self, node: usize, dev: usize) -> f64 {
+        self.times
+            .as_ref()
+            .expect("DesResult::start: times not retained (use events::execute)")
+            .start(node, dev)
+    }
+
+    /// When `node` finishes on `dev`.  Panics if times were not retained.
+    pub fn finish(&self, node: usize, dev: usize) -> f64 {
+        self.times
+            .as_ref()
+            .expect("DesResult::finish: times not retained (use events::execute)")
+            .finish(node, dev)
+    }
 }
 
 /// Candidate source of a start time: (finish, from-comp-stream, node,
@@ -114,13 +186,290 @@ fn consider(best: &mut Option<Cand>, cand: Cand) {
     }
 }
 
-/// Execute `dag` and return times, per-device stats and the
-/// critical-path exposed breakdown.
-pub fn execute(dag: &OpDag) -> DesResult {
+/// "No node" sentinel for the per-stream FIFO predecessor arrays
+/// ([`OpDag`] asserts node counts stay below `u32::MAX`).
+const NONE32: u32 = u32::MAX;
+
+#[inline]
+fn is_comp(dag: &OpDag, i: usize) -> bool {
+    dag.op(i).stream() == Stream::Comp
+}
+
+/// Reusable working memory for [`execute_with`] — flat start/finish
+/// matrices, the collective accumulator row, per-stream FIFO predecessor
+/// ids, interval-accounting buffers, and the critical-path stack.
+///
+/// Owned by the *caller* (one per pricing loop: `sim::PriceState` holds
+/// one per simulation run, each fleet tenant holds one) and reused across
+/// layers and iterations; buffers grow to the largest DAG seen and then
+/// stay allocation-free.  A scratch carries no results between calls —
+/// every buffer is fully rewritten — so reuse is bit-identical to a
+/// fresh scratch (pinned by `scratch_reuse_is_bit_identical`).
+#[derive(Debug, Default)]
+pub struct ExecScratch {
+    /// Row-major start/finish instants: node `i`, device `dev` at
+    /// `i * n_devices + dev`.
+    start: Vec<f64>,
+    finish: Vec<f64>,
+    /// Per-device accumulator row for dependency max-folds.
+    acc: Vec<f64>,
+    /// Previous node on node `i`'s own stream when `i` issued
+    /// (`NONE32` = stream was empty) — enough to recompute any
+    /// predecessor on demand during the critical-path walk.
+    prev: Vec<u32>,
+    comp_iv: Vec<(f64, f64)>,
+    comm_iv: Vec<(f64, f64)>,
+    merged: Vec<(f64, f64)>,
+    all_iv: Vec<(f64, f64)>,
+    path: Vec<(usize, usize)>,
+}
+
+impl ExecScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Recompute the predecessor of `(i, dev)` — the candidate that
+/// determined its start — from the per-stream FIFO ids and dependency
+/// edges.  Exact: the candidate set is identical to the sweep's and the
+/// tie-break is a strict total order, so the argmax is scan-order
+/// independent.
+fn pred_of(dag: &OpDag, finish: &[f64], prev: &[u32], i: usize, dev: usize) -> Option<(usize, usize)> {
+    let d = dag.n_devices;
+    let mut best: Option<Cand> = None;
+    match dag.op(i).stream() {
+        Stream::Comp => {
+            if prev[i] != NONE32 {
+                let p = prev[i] as usize;
+                consider(&mut best, (finish[p * d + dev], true, p, dev));
+            }
+            for dep in dag.deps_of(i) {
+                consider(&mut best, (finish[dep * d + dev], is_comp(dag, dep), dep, dev));
+            }
+        }
+        Stream::Comm => {
+            for dv in 0..d {
+                if prev[i] != NONE32 {
+                    let p = prev[i] as usize;
+                    consider(&mut best, (finish[p * d + dv], false, p, dv));
+                }
+                for dep in dag.deps_of(i) {
+                    consider(&mut best, (finish[dep * d + dv], is_comp(dag, dep), dep, dv));
+                }
+            }
+        }
+    }
+    best.map(|c| (c.2, c.3))
+}
+
+/// Execute `dag` and return per-device stats and the critical-path
+/// exposed breakdown.  Hot path: all working memory comes from
+/// `scratch`, nothing per-(node, device) is allocated, and the result's
+/// `times` is `None` (use [`execute`] when start/finish instants are
+/// needed, e.g. for trace export).
+///
+/// Bit-identical to [`execute_reference`] on every valid DAG — durations
+/// are finite and non-negative ([`OpDag::validate`]), so finish times
+/// are never NaN or -0.0 and the 0.0-seeded `f64::max` folds reproduce
+/// the reference's candidate scans exactly.
+pub fn execute_with(dag: &OpDag, scratch: &mut ExecScratch) -> DesResult {
     debug_assert!(dag.validate().is_ok(), "invalid DAG: {:?}", dag.validate());
     let d = dag.n_devices;
     let n = dag.len();
-    let nodes = dag.nodes();
+    let ExecScratch {
+        start,
+        finish,
+        acc,
+        prev,
+        comp_iv,
+        comm_iv,
+        merged,
+        all_iv,
+        path,
+    } = scratch;
+    // Every cell below is overwritten by the sweep; no zeroing needed.
+    start.resize(n * d, 0.0);
+    finish.resize(n * d, 0.0);
+    acc.resize(d, 0.0);
+    prev.resize(n, NONE32);
+    // Last node issued on each stream — identical on every device (both
+    // sweep arms issue on all devices at once), hence scalars.
+    let mut comp_last = NONE32;
+    let mut comm_last = NONE32;
+
+    for i in 0..n {
+        let dur = dag.dur(i);
+        match dag.op(i).stream() {
+            Stream::Comp => {
+                // Device-local start: max over the comp-stream FIFO
+                // predecessor and every dependency, elementwise per
+                // device.
+                match comp_last {
+                    NONE32 => acc.fill(0.0),
+                    p => acc.copy_from_slice(&finish[p as usize * d..(p as usize + 1) * d]),
+                }
+                for dep in dag.deps_of(i) {
+                    let row = &finish[dep * d..(dep + 1) * d];
+                    for (a, &f) in acc.iter_mut().zip(row) {
+                        *a = a.max(f);
+                    }
+                }
+                start[i * d..(i + 1) * d].copy_from_slice(acc);
+                for dev in 0..d {
+                    finish[i * d + dev] = acc[dev] + dur[dev];
+                }
+                prev[i] = comp_last;
+                comp_last = i as u32;
+            }
+            Stream::Comm => {
+                // Collective: one synchronized start across all devices
+                // — the horizontal max of the same accumulator row.
+                match comm_last {
+                    NONE32 => acc.fill(0.0),
+                    p => acc.copy_from_slice(&finish[p as usize * d..(p as usize + 1) * d]),
+                }
+                for dep in dag.deps_of(i) {
+                    let row = &finish[dep * d..(dep + 1) * d];
+                    for (a, &f) in acc.iter_mut().zip(row) {
+                        *a = a.max(f);
+                    }
+                }
+                let s = acc.iter().copied().fold(0.0f64, f64::max);
+                start[i * d..(i + 1) * d].fill(s);
+                for dev in 0..d {
+                    finish[i * d + dev] = s + dur[dev];
+                }
+                prev[i] = comm_last;
+                comm_last = i as u32;
+            }
+        }
+    }
+
+    // Makespan: flat max over all finishes (all >= 0.0, never -0.0, so
+    // the 0.0 seed is exact); then the terminal (node, device) among the
+    // cells attaining it, same tie-break as the per-start choice.
+    let makespan = finish[..n * d].iter().copied().fold(0.0f64, f64::max);
+    let mut terminal: Option<Cand> = None;
+    for i in 0..n {
+        let ic = is_comp(dag, i);
+        for (dev, &f) in finish[i * d..(i + 1) * d].iter().enumerate() {
+            if f == makespan {
+                consider(&mut terminal, (f, ic, i, dev));
+            }
+        }
+    }
+
+    // Critical path: walk predecessors back from the terminal (each one
+    // recomputed on demand — see `pred_of`), then charge durations in
+    // chronological order (same addition order as
+    // `Schedule::exposed_breakdown` on the barrier lowering).
+    path.clear();
+    let mut cur = terminal.map(|c| (c.2, c.3));
+    while let Some((i, dev)) = cur {
+        path.push((i, dev));
+        cur = pred_of(dag, finish, prev, i, dev);
+    }
+    path.reverse();
+    let mut exposed: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let n_blocks = dag.max_block().map_or(0, |b| b + 1);
+    let mut per_block_exposed = vec![0.0; n_blocks];
+    for &(i, dev) in path.iter() {
+        let dur = dag.dur(i)[dev];
+        if dur > 0.0 {
+            *exposed.entry(dag.op(i).breakdown_key()).or_insert(0.0) += dur;
+            per_block_exposed[dag.op(i).block()] += dur;
+        }
+    }
+
+    // Per-device stream/idle accounting (interval arithmetic over the
+    // placed ops).
+    let mut devices = Vec::with_capacity(d);
+    for dev in 0..d {
+        comp_iv.clear();
+        comm_iv.clear();
+        let mut busy_comp = 0.0;
+        let mut busy_comm = 0.0;
+        let mut dev_finish = 0.0f64;
+        for i in 0..n {
+            let dur = dag.dur(i)[dev];
+            dev_finish = dev_finish.max(finish[i * d + dev]);
+            if dur <= 0.0 {
+                continue;
+            }
+            let iv = (start[i * d + dev], finish[i * d + dev]);
+            match dag.op(i).stream() {
+                Stream::Comp => {
+                    busy_comp += dur;
+                    comp_iv.push(iv);
+                }
+                Stream::Comm => {
+                    busy_comm += dur;
+                    comm_iv.push(iv);
+                }
+            }
+        }
+        merge_into(comp_iv, merged);
+        let exposed_comm: f64 = comm_iv.iter().map(|&iv| uncovered(iv, merged)).sum();
+        all_iv.clear();
+        all_iv.extend_from_slice(merged);
+        all_iv.extend_from_slice(comm_iv);
+        all_iv.sort_by(cmp_iv);
+        let covered = covered_len(all_iv);
+        devices.push(DeviceStats {
+            busy_comp,
+            busy_comm,
+            exposed_comm,
+            idle: (makespan - covered).max(0.0),
+            finish: dev_finish,
+        });
+    }
+    // Straggler: the busiest device (ties -> lowest id).  Synchronized
+    // collectives drag every device's FINISH to nearly the same instant,
+    // so "finishes last" cannot identify the cause; the device whose
+    // streams work longest is the one the others idle-wait on.
+    let mut straggler = 0;
+    for (i, s) in devices.iter().enumerate().skip(1) {
+        let cur = &devices[straggler];
+        if s.busy_comp + s.busy_comm > cur.busy_comp + cur.busy_comm {
+            straggler = i;
+        }
+    }
+
+    DesResult {
+        makespan,
+        exposed,
+        per_block_exposed,
+        devices,
+        straggler,
+        times: None,
+    }
+}
+
+/// Execute `dag` with a private scratch and retain the per-(node,
+/// device) start/finish instants in the result's `times` — the
+/// convenience form for trace export and tests.  Pricing loops should
+/// hold an [`ExecScratch`] and call [`execute_with`] instead.
+pub fn execute(dag: &OpDag) -> DesResult {
+    let mut scratch = ExecScratch::new();
+    let mut r = execute_with(dag, &mut scratch);
+    r.times = Some(DesTimes {
+        n_devices: dag.n_devices,
+        start: std::mem::take(&mut scratch.start),
+        finish: std::mem::take(&mut scratch.finish),
+    });
+    r
+}
+
+/// The pre-arena executor, preserved verbatim as a frozen equivalence
+/// oracle (nested per-node vectors, stored predecessor matrix,
+/// candidate-at-a-time scans).  `prop_execute_matches_reference` pins
+/// [`execute`] / [`execute_with`] to this bit-for-bit; see the module
+/// docs before touching it.
+pub fn execute_reference(dag: &OpDag) -> DesResult {
+    debug_assert!(dag.validate().is_ok(), "invalid DAG: {:?}", dag.validate());
+    let d = dag.n_devices;
+    let n = dag.len();
     let mut start = vec![vec![0.0f64; d]; n];
     let mut finish = vec![vec![0.0f64; d]; n];
     // Which (node, device) determined each start (None = started at 0).
@@ -129,22 +478,20 @@ pub fn execute(dag: &OpDag) -> DesResult {
     let mut comp_last: Vec<Option<usize>> = vec![None; d];
     let mut comm_last: Vec<Option<usize>> = vec![None; d];
 
-    let is_comp = |i: usize| nodes[i].op.stream() == Stream::Comp;
-
-    for (i, node) in nodes.iter().enumerate() {
-        match node.op.stream() {
+    for i in 0..n {
+        match dag.op(i).stream() {
             Stream::Comp => {
                 for dev in 0..d {
                     let mut best: Option<Cand> = None;
                     if let Some(p) = comp_last[dev] {
                         consider(&mut best, (finish[p][dev], true, p, dev));
                     }
-                    for &dep in &node.deps {
-                        consider(&mut best, (finish[dep][dev], is_comp(dep), dep, dev));
+                    for dep in dag.deps_of(i) {
+                        consider(&mut best, (finish[dep][dev], is_comp(dag, dep), dep, dev));
                     }
                     let s = best.map_or(0.0, |c| c.0);
                     start[i][dev] = s;
-                    finish[i][dev] = s + node.dur[dev];
+                    finish[i][dev] = s + dag.dur(i)[dev];
                     pred[i][dev] = best.map(|c| (c.2, c.3));
                     comp_last[dev] = Some(i);
                 }
@@ -156,14 +503,14 @@ pub fn execute(dag: &OpDag) -> DesResult {
                     if let Some(p) = comm_last[dev] {
                         consider(&mut best, (finish[p][dev], false, p, dev));
                     }
-                    for &dep in &node.deps {
-                        consider(&mut best, (finish[dep][dev], is_comp(dep), dep, dev));
+                    for dep in dag.deps_of(i) {
+                        consider(&mut best, (finish[dep][dev], is_comp(dag, dep), dep, dev));
                     }
                 }
                 let s = best.map_or(0.0, |c| c.0);
                 for dev in 0..d {
                     start[i][dev] = s;
-                    finish[i][dev] = s + node.dur[dev];
+                    finish[i][dev] = s + dag.dur(i)[dev];
                     pred[i][dev] = best.map(|c| (c.2, c.3));
                     comm_last[dev] = Some(i);
                 }
@@ -176,14 +523,13 @@ pub fn execute(dag: &OpDag) -> DesResult {
     let mut terminal: Option<Cand> = None;
     for i in 0..n {
         for dev in 0..d {
-            consider(&mut terminal, (finish[i][dev], is_comp(i), i, dev));
+            consider(&mut terminal, (finish[i][dev], is_comp(dag, i), i, dev));
         }
     }
     let makespan = terminal.map_or(0.0, |c| c.0);
 
     // Critical path: walk predecessors back from the terminal, then
-    // charge durations in chronological order (same addition order as
-    // `Schedule::exposed_breakdown` on the barrier lowering).
+    // charge durations in chronological order.
     let mut path: Vec<(usize, usize)> = Vec::new();
     let mut cur = terminal.map(|c| (c.2, c.3));
     while let Some((i, dev)) = cur {
@@ -195,10 +541,10 @@ pub fn execute(dag: &OpDag) -> DesResult {
     let n_blocks = dag.max_block().map_or(0, |b| b + 1);
     let mut per_block_exposed = vec![0.0; n_blocks];
     for &(i, dev) in &path {
-        let dur = nodes[i].dur[dev];
+        let dur = dag.dur(i)[dev];
         if dur > 0.0 {
-            *exposed.entry(nodes[i].op.breakdown_key()).or_insert(0.0) += dur;
-            per_block_exposed[nodes[i].op.block()] += dur;
+            *exposed.entry(dag.op(i).breakdown_key()).or_insert(0.0) += dur;
+            per_block_exposed[dag.op(i).block()] += dur;
         }
     }
 
@@ -211,13 +557,13 @@ pub fn execute(dag: &OpDag) -> DesResult {
         let mut busy_comp = 0.0;
         let mut busy_comm = 0.0;
         let mut dev_finish = 0.0f64;
-        for (i, node) in nodes.iter().enumerate() {
-            let dur = node.dur[dev];
+        for i in 0..n {
+            let dur = dag.dur(i)[dev];
             dev_finish = dev_finish.max(finish[i][dev]);
             if dur <= 0.0 {
                 continue;
             }
-            match node.op.stream() {
+            match dag.op(i).stream() {
                 Stream::Comp => {
                     busy_comp += dur;
                     comp_iv.push((start[i][dev], finish[i][dev]));
@@ -242,10 +588,6 @@ pub fn execute(dag: &OpDag) -> DesResult {
             finish: dev_finish,
         });
     }
-    // Straggler: the busiest device (ties -> lowest id).  Synchronized
-    // collectives drag every device's FINISH to nearly the same instant,
-    // so "finishes last" cannot identify the cause; the device whose
-    // streams work longest is the one the others idle-wait on.
     let mut straggler = 0;
     for (i, s) in devices.iter().enumerate().skip(1) {
         let cur = &devices[straggler];
@@ -254,28 +596,70 @@ pub fn execute(dag: &OpDag) -> DesResult {
         }
     }
 
+    let flat = |m: Vec<Vec<f64>>| m.into_iter().flatten().collect::<Vec<f64>>();
     DesResult {
         makespan,
-        start,
-        finish,
         exposed,
         per_block_exposed,
         devices,
         straggler,
+        times: Some(DesTimes {
+            n_devices: d,
+            start: flat(start),
+            finish: flat(finish),
+        }),
     }
 }
 
-/// Sort and merge half-open busy intervals; returns the disjoint union.
-fn merge(intervals: &mut [(f64, f64)]) -> Vec<(f64, f64)> {
-    intervals.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let mut out: Vec<(f64, f64)> = Vec::with_capacity(intervals.len());
+/// Total order on intervals: lexicographic `f64::total_cmp`.  The old
+/// `partial_cmp(..).unwrap_or(Equal)` made the sort *incomparable*-NaN
+/// dependent on input order; `total_cmp` also fixes -0.0 vs +0.0 to one
+/// deterministic order.  On valid DAGs (finite, >= 0.0 durations) the
+/// two orders agree, so this is bit-identical where it matters and
+/// deterministic everywhere.
+fn cmp_iv(a: &(f64, f64), b: &(f64, f64)) -> std::cmp::Ordering {
+    a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1))
+}
+
+/// Sort `intervals` in place and write their disjoint union into `out`.
+fn merge_into(intervals: &mut [(f64, f64)], out: &mut Vec<(f64, f64)>) {
+    intervals.sort_by(cmp_iv);
+    out.clear();
     for &(a, b) in intervals.iter() {
         match out.last_mut() {
             Some(last) if a <= last.1 => last.1 = last.1.max(b),
             _ => out.push((a, b)),
         }
     }
+}
+
+/// Sort and merge half-open busy intervals; returns the disjoint union.
+fn merge(intervals: &mut [(f64, f64)]) -> Vec<(f64, f64)> {
+    let mut out = Vec::with_capacity(intervals.len());
+    merge_into(intervals, &mut out);
     out
+}
+
+/// Total covered length of sorted intervals — `merge` fused with the
+/// length sum (same merge walk, same addition order), minus the
+/// intermediate vector.
+fn covered_len(sorted: &[(f64, f64)]) -> f64 {
+    let mut total = 0.0f64;
+    let mut cur: Option<(f64, f64)> = None;
+    for &(a, b) in sorted {
+        match cur {
+            Some((ca, cb)) if a <= cb => cur = Some((ca, cb.max(b))),
+            Some((ca, cb)) => {
+                total += cb - ca;
+                cur = Some((a, b));
+            }
+            None => cur = Some((a, b)),
+        }
+    }
+    if let Some((ca, cb)) = cur {
+        total += cb - ca;
+    }
+    total
 }
 
 /// Length of `iv` not covered by the disjoint sorted `cover` intervals.
@@ -304,6 +688,35 @@ mod tests {
         OpInstance::new(op, dur)
     }
 
+    /// Bitwise comparison of everything a DesResult reports, including
+    /// the times when both sides retain them.
+    fn assert_bit_eq(a: &DesResult, b: &DesResult) {
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(
+            a.exposed.keys().collect::<Vec<_>>(),
+            b.exposed.keys().collect::<Vec<_>>()
+        );
+        for (k, v) in &a.exposed {
+            assert_eq!(v.to_bits(), b.exposed[k].to_bits(), "exposed[{k}]");
+        }
+        assert_eq!(a.per_block_exposed.len(), b.per_block_exposed.len());
+        for (x, y) in a.per_block_exposed.iter().zip(&b.per_block_exposed) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.devices.len(), b.devices.len());
+        for (x, y) in a.devices.iter().zip(&b.devices) {
+            assert_eq!(x.busy_comp.to_bits(), y.busy_comp.to_bits());
+            assert_eq!(x.busy_comm.to_bits(), y.busy_comm.to_bits());
+            assert_eq!(x.exposed_comm.to_bits(), y.exposed_comm.to_bits());
+            assert_eq!(x.idle.to_bits(), y.idle.to_bits());
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
+        assert_eq!(a.straggler, b.straggler);
+        if let (Some(ta), Some(tb)) = (&a.times, &b.times) {
+            assert_eq!(ta, tb);
+        }
+    }
+
     #[test]
     fn empty_dag_is_trivial() {
         let r = execute(&OpDag::new(4));
@@ -311,6 +724,7 @@ mod tests {
         assert_eq!(r.devices.len(), 4);
         assert!(r.exposed.is_empty());
         assert_eq!(r.straggler, 0);
+        assert_bit_eq(&r, &execute_reference(&OpDag::new(4)));
     }
 
     #[test]
@@ -337,7 +751,7 @@ mod tests {
         dag.push_uniform(Op::Fec { block: 0 }, 2.0, vec![a]);
         let r = execute(&dag);
         assert_eq!(r.makespan, 3.0);
-        assert_eq!(r.start[1][0], 1.0);
+        assert_eq!(r.start(1, 0), 1.0);
         assert_eq!(r.exposed.get("a2a"), Some(&1.0));
         assert_eq!(r.exposed.get("expert_comp"), Some(&2.0));
         // Comm had nothing to hide under: fully exposed on the device.
@@ -352,7 +766,7 @@ mod tests {
         let f = dag.push(Op::Fec { block: 0 }, vec![1.0, 3.0], vec![]);
         dag.push(Op::A2a { block: 0, phase: A2aPhase::FwdCombine }, vec![0.5, 0.5], vec![f]);
         let r = execute(&dag);
-        assert_eq!(r.start[1][0], 3.0, "device 0 waits for device 1's FEC");
+        assert_eq!(r.start(1, 0), 3.0, "device 0 waits for device 1's FEC");
         assert_eq!(r.makespan, 3.5);
         assert_eq!(r.straggler, 1);
         // Device 0 idles from 1.0 to 3.0.
@@ -368,8 +782,8 @@ mod tests {
         let f = dag.push(Op::Fec { block: 0 }, vec![1.0, 3.0], vec![]);
         dag.push(Op::Fnec { block: 0 }, vec![1.0, 1.0], vec![f]);
         let r = execute(&dag);
-        assert_eq!(r.start[1][0], 1.0);
-        assert_eq!(r.start[1][1], 3.0);
+        assert_eq!(r.start(1, 0), 1.0);
+        assert_eq!(r.start(1, 1), 3.0);
         assert_eq!(r.makespan, 4.0);
     }
 
@@ -425,11 +839,63 @@ mod tests {
     }
 
     #[test]
+    fn matches_reference_on_mixed_dag() {
+        // Collectives, device-local chains, zero durations, straggler
+        // ties — one DAG exercising every arm against the frozen oracle.
+        let mut dag = OpDag::new(3);
+        let a = dag.push(Op::A2a { block: 0, phase: A2aPhase::FwdDispatch }, vec![0.5, 1.0, 0.0], vec![]);
+        let f = dag.push(Op::Fec { block: 0 }, vec![2.0, 1.0, 1.5], vec![a]);
+        let t = dag.push(Op::Trans { block: 1, part: 0 }, vec![0.3, 0.3, 0.3], vec![]);
+        let c = dag.push(Op::A2a { block: 0, phase: A2aPhase::FwdCombine }, vec![0.25, 0.5, 0.25], vec![f, t]);
+        dag.push(Op::Fnec { block: 1 }, vec![1.0, 0.0, 1.0], vec![c]);
+        assert_bit_eq(&execute(&dag), &execute_reference(&dag));
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // One scratch across DAGs of different shapes/sizes (including
+        // shrinking) — every result matches a fresh-scratch run bitwise.
+        let mut big = OpDag::new(4);
+        let f = big.push(Op::Fec { block: 0 }, vec![1.0, 2.0, 3.0, 4.0], vec![]);
+        let a = big.push(Op::A2a { block: 0, phase: A2aPhase::FwdCombine }, vec![0.5; 4], vec![f]);
+        big.push(Op::Fnec { block: 0 }, vec![2.0, 1.0, 1.0, 1.0], vec![a]);
+        let mut small = OpDag::new(2);
+        small.push(Op::Fec { block: 0 }, vec![9.0, 1.0], vec![]);
+        let mut scratch = ExecScratch::new();
+        for dag in [&big, &small, &big] {
+            let hot = execute_with(dag, &mut scratch);
+            assert!(hot.times.is_none(), "hot path must not retain times");
+            assert_bit_eq(&hot, &execute(dag));
+        }
+    }
+
+    #[test]
     fn interval_helpers() {
         let mut iv = vec![(2.0, 3.0), (0.0, 1.0), (0.5, 1.5)];
         assert_eq!(merge(&mut iv), vec![(0.0, 1.5), (2.0, 3.0)]);
         assert_eq!(uncovered((0.0, 4.0), &[(0.0, 1.5), (2.0, 3.0)]), 1.5);
         assert_eq!(uncovered((1.5, 2.0), &[(0.0, 1.5), (2.0, 3.0)]), 0.5);
         assert_eq!(uncovered((0.0, 1.0), &[(0.0, 2.0)]), 0.0);
+        assert_eq!(covered_len(&[(0.0, 1.0), (0.5, 1.5), (2.0, 3.0)]), 2.5);
+    }
+
+    #[test]
+    fn merge_order_is_total_on_nan_and_negative_zero() {
+        // Regression for the old partial_cmp(..).unwrap_or(Equal) sort:
+        // incomparable NaNs made the merged output depend on input
+        // order.  total_cmp gives one answer for every permutation.
+        let base = [(f64::NAN, 1.0), (-0.0, 0.5), (0.0, 0.25)];
+        let mut a = vec![base[0], base[1], base[2]];
+        let mut b = vec![base[2], base[0], base[1]];
+        let bits = |v: &[(f64, f64)]| {
+            v.iter().map(|&(x, y)| (x.to_bits(), y.to_bits())).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&merge(&mut a)), bits(&merge(&mut b)));
+        // -0.0 sorts before +0.0 (total order), deterministically.
+        let mut c = vec![(0.0, 0.25), (-0.0, 0.5)];
+        let m = merge(&mut c);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].0.to_bits(), (-0.0f64).to_bits());
+        assert_eq!(m[0].1, 0.5);
     }
 }

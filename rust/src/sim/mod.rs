@@ -293,7 +293,7 @@ impl CheckpointConfig {
 /// Extended options for [`simulate_policy_faulted`].  `Default` is the
 /// plain run: no faults, no checkpointing, full trace — bit-identical to
 /// [`simulate_policy_with`] (which is now a thin wrapper over it).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct SimOptions {
     /// Fault events injected into the run
     /// ([`FaultTimeline::empty`] = none).
@@ -304,6 +304,25 @@ pub struct SimOptions {
     /// the kill-and-resume contract, deterministic enough to test.  The
     /// partial report is returned as-is.
     pub stop_after: Option<usize>,
+    /// Incremental re-pricing: reuse the previous iteration's priced DES
+    /// result when every pricing input (per-layer placements, cost
+    /// inputs, fault view) is unchanged — see [`price_iteration`] for
+    /// the exact invalidation rule.  Hits are bit-identical to
+    /// re-pricing and counted by the `sim.des_reuse` metric.  On by
+    /// default; turn off to force full pricing every iteration.
+    pub des_reuse: bool,
+}
+
+// Manual impl: a derived Default would set `des_reuse: false`.
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            faults: FaultTimeline::empty(),
+            checkpoint: None,
+            stop_after: None,
+            des_reuse: true,
+        }
+    }
 }
 
 impl SimOptions {
@@ -315,6 +334,7 @@ impl SimOptions {
             faults: &self.faults,
             checkpoint: self.checkpoint.as_ref(),
             stop_after: self.stop_after,
+            des_reuse: self.des_reuse,
         }
     }
 }
@@ -330,12 +350,14 @@ pub struct SimOptionsRef<'a> {
     pub checkpoint: Option<&'a CheckpointConfig>,
     /// Stop after this many completed iterations.
     pub stop_after: Option<usize>,
+    /// Incremental re-pricing (see [`SimOptions::des_reuse`]).
+    pub des_reuse: bool,
 }
 
 impl<'a> SimOptionsRef<'a> {
     /// Faults only — the common fleet/CLI case.
     pub fn faults_only(faults: &'a FaultTimeline) -> Self {
-        SimOptionsRef { faults, checkpoint: None, stop_after: None }
+        SimOptionsRef { faults, checkpoint: None, stop_after: None, des_reuse: true }
     }
 }
 
@@ -353,7 +375,7 @@ struct LayerOutcome {
 /// One routing pass per side: the identity route for the "before"
 /// balance degree, and `priced_block_styled`'s single pass for costs AND
 /// the "after" balance degree.
-fn price_layer(eng: &Engine, w: &LoadMatrix, d: Decision) -> LayerOutcome {
+fn price_layer(eng: &Engine, w: &LoadMatrix, d: &Decision) -> LayerOutcome {
     let routed_before = w.route_identity();
     let unicast = d.comm_style == CommStyle::Coarse;
     let (costs, dev_costs, routed_after) =
@@ -369,31 +391,34 @@ fn price_layer(eng: &Engine, w: &LoadMatrix, d: Decision) -> LayerOutcome {
 }
 
 /// Per-device durations of one schedule op, from the engine's
-/// [`DeviceBlockCosts`].  `Trans`/`Agg` sub-operators carry a fraction of
-/// their block's scalar total; every device contributes the same fraction
-/// of its own share.  `Plan` runs on the host and stays uniform.
-fn device_durations(
+/// [`DeviceBlockCosts`], written straight into the node's arena row (no
+/// per-op `Vec`).  `Trans`/`Agg` sub-operators carry a fraction of their
+/// block's scalar total; every device contributes the same fraction of
+/// its own share.  `Plan` runs on the host and stays uniform.
+fn device_durations_into(
     op: &OpInstance,
     scalar: &[BlockCosts],
     device: &[DeviceBlockCosts],
-    n_devices: usize,
-) -> Vec<f64> {
+    out: &mut [f64],
+) {
     let b = op.op.block().min(scalar.len() - 1);
     let (dev, total) = match op.op {
-        Op::Plan { .. } => return vec![op.dur; n_devices],
-        Op::A2a { .. } => return device[b].a2a.clone(),
-        Op::Fec { .. } => return device[b].fec.clone(),
-        Op::Bec { .. } => return device[b].bec.clone(),
-        Op::Fnec { .. } => return device[b].fnec.clone(),
-        Op::Bnec { .. } => return device[b].bnec.clone(),
+        Op::Plan { .. } => return out.fill(op.dur),
+        Op::A2a { .. } => return out.copy_from_slice(&device[b].a2a),
+        Op::Fec { .. } => return out.copy_from_slice(&device[b].fec),
+        Op::Bec { .. } => return out.copy_from_slice(&device[b].bec),
+        Op::Fnec { .. } => return out.copy_from_slice(&device[b].fnec),
+        Op::Bnec { .. } => return out.copy_from_slice(&device[b].bnec),
         Op::Trans { .. } => (&device[b].trans, scalar[b].trans),
         Op::Agg { .. } => (&device[b].agg, scalar[b].agg),
     };
     if total <= 0.0 {
-        return vec![0.0; n_devices];
+        return out.fill(0.0);
     }
     let frac = op.dur / total;
-    dev.iter().map(|&t| t * frac).collect()
+    for (o, &t) in out.iter_mut().zip(dev) {
+        *o = t * frac;
+    }
 }
 
 /// Lower a barrier [`Schedule`] onto the engine's per-device block costs:
@@ -409,14 +434,15 @@ pub fn dag_from_schedule_with_costs(
     device: &[DeviceBlockCosts],
     n_devices: usize,
 ) -> OpDag {
-    dag::from_schedule_with(schedule, n_devices, |op| {
-        device_durations(op, scalar, device, n_devices)
+    dag::from_schedule_with(schedule, n_devices, |op, row| {
+        device_durations_into(op, scalar, device, row)
     })
 }
 
 /// One fully priced iteration: the frozen barrier schedule, its
 /// device-level lowering (or, for [`ScheduleKind::DagRelaxed`], the
 /// relaxed Algorithm-2 DAG), and the executed event timeline.
+#[derive(Clone)]
 struct PricedIteration {
     schedule: Schedule,
     des: DesResult,
@@ -426,21 +452,131 @@ struct PricedIteration {
     trans_copies: u64,
 }
 
+/// Exact key of one layer's pricing inputs, for the incremental
+/// re-pricing cache.  Placement identity is the `Arc` pointer (PR 2's
+/// plan cache hands out the same `Arc` while a plan is reused, so
+/// pointer equality is both cheap and exact — a re-planned layer
+/// allocates a new `Arc` even if the placement is coincidentally equal,
+/// which only costs a cache miss, never a wrong hit).
+struct DecisionKey {
+    placement: std::sync::Arc<Placement>,
+    plan_cost: u64,
+    comm_style: CommStyle,
+    schedule_kind: ScheduleKind,
+}
+
+impl DecisionKey {
+    fn of(d: &Decision) -> Self {
+        DecisionKey {
+            placement: d.placement.clone(),
+            plan_cost: d.plan_cost.to_bits(),
+            comm_style: d.comm_style,
+            schedule_kind: d.schedule_kind,
+        }
+    }
+
+    fn matches(&self, d: &Decision) -> bool {
+        std::sync::Arc::ptr_eq(&self.placement, &d.placement)
+            && self.plan_cost == d.plan_cost.to_bits()
+            && self.comm_style == d.comm_style
+            && self.schedule_kind == d.schedule_kind
+    }
+}
+
+/// Everything the previous iteration's pricing depended on, plus its
+/// result.  Reusable iff EVERY input matches exactly (see
+/// [`price_iteration`]'s invalidation rule).
+struct PriceCache {
+    layers: Vec<LoadMatrix>,
+    keys: Vec<DecisionKey>,
+    view: Option<FaultView>,
+    priced: PricedIteration,
+    n_events: u64,
+}
+
+/// Cross-iteration pricing state owned by one simulation run (or one
+/// fleet tenant): the reusable DES [`events::ExecScratch`] and the
+/// incremental re-pricing cache.  Not shared between runs — the cache
+/// key contains `Arc` pointer identities that only mean anything within
+/// one session's plan cache.
+pub struct PriceState {
+    scratch: events::ExecScratch,
+    reuse_enabled: bool,
+    cache: Option<PriceCache>,
+}
+
+impl PriceState {
+    /// `des_reuse` gates the cache ([`SimOptions::des_reuse`]); the
+    /// scratch is always used.
+    pub fn new(des_reuse: bool) -> Self {
+        PriceState { scratch: events::ExecScratch::new(), reuse_enabled: des_reuse, cache: None }
+    }
+
+    /// Drop the cached iteration (scratch buffers survive).  Call after
+    /// anything that re-creates the session or changes the cluster under
+    /// the same state (the fleet calls this on tenant resize).
+    pub fn reset(&mut self) {
+        self.cache = None;
+    }
+}
+
+/// Decide + price one iteration.
+///
+/// The **decide** phase always runs — `decide_layer` is where plan
+/// caching, drift handling, and the plans_run/reused counters live, and
+/// the decisions are the cache key.  The **pricing** phase (routing
+/// sweep, cost build, schedule, DAG lowering, DES) is skipped when the
+/// previous iteration's pricing inputs match exactly:
+///
+/// * same layer count, and per layer: `Arc`-pointer-equal placement,
+///   bit-equal `plan_cost`, equal comm style and schedule kind;
+/// * per layer, an *equal* [`LoadMatrix`] (`PartialEq` on shape + loads);
+/// * an equal fault view (including both `None`).
+///
+/// A hit returns a clone of the cached [`PricedIteration`] — bit-identical
+/// to re-pricing, because pricing is a pure function of exactly those
+/// inputs (the engine is fixed for the run; fleet resize calls
+/// [`PriceState::reset`]) — bumps `sim.des_reuse`, and re-emits the
+/// iteration-shaped `des.events`/`des.makespan_s` metrics.  The returned
+/// `OpDag` is `None` on a hit (nothing was lowered).
 fn price_iteration(
     eng: &Engine,
     pm: &PerfModel,
     session: &BalancerSession,
     layers: &[LoadMatrix],
+    view: &Option<FaultView>,
     rec: &dyn Recorder,
-) -> (PricedIteration, OpDag) {
+    state: &mut PriceState,
+) -> (PricedIteration, Option<OpDag>) {
     let n_layers = layers.len();
     let n_devices = eng.cluster.n_devices();
-    // Phase 1 (parallel across layers): decide placements and price the
-    // block operators.
     let work = layers.first().map_or(1, |w| w.n_devices() * w.n_experts());
+    // Phase 1a (parallel across layers): decide placements.
+    let decisions: Vec<Decision> =
+        threads::par_map(n_layers, work, |l| session.decide_layer(l, &layers[l], pm));
+
+    // Incremental re-pricing: cheap identity checks first, the
+    // LoadMatrix comparison last.
+    if let Some(cache) = &state.cache {
+        if cache.keys.len() == n_layers
+            && cache.view == *view
+            && cache.keys.iter().zip(&decisions).all(|(k, d)| k.matches(d))
+            && cache.layers.iter().zip(layers).all(|(a, b)| a == b)
+        {
+            if rec.enabled() {
+                rec.counter("sim.des_reuse", Labels::None, 1);
+                // Keep the per-iteration metric stream shaped like a
+                // priced iteration.
+                rec.counter("des.events", Labels::None, cache.n_events);
+                rec.gauge("des.makespan_s", Labels::None, cache.priced.des.makespan);
+            }
+            return (cache.priced.clone(), None);
+        }
+    }
+
+    // Phase 1b (parallel across layers): price the block operators.
     let outcomes: Vec<LayerOutcome> = threads::par_map(n_layers, work, |l| {
-        let w = &layers[l];
-        price_layer(eng, w, session.decide_layer(l, w, pm))
+        price_layer(eng, &layers[l], &decisions[l])
     });
 
     let kind = outcomes[0].schedule;
@@ -489,18 +625,26 @@ fn price_iteration(
     debug_assert!(op_dag.validate().is_ok());
     let des = {
         let _sp = Span::enter(rec, "des.execute", Labels::None);
-        events::execute(&op_dag)
+        events::execute_with(&op_dag, &mut state.scratch)
     };
+    let n_events = (op_dag.len() * n_devices) as u64;
     if rec.enabled() {
         // The DES walks every (op, device) pair once.
-        rec.counter("des.events", Labels::None, (op_dag.len() * n_devices) as u64);
+        rec.counter("des.events", Labels::None, n_events);
         rec.gauge("des.makespan_s", Labels::None, des.makespan);
     }
 
-    (
-        PricedIteration { schedule, des, kind, bal_before, bal_after, trans_copies },
-        op_dag,
-    )
+    let priced = PricedIteration { schedule, des, kind, bal_before, bal_after, trans_copies };
+    if state.reuse_enabled {
+        state.cache = Some(PriceCache {
+            layers: layers.to_vec(),
+            keys: decisions.iter().map(DecisionKey::of).collect(),
+            view: view.clone(),
+            priced: priced.clone(),
+            n_events,
+        });
+    }
+    (priced, Some(op_dag))
 }
 
 /// Simulate `trace` under any [`BalancingPolicy`].
@@ -661,6 +805,7 @@ pub(crate) fn price_and_observe(
     view: &Option<FaultView>,
     layers: &[LoadMatrix],
     rec: &dyn Recorder,
+    state: &mut PriceState,
 ) -> IterationResult {
     let n_layers = layers.len();
     let fault_active = view.is_some();
@@ -669,13 +814,15 @@ pub(crate) fn price_and_observe(
             // Price on a temporary fault-effective engine: per-device
             // compute costs scale by the composed slowdown vector, a
             // down device (slowdown 0) contributes no work and the
-            // failover replicas carry its load.
+            // failover replicas carry its load.  The fault view is part
+            // of the re-pricing cache key, so an engine rebuilt from an
+            // UNCHANGED view prices identically and may reuse.
             let eff_cluster = v.effective_cluster(eng.cluster);
             let eff_pm = v.effective_perf_model(eng.pm);
             let eff_eng = Engine::new(&eff_cluster, &eff_pm);
-            price_iteration(&eff_eng, &eff_pm, session, layers, rec)
+            price_iteration(&eff_eng, &eff_pm, session, layers, view, rec, state)
         }
-        None => price_iteration(eng, eng.pm, session, layers, rec),
+        None => price_iteration(eng, eng.pm, session, layers, view, rec, state),
     };
 
     // Phase 2 (sequential): the session's observe→score→drift→
@@ -768,6 +915,7 @@ pub fn simulate_policy_opts(
     let heterogeneous = cluster.is_heterogeneous();
     let mut session = BalancerSession::with_recorder(policy, n_layers, rec.clone());
     let mut report = SimReport { policy: session.policy_name(), ..Default::default() };
+    let mut price = PriceState::new(opts.des_reuse);
 
     // Resume: restore the completed iterations' results verbatim, then
     // replay their decide/observe sequence to rebuild the session.
@@ -791,9 +939,15 @@ pub fn simulate_policy_opts(
         let sp_iter = Span::enter(&*rec, "sim.iteration", Labels::None);
 
         let view = fault_view_for(&mut session, faults, cluster, iter_index, Some(&*rec))?;
-        report
-            .iters
-            .push(price_and_observe(&eng, heterogeneous, &mut session, &view, layers, &*rec));
+        report.iters.push(price_and_observe(
+            &eng,
+            heterogeneous,
+            &mut session,
+            &view,
+            layers,
+            &*rec,
+            &mut price,
+        ));
 
         // Snapshot on the period boundary and right before a graceful
         // stop; a finished run has nothing to resume, so the last
@@ -862,16 +1016,23 @@ pub fn iteration_des_faulted(
     for (i, layers) in trace.iterations.iter().enumerate() {
         if i == index {
             let view = fault_view_for(&mut session, faults, cluster, i, None).ok()?;
-            let (priced, op_dag) = match &view {
+            let mut price = PriceState::new(false);
+            let (_, op_dag) = match &view {
                 Some(v) => {
                     let eff_cluster = v.effective_cluster(cluster);
                     let eff_pm = v.effective_perf_model(&pm);
                     let eff_eng = Engine::new(&eff_cluster, &eff_pm);
-                    price_iteration(&eff_eng, &eff_pm, &session, layers, obs::noop())
+                    price_iteration(&eff_eng, &eff_pm, &session, layers, &view, obs::noop(), &mut price)
                 }
-                None => price_iteration(&eng, &pm, &session, layers, obs::noop()),
+                None => {
+                    price_iteration(&eng, &pm, &session, layers, &view, obs::noop(), &mut price)
+                }
             };
-            return Some((op_dag, priced.des));
+            let op_dag = op_dag.expect("re-pricing disabled: the DAG is always built");
+            // Re-execute on the cold path to retain per-(node, device)
+            // times for trace export (bit-identical to the hot result).
+            let des = events::execute(&op_dag);
+            return Some((op_dag, des));
         }
         replay_iteration(&mut session, &pm, cluster, faults, i, layers);
     }

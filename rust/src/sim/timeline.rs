@@ -166,9 +166,12 @@ pub fn to_chrome_trace_des_bounded_with_instants(
             ]));
         }
     }
-    for (i, node) in dag.nodes().iter().enumerate() {
-        for dev in 0..dag.n_devices {
-            if node.dur[dev] <= 0.0 {
+    // Straight over the SoA arena: one duration row per node, no
+    // per-node or per-device temporaries.
+    for i in 0..dag.len() {
+        let op = dag.op(i);
+        for (dev, &dur) in dag.dur(i).iter().enumerate() {
+            if dur <= 0.0 {
                 continue;
             }
             stats.total_ops += 1;
@@ -177,12 +180,12 @@ pub fn to_chrome_trace_des_bounded_with_instants(
             }
             stats.emitted_ops += 1;
             events.push(json::obj(vec![
-                ("name", json::s(&format!("{:?}", node.op))),
+                ("name", json::s(&format!("{op:?}"))),
                 ("ph", json::s("X")),
-                ("ts", json::num(des.start[i][dev] * 1e6)),
-                ("dur", json::num((node.dur[dev] * 1e6).max(0.01))),
+                ("ts", json::num(des.start(i, dev) * 1e6)),
+                ("dur", json::num((dur * 1e6).max(0.01))),
                 ("pid", json::num(1.0)),
-                ("tid", json::num(des_tid(dev, node.op.stream()))),
+                ("tid", json::num(des_tid(dev, op.stream()))),
             ]));
         }
     }

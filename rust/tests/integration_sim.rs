@@ -63,6 +63,74 @@ fn one_routing_pass_per_layer_for_every_schedule_kind() {
 }
 
 #[test]
+fn unchanged_placement_iterations_take_the_des_reuse_fast_path() {
+    // Incremental re-pricing: on a constant trace with lazy replanning
+    // the per-layer decision stabilises after iteration 1 (same cached
+    // `Arc<Placement>`, plan_cost 0, same cost inputs, no fault view),
+    // so iterations 2..6 must skip DES pricing entirely — observable as
+    // the `sim.des_reuse` counter and exactly two `des.execute` span
+    // samples — while the priced report stays byte-identical to a run
+    // with reuse disabled.
+    use pro_prophet::balancer::builtin::ProProphet;
+    use pro_prophet::moe::LoadMatrix;
+    use pro_prophet::obs::{Labels, TelemetryHub};
+    use pro_prophet::planner::PlannerConfig;
+    use pro_prophet::sim::{checkpoint, simulate_policy_faulted, SimOptions};
+    use std::sync::Arc;
+
+    let d = 4;
+    let model = ModelSpec::moe_gpt_s(d, 1, 4096);
+    let cluster = ClusterSpec::hpwnv(1);
+    let mut trace = Trace::new(1, d, d);
+    for _ in 0..6 {
+        trace.push(vec![LoadMatrix::from_rows(vec![vec![600, 100, 100, 224]; d])]);
+    }
+    let opts = ProphetOptions {
+        planner: PlannerConfig { replan_interval: 1000, ..Default::default() },
+        ..Default::default()
+    };
+
+    let hub = Arc::new(TelemetryHub::new());
+    let on = simulate_policy_faulted(
+        &model,
+        &cluster,
+        &trace,
+        Box::new(ProProphet::new(opts.clone())),
+        hub.clone(),
+        &SimOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(on.iters.len(), 6);
+    // Iteration 0 runs the search (plan_cost > 0) and misses; iteration
+    // 1 keys the cached-plan decision (plan_cost 0) and misses; 2..6 hit.
+    assert_eq!(
+        hub.counter_total("sim.des_reuse", Labels::None),
+        4,
+        "iterations 2..6 must take the re-pricing fast path"
+    );
+    let execute = hub.span_agg("des.execute", Labels::None).expect("execute span recorded");
+    assert_eq!(execute.count, 2, "DES must run only on the two cache misses");
+    // Cache hits re-emit the stored event count so the metric stream
+    // keeps its per-iteration shape.
+    assert!(hub.counter_total("des.events", Labels::None) > 0);
+
+    let off = simulate_policy_faulted(
+        &model,
+        &cluster,
+        &trace,
+        Box::new(ProProphet::new(opts)),
+        pro_prophet::obs::noop_arc(),
+        &SimOptions { des_reuse: false, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(
+        checkpoint::report_to_json(&on).to_string(),
+        checkpoint::report_to_json(&off).to_string(),
+        "disabling des_reuse must not change the priced report"
+    );
+}
+
+#[test]
 fn dag_relaxed_wins_extend_to_stragglers() {
     // On a straggler cluster the relaxed mode still beats doing nothing,
     // and its barrier comparison column records what the frozen model

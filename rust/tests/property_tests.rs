@@ -14,7 +14,7 @@ use pro_prophet::planner::{
 use pro_prophet::scheduler::blockwise::SplitMode;
 use pro_prophet::scheduler::{
     build_blocking, build_blockwise, build_blockwise_dag, dag, relaxed_makespan_bound,
-    BlockCosts, DeviceBlockCosts, LoadBalanceOps, Stream,
+    BlockCosts, DeviceBlockCosts, LoadBalanceOps, Op, OpDag, Stream,
 };
 use pro_prophet::sim::{dag_from_schedule_with_costs, events, Engine};
 use pro_prophet::util::prop::{self, Cases};
@@ -382,22 +382,24 @@ fn prop_blockwise_dag_acyclic_and_causal() {
         let des_dag = build_blockwise_dag(&blocks, mode);
         des_dag.validate().unwrap();
         let des = events::execute(&des_dag);
-        for (i, node) in des_dag.nodes().iter().enumerate() {
+        for i in 0..des_dag.len() {
+            let op = des_dag.op(i);
+            let dur = des_dag.dur(i);
             for dev in 0..d {
                 assert!(
-                    (des.finish[i][dev] - des.start[i][dev] - node.dur[dev]).abs() < 1e-12,
+                    (des.finish(i, dev) - des.start(i, dev) - dur[dev]).abs() < 1e-12,
                     "node {i} duration accounting"
                 );
-                for &dep in &node.deps {
-                    match node.op.stream() {
+                for dep in des_dag.deps_of(i) {
+                    match op.stream() {
                         Stream::Comp => assert!(
-                            des.start[i][dev] >= des.finish[dep][dev] - 1e-12,
+                            des.start(i, dev) >= des.finish(dep, dev) - 1e-12,
                             "comp node {i} starts before dep {dep} on device {dev}"
                         ),
                         Stream::Comm => {
                             for dv in 0..d {
                                 assert!(
-                                    des.start[i][dev] >= des.finish[dep][dv] - 1e-12,
+                                    des.start(i, dev) >= des.finish(dep, dv) - 1e-12,
                                     "collective {i} starts before dep {dep} on device {dv}"
                                 );
                             }
@@ -416,6 +418,113 @@ fn prop_blockwise_dag_acyclic_and_causal() {
         );
         let per_block: f64 = des.per_block_exposed.iter().sum();
         assert!((per_block - des.makespan).abs() < 1e-9 * des.makespan.max(1e-9));
+    });
+}
+
+/// Bitwise DES-result comparison: every field of [`events::DesResult`]
+/// must match exactly (f64s by `to_bits`; no NaN / −0.0 can occur on
+/// valid DAGs, so `==` on device stats is bit-equality too).  Start and
+/// finish instants are compared when both results retained them.
+fn assert_des_bit_eq(
+    a: &events::DesResult,
+    b: &events::DesResult,
+    n: usize,
+    d: usize,
+    what: &str,
+) {
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{what}: makespan");
+    assert_eq!(
+        a.exposed.iter().map(|(k, v)| (*k, v.to_bits())).collect::<Vec<_>>(),
+        b.exposed.iter().map(|(k, v)| (*k, v.to_bits())).collect::<Vec<_>>(),
+        "{what}: exposed breakdown"
+    );
+    assert_eq!(
+        a.per_block_exposed.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        b.per_block_exposed.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "{what}: per-block exposed"
+    );
+    assert_eq!(a.devices, b.devices, "{what}: device stats");
+    assert_eq!(a.straggler, b.straggler, "{what}: straggler");
+    if a.times.is_some() && b.times.is_some() {
+        for i in 0..n {
+            for dev in 0..d {
+                assert_eq!(
+                    a.start(i, dev).to_bits(),
+                    b.start(i, dev).to_bits(),
+                    "{what}: start[{i}][{dev}]"
+                );
+                assert_eq!(
+                    a.finish(i, dev).to_bits(),
+                    b.finish(i, dev).to_bits(),
+                    "{what}: finish[{i}][{dev}]"
+                );
+            }
+        }
+    }
+}
+
+/// Three-way equivalence gate on one DAG: allocating `execute`, the
+/// frozen `execute_reference`, and the hot `execute_with` over a scratch
+/// reused across every case and shape this test generates.
+fn assert_executors_agree(dag: &OpDag, scratch: &mut events::ExecScratch, what: &str) {
+    let d = dag.n_devices;
+    let fresh = events::execute(dag);
+    let reference = events::execute_reference(dag);
+    assert_des_bit_eq(&fresh, &reference, dag.len(), d, &format!("{what} (vs reference)"));
+    let hot = events::execute_with(dag, scratch);
+    assert!(hot.times.is_none(), "{what}: hot path must not retain times");
+    assert_des_bit_eq(&hot, &reference, dag.len(), d, &format!("{what} (scratch reuse)"));
+}
+
+#[test]
+fn prop_execute_matches_reference() {
+    // The arena/scratch executor is a bit-exact refactor of the frozen
+    // pre-arena implementation over ANY valid DAG: random unstructured
+    // DAGs (mixed comp/comm ops, random backward dep subsets, durations
+    // including exact zeros), barrier lowerings of random builder
+    // schedules, and random Algorithm-2 relaxed DAGs — makespan,
+    // breakdowns, device stats, straggler, and every start/finish
+    // instant bitwise, with ONE ExecScratch carried across all cases
+    // (stale capacity or contents must never leak between runs).
+    let mut scratch = events::ExecScratch::new();
+    Cases::new(64).run(move |rng| {
+        // Unstructured random DAG.
+        let d = 1 + rng.below(8);
+        let n = 1 + rng.below(30);
+        let mut random_dag = OpDag::new(d);
+        for i in 0..n {
+            let block = rng.below(3);
+            let op = match rng.below(6) {
+                0 => Op::Fec { block },
+                1 => Op::Bnec { block },
+                2 => Op::Plan { block },
+                3 => Op::Trans { block, part: rng.below(2) as u8 },
+                4 => Op::Agg { block, part: rng.below(2) as u8 },
+                _ => Op::Fnec { block },
+            };
+            let dur: Vec<f64> = (0..d)
+                .map(|_| if rng.below(5) == 0 { 0.0 } else { rng.f64() * 0.01 })
+                .collect();
+            let deps: Vec<usize> = (0..i).filter(|_| rng.below(4) == 0).collect();
+            random_dag.push(op, dur, deps);
+        }
+        random_dag.validate().unwrap();
+        assert_executors_agree(&random_dag, &mut scratch, "random DAG");
+
+        // Barrier lowering of a random builder schedule (compressed
+        // stage-barrier edges exercise the (lo, hi) range path).
+        let n_blocks = 1 + rng.below(6);
+        let blocks: Vec<BlockCosts> = (0..n_blocks).map(|_| random_block_costs(rng)).collect();
+        let lowered = dag::from_schedule(&build_blockwise(&blocks), d);
+        assert_executors_agree(&lowered, &mut scratch, "barrier lowering");
+
+        // Random relaxed Algorithm-2 DAG (explicit CSR edges only).
+        let devs: Vec<DeviceBlockCosts> =
+            (0..n_blocks).map(|_| random_device_costs(rng, d)).collect();
+        let mode = [SplitMode::Split, SplitMode::ExpertOnly, SplitMode::NonExpertOnly]
+            [rng.below(3)];
+        let relaxed = build_blockwise_dag(&devs, mode);
+        assert_executors_agree(&relaxed, &mut scratch, "relaxed DAG");
     });
 }
 
