@@ -13,7 +13,7 @@ use super::{BalancingPolicy, DecideCtx, Decision, LayerFeedback, PolicyCounters}
 use crate::moe::{LoadMatrix, Placement};
 use crate::obs::{self, Labels, Recorder, Span};
 use crate::perfmodel::PerfModel;
-use crate::prophet::Prophet;
+use crate::prophet::{DeviceForecaster, Prophet, ProphetConfig};
 use crate::util::threads;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -64,6 +64,12 @@ pub struct BalancerSession {
     /// Decisions that hit the all-devices-down wall
     /// ([`crate::moe::AllDevicesDown`]): nothing to fail over to.
     all_devices_down: AtomicUsize,
+    /// Arms the per-device slowdown forecaster
+    /// (`ProphetConfig::device_forecast`); `None` = feature off.
+    device_forecast_cfg: Option<ProphetConfig>,
+    /// Built lazily on the first realized-slowdown observation, when the
+    /// device count is first known.
+    device_forecaster: Option<DeviceForecaster>,
 }
 
 impl BalancerSession {
@@ -87,6 +93,7 @@ impl BalancerSession {
     ) -> Self {
         assert!(n_layers >= 1, "session needs at least one layer");
         policy.bind(n_layers);
+        let device_forecast_cfg = policy.prophet_config().filter(|cfg| cfg.device_forecast);
         let prophet = policy.prophet_config().map(|cfg| Prophet::new(cfg, n_layers));
         BalancerSession {
             policy,
@@ -100,6 +107,8 @@ impl BalancerSession {
             failover_placements: AtomicUsize::new(0),
             fallback_placements: AtomicUsize::new(0),
             all_devices_down: AtomicUsize::new(0),
+            device_forecast_cfg,
+            device_forecaster: None,
         }
     }
 
@@ -125,6 +134,48 @@ impl BalancerSession {
     /// policies).
     pub fn prophet(&self) -> Option<&Prophet> {
         self.prophet.as_ref()
+    }
+
+    /// Whether the per-device slowdown forecaster is armed
+    /// (`prophet.device_forecast = true` on a forecasting policy).
+    pub fn device_forecast_enabled(&self) -> bool {
+        self.device_forecast_cfg.is_some()
+    }
+
+    /// The per-device slowdown forecaster, once armed and fed.
+    pub fn device_forecaster(&self) -> Option<&DeviceForecaster> {
+        self.device_forecaster.as_ref()
+    }
+
+    /// Feed one iteration's REALIZED per-device slowdown vector — what
+    /// the devices actually ran at this iteration (the fault view's
+    /// composed factors while degraded, the cluster's static vector while
+    /// healthy).  No-op unless armed; returns the normalized-L1 error of
+    /// the forecast that was outstanding for this iteration, when any.
+    pub fn observe_device_slowdown(&mut self, slowdown: &[f64]) -> Option<f64> {
+        let cfg = self.device_forecast_cfg.as_ref()?;
+        let n = slowdown.len().max(1);
+        if self.device_forecaster.as_ref().is_some_and(|f| f.n_devices() != n) {
+            // Device count changed under us (lease resize): stale history
+            // is about different hardware — start over.
+            self.device_forecaster = None;
+        }
+        let f = self.device_forecaster.get_or_insert_with(|| DeviceForecaster::new(cfg, n));
+        let err = f.observe(slowdown);
+        if self.rec.enabled() {
+            if let Some(e) = err {
+                self.rec.gauge("prophet.device_forecast_error_l1", Labels::None, e);
+            }
+        }
+        err
+    }
+
+    /// One-step-ahead per-device slowdown forecast: the planner's view of
+    /// device health for the NEXT iteration.  `None` until armed and fed
+    /// at least one observation — callers fall back to the static cluster
+    /// vector.
+    pub fn forecast_slowdown(&self) -> Option<Vec<f64>> {
+        self.device_forecaster.as_ref()?.forecast()
     }
 
     /// Whole-run decision counters.
@@ -338,6 +389,7 @@ impl std::fmt::Debug for BalancerSession {
             .field("forecasting", &self.prophet.is_some())
             .field("iterations_observed", &self.iterations_observed)
             .field("devices_down", &self.down.iter().filter(|&&d| d).count())
+            .field("device_forecast", &self.device_forecast_cfg.is_some())
             .finish()
     }
 }
@@ -378,6 +430,32 @@ mod tests {
         assert_eq!(fb1.forecast_errors.len(), 3);
         assert!(fb1.mean_forecast_error().unwrap() >= 0.0);
         assert_eq!(s.iterations_observed(), 2);
+    }
+
+    #[test]
+    fn device_forecast_armed_learns_and_defaults_off() {
+        let mut opts = ProphetOptions::full();
+        opts.prophet.device_forecast = true;
+        let mut s = BalancerSession::new(Box::new(builtin::ProProphet::new(opts)), 1);
+        assert!(s.device_forecast_enabled());
+        assert!(s.forecast_slowdown().is_none(), "nothing observed yet");
+        assert!(s.observe_device_slowdown(&[1.0, 2.5]).is_none());
+        assert_eq!(s.forecast_slowdown().unwrap(), vec![1.0, 2.5]);
+        // A device-count change (lease resize) restarts the history.
+        let _ = s.observe_device_slowdown(&[1.0, 1.0, 4.0]);
+        assert_eq!(s.forecast_slowdown().unwrap(), vec![1.0, 1.0, 4.0]);
+        assert_eq!(s.device_forecaster().unwrap().observations(), 1);
+        // Off by default: observe is a no-op, forecast stays None.
+        let mut off = BalancerSession::new(
+            Box::new(builtin::ProProphet::new(ProphetOptions::full())),
+            1,
+        );
+        assert!(!off.device_forecast_enabled());
+        let _ = off.observe_device_slowdown(&[2.0, 2.0]);
+        assert!(off.forecast_slowdown().is_none());
+        // Non-forecasting policies can never arm it.
+        let plain = BalancerSession::new(Box::new(builtin::DeepspeedMoe), 1);
+        assert!(!plain.device_forecast_enabled());
     }
 
     #[test]

@@ -300,6 +300,7 @@ impl ExperimentConfig {
             alpha: t.f64_or("planner.alpha", 0.25),
             replan_interval: t.usize_or("planner.replan_interval", 1),
             use_overlap_model: t.bool_or("planner.use_overlap_model", true),
+            device_aware: t.bool_or("planner.device_aware", true),
             ..Default::default()
         };
         let pd = ProphetConfig::default();
@@ -313,6 +314,7 @@ impl ExperimentConfig {
             drift_cooldown: t.usize_or("prophet.drift_cooldown", pd.drift_cooldown),
             predictor: PredictorKind::from_name(&predictor_name)
                 .ok_or_else(|| format!("unknown prophet.predictor {predictor_name:?}"))?,
+            device_forecast: t.bool_or("prophet.device_forecast", pd.device_forecast),
         };
         prophet.validate()?;
         let policy = t.str_or("policy.name", "pro-prophet");

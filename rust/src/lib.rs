@@ -11,7 +11,12 @@
 //!   behind one trait, an online ensemble that picks the best predictor
 //!   per layer from rolling forecast error, and drift detection that
 //!   forces replans.  Data flow: trainer/sim → `prophet::store` →
-//!   `prophet::ensemble` → [`planner`].
+//!   `prophet::ensemble` → [`planner`].  Since PR 10 the same ensemble
+//!   machinery also forecasts per-device *health*:
+//!   `prophet::DeviceForecaster` learns the realized slowdown vector
+//!   each iteration and (when armed via `prophet.device_forecast`)
+//!   substitutes its forecast into the planner's decide view — the DES
+//!   always prices ground truth.
 //! * [`balancer`] — the open policy API: the [`balancer::BalancingPolicy`]
 //!   trait (decide → `Decision { placement, plan_cost, comm_style,
 //!   schedule_kind }`, observe ← feedback), the
@@ -23,7 +28,13 @@
 //! * [`planner`] — the paper's §IV contribution: lightweight expert
 //!   placements, the analytic performance model (Eq 1–6/8) and the
 //!   locality-based greedy search (Algorithm 1), planning one iteration
-//!   early on [`prophet`] forecasts.
+//!   early on [`prophet`] forecasts.  On heterogeneous clusters the
+//!   search prices candidates per device (`planner.device_aware`,
+//!   default on): replicas route by projected finish time
+//!   (`moe::RoutingState::evaluate_weighted`) and candidates rank by
+//!   the weighted compute bottleneck
+//!   (`perfmodel::PerfModel::layer_time_sn_weighted`), with homogeneous
+//!   clusters bit-identical to the frozen scalar search.
 //! * [`scheduler`] — the paper's §V contribution: the MoE-block scheduling
 //!   space, the block-wise overlap strategy (Algorithm 2), and
 //!   `scheduler::dag` — operator DAGs stored structure-of-arrays: one

@@ -15,7 +15,7 @@ pub mod routing;
 
 pub use memory::MemoryModel;
 pub use placement::{AllDevicesDown, Placement};
-pub use routing::RoutingState;
+pub use routing::{EvalStats, RoutingState, WeightedEvalStats};
 
 /// Even integer split: the share of `total` that part `idx` of `parts`
 /// receives (remainder round-robined to the lowest indices, so the parts

@@ -37,6 +37,21 @@ pub struct EvalStats {
     pub max_r: u64,
 }
 
+/// [`EvalStats`] plus the slowdown-weighted compute bottleneck of one
+/// [`RoutingState::evaluate_weighted`] pass: `weighted_max_h` is
+/// `max_d H_d · slowdown_d` — the slowdown-seconds of expert work on the
+/// device that finishes last (what
+/// `PerfModel::layer_time_sn_weighted` prices).  The raw token
+/// maxima/minima are kept unweighted: Eq 7's balance condition and Eq 1's
+/// A2A volume are about token counts, not speeds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WeightedEvalStats {
+    pub max_h: u64,
+    pub min_h: u64,
+    pub max_r: u64,
+    pub weighted_max_h: f64,
+}
+
 /// One applied delta, for the undo log: which expert changed and where its
 /// previous replica list starts in the pooled `undo_devices` buffer.
 #[derive(Clone, Copy, Debug)]
@@ -280,6 +295,74 @@ impl RoutingState {
             max_r: self.r.iter().copied().max().unwrap_or(0),
         }
     }
+
+    /// Slowdown-aware routing pass: identical batch replay to
+    /// [`RoutingState::evaluate`], but the least-loaded replica scan
+    /// minimizes the *projected finish time* `(H_d + tokens) · slowdown_d`
+    /// instead of raw tokens (an idle 10× straggler is NOT the best target
+    /// for an 8-token batch when a nominal device could absorb it on top
+    /// of 9 existing tokens), and the returned stats carry the weighted
+    /// compute bottleneck (`max_d H_d · slowdown_d`) alongside the raw
+    /// maxima.  This is the evaluator half of the heterogeneous-mispricing
+    /// fix: tokens flow to the replica that *finishes first*, and
+    /// candidates are priced on the device that finishes last.
+    ///
+    /// `slowdown[d]` is device `d`'s compute slowdown factor (missing
+    /// entries mean 1.0 — nominal speed).  With a uniform vector the batch
+    /// size is a common addend and the factor a common positive multiplier,
+    /// so the scan's strict ordering and tie structure match the unweighted
+    /// one whenever the products `(H_d + tokens) · u` are exact in f64 —
+    /// the chosen targets, and therefore `h`/`r`/`sent`, are identical to
+    /// [`RoutingState::evaluate`]'s (property-tested).  The frozen
+    /// `evaluate` is untouched; homogeneous callers never reach this path.
+    pub fn evaluate_weighted(&mut self, slowdown: &[f64]) -> WeightedEvalStats {
+        let sd = |d: usize| slowdown.get(d).copied().unwrap_or(1.0);
+        self.h.copy_from_slice(&self.local_h);
+        self.r.fill(0);
+        self.sent.fill(0);
+        for &(tokens, src, expert) in &self.batches {
+            let (src, expert) = (src as usize, expert as usize);
+            if self.placement.replicas(expert).contains(src) {
+                continue; // became local under the current placement
+            }
+            let list = &self.replica_lists[expert];
+            let target = if list.is_empty() {
+                expert % self.n_devices
+            } else {
+                let mut best = list[0] as usize;
+                let mut best_t = (self.h[best] + tokens) as f64 * sd(best);
+                for &cand in &list[1..] {
+                    let cand = cand as usize;
+                    let t = (self.h[cand] + tokens) as f64 * sd(cand);
+                    // Strict <: ties keep the lowest device id, exactly
+                    // like the unweighted scan.
+                    if t < best_t {
+                        best = cand;
+                        best_t = t;
+                    }
+                }
+                best
+            };
+            self.h[target] += tokens;
+            if target != src {
+                self.r[target] += tokens;
+                self.sent[src] += tokens;
+            }
+        }
+        let mut weighted_max_h = 0.0f64;
+        for (d, &h) in self.h.iter().enumerate() {
+            let t = h as f64 * sd(d);
+            if t > weighted_max_h {
+                weighted_max_h = t;
+            }
+        }
+        WeightedEvalStats {
+            max_h: self.h.iter().copied().max().unwrap_or(0),
+            min_h: self.h.iter().copied().min().unwrap_or(0),
+            max_r: self.r.iter().copied().max().unwrap_or(0),
+            weighted_max_h,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -370,6 +453,64 @@ mod tests {
         assert_matches_full_route(&mut rs, &w);
         rs.undo(&w);
         assert!(rs.placement().is_identity());
+    }
+
+    #[test]
+    fn weighted_with_unit_vector_matches_evaluate() {
+        // slowdown == 1.0 everywhere: products are exact, so the scan
+        // order, tie-breaks, and every routed token match the frozen
+        // evaluate bit-for-bit.
+        let w = fig6();
+        let mut rs = RoutingState::new();
+        rs.init(&w);
+        rs.apply_replicate_to_all(&w, 0);
+        rs.apply_add_replica(&w, 1, 0);
+        let plain = rs.evaluate();
+        let routed_plain = rs.to_routed_load();
+        for sd in [vec![1.0; 3], vec![]] {
+            let weighted = rs.evaluate_weighted(&sd);
+            assert_eq!(rs.to_routed_load(), routed_plain);
+            assert_eq!(weighted.max_h, plain.max_h);
+            assert_eq!(weighted.min_h, plain.min_h);
+            assert_eq!(weighted.max_r, plain.max_r);
+            assert_eq!(weighted.weighted_max_h.to_bits(), (plain.max_h as f64).to_bits());
+        }
+    }
+
+    #[test]
+    fn weighted_routes_around_straggler_replica() {
+        // One expert replicated everywhere, all remote traffic for it
+        // comes from a device that is not a replica... simplest shape:
+        // 3 devices, expert 0 replicated to all; device 2 is 10x slow.
+        // The raw least-loaded scan would feed the emptiest device even
+        // if it is the straggler; the weighted scan must not.
+        let w = LoadMatrix::from_rows(vec![
+            vec![9, 0, 0], // home traffic for expert 0 on device 0
+            vec![8, 0, 0], // remote batch (8, src=1, expert=0)
+            vec![0, 0, 0],
+        ]);
+        let mut rs = RoutingState::new();
+        rs.init(&w);
+        rs.apply_replicate_to_all(&w, 0);
+        // Unweighted: after replication the batch from device 1 is local
+        // (device 1 is a replica), so force a remote decision instead:
+        // shrink to replicas {0, 2}.
+        rs.undo(&w);
+        rs.apply_replicate_except(&w, 0, &[1]);
+        let plain = rs.evaluate();
+        // Device 2 is empty, device 0 carries 9 -> raw scan sends the
+        // 8-token batch to device 2.
+        assert_eq!(rs.to_routed_load().h, vec![9, 0, 8]);
+        assert_eq!(plain.max_h, 9);
+        // 10x straggler on device 2: finish time 8*10 = 80 vs 17 on
+        // device 0 — the weighted scan routes to the nominal device.
+        let weighted = rs.evaluate_weighted(&[1.0, 1.0, 10.0]);
+        assert_eq!(rs.to_routed_load().h, vec![17, 0, 0]);
+        assert_eq!(weighted.max_h, 17);
+        assert_eq!(weighted.weighted_max_h, 17.0);
+        // Token conservation: both passes route every token somewhere.
+        let total: u64 = (0..3).map(|d| (0..3).map(|e| w.get(d, e)).sum::<u64>()).sum();
+        assert_eq!(rs.to_routed_load().h.iter().sum::<u64>(), total);
     }
 
     #[test]

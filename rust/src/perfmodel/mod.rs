@@ -97,6 +97,22 @@ impl PerfModel {
         self.device_slowdown.iter().copied().fold(1.0, f64::max)
     }
 
+    /// Slowdown factor of device `d` (1.0 when the vector is empty or
+    /// shorter than `d` — a missing entry means "nominal speed").
+    pub fn slowdown(&self, d: usize) -> f64 {
+        self.device_slowdown.get(d).copied().unwrap_or(1.0)
+    }
+
+    /// The same model with its device-health view replaced — how the
+    /// planner consumes a *forecast* slowdown vector (the DES keeps
+    /// pricing on the true effective engine; only the candidate-ranking
+    /// view changes).
+    pub fn with_device_slowdown(&self, v: Vec<f64>) -> PerfModel {
+        let mut pm = self.clone();
+        pm.device_slowdown = v;
+        pm
+    }
+
     // --- primitive costs ---------------------------------------------------
 
     /// Eq 1: T_A2A(R) = max_i R_i * size(input) / B̄.
@@ -243,6 +259,46 @@ impl PerfModel {
         let p_trans = (self.t_trans_sn(s, n) - t_fec - self.t_fnec).max(0.0);
         let p_agg = (self.t_agg_sn(s, n) - t_bec - self.t_bnec).max(0.0);
         a2a + p_trans + p_agg
+    }
+
+    /// Per-device-aware estimate: [`PerfModel::layer_time_sn_from_maxes`]
+    /// with the expert-compute bottleneck taken as the *weighted* maximum
+    /// `wmax_h = max_d H_d · slowdown_d` (slowdown-seconds of work on the
+    /// device that finishes last) instead of the raw token maximum — the
+    /// fix for heterogeneous candidate mispricing: a candidate that piles
+    /// tokens onto a 2× straggler now prices strictly above one that
+    /// routes the same tokens to a nominal device, where the scalar
+    /// `max_slowdown()` form ([`PerfModel::layer_time_sn_relaxed`])
+    /// charged both identically.
+    ///
+    /// Every other term is byte-for-byte the frozen arithmetic, so:
+    ///
+    /// * uniform slowdown `u` on every device ⇒ `wmax_h = max_h·u` (f64
+    ///   multiplication by a positive constant is monotone) and the
+    ///   overlapped form is **bit-identical** to `layer_time_sn_relaxed`;
+    /// * homogeneous cluster (`u = 1.0`) ⇒ bit-identical to
+    ///   `layer_time_sn_from_maxes` (the planner never calls this there —
+    ///   the gate is `is_heterogeneous()` — but the identity is what the
+    ///   property tests pin).
+    pub fn layer_time_sn_weighted(
+        &self,
+        wmax_h: f64,
+        max_r: u64,
+        s: usize,
+        n: usize,
+        overlapped: bool,
+    ) -> f64 {
+        let t_fec = wmax_h / self.tokens_per_s;
+        let t_a2a = max_r as f64 * self.token_bytes / self.avg_bw;
+        let a2a = 4.0 * t_a2a + 3.0 * t_fec;
+        if overlapped {
+            let t_bec = 2.0 * t_fec;
+            let p_trans = (self.t_trans_sn(s, n) - t_fec - self.t_fnec).max(0.0);
+            let p_agg = (self.t_agg_sn(s, n) - t_bec - self.t_bnec).max(0.0);
+            a2a + p_trans + p_agg
+        } else {
+            a2a + self.t_trans_sn(s, n) + self.t_agg_sn(s, n)
+        }
     }
 }
 
@@ -418,6 +474,60 @@ mod tests {
             slack > pm_homo.layer_time_sn_relaxed(500, 100, 1, 1),
             "slack estimate must grow with the straggler"
         );
+    }
+
+    #[test]
+    fn weighted_estimate_bit_identical_when_uniform() {
+        let (_, _, pm) = setup();
+        // Homogeneous: wmax_h == max_h as f64, both branches reproduce
+        // the frozen from_maxes form bit-for-bit.
+        for overlapped in [false, true] {
+            for (max_h, max_r, s, n) in [(530u64, 300u64, 0usize, 0usize), (1200, 40, 2, 1)] {
+                let frozen = pm.layer_time_sn_from_maxes(max_h, max_r, s, n, overlapped);
+                let weighted = pm.layer_time_sn_weighted(max_h as f64, max_r, s, n, overlapped);
+                assert_eq!(frozen.to_bits(), weighted.to_bits(), "ov={overlapped}");
+            }
+        }
+        // Uniform heterogeneous slowdown: the overlapped weighted form
+        // with wmax_h = max_h·u is bit-identical to the worst-scalar
+        // relaxed estimate (same t_fec expression, same tail).
+        let m = ModelSpec::moe_gpt_s(4, 1, 4096);
+        let c = ClusterSpec::hpwnv(1);
+        let pm_u = PerfModel::new(&m, &c.clone().with_slowdowns(vec![2.5; 4]));
+        for (max_h, max_r, s, n) in [(500u64, 100u64, 1usize, 1usize), (64, 64, 3, 2)] {
+            let relaxed = pm_u.layer_time_sn_relaxed(max_h, max_r, s, n);
+            let weighted = pm_u.layer_time_sn_weighted(max_h as f64 * 2.5, max_r, s, n, true);
+            assert_eq!(relaxed.to_bits(), weighted.to_bits(), "h={max_h} r={max_r}");
+        }
+    }
+
+    #[test]
+    fn weighted_estimate_separates_straggler_candidates() {
+        // The mispricing this PR fixes: same raw max_h, but one candidate
+        // bottlenecks on the 2.5x straggler and the other on a nominal
+        // device — the scalar relaxed form prices them identically, the
+        // weighted form strictly separates them.
+        let m = ModelSpec::moe_gpt_s(4, 1, 4096);
+        let c = ClusterSpec::hpwnv(1).with_slowdown(2, 2.5);
+        let pm = PerfModel::new(&m, &c);
+        let on_straggler = pm.layer_time_sn_weighted(500.0 * 2.5, 100, 1, 1, true);
+        let on_nominal = pm.layer_time_sn_weighted(500.0 * 1.0, 100, 1, 1, true);
+        assert!(on_straggler > on_nominal);
+        let scalar = pm.layer_time_sn_relaxed(500, 100, 1, 1);
+        assert_eq!(scalar.to_bits(), on_straggler.to_bits(), "scalar charges ALL candidates the straggler rate");
+    }
+
+    #[test]
+    fn slowdown_accessor_and_forecast_swap() {
+        let m = ModelSpec::moe_gpt_s(4, 1, 4096);
+        let pm = PerfModel::new(&m, &ClusterSpec::hpwnv(1));
+        assert_eq!(pm.slowdown(0), 1.0);
+        assert_eq!(pm.slowdown(99), 1.0, "out of range means nominal");
+        let fc = pm.with_device_slowdown(vec![1.0, 1.0, 2.0, 1.0]);
+        assert!(fc.is_heterogeneous());
+        assert_eq!(fc.slowdown(2), 2.0);
+        assert_eq!(fc.tokens_per_s, pm.tokens_per_s, "only the health view changes");
+        assert!(!pm.is_heterogeneous(), "original untouched");
     }
 
     #[test]

@@ -104,28 +104,50 @@ pub fn greedy_search_with(
         cfg.n_exclude.min(n_devices.saturating_sub(1))
     };
 
-    // Candidate pricing: the frozen Eq 1–8 scalar model, or — for
-    // slack-aware configs on a heterogeneous cluster — the relaxed
-    // estimate that charges the straggler's compute.  The slack estimate
-    // is overlap-shaped (Eq 8 with scaled compute), so it only ever
-    // replaces the overlapped model: a blocking-Eq-6 config (planner
-    // ablation arms) keeps its pricing even when slack_aware leaks in.
-    // On homogeneous clusters the two are bit-identical, so the branch
-    // can never perturb frozen decisions (prop_greedy_matches_reference
-    // randomizes `slack_aware` to pin exactly that).
+    // Candidate pricing: the frozen Eq 1–8 scalar model, or — on a
+    // heterogeneous cluster — one of two straggler-aware estimates.
+    // `device_aware` (default) prices the weighted per-device compute
+    // bottleneck and routes replicas by projected finish time; it takes
+    // precedence over `slack_aware`, whose worst-scalar relaxed estimate
+    // charges EVERY candidate the straggler's rate (the mispricing this
+    // knob fixes).  The slack estimate is overlap-shaped (Eq 8 with
+    // scaled compute), so it only ever replaces the overlapped model: a
+    // blocking-Eq-6 config (planner ablation arms) keeps its pricing
+    // even when slack_aware leaks in.  On homogeneous clusters all
+    // estimates are bit-identical and the weighted evaluator is never
+    // invoked, so neither knob can perturb frozen decisions
+    // (prop_greedy_matches_reference randomizes both to pin exactly
+    // that).
+    let dev_aware = cfg.device_aware && pm.is_heterogeneous();
     let slack = cfg.slack_aware && overlap && pm.is_heterogeneous();
-    let price = |max_h: u64, max_r: u64, s: usize, n: usize| -> f64 {
-        if slack {
+    let price = |max_h: u64, wmax_h: f64, max_r: u64, s: usize, n: usize| -> f64 {
+        if dev_aware {
+            pm.layer_time_sn_weighted(wmax_h, max_r, s, n, overlap)
+        } else if slack {
             pm.layer_time_sn_relaxed(max_h, max_r, s, n)
         } else {
             pm.layer_time_sn_from_maxes(max_h, max_r, s, n, overlap)
         }
     };
+    // One routing pass: frozen unweighted evaluate, or the weighted one
+    // (identical batch replay, finish-time replica scan) when dev-aware.
+    let eval = |rs: &mut RoutingState| -> (crate::moe::EvalStats, f64) {
+        if dev_aware {
+            let ws = rs.evaluate_weighted(&pm.device_slowdown);
+            (
+                crate::moe::EvalStats { max_h: ws.max_h, min_h: ws.min_h, max_r: ws.max_r },
+                ws.weighted_max_h,
+            )
+        } else {
+            let s = rs.evaluate();
+            (s, s.max_h as f64)
+        }
+    };
 
     let rs = &mut scratch.routing;
     rs.init(w);
-    let mut stats = rs.evaluate();
-    let t_identity = price(stats.max_h, stats.max_r, 0, 0);
+    let (mut stats, mut wmax) = eval(rs);
+    let t_identity = price(stats.max_h, wmax, stats.max_r, 0, 0);
     let mut t_output = t_identity;
 
     scratch.used_devices.clear();
@@ -144,13 +166,27 @@ pub fn greedy_search_with(
             break;
         }
         // Heaviest device; bail if we have seen it before (Alg 1 line 7).
-        let heaviest_dev = rs
-            .h()
-            .iter()
-            .enumerate()
-            .max_by_key(|&(_, &h)| h)
-            .map(|(d, _)| d)
-            .unwrap_or(0);
+        // Dev-aware: "heaviest" is the device that FINISHES last
+        // (`H_d · slowdown_d`) — relieving a loaded straggler beats
+        // relieving a faster device with more raw tokens.  Both argmaxes
+        // take the LAST maximum on ties (max_by_key / max_by contract),
+        // so a uniform slowdown leaves the choice unchanged.
+        let heaviest_dev = if dev_aware {
+            rs.h()
+                .iter()
+                .enumerate()
+                .map(|(d, &h)| (d, h as f64 * pm.slowdown(d)))
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+                .map(|(d, _)| d)
+                .unwrap_or(0)
+        } else {
+            rs.h()
+                .iter()
+                .enumerate()
+                .max_by_key(|&(_, &h)| h)
+                .map(|(d, _)| d)
+                .unwrap_or(0)
+        };
         if scratch.used_devices[heaviest_dev] {
             break;
         }
@@ -190,9 +226,9 @@ pub fn greedy_search_with(
         scratch.selected.push(expert);
 
         // Re-route and evaluate (Alg 1 lines 15-20).
-        stats = rs.evaluate();
+        (stats, wmax) = eval(rs);
         let s = scratch.selected.len();
-        let t_changed = price(stats.max_h, stats.max_r, s, n_exclude);
+        let t_changed = price(stats.max_h, wmax, stats.max_r, s, n_exclude);
         evaluated += 1;
         if t_changed < t_output {
             t_output = t_changed;
@@ -523,7 +559,9 @@ mod tests {
         ]);
         let cluster = ClusterSpec::hpwnv(1).with_slowdown(0, 3.0);
         let pm_het = PerfModel::new(&ModelSpec::moe_gpt_s(4, 1, 4096), &cluster);
-        let cfg = PlannerConfig { slack_aware: true, ..Default::default() };
+        // device_aware outranks slack_aware; force the scalar path to
+        // test it in isolation.
+        let cfg = PlannerConfig { slack_aware: true, device_aware: false, ..Default::default() };
         let r = greedy_search(&w, &pm_het, &cfg);
         assert!(r.placement.validate().is_ok());
         assert!(r.t_est <= r.t_identity + 1e-15);
@@ -537,6 +575,73 @@ mod tests {
             2, // AUTO_EXCLUDE on 4 devices
         );
         assert!((t - r.t_est).abs() <= 1e-9 * t.max(1.0) + 1e-12);
+    }
+
+    #[test]
+    fn device_aware_is_inert_on_homogeneous_clusters() {
+        // The gate is `pm.is_heterogeneous()`: with it closed the default
+        // config (device_aware: true) must stay bit-identical to the
+        // frozen reference — the weighted evaluator is never invoked.
+        let w = LoadMatrix::from_rows(vec![
+            vec![900, 50, 30, 44],
+            vec![800, 100, 60, 64],
+            vec![850, 70, 40, 64],
+            vec![900, 60, 20, 44],
+        ]);
+        let cfg = PlannerConfig::default();
+        assert!(cfg.device_aware, "device awareness is the default");
+        let r = greedy_search(&w, &pm(4), &cfg);
+        assert_same_result(&r, &greedy_search_reference(&w, &pm(4), &cfg));
+        let off = PlannerConfig { device_aware: false, ..Default::default() };
+        assert_same_result(&r, &greedy_search(&w, &pm(4), &off));
+    }
+
+    #[test]
+    fn device_aware_matches_slack_on_uniform_slowdown() {
+        // Uniform slowdown u: every product (H_d + tokens)·u and H_d·u is
+        // exact in f64 (small integers, u = 2.5 = 5/2), multiplication by
+        // a positive constant is strictly monotone, and both argmaxes
+        // take the last maximum — so the dev-aware search makes the SAME
+        // choices as the worst-scalar slack path and
+        // layer_time_sn_weighted(max_h·u, ..) is bit-identical to
+        // layer_time_sn_relaxed(max_h, ..).  Pins the "weighted estimate
+        // degenerates to the scalar one when no device differs" contract.
+        let w = LoadMatrix::from_rows(vec![
+            vec![900, 50, 30, 44],
+            vec![800, 100, 60, 64],
+            vec![850, 70, 40, 64],
+            vec![900, 60, 20, 44],
+        ]);
+        let cluster = ClusterSpec::hpwnv(1).with_slowdowns(vec![2.5; 4]);
+        let pm_u = PerfModel::new(&ModelSpec::moe_gpt_s(4, 1, 4096), &cluster);
+        assert!(pm_u.is_heterogeneous());
+        let dev = greedy_search(&w, &pm_u, &PlannerConfig::default());
+        let scalar_cfg =
+            PlannerConfig { device_aware: false, slack_aware: true, ..Default::default() };
+        let scalar = greedy_search(&w, &pm_u, &scalar_cfg);
+        assert_same_result(&dev, &scalar);
+    }
+
+    #[test]
+    fn device_aware_search_valid_on_straggler_cluster() {
+        // Sibling of slack_aware_search_valid_on_straggler_cluster for
+        // the default dev-aware path: the search stays sound on a 3x
+        // straggler and its estimate never exceeds the identity's.
+        let w = LoadMatrix::from_rows(vec![
+            vec![900, 50, 30, 44],
+            vec![800, 100, 60, 64],
+            vec![850, 70, 40, 64],
+            vec![900, 60, 20, 44],
+        ]);
+        let cluster = ClusterSpec::hpwnv(1).with_slowdown(0, 3.0);
+        let pm_het = PerfModel::new(&ModelSpec::moe_gpt_s(4, 1, 4096), &cluster);
+        let r = greedy_search(&w, &pm_het, &PlannerConfig::default());
+        assert!(r.placement.validate().is_ok());
+        assert!(r.t_est <= r.t_identity + 1e-15);
+        // Deterministic, and scratch-reusable like every other mode.
+        let mut scratch = SearchScratch::new();
+        let again = greedy_search_with(&w, &pm_het, &PlannerConfig::default(), &mut scratch);
+        assert_same_result(&r, &again);
     }
 
     #[test]

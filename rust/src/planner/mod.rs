@@ -42,6 +42,20 @@ pub struct PlannerConfig {
     /// frozen planning decisions are unaffected either way; only a
     /// straggler makes this knob change placements.
     pub slack_aware: bool,
+    /// Rank candidates on per-device finish times when the cluster is
+    /// heterogeneous: the routing sweep picks replicas by projected
+    /// finish time ([`crate::moe::RoutingState::evaluate_weighted`]), the
+    /// heaviest device is the one finishing *last* (`H_d · slowdown_d`),
+    /// and pricing charges the weighted compute bottleneck
+    /// ([`crate::perfmodel::PerfModel::layer_time_sn_weighted`]) instead
+    /// of the worst-scalar `max_slowdown()` approximation — so a
+    /// candidate that piles tokens onto a 2× straggler no longer ranks
+    /// identically to one that routes around it.  Takes precedence over
+    /// `slack_aware` (it is the strictly more informed estimate).  On
+    /// homogeneous clusters the gate (`pm.is_heterogeneous()`) never
+    /// opens, so every pre-existing path stays bit-identical to the
+    /// frozen reference; default **true**.
+    pub device_aware: bool,
     /// Optional device-memory model: devices without replica headroom are
     /// excluded from placements (see moe::memory).
     pub memory: Option<crate::moe::MemoryModel>,
@@ -66,6 +80,7 @@ impl Default for PlannerConfig {
             replan_interval: 1,
             use_overlap_model: true,
             slack_aware: false,
+            device_aware: true,
             memory: None,
             device_mask: None,
             step_budget: None,

@@ -1,0 +1,203 @@
+//! Per-device slowdown forecasting: the device-health half of closing
+//! ROADMAP Next-direction 1.
+//!
+//! The load side of the prophet forecasts *what* arrives next iteration
+//! (tokens per expert); this module forecasts *how fast* each device will
+//! run it.  A [`DeviceForecaster`] learns a slowdown vector from the
+//! realized per-iteration device health (the same composed vector
+//! `faults::FaultView` prices the DES with — in a real system this would
+//! be the profiler's measured per-device busy-time ratios) and serves a
+//! one-step-ahead forecast the planner consumes through
+//! [`crate::perfmodel::PerfModel::with_device_slowdown`], replacing the
+//! static `ClusterSpec::device_slowdown` as the candidate evaluator's
+//! view of device health.
+//!
+//! Implementation: the existing [`Ensemble`] machinery (last/ema/window/
+//! trend members scored by rolling L1 error) already does online
+//! one-step-ahead forecasting of `u64` vectors — a slowdown vector is
+//! just not integer-valued, so observations are encoded in fixed point
+//! ([`SCALE`] = 1e-6 resolution).  Round-trip is exact for every factor
+//! the config surface can express (1.0, 2.5, 0.5, ... — anything with at
+//! most 6 decimal places), so a constant vector forecasts back exactly
+//! (property-tested).
+//!
+//! A down device reports slowdown 0.0; the forecaster clamps it to
+//! [`MIN_SLOWDOWN`] instead of learning "infinitely fast": down-ness is
+//! the health monitor's job (mask + failover), the forecast only models
+//! the speed of devices that are running.
+
+use super::ensemble::Ensemble;
+use super::ProphetConfig;
+
+/// Fixed-point encoding: slowdown 1.0 ⇔ 1_000_000 ensemble units.
+const SCALE: f64 = 1e6;
+
+/// Floor for observed factors: a down device (slowdown 0.0) must not
+/// teach the forecaster that the device is infinitely fast.
+pub const MIN_SLOWDOWN: f64 = 1e-3;
+
+/// Online per-device slowdown forecaster (see module docs).
+pub struct DeviceForecaster {
+    ensemble: Ensemble,
+    n_devices: usize,
+    /// Reused encode buffer: steady-state observation is allocation-free
+    /// on this side (the ensemble members keep their own state).
+    encoded: Vec<u64>,
+    observations: usize,
+}
+
+impl DeviceForecaster {
+    /// One forecaster per run, sized to the cluster; reuses the prophet's
+    /// knobs (predictor kind, EMA beta, window, error decay).
+    pub fn new(cfg: &ProphetConfig, n_devices: usize) -> Self {
+        assert!(n_devices >= 1, "need at least one device");
+        DeviceForecaster {
+            ensemble: Ensemble::new(cfg.predictor, cfg.ema_beta, cfg.window, cfg.error_decay),
+            n_devices,
+            encoded: Vec::with_capacity(n_devices),
+            observations: 0,
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    /// Iterations observed so far.
+    pub fn observations(&self) -> usize {
+        self.observations
+    }
+
+    /// Feed one iteration's realized slowdown vector (missing entries
+    /// mean 1.0 — nominal).  Returns the normalized-L1 error of the
+    /// forecast that was outstanding for this iteration, when one was.
+    pub fn observe(&mut self, slowdown: &[f64]) -> Option<f64> {
+        self.encoded.clear();
+        for d in 0..self.n_devices {
+            let s = slowdown.get(d).copied().unwrap_or(1.0).max(MIN_SLOWDOWN);
+            debug_assert!(s.is_finite(), "non-finite slowdown observation");
+            self.encoded.push((s * SCALE).round() as u64);
+        }
+        self.observations += 1;
+        self.ensemble.observe(&self.encoded)
+    }
+
+    /// One-step-ahead slowdown forecast (`None` until the first
+    /// observation).  Entries are clamped to [`MIN_SLOWDOWN`].
+    pub fn forecast(&self) -> Option<Vec<f64>> {
+        let f = self.ensemble.predict()?;
+        debug_assert_eq!(f.len(), self.n_devices);
+        Some(f.iter().map(|&x| (x / SCALE).max(MIN_SLOWDOWN)).collect())
+    }
+
+    /// Name of the ensemble member currently serving forecasts.
+    pub fn selected_predictor(&self) -> &'static str {
+        self.ensemble.selected_name()
+    }
+
+    /// Drop all learned state (e.g. after a lease resize changes the
+    /// device set).
+    pub fn reset(&mut self) {
+        self.ensemble.reset();
+        self.observations = 0;
+    }
+}
+
+impl std::fmt::Debug for DeviceForecaster {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeviceForecaster")
+            .field("n_devices", &self.n_devices)
+            .field("observations", &self.observations)
+            .field("selected", &self.selected_predictor())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prophet::PredictorKind;
+
+    fn cfg(kind: PredictorKind) -> ProphetConfig {
+        ProphetConfig { predictor: kind, ..Default::default() }
+    }
+
+    #[test]
+    fn none_before_first_observation() {
+        let f = DeviceForecaster::new(&cfg(PredictorKind::Auto), 4);
+        assert!(f.forecast().is_none());
+        assert_eq!(f.observations(), 0);
+    }
+
+    #[test]
+    fn constant_vector_roundtrips_exactly_with_last_value() {
+        // encode(2.5) = 2_500_000; LastValue predicts it verbatim;
+        // 2_500_000 / 1e6 divides back to exactly 2.5 (both exactly
+        // representable, correctly rounded quotient).
+        let mut f = DeviceForecaster::new(&cfg(PredictorKind::LastValue), 4);
+        let v = [1.0, 2.5, 0.5, 1.0];
+        let _ = f.observe(&v);
+        let got = f.forecast().unwrap();
+        for (g, w) in got.iter().zip(v) {
+            assert_eq!(g.to_bits(), w.to_bits(), "{g} != {w}");
+        }
+    }
+
+    #[test]
+    fn constant_vector_converges_for_every_kind() {
+        for kind in [
+            PredictorKind::Auto,
+            PredictorKind::LastValue,
+            PredictorKind::Ema,
+            PredictorKind::WindowMean,
+            PredictorKind::LinearTrend,
+        ] {
+            let mut f = DeviceForecaster::new(&cfg(kind), 3);
+            let v = [1.0, 2.5, 1.0];
+            let mut last_err = None;
+            for _ in 0..6 {
+                last_err = f.observe(&v);
+            }
+            let got = f.forecast().unwrap();
+            for (g, w) in got.iter().zip(v) {
+                assert!((g - w).abs() < 1e-9, "{kind:?}: {g} != {w}");
+            }
+            // The outstanding forecast was scored (and scored perfect).
+            assert!(last_err.unwrap() < 1e-9, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn down_device_is_floored_not_learned_as_free() {
+        let mut f = DeviceForecaster::new(&cfg(PredictorKind::LastValue), 2);
+        let _ = f.observe(&[1.0, 0.0]);
+        let got = f.forecast().unwrap();
+        assert_eq!(got[0], 1.0);
+        assert!(got[1] >= MIN_SLOWDOWN && got[1] <= 2.0 * MIN_SLOWDOWN);
+    }
+
+    #[test]
+    fn short_vector_means_nominal_and_reset_forgets() {
+        let mut f = DeviceForecaster::new(&cfg(PredictorKind::LastValue), 3);
+        let _ = f.observe(&[2.0]);
+        assert_eq!(f.forecast().unwrap(), vec![2.0, 1.0, 1.0]);
+        f.reset();
+        assert!(f.forecast().is_none());
+        assert_eq!(f.observations(), 0);
+    }
+
+    #[test]
+    fn tracks_a_step_change() {
+        // 5 nominal iterations, then device 1 degrades to 3x: within a
+        // few observations the forecast must follow (LastValue follows
+        // immediately; Auto selects whatever scored best, which after
+        // the switch converges to the new level too).
+        let mut f = DeviceForecaster::new(&cfg(PredictorKind::LastValue), 2);
+        for _ in 0..5 {
+            let _ = f.observe(&[1.0, 1.0]);
+        }
+        let _ = f.observe(&[1.0, 3.0]);
+        let got = f.forecast().unwrap();
+        assert_eq!(got[1], 3.0);
+    }
+}

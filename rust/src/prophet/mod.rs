@@ -23,11 +23,13 @@
 //! from fluctuating to stabilizing and are highly predictable from
 //! history.
 
+pub mod device;
 pub mod drift;
 pub mod ensemble;
 pub mod predictors;
 pub mod store;
 
+pub use device::DeviceForecaster;
 pub use drift::{similarity_f64, DriftDetector};
 pub use ensemble::{Ensemble, PredictorScore};
 pub use predictors::{LoadPredictor, PredictorKind};
@@ -52,6 +54,13 @@ pub struct ProphetConfig {
     pub drift_cooldown: usize,
     /// Which predictor serves forecasts (Auto = adaptive ensemble).
     pub predictor: PredictorKind,
+    /// Arm the per-device slowdown forecaster ([`DeviceForecaster`]): the
+    /// balancer session learns a device-health vector from realized
+    /// iteration results and the planner prices candidates against the
+    /// FORECAST slowdown instead of the static `ClusterSpec` vector.
+    /// Off by default — with it off, planning sees exactly the static
+    /// cluster description, bit-identical to earlier builds.
+    pub device_forecast: bool,
 }
 
 impl Default for ProphetConfig {
@@ -64,6 +73,7 @@ impl Default for ProphetConfig {
             drift_threshold: 0.8,
             drift_cooldown: 4,
             predictor: PredictorKind::Auto,
+            device_forecast: false,
         }
     }
 }

@@ -746,20 +746,33 @@ fn replay_iteration(
 ) {
     let view = fault_view_for(session, faults, cluster, iter_index, None)
         .expect("replay cannot reach an all-down iteration: the original run refused to complete it");
+    // Mirror price_and_observe's decide view exactly — including the
+    // forecast substitution — so a resumed session's planner caches and
+    // forecaster state are bit-identical to the straight run's.
+    let forecast_pm = session.forecast_slowdown().map(|f| pm.with_device_slowdown(f));
     match &view {
         Some(v) => {
             let eff_pm = v.effective_perf_model(pm);
+            let decide_pm = forecast_pm.as_ref().unwrap_or(&eff_pm);
             for (l, w) in layers.iter().enumerate() {
-                let _ = session.decide_layer(l, w, &eff_pm);
+                let _ = session.decide_layer(l, w, decide_pm);
             }
         }
         None => {
+            let decide_pm = forecast_pm.as_ref().unwrap_or(pm);
             for (l, w) in layers.iter().enumerate() {
-                let _ = session.decide_layer(l, w, pm);
+                let _ = session.decide_layer(l, w, decide_pm);
             }
         }
     }
     session.observe_iteration(layers);
+    if session.device_forecast_enabled() {
+        let realized: Vec<f64> = match &view {
+            Some(v) => v.slowdown.clone(),
+            None => (0..cluster.n_devices()).map(|d| cluster.slowdown(d)).collect(),
+        };
+        let _ = session.observe_device_slowdown(&realized);
+    }
 }
 
 /// [`simulate_policy_with`] plus the robustness axes: a seeded
@@ -809,6 +822,14 @@ pub(crate) fn price_and_observe(
 ) -> IterationResult {
     let n_layers = layers.len();
     let fault_active = view.is_some();
+    // Decide-view health: once the session's device forecaster is armed
+    // and fed, the planner ranks candidates against the FORECAST
+    // slowdown vector — the session's learned, one-iteration-lagged view
+    // of device health — instead of the oracle-true effective model.
+    // The DES below always prices on the true effective engine:
+    // forecasts inform decisions, never ground truth.  Unarmed (the
+    // default), the decide view is exactly the pre-existing one.
+    let forecast_pm = session.forecast_slowdown().map(|f| eng.pm.with_device_slowdown(f));
     let (priced, _dag) = match view {
         Some(v) => {
             // Price on a temporary fault-effective engine: per-device
@@ -820,14 +841,30 @@ pub(crate) fn price_and_observe(
             let eff_cluster = v.effective_cluster(eng.cluster);
             let eff_pm = v.effective_perf_model(eng.pm);
             let eff_eng = Engine::new(&eff_cluster, &eff_pm);
-            price_iteration(&eff_eng, &eff_pm, session, layers, view, rec, state)
+            let decide_pm = forecast_pm.as_ref().unwrap_or(&eff_pm);
+            price_iteration(&eff_eng, decide_pm, session, layers, view, rec, state)
         }
-        None => price_iteration(eng, eng.pm, session, layers, view, rec, state),
+        None => {
+            let decide_pm = forecast_pm.as_ref().unwrap_or(eng.pm);
+            price_iteration(eng, decide_pm, session, layers, view, rec, state)
+        }
     };
 
     // Phase 2 (sequential): the session's observe→score→drift→
     // invalidate loop over the actual gating results.
     let fb = session.observe_iteration(layers);
+
+    // Feed the forecaster what this iteration ACTUALLY ran at: the fault
+    // view's composed vector while degraded (down devices come through
+    // as 0.0 and are floored inside the forecaster), the cluster's
+    // static vector while healthy.  No-op unless armed.
+    if session.device_forecast_enabled() {
+        let realized: Vec<f64> = match view {
+            Some(v) => v.slowdown.clone(),
+            None => (0..eng.cluster.n_devices()).map(|d| eng.cluster.slowdown(d)).collect(),
+        };
+        let _ = session.observe_device_slowdown(&realized);
+    }
 
     let (time, breakdown, per_block_time) = if heterogeneous
         || fault_active
@@ -1017,15 +1054,20 @@ pub fn iteration_des_faulted(
         if i == index {
             let view = fault_view_for(&mut session, faults, cluster, i, None).ok()?;
             let mut price = PriceState::new(false);
+            // Same decide view as the run being exported: the armed
+            // forecaster's substitution included (see price_and_observe).
+            let forecast_pm = session.forecast_slowdown().map(|f| pm.with_device_slowdown(f));
             let (_, op_dag) = match &view {
                 Some(v) => {
                     let eff_cluster = v.effective_cluster(cluster);
                     let eff_pm = v.effective_perf_model(&pm);
                     let eff_eng = Engine::new(&eff_cluster, &eff_pm);
-                    price_iteration(&eff_eng, &eff_pm, &session, layers, &view, obs::noop(), &mut price)
+                    let decide_pm = forecast_pm.as_ref().unwrap_or(&eff_pm);
+                    price_iteration(&eff_eng, decide_pm, &session, layers, &view, obs::noop(), &mut price)
                 }
                 None => {
-                    price_iteration(&eng, &pm, &session, layers, &view, obs::noop(), &mut price)
+                    let decide_pm = forecast_pm.as_ref().unwrap_or(&pm);
+                    price_iteration(&eng, decide_pm, &session, layers, &view, obs::noop(), &mut price)
                 }
             };
             let op_dag = op_dag.expect("re-pricing disabled: the DAG is always built");

@@ -36,8 +36,18 @@ impl Json {
         }
     }
 
+    /// Strict integer read: `None` for negative, non-finite, or
+    /// fractional numbers (an `as usize` cast would silently saturate
+    /// them to 0, letting a malformed checkpoint or metrics file parse
+    /// as valid).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        self.as_f64().and_then(|x| {
+            if x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x <= usize::MAX as f64 {
+                Some(x as usize)
+            } else {
+                None
+            }
+        })
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -401,6 +411,25 @@ mod tests {
         assert_eq!(v.get("config").unwrap().get("n_experts").unwrap().as_usize(), Some(4));
         let t0 = v.get("tensors").unwrap().idx(0).unwrap();
         assert_eq!(t0.get("shape").unwrap().idx(1).unwrap().as_usize(), Some(32));
+    }
+
+    #[test]
+    fn as_usize_rejects_non_integers() {
+        // Regression: `as_f64().map(|x| x as usize)` silently saturated
+        // negative and non-finite numbers to 0, so a malformed
+        // checkpoint field like `"iterations_done": -3` parsed as a
+        // valid 0 instead of failing the schema gate.
+        assert_eq!(parse("-3").unwrap().as_usize(), None);
+        assert_eq!(parse("-0.5").unwrap().as_usize(), None);
+        assert_eq!(parse("2.5").unwrap().as_usize(), None);
+        assert_eq!(parse("1e400").unwrap().as_usize(), None, "overflows to +inf");
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::NEG_INFINITY).as_usize(), None);
+        assert_eq!(Json::Str("7".into()).as_usize(), None, "strings never coerce");
+        // The valid cases checkpoint/report actually rely on.
+        assert_eq!(parse("0").unwrap().as_usize(), Some(0));
+        assert_eq!(parse("40").unwrap().as_usize(), Some(40));
+        assert_eq!(parse("4e2").unwrap().as_usize(), Some(400));
     }
 
     #[test]

@@ -43,7 +43,9 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN sorts to the end (after +inf) instead of panicking —
+    // the same NaN hole PR 9 closed in the DES interval merge.
+    v.sort_by(f64::total_cmp);
     let rank = (q / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -96,13 +98,22 @@ pub fn mape(est: &[f64], real: &[f64]) -> f64 {
 }
 
 /// Online mean/std accumulator (Welford) for streaming bench timings.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Welford {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+impl Default for Welford {
+    /// Same as [`Welford::new`].  A derived `Default` would start
+    /// `min`/`max` at 0.0, corrupting them for any all-positive (or
+    /// all-negative) series.
+    fn default() -> Self {
+        Welford::new()
+    }
 }
 
 impl Welford {
@@ -197,6 +208,34 @@ mod tests {
         assert_eq!(w.min(), 1.0);
         assert_eq!(w.max(), 10.0);
         assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn percentile_survives_nan() {
+        // Regression: the old `partial_cmp(..).unwrap()` comparator
+        // panicked on NaN input.  total_cmp sorts NaN after +inf, so the
+        // finite quantiles are unaffected and nothing panics.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    fn welford_default_is_new() {
+        // Regression: the derived Default started min/max at 0.0, so an
+        // all-positive series reported min() == 0.0.
+        let mut w = Welford::default();
+        w.push(5.0);
+        w.push(7.0);
+        assert_eq!(w.min(), 5.0);
+        assert_eq!(w.max(), 7.0);
+        let neg = {
+            let mut w = Welford::default();
+            w.push(-3.0);
+            w
+        };
+        assert_eq!(neg.max(), -3.0);
     }
 
     #[test]

@@ -172,6 +172,10 @@ fn prop_greedy_matches_reference() {
             // bit-identical to the Eq-8 model, so randomizing this flag
             // must never diverge from the frozen reference.
             slack_aware: rng.below(2) == 0,
+            // Same contract for the device-aware path: its gate is
+            // `pm.is_heterogeneous()`, so on these homogeneous clusters
+            // the weighted evaluator must never even be invoked.
+            device_aware: rng.below(2) == 0,
             ..Default::default()
         };
         let new = greedy_search(&w, &pm, &cfg);
@@ -191,6 +195,107 @@ fn prop_greedy_matches_reference() {
             reference.t_identity.to_bits(),
             "t_identity diverged"
         );
+    });
+}
+
+#[test]
+fn prop_device_aware_matches_slack_on_uniform_slowdown() {
+    // A uniformly slowed cluster (every device at factor u >= 1) is
+    // heterogeneous to the gate but carries no ranking information, so
+    // the dev-aware search must collapse onto the worst-scalar slack
+    // path bit for bit: u = k/2 keeps every product (H_d + tokens)·u the
+    // weighted scans compare exact in f64 (H·k stays far below 2^53), so
+    // strict inequalities and ties survive the multiplication — every
+    // replica target, heaviest-device pick, and Eq-7 stop is identical —
+    // and the weighted price computes t_fec from fl(max_h·u), the same
+    // expression layer_time_sn_relaxed evaluates (max_slowdown() of a
+    // uniform vector is u for u >= 1).
+    Cases::new(48).run(|rng| {
+        let w = random_w(rng);
+        let d = w.n_devices();
+        let u = [1.5, 2.0, 2.5, 3.0][rng.below(4)];
+        let cluster = ClusterSpec::hpwnv(d.div_ceil(4)).with_slowdowns(vec![u; d]);
+        let pm = PerfModel::new(&ModelSpec::moe_gpt_s(d, 1, 4096 * d as u64), &cluster);
+        assert!(pm.is_heterogeneous());
+        let alpha = 0.05 + rng.f64();
+        let n_exclude = if rng.below(2) == 0 {
+            pro_prophet::planner::AUTO_EXCLUDE
+        } else {
+            rng.below(d)
+        };
+        let dev_cfg = PlannerConfig {
+            alpha,
+            n_exclude,
+            use_overlap_model: true,
+            device_aware: true,
+            slack_aware: false,
+            ..Default::default()
+        };
+        let scalar_cfg = PlannerConfig {
+            alpha,
+            n_exclude,
+            use_overlap_model: true,
+            device_aware: false,
+            slack_aware: true,
+            ..Default::default()
+        };
+        let dev = greedy_search(&w, &pm, &dev_cfg);
+        let scalar = greedy_search(&w, &pm, &scalar_cfg);
+        assert_eq!(dev.placement, scalar.placement, "placements diverged (u={u})");
+        assert_eq!(dev.selected, scalar.selected, "selection order diverged (u={u})");
+        assert_eq!(dev.evaluated, scalar.evaluated, "candidate counts diverged (u={u})");
+        assert_eq!(
+            dev.t_est.to_bits(),
+            scalar.t_est.to_bits(),
+            "t_est diverged: {} vs {} (u={u})",
+            dev.t_est,
+            scalar.t_est
+        );
+        assert_eq!(
+            dev.t_identity.to_bits(),
+            scalar.t_identity.to_bits(),
+            "t_identity diverged (u={u})"
+        );
+    });
+}
+
+#[test]
+fn prop_device_forecaster_exact_on_constant_slowdowns() {
+    // Any slowdown the config surface can express (<= 6 decimal places,
+    // floored at 1e-3) survives the forecaster's fixed-point encoding:
+    // a constant vector forecasts back exactly for LastValue after one
+    // observation, and to within fixed-point resolution for every
+    // predictor kind after a few.
+    use pro_prophet::prophet::{DeviceForecaster, PredictorKind, ProphetConfig};
+    Cases::default().run(|rng| {
+        let d = 1 + rng.below(16);
+        let v: Vec<f64> = (0..d)
+            .map(|_| (1_000 + rng.below(9_999_000)) as f64 / 1e6)
+            .collect();
+        let kind = [
+            PredictorKind::Auto,
+            PredictorKind::LastValue,
+            PredictorKind::Ema,
+            PredictorKind::WindowMean,
+            PredictorKind::LinearTrend,
+        ][rng.below(5)];
+        let mut f =
+            DeviceForecaster::new(&ProphetConfig { predictor: kind, ..Default::default() }, d);
+        assert!(f.forecast().is_none());
+        for _ in 0..(2 + rng.below(6)) {
+            let _ = f.observe(&v);
+        }
+        for (g, want) in f.forecast().unwrap().iter().zip(&v) {
+            assert!((g - want).abs() < 1e-6, "{kind:?}: {g} vs {want}");
+        }
+        let mut last = DeviceForecaster::new(
+            &ProphetConfig { predictor: PredictorKind::LastValue, ..Default::default() },
+            d,
+        );
+        let _ = last.observe(&v);
+        for (g, want) in last.forecast().unwrap().iter().zip(&v) {
+            assert_eq!(g.to_bits(), want.to_bits(), "LastValue roundtrip: {g} vs {want}");
+        }
     });
 }
 
